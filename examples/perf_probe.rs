@@ -1,0 +1,12 @@
+//! Perf probe: a heavy DP fast-solver run for profiling (pair with
+//! DPFW_PHASE_TIMING=1 or `perf record`). Used by the §Perf pass.
+use dpfw::prelude::*;
+fn main() {
+    let ds = SynthConfig::preset(DatasetPreset::News20).scale(0.1).generate(7);
+    let out = FastFrankWolfe::new(&ds, FwConfig {
+        iters: 20_000, lambda: 50.0,
+        privacy: Some(PrivacyParams { epsilon: 0.5, delta: 1e-6 }),
+        selector: SelectorKind::Bsls, seed: 1, trace_every: 0, lipschitz: None,
+    }).run();
+    println!("gap {:.3e} wall {:.0} ms flops {:.2e}", out.final_gap, out.wall_ms, out.flops as f64);
+}

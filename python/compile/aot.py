@@ -1,0 +1,95 @@
+"""AOT exporter: lower the L2 model functions to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``). The text parser on
+the Rust side (``HloModuleProto::from_text_file``) reassigns ids, so text
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts (all over f32, fixed oracle tile shapes N_TILE x D_TILE):
+
+  alpha.hlo.txt      (X, w, y, m)        -> (alpha,)
+  predict.hlo.txt    (X, w)              -> (p,)
+  loss_gap.hlo.txt   (X, w, y, m, lam)   -> (loss_sum, gap)
+  fw_step.hlo.txt    (X, w, y, m, lam, eta) -> (w_next, j, gap)
+
+The Rust runtime zero-pads real data up to the tile shape (zero rows/columns
+are exact no-ops for every exported function; the mask handles the loss) and
+accumulates ``alpha``/``loss`` over row tiles when N > N_TILE.
+
+Usage: python -m compile.aot --out ../artifacts [--n 256] [--d 512]
+Run from ``python/`` (the Makefile does). A manifest line per artifact is
+written to ``<out>/manifest.txt`` so the Rust side can sanity-check shapes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Default oracle tile. Small enough that interpret-mode Pallas lowering and
+# XLA-CPU compilation stay fast; large enough to exercise real workloads
+# (the Rust oracle tiles N and requires D <= D_TILE).
+N_TILE = 256
+D_TILE = 512
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export(out_dir: str, n: int = N_TILE, d: int = D_TILE) -> list[str]:
+    os.makedirs(out_dir, exist_ok=True)
+    f32 = jnp.float32
+    X = jax.ShapeDtypeStruct((n, d), f32)
+    w = jax.ShapeDtypeStruct((d,), f32)
+    y = jax.ShapeDtypeStruct((n,), f32)
+    m = jax.ShapeDtypeStruct((n,), f32)
+    scalar = jax.ShapeDtypeStruct((), f32)
+
+    specs = [
+        ("alpha", model.alpha_dense, (X, w, y, m)),
+        ("predict", model.predict_dense, (X, w)),
+        ("loss_gap", model.loss_and_gap, (X, w, y, m, scalar)),
+        ("fw_step", model.fw_dense_step, (X, w, y, m, scalar, scalar)),
+    ]
+
+    manifest = [f"n_tile={n}", f"d_tile={d}"]
+    written = []
+    for name, fn, args in specs:
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"{name}.hlo.txt nargs={len(args)}")
+        written.append(path)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    return written
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--n", type=int, default=N_TILE)
+    ap.add_argument("--d", type=int, default=D_TILE)
+    args = ap.parse_args()
+    export(args.out, args.n, args.d)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the Pallas kernels. No Pallas, no tiling tricks —
+the straightest possible transcription of Algorithm 1 lines 4-6, used as the
+correctness reference by pytest/hypothesis."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def logistic_grad(x, w, y, m):
+    """alpha = X^T ((sigmoid(Xw) - y) * m)."""
+    q = (jax.nn.sigmoid(x @ w) - y) * m
+    return x.T @ q
+
+
+def predict(x, w):
+    """p = sigmoid(X w)."""
+    return jax.nn.sigmoid(x @ w)
+
+
+def logloss_sum(x, w, y, m):
+    """Sum of logistic losses over unmasked rows.
+
+    Uses the numerically stable form log(1+exp(v)) - y*v = softplus(v) - y*v.
+    """
+    v = x @ w
+    return jnp.sum((jax.nn.softplus(v) - y * v) * m)
+
+
+def fw_gap(alpha, w, lam):
+    """Frank-Wolfe duality gap for the L1 ball of radius lam.
+
+    g = -<alpha, d> with d = (-w + lam * sign(alpha_j) e_j) at
+    j = argmax |alpha|, i.e. g = <alpha, w> + lam * max_j |alpha_j|.
+    """
+    return jnp.dot(alpha, w) + lam * jnp.max(jnp.abs(alpha))

@@ -1,0 +1,65 @@
+"""L2: the dense Frank-Wolfe step quantities as jitted jax functions.
+
+These are the *dense oracle* for the sparse Rust solver (L3): the Rust side
+implements Algorithm 2's incremental sparse updates; these functions compute
+the same quantities from scratch, densely, through the Pallas kernel (L1),
+and are AOT-lowered to HLO text by ``aot.py`` for the Rust PJRT runtime.
+
+All functions take a row mask ``m`` so the Rust runtime can zero-pad N up to
+the exported tile size: zero-padded rows of ``X`` contribute nothing to
+``alpha`` and masked rows contribute nothing to the loss. Columns are padded
+with zero columns, which produce zero ``alpha`` entries and never win the
+argmax unless all real entries are zero too.
+
+Python here is build-time only — nothing in this package is imported at
+serving/training time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import logistic_grad as kern
+
+
+def alpha_dense(x, w, y, m):
+    """Full coordinate gradient alpha = X^T ((sigmoid(Xw) - y) * m).
+
+    This is Algorithm 1 lines 4-7 (with ybar folded into q via the identity
+    X^T sigma(Xw) - X^T y = X^T (sigma(Xw) - y)), computed by the L1 Pallas
+    kernel.
+    """
+    return (kern.logistic_grad(x, w, y, m, block_n=kern.auto_block(x.shape[0])),)
+
+
+def predict_dense(x, w):
+    """p_i = sigmoid(x_i . w) — batch scoring for accuracy/AUC evaluation."""
+    return (kern.predict(x, w, block_n=kern.auto_block(x.shape[0])),)
+
+
+def loss_and_gap(x, w, y, m, lam):
+    """(sum logistic loss over unmasked rows, FW duality gap on the L1 ball).
+
+    The gap is g = <alpha, w> + lam * max_j |alpha_j| (see kernels/ref.py);
+    the Rust side divides the loss by the true N.
+    """
+    v = x @ w
+    loss = jnp.sum((jax.nn.softplus(v) - y * v) * m)
+    alpha = kern.logistic_grad(x, w, y, m, block_n=kern.auto_block(x.shape[0]))
+    gap = jnp.dot(alpha, w) + lam * jnp.max(jnp.abs(alpha))
+    return (loss, gap)
+
+
+def fw_dense_step(x, w, y, m, lam, eta):
+    """One full *dense* Frank-Wolfe step, returning (w_next, j, gap).
+
+    Used by tests/benches as a trajectory oracle for the non-private path:
+    j = argmax |alpha|; d = -w + lam*sign(alpha_j) e_j; w' = w + eta*d.
+    """
+    alpha = kern.logistic_grad(x, w, y, m, block_n=kern.auto_block(x.shape[0]))
+    j = jnp.argmax(jnp.abs(alpha))
+    s = -lam * jnp.sign(alpha[j])
+    d = -w + s * jax.nn.one_hot(j, w.shape[0], dtype=w.dtype)
+    gap = jnp.dot(alpha, w) + lam * jnp.max(jnp.abs(alpha))
+    return (w + eta * d, j.astype(jnp.int32), gap)

@@ -1,0 +1,49 @@
+"""AOT exporter smoke tests: artifacts exist, are parseable HLO text, and
+declare the right entry computation arity."""
+
+import os
+import re
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def artifacts(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    aot.export(out, n=32, d=16)
+    return out
+
+
+def test_all_artifacts_written(artifacts):
+    names = {"alpha", "predict", "loss_gap", "fw_step"}
+    files = set(os.listdir(artifacts))
+    for n in names:
+        assert f"{n}.hlo.txt" in files
+    assert "manifest.txt" in files
+
+
+def test_hlo_text_parses_shape(artifacts):
+    text = open(os.path.join(artifacts, "alpha.hlo.txt")).read()
+    assert "HloModule" in text
+    # entry computation must take (X, w, y, m) = 4 parameters
+    params = re.findall(r"parameter\(\d\)", text)
+    assert len(set(params)) == 4
+    # output is a tuple (return_tuple=True on the lowering path)
+    assert "tuple(" in text or "ROOT" in text
+
+
+def test_manifest_records_tile(artifacts):
+    lines = open(os.path.join(artifacts, "manifest.txt")).read().splitlines()
+    assert "n_tile=32" in lines
+    assert "d_tile=16" in lines
+    assert any(l.startswith("alpha.hlo.txt nargs=4") for l in lines)
+
+
+def test_no_serialized_protos(artifacts):
+    """Guard the 0.5.1 gotcha: we must ship text, not serialized protos."""
+    for f in os.listdir(artifacts):
+        p = os.path.join(artifacts, f)
+        head = open(p, "rb").read(64)
+        assert b"\x00" not in head, f"{f} looks binary"

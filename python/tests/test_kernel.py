@@ -1,0 +1,102 @@
+"""Pallas kernel (L1) vs pure-jnp oracle (ref.py) — the core correctness
+signal for the compute hot-spot. Hypothesis sweeps shapes/seeds/block sizes;
+assert_allclose against the reference on every draw."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import logistic_grad as kern
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _data(seed, n, d, density=1.0):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    if density < 1.0:
+        x *= (rng.random((n, d)) < density).astype(np.float32)
+    w = (rng.standard_normal(d) * 0.3).astype(np.float32)
+    y = (rng.random(n) < 0.5).astype(np.float32)
+    m = np.ones(n, dtype=np.float32)
+    return jnp.asarray(x), jnp.asarray(w), jnp.asarray(y), jnp.asarray(m)
+
+
+# ---------------------------------------------------------------- alpha ----
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    blocks=st.integers(1, 4),
+    block_n=st.sampled_from([8, 16, 32]),
+    d=st.integers(3, 96),
+)
+def test_logistic_grad_matches_ref(seed, blocks, block_n, d):
+    n = blocks * block_n
+    x, w, y, m = _data(seed, n, d)
+    got = kern.logistic_grad(x, w, y, m, block_n=block_n)
+    want = ref.logistic_grad(x, w, y, m)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), density=st.floats(0.01, 0.5))
+def test_logistic_grad_sparse_inputs(seed, density):
+    x, w, y, m = _data(seed, 64, 128, density)
+    got = kern.logistic_grad(x, w, y, m, block_n=16)
+    want = ref.logistic_grad(x, w, y, m)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_zero_padded_rows_are_noops():
+    """Zero rows of X must contribute nothing to alpha whatever y/m say —
+    this is what lets the Rust runtime pad N up to the tile size."""
+    x, w, y, m = _data(7, 32, 40)
+    xp = jnp.concatenate([x, jnp.zeros((32, 40), jnp.float32)])
+    yp = jnp.concatenate([y, jnp.ones(32, jnp.float32)])
+    mp = jnp.concatenate([m, jnp.zeros(32, jnp.float32)])
+    got = kern.logistic_grad(xp, w, yp, mp, block_n=16)
+    want = ref.logistic_grad(x, w, y, m)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+    # even with mask=1 on the padded rows, alpha is unchanged (x rows are 0)
+    got2 = kern.logistic_grad(xp, w, yp, jnp.ones(64, jnp.float32), block_n=16)
+    np.testing.assert_allclose(got2, want, rtol=2e-4, atol=2e-4)
+
+
+def test_zero_padded_columns_are_noops():
+    x, w, y, m = _data(11, 32, 24)
+    xp = jnp.concatenate([x, jnp.zeros((32, 8), jnp.float32)], axis=1)
+    wp = jnp.concatenate([w, jnp.zeros(8, jnp.float32)])
+    got = kern.logistic_grad(xp, wp, y, m, block_n=16)
+    want = ref.logistic_grad(x, w, y, m)
+    np.testing.assert_allclose(got[:24], want, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(got[24:], np.zeros(8), atol=1e-7)
+
+
+def test_block_size_invariance():
+    x, w, y, m = _data(3, 96, 50)
+    outs = [kern.logistic_grad(x, w, y, m, block_n=b) for b in (8, 16, 32, 96)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=2e-4, atol=2e-4)
+
+
+def test_rejects_ragged_n():
+    x, w, y, m = _data(0, 30, 8)
+    with pytest.raises(ValueError):
+        kern.logistic_grad(x, w, y, m, block_n=16)
+
+
+# -------------------------------------------------------------- predict ----
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), blocks=st.integers(1, 3))
+def test_predict_matches_ref(seed, blocks):
+    n = blocks * 16
+    x, w, _, _ = _data(seed, n, 33)
+    got = kern.predict(x, w, block_n=16)
+    want = ref.predict(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+    assert bool(jnp.all((got >= 0) & (got <= 1)))

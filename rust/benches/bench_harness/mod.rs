@@ -1,0 +1,72 @@
+//! Minimal benchmark harness (criterion is not in the offline crate set).
+//!
+//! Provides warmup + repeated timed runs with mean/min/stddev reporting,
+//! in a criterion-like output format. Used by every `harness = false`
+//! bench target.
+#![allow(dead_code)] // each bench uses a subset of the harness
+
+use std::time::Instant;
+
+pub struct Bench {
+    name: String,
+    warmup: usize,
+    runs: usize,
+}
+
+impl Bench {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { name: name.into(), warmup: 1, runs: 5 }
+    }
+
+    pub fn runs(mut self, runs: usize) -> Self {
+        self.runs = runs.max(1);
+        self
+    }
+
+    pub fn warmup(mut self, warmup: usize) -> Self {
+        self.warmup = warmup;
+        self
+    }
+
+    /// Time `f` (which should return something to keep the optimizer
+    /// honest); prints stats and returns the mean seconds.
+    pub fn run<T>(&self, mut f: impl FnMut() -> T) -> f64 {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.runs);
+        for _ in 0..self.runs {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+        let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>()
+            / times.len() as f64;
+        println!(
+            "{:<52} mean {:>10} min {:>10} ±{:>8}",
+            self.name,
+            fmt_time(mean),
+            fmt_time(min),
+            fmt_time(var.sqrt())
+        );
+        mean
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}

@@ -1,0 +1,73 @@
+//! Bench: **Figures 2 & 4 (wall-clock view)** — per-iteration cost of
+//! Alg 1 vs Alg 2 as D grows at fixed sparsity, demonstrating the paper's
+//! headline complexity claim: Alg 1 scales O(D) per iteration while
+//! Alg 2+BSLS scales ~O(√D). The printed `us/iter vs D` series is the
+//! scaling law the paper's Table 1 promises.
+
+mod bench_harness;
+
+use bench_harness::{section, Bench};
+use dpfw::dp::accounting::PrivacyParams;
+use dpfw::fw::config::{FwConfig, SelectorKind};
+use dpfw::fw::fast::FastFrankWolfe;
+use dpfw::fw::standard::StandardFrankWolfe;
+use dpfw::sparse::synth::SynthConfig;
+use dpfw::sparse::Dataset;
+
+fn dataset(d: usize, seed: u64) -> Dataset {
+    SynthConfig {
+        name: format!("scale-d{d}"),
+        n_rows: 2000,
+        n_cols: d,
+        avg_row_nnz: 40.0,
+        zipf_exponent: 1.2,
+        n_informative: 32,
+        n_dense: 0,
+        label_noise: 0.05,
+        bias_col: true,
+    }
+    .generate(seed)
+}
+
+fn main() {
+    let iters = 200;
+    section("per-iteration cost vs D (N=2000, S_c=40, T=200, eps=1)");
+    println!(
+        "{:>10} {:>16} {:>16} {:>16} {:>10}",
+        "D", "alg1 us/iter", "alg2+bsls us/it", "alg2+fib us/it", "speedup"
+    );
+    for d in [4_000usize, 16_000, 64_000, 256_000] {
+        let ds = dataset(d, 7);
+        let dp = Some(PrivacyParams::new(1.0, 1e-6));
+        let cfg = |sel, privacy| FwConfig {
+            iters,
+            lambda: 30.0,
+            privacy,
+            selector: sel,
+            seed: 3,
+            trace_every: 0,
+            lipschitz: None,
+        };
+        let t1 = Bench::new(format!("alg1+noisymax D={d}"))
+            .runs(3)
+            .run(|| StandardFrankWolfe::new(&ds, cfg(SelectorKind::NoisyMax, dp)).run().flops);
+        let t2 = Bench::new(format!("alg2+bsls     D={d}"))
+            .runs(3)
+            .run(|| FastFrankWolfe::new(&ds, cfg(SelectorKind::Bsls, dp)).run().flops);
+        let t3 = Bench::new(format!("alg2+fibheap  D={d} (non-private)"))
+            .runs(3)
+            .run(|| FastFrankWolfe::new(&ds, cfg(SelectorKind::FibHeap, None)).run().flops);
+        println!(
+            "{:>10} {:>16.1} {:>16.1} {:>16.1} {:>9.1}x",
+            d,
+            t1 * 1e6 / iters as f64,
+            t2 * 1e6 / iters as f64,
+            t3 * 1e6 / iters as f64,
+            t1 / t2
+        );
+    }
+    println!(
+        "\nExpect: alg1 column ~4x per D step (O(D)); alg2+bsls column ~2x per D \
+         step (O(sqrt(D))) — the paper's Table 1 scaling separation."
+    );
+}

@@ -1,0 +1,67 @@
+//! Bench: substrate microbenchmarks — sparse matvec / transpose-matvec /
+//! column scans (the building blocks whose costs appear in every line of
+//! the paper's complexity annotations), CSR↔CSC conversion, LIBSVM parse,
+//! and synthetic generation throughput.
+
+mod bench_harness;
+
+use bench_harness::{section, Bench};
+use dpfw::sparse::csc::CscMatrix;
+use dpfw::sparse::libsvm;
+use dpfw::sparse::synth::{DatasetPreset, SynthConfig};
+
+fn main() {
+    let ds = SynthConfig::preset(DatasetPreset::Rcv1).scale(0.25).generate(5);
+    println!(
+        "workload: rcv1@0.25  N={} D={} nnz={}",
+        ds.n_rows(),
+        ds.n_cols(),
+        ds.nnz()
+    );
+
+    section("sparse kernels");
+    let w = vec![0.01f64; ds.n_cols()];
+    let mut v = vec![0.0f64; ds.n_rows()];
+    Bench::new("csr matvec (v = Xw)").runs(10).run(|| {
+        ds.csr.matvec(&w, &mut v);
+        v[0]
+    });
+    let q = vec![0.1f64; ds.n_rows()];
+    let mut alpha = vec![0.0f64; ds.n_cols()];
+    Bench::new("csr matvec_t_add (alpha += X^T q)").runs(10).run(|| {
+        alpha.iter_mut().for_each(|a| *a = 0.0);
+        ds.csr.matvec_t_add(&q, &mut alpha);
+        alpha[0]
+    });
+    Bench::new("csc full column sweep (S_r loop x D)").runs(10).run(|| {
+        let mut acc = 0.0f64;
+        for j in 0..ds.n_cols() {
+            for (_, x) in ds.csc.col(j) {
+                acc += x as f64;
+            }
+        }
+        acc
+    });
+    Bench::new("row_dot over all rows").runs(10).run(|| {
+        let mut acc = 0.0;
+        for i in 0..ds.n_rows() {
+            acc += ds.csr.row_dot(i, &w);
+        }
+        acc
+    });
+
+    section("construction");
+    Bench::new("csc from_csr (counting sort)").runs(5).run(|| CscMatrix::from_csr(&ds.csr).nnz());
+    Bench::new("synth generate rcv1@0.1").runs(3).run(|| {
+        SynthConfig::preset(DatasetPreset::Rcv1).scale(0.1).generate(9).nnz()
+    });
+
+    section("LIBSVM I/O");
+    let path = std::env::temp_dir().join("dpfw_bench_io.svm");
+    Bench::new("write").runs(3).run(|| {
+        libsvm::write_file(&ds, &path).unwrap();
+        0
+    });
+    Bench::new("read+index (csr+csc)").runs(3).run(|| libsvm::read_file(&path).unwrap().nnz());
+    std::fs::remove_file(&path).ok();
+}

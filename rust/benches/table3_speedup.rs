@@ -1,0 +1,61 @@
+//! Bench: **Table 3** — end-to-end DP training wall-clock for the three
+//! configurations {Alg1+noisy-max, Alg2+noisy-max, Alg2+BSLS} at
+//! ε ∈ {1, 0.1} on every scaled preset, reporting the speedup factors the
+//! paper's Table 3 reports. Also regenerable via `repro exp table3`.
+
+mod bench_harness;
+
+use bench_harness::{section, Bench};
+use dpfw::dp::accounting::PrivacyParams;
+use dpfw::fw::config::{FwConfig, SelectorKind};
+use dpfw::fw::fast::FastFrankWolfe;
+use dpfw::fw::standard::StandardFrankWolfe;
+use dpfw::sparse::synth::{DatasetPreset, SynthConfig};
+
+fn main() {
+    // keep bench wall-time sane: modest scales + T
+    let iters = 300;
+    let presets: &[(DatasetPreset, f64)] = &[
+        (DatasetPreset::Rcv1, 0.1),
+        (DatasetPreset::News20, 0.02),
+        (DatasetPreset::Url, 0.0015),
+        (DatasetPreset::Web, 0.001),
+        (DatasetPreset::Kdda, 0.0006),
+    ];
+    println!("Table 3 bench: T={iters}, lambda=50, delta=1e-6");
+    for &(p, sc) in presets {
+        let ds = SynthConfig::preset(p).scale(sc).generate(42);
+        section(&format!(
+            "{} (N={}, D={}, nnz={})",
+            p.name(),
+            ds.n_rows(),
+            ds.n_cols(),
+            ds.nnz()
+        ));
+        for eps in [1.0, 0.1] {
+            let cfg = |sel| FwConfig {
+                iters,
+                lambda: 50.0,
+                privacy: Some(PrivacyParams::new(eps, 1e-6)),
+                selector: sel,
+                seed: 9,
+                trace_every: 0,
+                lipschitz: None,
+            };
+            let t_alg1 = Bench::new(format!("{} eps={eps} alg1+noisymax", p.name()))
+                .runs(3)
+                .run(|| StandardFrankWolfe::new(&ds, cfg(SelectorKind::NoisyMax)).run().flops);
+            let t_alg2 = Bench::new(format!("{} eps={eps} alg2+noisymax", p.name()))
+                .runs(3)
+                .run(|| FastFrankWolfe::new(&ds, cfg(SelectorKind::NoisyMax)).run().flops);
+            let t_alg24 = Bench::new(format!("{} eps={eps} alg2+bsls (paper)", p.name()))
+                .runs(3)
+                .run(|| FastFrankWolfe::new(&ds, cfg(SelectorKind::Bsls)).run().flops);
+            println!(
+                "  --> speedups over standard DP-FW: Alg2+4 = {:.2}x, Alg2-only = {:.2}x",
+                t_alg1 / t_alg24,
+                t_alg1 / t_alg2
+            );
+        }
+    }
+}

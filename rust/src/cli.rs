@@ -1,0 +1,124 @@
+//! Hand-rolled CLI argument parsing (clap is not in the offline crate
+//! set). Supports `command [subcommand] --flag value --switch` grammar.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// Positional arguments in order (first is the command).
+    pub positional: Vec<String>,
+    /// `--key value` pairs; bare `--switch` maps to "true".
+    pub flags: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (program name excluded).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Self> {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                if key.is_empty() {
+                    bail!("bare `--` not supported");
+                }
+                if let Some((k, v)) = key.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // value = next token unless it is another flag
+                    match iter.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = iter.next().unwrap();
+                            out.flags.insert(key.to_string(), v);
+                        }
+                        _ => {
+                            out.flags.insert(key.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn command(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key}: bad number {v:?}")),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key}: bad integer {v:?}")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key}: bad integer {v:?}")),
+        }
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse("exp table3 --scale 0.5 --out dir --quick");
+        assert_eq!(a.command(), Some("exp"));
+        assert_eq!(a.positional[1], "table3");
+        assert_eq!(a.get("scale"), Some("0.5"));
+        assert_eq!(a.get("out"), Some("dir"));
+        assert!(a.has("quick"));
+        assert_eq!(a.get("quick"), Some("true"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("train --eps=0.1 --iters=100");
+        assert_eq!(a.get_f64("eps", 1.0).unwrap(), 0.1);
+        assert_eq!(a.get_usize("iters", 0).unwrap(), 100);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse("train --eps abc");
+        assert_eq!(a.get_f64("missing", 2.5).unwrap(), 2.5);
+        assert!(a.get_f64("eps", 1.0).is_err());
+    }
+
+    #[test]
+    fn switch_before_flag() {
+        let a = parse("run --verbose --n 3");
+        assert!(a.has("verbose"));
+        assert_eq!(a.get_usize("n", 0).unwrap(), 3);
+    }
+}

@@ -1,0 +1,84 @@
+//! Coordinator metrics: lock-free counters shared by workers.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+#[derive(Debug)]
+pub struct Metrics {
+    pub jobs_submitted: AtomicU64,
+    pub jobs_completed: AtomicU64,
+    pub jobs_failed: AtomicU64,
+    pub iters_total: AtomicU64,
+    pub flops_total: AtomicU64,
+    /// Worker-side wall time in microseconds (sums across workers, so it
+    /// can exceed elapsed wall time — that ratio is pool utilization).
+    pub busy_us: AtomicU64,
+    started: Instant,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self {
+            jobs_submitted: AtomicU64::new(0),
+            jobs_completed: AtomicU64::new(0),
+            jobs_failed: AtomicU64::new(0),
+            iters_total: AtomicU64::new(0),
+            flops_total: AtomicU64::new(0),
+            busy_us: AtomicU64::new(0),
+            started: Instant::now(),
+        }
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_completion(&self, iters: u64, flops: u64, busy_us: u64) {
+        self.jobs_completed.fetch_add(1, Ordering::Relaxed);
+        self.iters_total.fetch_add(iters, Ordering::Relaxed);
+        self.flops_total.fetch_add(flops, Ordering::Relaxed);
+        self.busy_us.fetch_add(busy_us, Ordering::Relaxed);
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Completed solver iterations per wall-clock second.
+    pub fn iters_per_sec(&self) -> f64 {
+        self.iters_total.load(Ordering::Relaxed) as f64 / self.elapsed_secs().max(1e-9)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "jobs {}/{} ({} failed), {:.2e} iters, {:.2e} flops, {:.1} iters/s, pool busy {:.2}s",
+            self.jobs_completed.load(Ordering::Relaxed),
+            self.jobs_submitted.load(Ordering::Relaxed),
+            self.jobs_failed.load(Ordering::Relaxed),
+            self.iters_total.load(Ordering::Relaxed) as f64,
+            self.flops_total.load(Ordering::Relaxed) as f64,
+            self.iters_per_sec(),
+            self.busy_us.load(Ordering::Relaxed) as f64 / 1e6,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_summarizes() {
+        let m = Metrics::new();
+        m.jobs_submitted.fetch_add(2, Ordering::Relaxed);
+        m.record_completion(100, 5000, 1234);
+        m.record_completion(50, 1000, 100);
+        assert_eq!(m.jobs_completed.load(Ordering::Relaxed), 2);
+        assert_eq!(m.iters_total.load(Ordering::Relaxed), 150);
+        assert_eq!(m.flops_total.load(Ordering::Relaxed), 6000);
+        let s = m.summary();
+        assert!(s.contains("jobs 2/2"), "{s}");
+    }
+}

@@ -1,0 +1,19 @@
+//! L3 coordination: a multi-threaded training orchestrator.
+//!
+//! The paper's experiments are a grid over
+//! {dataset × solver × selector × ε × seed}; the coordinator runs that
+//! grid as a job queue over a worker pool (std threads + channels — tokio
+//! is not in the offline crate set, and the workload is CPU-bound batch
+//! compute, not I/O concurrency), collects [`job::JobResult`]s, tracks
+//! [`metrics::Metrics`], and lands everything in a [`registry::Registry`]
+//! for CSV/JSON export. The experiment harness (`experiments/`) and the
+//! e2e example drive all runs through this path.
+
+pub mod job;
+pub mod metrics;
+pub mod registry;
+pub mod scheduler;
+
+pub use job::{Algo, JobResult, JobSpec};
+pub use registry::Registry;
+pub use scheduler::Coordinator;

@@ -1,0 +1,166 @@
+//! Results registry: collects [`JobResult`]s and exports CSV/JSON reports
+//! (the persistence layer behind every experiment table).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::job::JobResult;
+use crate::textio::{CsvTable, Json};
+
+#[derive(Default)]
+pub struct Registry {
+    results: Vec<JobResult>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, r: JobResult) {
+        self.results.push(r);
+    }
+
+    pub fn extend(&mut self, rs: impl IntoIterator<Item = JobResult>) {
+        self.results.extend(rs);
+    }
+
+    pub fn len(&self) -> usize {
+        self.results.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.results.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &JobResult> {
+        self.results.iter()
+    }
+
+    pub fn find(&self, label: &str) -> Option<&JobResult> {
+        self.results.iter().find(|r| r.label == label)
+    }
+
+    /// Flat per-job summary table.
+    pub fn to_csv(&self) -> CsvTable {
+        let mut t = CsvTable::new([
+            "id", "label", "algo", "selector", "iters", "wall_ms", "flops",
+            "final_gap", "nnz", "sparsity_pct", "accuracy", "auc",
+        ]);
+        for r in &self.results {
+            t.push_row([
+                r.id.to_string(),
+                r.label.clone(),
+                r.algo.name().to_string(),
+                r.selector.clone(),
+                r.output.iters_run.to_string(),
+                format!("{:.3}", r.output.wall_ms),
+                r.output.flops.to_string(),
+                format!("{:.6e}", r.output.final_gap),
+                r.output.weights.nnz().to_string(),
+                format!("{:.2}", r.sparsity_pct),
+                r.accuracy.map(|a| format!("{a:.2}")).unwrap_or_default(),
+                r.auc.map(|a| format!("{a:.2}")).unwrap_or_default(),
+            ]);
+        }
+        t
+    }
+
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> Result<()> {
+        self.to_csv().write_file(path)
+    }
+
+    /// JSON export, traces included (figure regeneration input).
+    pub fn to_json(&self) -> Json {
+        let jobs: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                let trace: Vec<Json> = r
+                    .output
+                    .trace
+                    .iter()
+                    .map(|t| {
+                        Json::obj()
+                            .set("iter", t.iter)
+                            .set("gap", t.gap)
+                            .set("flops", t.flops)
+                            .set("pops", t.pops)
+                    })
+                    .collect();
+                Json::obj()
+                    .set("id", r.id)
+                    .set("label", r.label.as_str())
+                    .set("algo", r.algo.name())
+                    .set("selector", r.selector.as_str())
+                    .set("wall_ms", r.output.wall_ms)
+                    .set("flops", r.output.flops)
+                    .set("final_gap", r.output.final_gap)
+                    .set("nnz", r.output.weights.nnz())
+                    .set("sparsity_pct", r.sparsity_pct)
+                    .set(
+                        "accuracy",
+                        r.accuracy.map(Json::Num).unwrap_or(Json::Null),
+                    )
+                    .set("auc", r.auc.map(Json::Num).unwrap_or(Json::Null))
+                    .set("trace", Json::Arr(trace))
+            })
+            .collect();
+        Json::obj().set("jobs", Json::Arr(jobs))
+    }
+
+    pub fn write_json(&self, path: impl AsRef<Path>) -> Result<()> {
+        self.to_json().write_file(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::{Algo, JobSpec};
+    use crate::fw::config::FwConfig;
+    use crate::sparse::synth::SynthConfig;
+    use std::sync::Arc;
+
+    fn one_result() -> JobResult {
+        let ds = Arc::new(
+            SynthConfig {
+                name: "reg".into(),
+                n_rows: 50,
+                n_cols: 30,
+                avg_row_nnz: 5.0,
+                zipf_exponent: 1.2,
+                n_informative: 6,
+                n_dense: 0,
+                label_noise: 0.02,
+            bias_col: true,
+            }
+            .generate(5),
+        );
+        JobSpec {
+            id: 7,
+            label: "cell-a".into(),
+            data: ds.clone(),
+            algo: Algo::Fast,
+            cfg: FwConfig { iters: 40, lambda: 3.0, trace_every: 10, ..Default::default() },
+            test_data: Some(ds),
+        }
+        .run()
+    }
+
+    #[test]
+    fn csv_and_json_exports() {
+        let mut reg = Registry::new();
+        reg.add(one_result());
+        assert_eq!(reg.len(), 1);
+        let csv = reg.to_csv().to_string();
+        assert!(csv.starts_with("id,label,algo"));
+        assert!(csv.contains("cell-a"));
+        let json = reg.to_json().render();
+        assert!(json.contains("\"label\":\"cell-a\""));
+        assert!(json.contains("\"trace\":["));
+        assert!(reg.find("cell-a").is_some());
+        assert!(reg.find("nope").is_none());
+    }
+}

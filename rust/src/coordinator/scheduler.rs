@@ -1,0 +1,225 @@
+//! The worker-pool scheduler: a bounded job queue over std threads.
+//!
+//! Design: one `mpsc` job channel (shared by workers behind a mutex — the
+//! jobs are seconds-long solver runs, so receiver contention is
+//! irrelevant), one result channel back. Panics in a job are caught and
+//! reported as failures rather than poisoning the pool — a failed grid
+//! cell must not take down a week-long experiment sweep.
+
+use std::panic::AssertUnwindSafe;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use super::job::{JobResult, JobSpec};
+use super::metrics::Metrics;
+
+/// Outcome of one job: the result, or the panic message.
+pub type JobOutcome = Result<JobResult, String>;
+
+pub struct Coordinator {
+    job_tx: Option<mpsc::Sender<JobSpec>>,
+    result_rx: mpsc::Receiver<(usize, JobOutcome)>,
+    workers: Vec<JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+    submitted: usize,
+}
+
+impl Coordinator {
+    /// Spawn `n_workers` worker threads (min 1).
+    pub fn new(n_workers: usize) -> Self {
+        let n_workers = n_workers.max(1);
+        let (job_tx, job_rx) = mpsc::channel::<JobSpec>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let (result_tx, result_rx) = mpsc::channel();
+        let metrics = Arc::new(Metrics::new());
+        let mut workers = Vec::with_capacity(n_workers);
+        for worker_id in 0..n_workers {
+            let rx = Arc::clone(&job_rx);
+            let tx = result_tx.clone();
+            let metrics = Arc::clone(&metrics);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("dpfw-worker-{worker_id}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().expect("job queue poisoned");
+                            guard.recv()
+                        };
+                        let Ok(job) = job else { break }; // channel closed
+                        let id = job.id;
+                        let start = Instant::now();
+                        let outcome =
+                            std::panic::catch_unwind(AssertUnwindSafe(|| job.run()));
+                        let busy_us = start.elapsed().as_micros() as u64;
+                        let outcome = match outcome {
+                            Ok(res) => {
+                                metrics.record_completion(
+                                    res.output.iters_run as u64,
+                                    res.output.flops,
+                                    busy_us,
+                                );
+                                Ok(res)
+                            }
+                            Err(p) => {
+                                metrics
+                                    .jobs_failed
+                                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                                let msg = p
+                                    .downcast_ref::<String>()
+                                    .cloned()
+                                    .or_else(|| {
+                                        p.downcast_ref::<&str>().map(|s| s.to_string())
+                                    })
+                                    .unwrap_or_else(|| "<non-string panic>".into());
+                                Err(msg)
+                            }
+                        };
+                        if tx.send((id, outcome)).is_err() {
+                            break; // coordinator dropped
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        Self { job_tx: Some(job_tx), result_rx, workers, metrics, submitted: 0 }
+    }
+
+    /// Enqueue a job (non-blocking).
+    pub fn submit(&mut self, job: JobSpec) {
+        self.metrics
+            .jobs_submitted
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.submitted += 1;
+        self.job_tx
+            .as_ref()
+            .expect("coordinator already shut down")
+            .send(job)
+            .expect("worker pool hung up");
+    }
+
+    /// Block until every submitted job has finished; results are returned
+    /// sorted by job id.
+    pub fn drain(&mut self) -> Vec<JobOutcome> {
+        let mut out: Vec<(usize, JobOutcome)> = Vec::with_capacity(self.submitted);
+        for _ in 0..self.submitted {
+            let item = self.result_rx.recv().expect("workers all died");
+            out.push(item);
+        }
+        self.submitted = 0;
+        out.sort_by_key(|(id, _)| *id);
+        out.into_iter().map(|(_, o)| o).collect()
+    }
+
+    /// Convenience: submit everything, drain, unwrap failures into `Err`.
+    pub fn run_all(&mut self, jobs: Vec<JobSpec>) -> Vec<JobOutcome> {
+        for j in jobs {
+            self.submit(j);
+        }
+        self.drain()
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.job_tx.take(); // close the queue → workers exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::Algo;
+    use crate::fw::config::FwConfig;
+    use crate::sparse::synth::SynthConfig;
+    use crate::sparse::Dataset;
+
+    fn ds(seed: u64) -> Arc<Dataset> {
+        Arc::new(
+            SynthConfig {
+                name: format!("sched{seed}"),
+                n_rows: 80,
+                n_cols: 40,
+                avg_row_nnz: 6.0,
+                zipf_exponent: 1.2,
+                n_informative: 8,
+                n_dense: 0,
+                label_noise: 0.02,
+            bias_col: true,
+            }
+            .generate(seed),
+        )
+    }
+
+    fn job(id: usize, data: Arc<Dataset>) -> JobSpec {
+        JobSpec {
+            id,
+            label: format!("j{id}"),
+            data,
+            algo: Algo::Fast,
+            cfg: FwConfig { iters: 60, lambda: 4.0, ..Default::default() },
+            test_data: None,
+        }
+    }
+
+    #[test]
+    fn runs_jobs_in_parallel_and_orders_results() {
+        let mut c = Coordinator::new(4);
+        let d = ds(1);
+        let jobs: Vec<JobSpec> = (0..12).map(|i| job(i, d.clone())).collect();
+        let results = c.run_all(jobs);
+        assert_eq!(results.len(), 12);
+        for (i, r) in results.iter().enumerate() {
+            let r = r.as_ref().expect("job failed");
+            assert_eq!(r.id, i);
+            assert!(r.output.flops > 0);
+        }
+        assert_eq!(
+            c.metrics.jobs_completed.load(std::sync::atomic::Ordering::Relaxed),
+            12
+        );
+    }
+
+    #[test]
+    fn identical_jobs_identical_results_across_workers() {
+        // determinism survives the thread pool (no hidden global RNG)
+        let mut c = Coordinator::new(3);
+        let d = ds(2);
+        let results = c.run_all((0..6).map(|i| job(i, d.clone())).collect());
+        let w0 = &results[0].as_ref().unwrap().output.weights;
+        for r in &results[1..] {
+            assert_eq!(&r.as_ref().unwrap().output.weights, w0);
+        }
+    }
+
+    #[test]
+    fn failure_injection_does_not_poison_pool() {
+        let mut c = Coordinator::new(2);
+        let d = ds(3);
+        let mut bad = job(0, d.clone());
+        bad.cfg.lambda = -1.0; // validate() panics inside the worker
+        c.submit(bad);
+        c.submit(job(1, d.clone()));
+        c.submit(job(2, d));
+        let results = c.drain();
+        assert!(results[0].is_err());
+        assert!(results[1].is_ok());
+        assert!(results[2].is_ok());
+        assert_eq!(
+            c.metrics.jobs_failed.load(std::sync::atomic::Ordering::Relaxed),
+            1
+        );
+    }
+
+    #[test]
+    fn single_worker_pool_works() {
+        let mut c = Coordinator::new(0); // clamped to 1
+        let d = ds(4);
+        let results = c.run_all(vec![job(0, d)]);
+        assert!(results[0].is_ok());
+    }
+}

@@ -1,0 +1,11 @@
+//! Substrate: differential privacy mechanisms and accounting.
+//!
+//! * [`accounting`] — the paper's §B.2: per-step budget via advanced
+//!   composition (`ε' = ε / √(8T log(1/δ))`), the sensitivity of the FW
+//!   linear-minimization scores, and the Algorithm 1/2 noise constants.
+//! * [`mechanisms`] — Laplace and exponential mechanisms as standalone,
+//!   testable primitives (the samplers in [`crate::sampler`] are their
+//!   scaled-up implementations).
+
+pub mod accounting;
+pub mod mechanisms;

@@ -1,0 +1,126 @@
+//! Evaluation metrics for Table 4: accuracy, AUC, solution sparsity.
+
+/// Classification accuracy (%) of scores `p` (threshold 0.5) against
+/// binary labels `y` in {0,1}.
+pub fn accuracy(p: &[f64], y: &[f32]) -> f64 {
+    assert_eq!(p.len(), y.len());
+    assert!(!p.is_empty());
+    let correct = p
+        .iter()
+        .zip(y)
+        .filter(|(&pi, &yi)| (pi >= 0.5) == (yi >= 0.5))
+        .count();
+    100.0 * correct as f64 / p.len() as f64
+}
+
+/// Area under the ROC curve (%) via the Mann-Whitney U statistic (rank
+/// formulation, ties averaged) — O(n log n).
+pub fn auc(p: &[f64], y: &[f32]) -> f64 {
+    assert_eq!(p.len(), y.len());
+    let n_pos = y.iter().filter(|&&v| v >= 0.5).count();
+    let n_neg = y.len() - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return 50.0; // undefined; convention: chance level
+    }
+    // rank scores (average ranks for ties)
+    let mut idx: Vec<usize> = (0..p.len()).collect();
+    idx.sort_by(|&a, &b| p[a].partial_cmp(&p[b]).unwrap());
+    let mut ranks = vec![0.0f64; p.len()];
+    let mut i = 0;
+    while i < idx.len() {
+        let mut jj = i;
+        while jj + 1 < idx.len() && p[idx[jj + 1]] == p[idx[i]] {
+            jj += 1;
+        }
+        let avg_rank = (i + jj) as f64 / 2.0 + 1.0;
+        for k in i..=jj {
+            ranks[idx[k]] = avg_rank;
+        }
+        i = jj + 1;
+    }
+    let rank_sum_pos: f64 = ranks
+        .iter()
+        .zip(y)
+        .filter(|(_, &yi)| yi >= 0.5)
+        .map(|(&r, _)| r)
+        .sum();
+    let u = rank_sum_pos - (n_pos * (n_pos + 1)) as f64 / 2.0;
+    100.0 * u / (n_pos as f64 * n_neg as f64)
+}
+
+/// Percentage of *zero* coefficients — the paper's Table 4 "Sparsity (%)"
+/// column (higher = sparser solution).
+pub fn sparsity_pct(w: &[f64]) -> f64 {
+    if w.is_empty() {
+        return 0.0;
+    }
+    100.0 * w.iter().filter(|&&v| v == 0.0).count() as f64 / w.len() as f64
+}
+
+/// Mean logistic loss of scores under labels (reporting only).
+pub fn mean_logloss(p: &[f64], y: &[f32]) -> f64 {
+    assert_eq!(p.len(), y.len());
+    let eps = 1e-12;
+    p.iter()
+        .zip(y)
+        .map(|(&pi, &yi)| {
+            let pi = pi.clamp(eps, 1.0 - eps);
+            -(yi as f64 * pi.ln() + (1.0 - yi as f64) * (1.0 - pi).ln())
+        })
+        .sum::<f64>()
+        / p.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basic() {
+        let p = [0.9, 0.1, 0.8, 0.3];
+        let y = [1.0, 0.0, 0.0, 0.0];
+        assert!((accuracy(&p, &y) - 75.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_perfect_and_inverted() {
+        let p = [0.1, 0.2, 0.8, 0.9];
+        let y = [0.0, 0.0, 1.0, 1.0];
+        assert!((auc(&p, &y) - 100.0).abs() < 1e-12);
+        let y_inv = [1.0, 1.0, 0.0, 0.0];
+        assert!((auc(&p, &y_inv) - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_chance_for_random_scores() {
+        let p: Vec<f64> = (0..1000).map(|i| ((i * 37) % 101) as f64 / 101.0).collect();
+        let y: Vec<f32> = (0..1000).map(|i| ((i * 53) % 2) as f32).collect();
+        let a = auc(&p, &y);
+        assert!((a - 50.0).abs() < 6.0, "auc={a}");
+    }
+
+    #[test]
+    fn auc_handles_ties() {
+        let p = [0.5, 0.5, 0.5, 0.5];
+        let y = [1.0, 0.0, 1.0, 0.0];
+        assert!((auc(&p, &y) - 50.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_degenerate_labels() {
+        assert_eq!(auc(&[0.3, 0.7], &[1.0, 1.0]), 50.0);
+    }
+
+    #[test]
+    fn sparsity() {
+        assert!((sparsity_pct(&[0.0, 1.0, 0.0, 2.0]) - 50.0).abs() < 1e-12);
+        assert_eq!(sparsity_pct(&[]), 0.0);
+    }
+
+    #[test]
+    fn logloss_confident_correct_is_small() {
+        let good = mean_logloss(&[0.99, 0.01], &[1.0, 0.0]);
+        let bad = mean_logloss(&[0.01, 0.99], &[1.0, 0.0]);
+        assert!(good < 0.02 && bad > 4.0);
+    }
+}

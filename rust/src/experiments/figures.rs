@@ -1,0 +1,150 @@
+//! Figure regeneration: the per-iteration series behind the paper's
+//! Figures 1-4. Each function emits one CSV whose columns are exactly the
+//! series plotted in the paper.
+
+use anyhow::Result;
+
+use super::{build_dataset, ExpConfig, EVAL_PRESETS};
+use crate::fw::config::{FwConfig, SelectorKind};
+use crate::fw::fast::FastFrankWolfe;
+use crate::fw::standard::StandardFrankWolfe;
+use crate::fw::trace::FwOutput;
+use crate::textio::CsvTable;
+
+fn nonprivate_pair(preset_idx: usize, cfg: &ExpConfig) -> (String, FwOutput, FwOutput) {
+    let p = EVAL_PRESETS[preset_idx];
+    let ds = build_dataset(p, cfg);
+    let base = FwConfig {
+        iters: cfg.iters,
+        lambda: 50.0,
+        trace_every: (cfg.iters / 100).max(1),
+        ..Default::default()
+    };
+    let alg1 = StandardFrankWolfe::new(&ds, base.clone()).run();
+    let alg2 = FastFrankWolfe::new(
+        &ds,
+        FwConfig { selector: SelectorKind::FibHeap, ..base },
+    )
+    .run();
+    (p.name().to_string(), alg1, alg2)
+}
+
+/// **Figure 1** — convergence gap `g_t` vs iteration for Alg 1 (solid in
+/// the paper) and Alg 2 + Alg 3 (dotted): the curves must overlap.
+/// Columns: dataset, iter, gap_alg1, gap_alg2.
+pub fn fig1_convergence(cfg: &ExpConfig) -> Result<CsvTable> {
+    let mut t = CsvTable::new(["dataset", "iter", "gap_alg1", "gap_alg2"]);
+    for idx in 0..EVAL_PRESETS.len() {
+        let (name, a1, a2) = nonprivate_pair(idx, cfg);
+        for (r1, r2) in a1.trace.iter().zip(&a2.trace) {
+            t.push_row([
+                name.clone(),
+                r1.iter.to_string(),
+                format!("{:.6e}", r1.gap),
+                format!("{:.6e}", r2.gap),
+            ]);
+        }
+    }
+    t.write_file(cfg.out_dir.join("fig1_convergence.csv"))?;
+    Ok(t)
+}
+
+/// **Figure 2** — how many times fewer FLOPs Alg 2 + Alg 3 needs than
+/// Alg 1, as training progresses. Columns: dataset, iter, flops_ratio.
+pub fn fig2_flops_ratio(cfg: &ExpConfig) -> Result<CsvTable> {
+    let mut t = CsvTable::new(["dataset", "iter", "flops_alg1", "flops_alg2", "ratio"]);
+    for idx in 0..EVAL_PRESETS.len() {
+        let (name, a1, a2) = nonprivate_pair(idx, cfg);
+        for (r1, r2) in a1.trace.iter().zip(&a2.trace) {
+            let ratio = r1.flops as f64 / r2.flops.max(1) as f64;
+            t.push_row([
+                name.clone(),
+                r1.iter.to_string(),
+                r1.flops.to_string(),
+                r2.flops.to_string(),
+                format!("{ratio:.2}"),
+            ]);
+        }
+    }
+    t.write_file(cfg.out_dir.join("fig2_flops_ratio.csv"))?;
+    Ok(t)
+}
+
+/// **Figure 3** (appendix) — cumulative Fibonacci-heap pops divided by
+/// `‖w*‖₀`, per iteration: the paper's empirical validation that
+/// `getNext` is `O(‖w*‖₀)` (the ratio stays ≤ ~3).
+pub fn fig3_pops_ratio(cfg: &ExpConfig) -> Result<CsvTable> {
+    let mut t =
+        CsvTable::new(["dataset", "iter", "pops", "w_nnz_final", "pops_per_select", "ratio"]);
+    for idx in 0..EVAL_PRESETS.len() {
+        let (name, _a1, a2) = nonprivate_pair(idx, cfg);
+        let nnz = a2.weights.nnz().max(1);
+        for r in &a2.trace {
+            // average pops per getNext so far, normalized by ‖w*‖₀ — the
+            // paper's claim is this ratio stays ≤ ~3
+            let per_select = r.pops as f64 / r.iter.max(1) as f64;
+            t.push_row([
+                name.clone(),
+                r.iter.to_string(),
+                r.pops.to_string(),
+                nnz.to_string(),
+                format!("{per_select:.3}"),
+                format!("{:.4}", per_select / nnz as f64),
+            ]);
+        }
+    }
+    t.write_file(cfg.out_dir.join("fig3_pops_ratio.csv"))?;
+    Ok(t)
+}
+
+/// **Figure 4** (appendix) — convergence gap vs cumulative FLOPs: Alg 2
+/// reaches the same gap with orders of magnitude fewer operations.
+pub fn fig4_gap_vs_flops(cfg: &ExpConfig) -> Result<CsvTable> {
+    let mut t = CsvTable::new(["dataset", "algo", "flops", "gap"]);
+    for idx in 0..EVAL_PRESETS.len() {
+        let (name, a1, a2) = nonprivate_pair(idx, cfg);
+        for r in &a1.trace {
+            t.push_row([name.clone(), "alg1".into(), r.flops.to_string(), format!("{:.6e}", r.gap)]);
+        }
+        for r in &a2.trace {
+            t.push_row([name.clone(), "alg2".into(), r.flops.to_string(), format!("{:.6e}", r.gap)]);
+        }
+    }
+    t.write_file(cfg.out_dir.join("fig4_gap_vs_flops.csv"))?;
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ExpConfig {
+        let dir = std::env::temp_dir().join("dpfw_figs_test");
+        ExpConfig { scale: 0.12, iters: 60, seed: 3, out_dir: dir, workers: 2 }
+    }
+
+    #[test]
+    fn fig1_and_fig2_emit_all_presets() {
+        let cfg = tiny_cfg();
+        let t1 = fig1_convergence(&cfg).unwrap();
+        assert!(t1.rows.len() >= 5);
+        let datasets: std::collections::HashSet<_> =
+            t1.rows.iter().map(|r| r[0].clone()).collect();
+        assert_eq!(datasets.len(), 5);
+        let t2 = fig2_flops_ratio(&cfg).unwrap();
+        // final ratio must show Alg2 doing fewer FLOPs on pure-sparse
+        // datasets; URL's dense informative block erases the non-private
+        // advantage (exactly the paper's §4.2 observation), so only demand
+        // parity there.
+        for name in &datasets {
+            let last = t2.rows.iter().rev().find(|r| &r[0] == name).unwrap();
+            let ratio: f64 = last[4].parse().unwrap();
+            if name == "url" {
+                assert!(ratio > 0.5, "{name}: ratio {ratio}");
+            } else {
+                assert!(ratio > 1.0, "{name}: ratio {ratio}");
+            }
+        }
+        assert!(cfg.out_dir.join("fig1_convergence.csv").exists());
+    }
+}

@@ -1,0 +1,159 @@
+//! Run configuration shared by both solvers.
+
+use crate::dp::accounting::PrivacyParams;
+
+/// Which coordinate-selection structure to use (Table 3's rows/columns).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SelectorKind {
+    /// Non-private dense argmax over |α| (Algorithm 1's selection).
+    Argmax,
+    /// Non-private Fibonacci-heap queue maintenance (Algorithm 3).
+    FibHeap,
+    /// Non-private queue maintenance on an indexed binary heap (ablation:
+    /// same stale-upper-bound logic as Alg 3, cache-friendly structure).
+    BinHeap,
+    /// DP report-noisy-max, O(D) per iteration (Alg 1's DP selection and
+    /// Table 3's "Alg. 2" ablation column).
+    NoisyMax,
+    /// DP Big-Step Little-Step exponential sampler (Algorithm 4).
+    Bsls,
+    /// DP exponential mechanism via O(D) Gumbel-max (distribution-exact
+    /// reference for BSLS).
+    NaiveExp,
+}
+
+impl SelectorKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SelectorKind::Argmax => "argmax",
+            SelectorKind::FibHeap => "fibheap",
+            SelectorKind::BinHeap => "binheap",
+            SelectorKind::NoisyMax => "noisymax",
+            SelectorKind::Bsls => "bsls",
+            SelectorKind::NaiveExp => "naive-exp",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        Some(match s {
+            "argmax" => SelectorKind::Argmax,
+            "fibheap" => SelectorKind::FibHeap,
+            "binheap" => SelectorKind::BinHeap,
+            "noisymax" => SelectorKind::NoisyMax,
+            "bsls" => SelectorKind::Bsls,
+            "naive-exp" | "naiveexp" => SelectorKind::NaiveExp,
+            _ => return None,
+        })
+    }
+
+    /// Does this selector implement a DP mechanism (and therefore require
+    /// `FwConfig::privacy`)?
+    pub fn is_private(&self) -> bool {
+        matches!(
+            self,
+            SelectorKind::NoisyMax | SelectorKind::Bsls | SelectorKind::NaiveExp
+        )
+    }
+}
+
+/// Solver configuration. `Default` gives the paper's main settings
+/// (T=4000, λ=50, non-private argmax).
+#[derive(Clone, Debug)]
+pub struct FwConfig {
+    /// Iteration budget `T` (the paper runs T−1 update steps, t = 1..T−1).
+    pub iters: usize,
+    /// L1-ball radius λ.
+    pub lambda: f64,
+    /// Privacy target; `None` = non-private training.
+    pub privacy: Option<PrivacyParams>,
+    pub selector: SelectorKind,
+    /// RNG seed (mechanism noise; ignored by non-private selectors).
+    pub seed: u64,
+    /// Record a trace point every `trace_every` iterations (0 = only the
+    /// final state).
+    pub trace_every: usize,
+    /// Override the loss Lipschitz constant (None = take it from the loss).
+    pub lipschitz: Option<f64>,
+}
+
+impl Default for FwConfig {
+    fn default() -> Self {
+        Self {
+            iters: 4000,
+            lambda: 50.0,
+            privacy: None,
+            selector: SelectorKind::Argmax,
+            seed: 0,
+            trace_every: 0,
+            lipschitz: None,
+        }
+    }
+}
+
+impl FwConfig {
+    /// Panics on inconsistent combinations (DP selector without privacy
+    /// params and vice versa) — failing loudly beats silently training
+    /// with the wrong guarantee.
+    pub fn validate(&self) {
+        assert!(self.iters >= 2, "need at least 2 iterations");
+        assert!(self.lambda > 0.0, "lambda must be positive");
+        if self.selector.is_private() {
+            assert!(
+                self.privacy.is_some(),
+                "selector {:?} is a DP mechanism; set FwConfig::privacy",
+                self.selector
+            );
+        } else {
+            assert!(
+                self.privacy.is_none(),
+                "privacy params set but selector {:?} is non-private; \
+                 the run would NOT be differentially private",
+                self.selector
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selector_name_roundtrip() {
+        for k in [
+            SelectorKind::Argmax,
+            SelectorKind::FibHeap,
+            SelectorKind::BinHeap,
+            SelectorKind::NoisyMax,
+            SelectorKind::Bsls,
+            SelectorKind::NaiveExp,
+        ] {
+            assert_eq!(SelectorKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(SelectorKind::from_name("bogus"), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "DP mechanism")]
+    fn dp_selector_requires_privacy() {
+        FwConfig { selector: SelectorKind::Bsls, ..Default::default() }.validate();
+    }
+
+    #[test]
+    #[should_panic(expected = "NOT be differentially private")]
+    fn privacy_requires_dp_selector() {
+        FwConfig {
+            privacy: Some(PrivacyParams::new(1.0, 1e-6)),
+            ..Default::default()
+        }
+        .validate();
+    }
+
+    #[test]
+    fn default_is_paper_settings() {
+        let c = FwConfig::default();
+        assert_eq!(c.iters, 4000);
+        assert_eq!(c.lambda, 50.0);
+        c.validate();
+    }
+}

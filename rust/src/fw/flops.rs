@@ -1,0 +1,52 @@
+//! FLOP accounting — the measurement behind the paper's Figures 2 and 4.
+//!
+//! The counters use one fixed convention across both solvers so ratios are
+//! meaningful: multiply/add/compare = 1 FLOP each, transcendentals
+//! (`exp`, `ln`) = 4. Counting is by block (`add(n)` at the top of each
+//! loop) rather than per-op instrumentation, so the counted code is the
+//! same code that the wall-clock benches time.
+
+/// Cost convention constants.
+pub const FLOPS_SIGMOID: u64 = 6; // exp(4) + add + div
+pub const FLOPS_EXP: u64 = 4;
+pub const FLOPS_LN: u64 = 4;
+
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FlopCounter {
+    total: u64,
+}
+
+impl FlopCounter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn add(&mut self, n: u64) {
+        self.total += n;
+    }
+
+    #[inline]
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn reset(&mut self) {
+        self.total = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates() {
+        let mut f = FlopCounter::new();
+        f.add(10);
+        f.add(5);
+        assert_eq!(f.total(), 15);
+        f.reset();
+        assert_eq!(f.total(), 0);
+    }
+}

@@ -1,0 +1,162 @@
+//! Loss functions with the margin-gradient form the paper's algorithms
+//! consume: `q_i = ∂L(v_i, y_i)/∂v_i` for `v_i = x_i · w`.
+//!
+//! We fuse the paper's `ȳ = Xᵀy` bookkeeping into the gradient
+//! (`σ(v) − y` instead of tracking `Xᵀσ(v)` and `Xᵀy` separately) — the
+//! resulting `α` is identical (`Xᵀσ(v) − Xᵀy = Xᵀ(σ(v) − y)`), it is what
+//! the L1/L2 Pallas oracle computes, and it removes a `D`-length state
+//! vector without changing any step the algorithm takes.
+
+/// A per-margin loss: everything the FW solvers need from `L`.
+pub trait Loss: Send + Sync {
+    /// `∂L(v, y)/∂v`.
+    fn grad(&self, v: f64, y: f64) -> f64;
+    /// `L(v, y)`.
+    fn value(&self, v: f64, y: f64) -> f64;
+    /// L1-Lipschitz constant of the margin gradient: `sup |∂L/∂v|`, the
+    /// `L` in the paper's sensitivity bounds (features are ∞-normalized).
+    fn lipschitz(&self) -> f64;
+    fn name(&self) -> &'static str;
+}
+
+/// Logistic loss, labels in {0,1}: `L(v,y) = softplus(v) − y·v`,
+/// gradient `σ(v) − y`, Lipschitz constant 1.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Logistic;
+
+#[inline]
+pub fn sigmoid(v: f64) -> f64 {
+    if v >= 0.0 {
+        1.0 / (1.0 + (-v).exp())
+    } else {
+        let e = v.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// Numerically-stable `log(1 + e^v)`.
+#[inline]
+pub fn softplus(v: f64) -> f64 {
+    if v > 30.0 {
+        v
+    } else if v < -30.0 {
+        v.exp()
+    } else {
+        v.exp().ln_1p()
+    }
+}
+
+impl Loss for Logistic {
+    #[inline]
+    fn grad(&self, v: f64, y: f64) -> f64 {
+        sigmoid(v) - y
+    }
+
+    #[inline]
+    fn value(&self, v: f64, y: f64) -> f64 {
+        softplus(v) - y * v
+    }
+
+    fn lipschitz(&self) -> f64 {
+        1.0
+    }
+
+    fn name(&self) -> &'static str {
+        "logistic"
+    }
+}
+
+/// Squared loss `½(v − y)²` — the paper notes its results transfer to
+/// linear regression; provided for the non-private path. Its margin
+/// gradient is unbounded, so the Lipschitz constant is only valid under a
+/// caller-supplied bound on `|v − y|` (we use 1.0 and document that DP
+/// with squared loss additionally requires clipping; the DP experiments
+/// all use logistic loss, matching the paper).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Squared;
+
+impl Loss for Squared {
+    #[inline]
+    fn grad(&self, v: f64, y: f64) -> f64 {
+        v - y
+    }
+
+    #[inline]
+    fn value(&self, v: f64, y: f64) -> f64 {
+        0.5 * (v - y) * (v - y)
+    }
+
+    fn lipschitz(&self) -> f64 {
+        1.0 // valid only with margins clipped to |v - y| <= 1; see docs
+    }
+
+    fn name(&self) -> &'static str {
+        "squared"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sigmoid_basics() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-15);
+        assert!(sigmoid(40.0) > 1.0 - 1e-15);
+        assert!(sigmoid(-40.0) < 1e-15);
+        // stable at extremes
+        assert!(sigmoid(-1000.0) >= 0.0);
+        assert!(sigmoid(1000.0) <= 1.0);
+    }
+
+    #[test]
+    fn logistic_grad_is_derivative() {
+        let loss = Logistic;
+        for &(v, y) in &[(0.3, 1.0), (-2.0, 0.0), (5.0, 1.0), (0.0, 0.0)] {
+            let h = 1e-6;
+            let fd = (loss.value(v + h, y) - loss.value(v - h, y)) / (2.0 * h);
+            assert!(
+                (loss.grad(v, y) - fd).abs() < 1e-6,
+                "v={v} y={y}: {} vs {}",
+                loss.grad(v, y),
+                fd
+            );
+        }
+    }
+
+    #[test]
+    fn logistic_grad_bounded_by_lipschitz() {
+        let loss = Logistic;
+        for i in -100..=100 {
+            let v = i as f64 / 5.0;
+            for &y in &[0.0, 1.0] {
+                assert!(loss.grad(v, y).abs() <= loss.lipschitz() + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn logistic_value_nonnegative() {
+        let loss = Logistic;
+        for i in -50..=50 {
+            let v = i as f64 / 5.0;
+            assert!(loss.value(v, 0.0) >= 0.0);
+            assert!(loss.value(v, 1.0) >= -1e-12);
+        }
+    }
+
+    #[test]
+    fn softplus_stable() {
+        assert!((softplus(0.0) - (2.0f64).ln()).abs() < 1e-12);
+        assert_eq!(softplus(1000.0), 1000.0);
+        assert!(softplus(-1000.0) >= 0.0);
+    }
+
+    #[test]
+    fn squared_grad_is_derivative() {
+        let loss = Squared;
+        let h = 1e-6;
+        let fd = (loss.value(2.0 + h, 0.5) - loss.value(2.0 - h, 0.5)) / (2.0 * h);
+        assert!((loss.grad(2.0, 0.5) - fd).abs() < 1e-6);
+    }
+}

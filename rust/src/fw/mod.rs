@@ -1,0 +1,53 @@
+//! Core library: the paper's Frank-Wolfe solver family.
+//!
+//! * [`standard`] — Algorithm 1, the standard sparse-aware baseline
+//!   (sparse matvecs, dense `O(D)` per-iteration work, report-noisy-max
+//!   for DP).
+//! * [`fast`] — Algorithm 2, the fast sparse-aware solver: `O(1)` weight
+//!   updates via the multiplicative scalar `w_m`, `O(S_r S_c)` sparse
+//!   maintenance of `α`, `v̄` and the gap `g̃`, and selector-pluggable
+//!   coordinate choice.
+//! * [`queue`] — the selector abstraction: non-private argmax, Alg 3's
+//!   Fibonacci-heap queue, Alg 4's BSLS exponential sampler, the noisy-max
+//!   ablation, and the naive `O(D)` exponential mechanism.
+//! * [`loss`], [`flops`], [`trace`], [`config`] — losses with the DP
+//!   Lipschitz constants, FLOP accounting (Figures 2 & 4), per-iteration
+//!   traces (Figures 1 & 3), and run configuration.
+
+pub mod config;
+pub mod fast;
+pub mod flops;
+pub mod loss;
+pub mod queue;
+pub mod standard;
+pub mod trace;
+
+/// Three-valued sign (`sign(0) = 0`), shared with the data generator.
+#[inline]
+pub fn sign_pub(x: f64) -> f64 {
+    sign(x)
+}
+
+#[inline]
+pub(crate) fn sign(x: f64) -> f64 {
+    if x > 0.0 {
+        1.0
+    } else if x < 0.0 {
+        -1.0
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::sign;
+
+    #[test]
+    fn sign_is_three_valued() {
+        assert_eq!(sign(3.5), 1.0);
+        assert_eq!(sign(-0.1), -1.0);
+        assert_eq!(sign(0.0), 0.0);
+        assert_eq!(sign(-0.0), 0.0);
+    }
+}

@@ -1,0 +1,83 @@
+//! Per-iteration traces and solver outputs — the raw material for every
+//! figure in the paper (gap curves for Fig 1, FLOP ratios for Figs 2 & 4,
+//! heap-pop ratios for Fig 3).
+
+use crate::fw::queue::SelectorStats;
+
+/// One trace point.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceRecord {
+    /// Iteration index t.
+    pub iter: usize,
+    /// The paper's convergence gap `g_t = −⟨α_t, d_t⟩` at the *selected*
+    /// coordinate (noisy under DP, exactly Fig 1's y-axis otherwise).
+    pub gap: f64,
+    /// Cumulative FLOPs when this point was recorded.
+    pub flops: u64,
+    /// Cumulative queue pops (Fibonacci/binary heap selectors; 0 others).
+    pub pops: u64,
+    /// Selected coordinate.
+    pub selected: usize,
+    /// Wall-clock nanoseconds since the run started.
+    pub wall_ns: u128,
+}
+
+/// Result of one solver run.
+#[derive(Clone, Debug)]
+pub struct FwOutput {
+    /// Final dense weight vector (length D).
+    pub weights: WeightVector,
+    /// Final convergence gap `g_{T−1}`.
+    pub final_gap: f64,
+    /// Total FLOPs for the run (per the convention in [`crate::fw::flops`]).
+    pub flops: u64,
+    /// Wall-clock milliseconds.
+    pub wall_ms: f64,
+    /// Selector telemetry (pops / draws / step counts).
+    pub selector_stats: SelectorStats,
+    /// Trace points (at `trace_every` cadence plus the final iteration).
+    pub trace: Vec<TraceRecord>,
+    /// Iterations actually executed (T−1).
+    pub iters_run: usize,
+}
+
+/// Dense weight vector with sparsity helpers.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WeightVector(pub Vec<f64>);
+
+impl WeightVector {
+    pub fn dim(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.0.iter().filter(|&&v| v != 0.0).count()
+    }
+
+    pub fn l1_norm(&self) -> f64 {
+        self.0.iter().map(|v| v.abs()).sum()
+    }
+
+    pub fn as_slice(&self) -> &[f64] {
+        &self.0
+    }
+
+    /// Nonzero entries as `(index, value)`.
+    pub fn nonzeros(&self) -> impl Iterator<Item = (usize, f64)> + '_ {
+        self.0.iter().enumerate().filter(|(_, &v)| v != 0.0).map(|(i, &v)| (i, v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weight_vector_helpers() {
+        let w = WeightVector(vec![0.0, 2.0, -3.0, 0.0]);
+        assert_eq!(w.dim(), 4);
+        assert_eq!(w.nnz(), 2);
+        assert!((w.l1_norm() - 5.0).abs() < 1e-12);
+        assert_eq!(w.nonzeros().collect::<Vec<_>>(), vec![(1, 2.0), (2, -3.0)]);
+    }
+}

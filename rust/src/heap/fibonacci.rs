@@ -1,0 +1,425 @@
+//! Fibonacci heap (min-heap, f64 keys, `usize` items) — Algorithm 3's
+//! backing structure.
+//!
+//! Arena-allocated: nodes live in a `Vec`, linked by `u32` indices instead
+//! of pointers. A slot map from item id → node index supports
+//! `decrease_key(item, …)` in O(1) lookups; the arena recycles freed slots
+//! so a full train run does not grow memory beyond the live node count.
+//!
+//! This *is* the cache-hostile structure the paper measures: pops chase
+//! parent/child/sibling links all over the arena. The benches
+//! (`benches/selectors.rs`) show exactly the constant-factor gap vs the
+//! binary heap and the BSLS sampler that the paper reports.
+
+use super::DecreaseKeyHeap;
+
+const NIL: u32 = u32::MAX;
+
+#[derive(Clone, Debug)]
+struct Node {
+    key: f64,
+    item: usize,
+    parent: u32,
+    child: u32,
+    left: u32,
+    right: u32,
+    degree: u32,
+    mark: bool,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct FibonacciHeap {
+    arena: Vec<Node>,
+    free: Vec<u32>,
+    /// item id -> arena index (NIL when absent)
+    slot: Vec<u32>,
+    min: u32,
+    len: usize,
+    /// scratch for consolidate, kept to avoid realloc
+    degree_table: Vec<u32>,
+}
+
+impl FibonacciHeap {
+    pub fn new() -> Self {
+        Self { arena: vec![], free: vec![], slot: vec![], min: NIL, len: 0, degree_table: vec![] }
+    }
+
+    /// Pre-size the item slot map for items in `[0, n_items)`.
+    pub fn with_capacity(n_items: usize) -> Self {
+        let mut h = Self::new();
+        h.slot = vec![NIL; n_items];
+        h.arena.reserve(n_items);
+        h
+    }
+
+    pub fn contains(&self, item: usize) -> bool {
+        item < self.slot.len() && self.slot[item] != NIL
+    }
+
+    fn alloc(&mut self, item: usize, key: f64) -> u32 {
+        let node = Node {
+            key,
+            item,
+            parent: NIL,
+            child: NIL,
+            left: NIL,
+            right: NIL,
+            degree: 0,
+            mark: false,
+        };
+        let idx = if let Some(i) = self.free.pop() {
+            self.arena[i as usize] = node;
+            i
+        } else {
+            self.arena.push(node);
+            (self.arena.len() - 1) as u32
+        };
+        if item >= self.slot.len() {
+            self.slot.resize(item + 1, NIL);
+        }
+        self.slot[item] = idx;
+        idx
+    }
+
+    /// Splice node `x` into the circular list containing `at` (as `at`'s
+    /// right neighbor). If `at == NIL`, makes `x` a singleton list.
+    fn splice(&mut self, x: u32, at: u32) {
+        if at == NIL {
+            self.arena[x as usize].left = x;
+            self.arena[x as usize].right = x;
+        } else {
+            let r = self.arena[at as usize].right;
+            self.arena[x as usize].left = at;
+            self.arena[x as usize].right = r;
+            self.arena[at as usize].right = x;
+            self.arena[r as usize].left = x;
+        }
+    }
+
+    /// Remove node `x` from its sibling list (does not touch parent.child).
+    fn unsplice(&mut self, x: u32) {
+        let l = self.arena[x as usize].left;
+        let r = self.arena[x as usize].right;
+        self.arena[l as usize].right = r;
+        self.arena[r as usize].left = l;
+    }
+
+    /// Make `y` a child of `x` (both roots, key[y] >= key[x]).
+    fn link(&mut self, y: u32, x: u32) {
+        self.unsplice(y);
+        let child = self.arena[x as usize].child;
+        self.arena[y as usize].parent = x;
+        self.arena[y as usize].mark = false;
+        if child == NIL {
+            self.arena[y as usize].left = y;
+            self.arena[y as usize].right = y;
+            self.arena[x as usize].child = y;
+        } else {
+            self.splice(y, child);
+        }
+        self.arena[x as usize].degree += 1;
+    }
+
+    fn consolidate(&mut self) {
+        if self.min == NIL {
+            return;
+        }
+        let max_degree = (self.len as f64).log2() as usize + 3;
+        self.degree_table.clear();
+        self.degree_table.resize(max_degree, NIL);
+        // collect current roots
+        let mut roots: Vec<u32> = Vec::with_capacity(16);
+        let start = self.min;
+        let mut cur = start;
+        loop {
+            roots.push(cur);
+            cur = self.arena[cur as usize].right;
+            if cur == start {
+                break;
+            }
+        }
+        let mut table = std::mem::take(&mut self.degree_table);
+        for &mut mut x in roots.iter_mut() {
+            let mut d = self.arena[x as usize].degree as usize;
+            while table[d] != NIL {
+                let mut y = table[d];
+                if self.arena[y as usize].key < self.arena[x as usize].key {
+                    std::mem::swap(&mut x, &mut y);
+                }
+                self.link(y, x);
+                table[d] = NIL;
+                d += 1;
+                if d >= table.len() {
+                    table.resize(d + 1, NIL);
+                }
+            }
+            table[d] = x;
+        }
+        // rebuild root list from the table, track min
+        self.min = NIL;
+        for &t in table.iter() {
+            if t == NIL {
+                continue;
+            }
+            self.arena[t as usize].parent = NIL;
+            if self.min == NIL {
+                self.splice(t, NIL);
+                self.min = t;
+            } else {
+                self.splice(t, self.min);
+                if self.arena[t as usize].key < self.arena[self.min as usize].key {
+                    self.min = t;
+                }
+            }
+        }
+        table.clear();
+        self.degree_table = table;
+    }
+
+    fn cut(&mut self, x: u32, parent: u32) {
+        // remove x from parent's child list
+        if self.arena[parent as usize].child == x {
+            let r = self.arena[x as usize].right;
+            self.arena[parent as usize].child = if r == x { NIL } else { r };
+        }
+        self.unsplice(x);
+        self.arena[parent as usize].degree -= 1;
+        // add to root list
+        self.splice(x, self.min);
+        self.arena[x as usize].parent = NIL;
+        self.arena[x as usize].mark = false;
+    }
+
+    fn cascading_cut(&mut self, mut y: u32) {
+        loop {
+            let z = self.arena[y as usize].parent;
+            if z == NIL {
+                break;
+            }
+            if !self.arena[y as usize].mark {
+                self.arena[y as usize].mark = true;
+                break;
+            }
+            self.cut(y, z);
+            y = z;
+        }
+    }
+}
+
+impl DecreaseKeyHeap for FibonacciHeap {
+    fn push(&mut self, item: usize, key: f64) {
+        debug_assert!(!self.contains(item), "item {item} already in heap");
+        let x = self.alloc(item, key);
+        self.splice(x, self.min);
+        if self.min == NIL || key < self.arena[self.min as usize].key {
+            self.min = x;
+        }
+        self.len += 1;
+    }
+
+    fn pop_min(&mut self) -> Option<(usize, f64)> {
+        if self.min == NIL {
+            return None;
+        }
+        let z = self.min;
+        let (item, key) = {
+            let n = &self.arena[z as usize];
+            (n.item, n.key)
+        };
+        // promote children to the root list
+        let mut child = self.arena[z as usize].child;
+        if child != NIL {
+            // walk the child ring, collecting first (can't splice while walking)
+            let mut kids = Vec::with_capacity(self.arena[z as usize].degree as usize);
+            let start = child;
+            loop {
+                kids.push(child);
+                child = self.arena[child as usize].right;
+                if child == start {
+                    break;
+                }
+            }
+            for k in kids {
+                self.arena[k as usize].parent = NIL;
+                self.splice(k, self.min);
+            }
+        }
+        // remove z from root list
+        let right = self.arena[z as usize].right;
+        self.unsplice(z);
+        if right == z {
+            self.min = NIL;
+        } else {
+            self.min = right;
+            self.consolidate();
+        }
+        self.len -= 1;
+        self.slot[item] = NIL;
+        self.free.push(z);
+        Some((item, key))
+    }
+
+    fn peek_key(&self) -> Option<f64> {
+        if self.min == NIL {
+            None
+        } else {
+            Some(self.arena[self.min as usize].key)
+        }
+    }
+
+    fn decrease_key(&mut self, item: usize, key: f64) {
+        let x = self.slot.get(item).copied().unwrap_or(NIL);
+        assert!(x != NIL, "decrease_key on absent item {item}");
+        if key >= self.arena[x as usize].key {
+            return; // not a decrease — Alg 3 ignores these by design
+        }
+        self.arena[x as usize].key = key;
+        let parent = self.arena[x as usize].parent;
+        if parent != NIL && key < self.arena[parent as usize].key {
+            self.cut(x, parent);
+            self.cascading_cut(parent);
+        }
+        if key < self.arena[self.min as usize].key {
+            self.min = x;
+        }
+    }
+
+    fn key_of(&self, item: usize) -> Option<f64> {
+        let x = self.slot.get(item).copied().unwrap_or(NIL);
+        if x == NIL {
+            None
+        } else {
+            Some(self.arena[x as usize].key)
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    #[test]
+    fn push_pop_sorted() {
+        let mut h = FibonacciHeap::new();
+        for (i, k) in [5.0, 1.0, 3.0, 2.0, 4.0].into_iter().enumerate() {
+            h.push(i, k);
+        }
+        let mut out = vec![];
+        while let Some((_, k)) = h.pop_min() {
+            out.push(k);
+        }
+        assert_eq!(out, vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn decrease_key_reorders() {
+        let mut h = FibonacciHeap::new();
+        h.push(0, 10.0);
+        h.push(1, 20.0);
+        h.push(2, 30.0);
+        assert_eq!(h.pop_min(), Some((0, 10.0))); // forces consolidate
+        h.decrease_key(2, 5.0);
+        assert_eq!(h.pop_min(), Some((2, 5.0)));
+        assert_eq!(h.pop_min(), Some((1, 20.0)));
+        assert_eq!(h.pop_min(), None);
+    }
+
+    #[test]
+    fn decrease_key_ignores_increases() {
+        let mut h = FibonacciHeap::new();
+        h.push(0, 1.0);
+        h.decrease_key(0, 5.0);
+        assert_eq!(h.key_of(0), Some(1.0));
+    }
+
+    #[test]
+    fn reuse_after_pop() {
+        let mut h = FibonacciHeap::with_capacity(4);
+        h.push(0, 1.0);
+        assert_eq!(h.pop_min(), Some((0, 1.0)));
+        assert!(!h.contains(0));
+        h.push(0, 2.0); // reinsert same item id (Alg 3 does this constantly)
+        assert_eq!(h.key_of(0), Some(2.0));
+        assert_eq!(h.pop_min(), Some((0, 2.0)));
+    }
+
+    /// Randomized differential test against a sorted-vec reference model —
+    /// the load-bearing correctness check for the heap.
+    #[test]
+    fn random_ops_match_reference() {
+        let mut rng = Xoshiro256pp::seeded(42);
+        for trial in 0..20 {
+            let mut h = FibonacciHeap::new();
+            let n_items = 200;
+            let mut model: Vec<Option<f64>> = vec![None; n_items]; // item -> key
+            for step in 0..2000 {
+                let op = rng.next_below(10);
+                match op {
+                    0..=4 => {
+                        // push a random absent item
+                        let item = rng.next_below(n_items as u64) as usize;
+                        if model[item].is_none() {
+                            let key = (rng.next_below(1000) as f64) / 10.0;
+                            h.push(item, key);
+                            model[item] = Some(key);
+                        }
+                    }
+                    5..=7 => {
+                        // decrease a random present item
+                        let item = rng.next_below(n_items as u64) as usize;
+                        if let Some(k) = model[item] {
+                            let nk = k - (rng.next_below(100) as f64) / 10.0;
+                            h.decrease_key(item, nk);
+                            if nk < k {
+                                model[item] = Some(nk);
+                            }
+                        }
+                    }
+                    _ => {
+                        // pop and compare with model min
+                        let got = h.pop_min();
+                        let want = model
+                            .iter()
+                            .enumerate()
+                            .filter_map(|(i, k)| k.map(|k| (k, i)))
+                            .min_by(|a, b| a.partial_cmp(b).unwrap());
+                        match (got, want) {
+                            (None, None) => {}
+                            (Some((gi, gk)), Some((wk, _))) => {
+                                assert_eq!(
+                                    gk, wk,
+                                    "trial {trial} step {step}: popped key {gk} != model min {wk}"
+                                );
+                                // ties may differ on item; key must match item's model entry
+                                assert_eq!(model[gi], Some(gk));
+                                model[gi] = None;
+                            }
+                            other => panic!("trial {trial} step {step}: mismatch {other:?}"),
+                        }
+                    }
+                }
+                assert_eq!(h.len(), model.iter().flatten().count());
+            }
+        }
+    }
+
+    #[test]
+    fn large_sequence_heapsort() {
+        let mut rng = Xoshiro256pp::seeded(9);
+        let mut h = FibonacciHeap::with_capacity(5000);
+        let mut keys: Vec<f64> = (0..5000).map(|_| rng.next_f64()).collect();
+        for (i, &k) in keys.iter().enumerate() {
+            h.push(i, k);
+        }
+        keys.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for want in keys {
+            let (_, got) = h.pop_min().unwrap();
+            assert_eq!(got, want);
+        }
+    }
+}

@@ -1,0 +1,30 @@
+//! Substrate: priority queues with `decrease-key`.
+//!
+//! Algorithm 3 needs a min-heap over (negated) gradient magnitudes with
+//! amortized `O(1)` `decrease-key` and `O(log D)` `pop` — that is the
+//! Fibonacci heap ([`fibonacci`]). The indexed binary heap ([`binary`])
+//! is the ablation baseline the paper alludes to when citing the classic
+//! "Fibonacci heaps lose in practice" results [33, 34]: `O(log D)` for
+//! both ops but far better constants/locality.
+
+pub mod binary;
+pub mod fibonacci;
+
+/// Common interface so Alg 3's queue maintenance can run over either heap.
+pub trait DecreaseKeyHeap {
+    /// Insert `item` with `key`; item must not currently be in the heap.
+    fn push(&mut self, item: usize, key: f64);
+    /// Remove and return the minimum-key entry.
+    fn pop_min(&mut self) -> Option<(usize, f64)>;
+    /// Smallest key without removing it.
+    fn peek_key(&self) -> Option<f64>;
+    /// Lower `item`'s key to `key` (no-op if not smaller). Item must be in
+    /// the heap.
+    fn decrease_key(&mut self, item: usize, key: f64);
+    /// Current key of `item`, if present.
+    fn key_of(&self, item: usize) -> Option<f64>;
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}

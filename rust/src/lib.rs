@@ -1,0 +1,79 @@
+//! # dpfw — Differentially Private LASSO Logistic Regression via Fast Frank-Wolfe
+//!
+//! Full-system reproduction of *"Scaling Up Differentially Private LASSO
+//! Regularized Logistic Regression via Faster Frank-Wolfe Iterations"*
+//! (Raff, Khanna, Lu — NeurIPS 2023).
+//!
+//! The paper makes each iteration of the (DP) Frank-Wolfe solver for
+//! L1-constrained logistic regression **sub-linear in the feature count D**
+//! on sparse data, via three pieces that map onto this crate:
+//!
+//! * [`fw::standard`] — Algorithm 1, the standard sparse-aware Frank-Wolfe
+//!   baseline (COPT-style): sparse matvecs, dense `O(D)` per-iteration work.
+//! * [`fw::fast`] — Algorithm 2, the fast sparse-aware Frank-Wolfe: the
+//!   multiplicative-scalar `w_m` trick plus sparse `α`/`v̄`/`g̃` maintenance,
+//!   `O(S_r · S_c)` state update per iteration.
+//! * [`heap::fibonacci`] + [`fw::queue`] — Algorithm 3, queue maintenance
+//!   with stale-upper-bound priorities (non-private selection in
+//!   `O(‖w*‖₀ log D)`).
+//! * [`sampler::bsls`] — Algorithm 4, the Big-Step Little-Step exponential
+//!   sampler (private selection in `O(√D log D)`, `O(1)` updates, all at
+//!   log scale).
+//!
+//! Everything the paper's evaluation depends on is also here: LIBSVM-format
+//! I/O and synthetic sparse dataset generators shaped like the paper's five
+//! datasets ([`sparse::synth`]), DP mechanisms and advanced-composition
+//! accounting ([`dp`]), FLOP accounting ([`fw::flops`]), evaluation metrics
+//! ([`eval`]), a PJRT runtime that loads the JAX/Pallas-AOT'd dense oracle
+//! ([`runtime`]), and a multi-threaded training coordinator ([`coordinator`]).
+//!
+//! Python (JAX + Pallas) exists only on the build path: `python/compile/`
+//! lowers the dense gradient / prediction / loss-gap computations to HLO
+//! text under `artifacts/`, which [`runtime`] loads through the PJRT C API.
+//! Nothing Python runs at training or serving time.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use dpfw::prelude::*;
+//!
+//! // A News20-like synthetic sparse dataset (scaled down).
+//! let ds = SynthConfig::preset(DatasetPreset::News20).scale(0.02).generate(42);
+//! let cfg = FwConfig {
+//!     iters: 500,
+//!     lambda: 50.0,
+//!     privacy: Some(PrivacyParams { epsilon: 1.0, delta: 1e-6 }),
+//!     selector: SelectorKind::Bsls,
+//!     seed: 7,
+//!     ..Default::default()
+//! };
+//! let out = FastFrankWolfe::new(&ds, cfg).run();
+//! println!("gap={:.4} nnz={}", out.final_gap, out.weights.nnz());
+//! ```
+
+pub mod cli;
+pub mod coordinator;
+pub mod dp;
+pub mod eval;
+pub mod experiments;
+pub mod fw;
+pub mod heap;
+pub mod rng;
+pub mod runtime;
+pub mod sampler;
+pub mod sparse;
+pub mod testkit;
+pub mod textio;
+
+/// Convenience re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::dp::accounting::PrivacyParams;
+    pub use crate::eval::{accuracy, auc, sparsity_pct};
+    pub use crate::fw::config::{FwConfig, SelectorKind};
+    pub use crate::fw::fast::FastFrankWolfe;
+    pub use crate::fw::standard::StandardFrankWolfe;
+    pub use crate::fw::trace::{FwOutput, TraceRecord};
+    pub use crate::sparse::csr::CsrMatrix;
+    pub use crate::sparse::synth::{DatasetPreset, SynthConfig};
+    pub use crate::sparse::Dataset;
+}

@@ -1,0 +1,277 @@
+//! `repro` — the leader binary: train models, generate data, regenerate
+//! the paper's tables/figures, and cross-check against the PJRT oracle.
+//!
+//! ```text
+//! repro train      --dataset rcv1 --scale 0.1 --algo alg2 --selector bsls \
+//!                  --eps 1 --delta 1e-6 --iters 1000 --lambda 50 [--libsvm f]
+//! repro gen-data   --dataset news20 --scale 0.01 --seed 1 --out data.svm
+//! repro exp        <datasets|fig1|fig2|fig3|fig4|table3|table4|eps-sweep|all>
+//!                  [--scale 1.0] [--iters 1000] [--out exp_out] [--workers N]
+//! repro oracle-check [--artifacts artifacts] [--scale 0.05]
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use dpfw::cli::Args;
+use dpfw::coordinator::{Algo, JobSpec};
+use dpfw::dp::accounting::PrivacyParams;
+use dpfw::experiments::{figures, tables, ExpConfig};
+use dpfw::fw::config::{FwConfig, SelectorKind};
+use dpfw::runtime::oracle::DenseOracle;
+use dpfw::sparse::synth::{DatasetPreset, SynthConfig};
+use dpfw::sparse::{libsvm, Dataset};
+use dpfw::testkit::assert_slices_close;
+
+const USAGE: &str = "\
+repro — DP LASSO logistic regression via fast Frank-Wolfe (NeurIPS 2023 repro)
+
+COMMANDS
+  train         train one model (prints metrics; --help-flags below)
+  gen-data      generate a synthetic preset as a LIBSVM file
+  exp NAME      regenerate a paper table/figure:
+                datasets fig1 fig2 fig3 fig4 table3 table4 eps-sweep all
+  oracle-check  verify the sparse solver against the PJRT dense oracle
+
+COMMON FLAGS
+  --dataset P   preset: rcv1 news20 url web kdda        [rcv1]
+  --libsvm F    train on a real LIBSVM file instead of a preset
+  --scale S     preset scale factor                      [0.05]
+  --algo A      alg1 (standard) | alg2 (fast)            [alg2]
+  --selector K  argmax fibheap binheap noisymax bsls naive-exp [argmax]
+  --eps E --delta D   privacy (selector must be a DP kind)
+  --iters T --lambda L --seed N --trace-every K
+  --out PATH    output dir (exp) / file (gen-data)
+  --workers N   coordinator threads (exp)
+";
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.command() {
+        Some("train") => cmd_train(&args),
+        Some("gen-data") => cmd_gen_data(&args),
+        Some("exp") => cmd_exp(&args),
+        Some("oracle-check") => cmd_oracle_check(&args),
+        Some("help") | None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => {
+            eprintln!("unknown command {other:?}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn load_dataset(args: &Args) -> Result<Arc<Dataset>> {
+    if let Some(path) = args.get("libsvm") {
+        let mut ds = libsvm::read_file(path)?;
+        ds.csr.normalize_inf();
+        return Ok(Arc::new(Dataset::new(
+            ds.csr.clone(),
+            ds.labels.clone(),
+            ds.name.clone(),
+        )));
+    }
+    let name = args.get_or("dataset", "rcv1");
+    let preset = DatasetPreset::from_name(&name)
+        .with_context(|| format!("unknown dataset {name:?}"))?;
+    let scale = args.get_f64("scale", 0.05)?;
+    let seed = args.get_u64("seed", 42)?;
+    Ok(Arc::new(SynthConfig::preset(preset).scale(scale).generate(seed)))
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let data = load_dataset(args)?;
+    let selector = SelectorKind::from_name(&args.get_or("selector", "argmax"))
+        .context("bad --selector")?;
+    let privacy = match args.get("eps") {
+        Some(_) => Some(PrivacyParams::new(
+            args.get_f64("eps", 1.0)?,
+            args.get_f64("delta", 1e-6)?,
+        )),
+        None => None,
+    };
+    let cfg = FwConfig {
+        iters: args.get_usize("iters", 1000)?,
+        lambda: args.get_f64("lambda", 50.0)?,
+        privacy,
+        selector,
+        seed: args.get_u64("seed", 0)?,
+        trace_every: args.get_usize("trace-every", 0)?,
+        lipschitz: None,
+    };
+    let algo = Algo::from_name(&args.get_or("algo", "alg2")).context("bad --algo")?;
+    println!(
+        "dataset {} N={} D={} nnz={} (S_c={:.1}, S_r={:.2})",
+        data.name,
+        data.n_rows(),
+        data.n_cols(),
+        data.nnz(),
+        data.avg_row_nnz(),
+        data.avg_col_nnz()
+    );
+    let (train, test) = data.split(args.get_f64("test-frac", 0.2)?);
+    let job = JobSpec {
+        id: 0,
+        label: "train".into(),
+        data: Arc::new(train),
+        algo,
+        cfg,
+        test_data: Some(Arc::new(test)),
+    };
+    let r = job.run();
+    println!(
+        "{} + {}: {} iters in {:.1} ms ({:.2e} flops)",
+        r.algo.name(),
+        r.selector,
+        r.output.iters_run,
+        r.output.wall_ms,
+        r.output.flops as f64
+    );
+    println!(
+        "final gap {:.4e}, ||w||_0 = {} ({:.2}% sparse), acc {:.2}%, auc {:.2}%",
+        r.output.final_gap,
+        r.output.weights.nnz(),
+        r.sparsity_pct,
+        r.accuracy.unwrap_or(f64::NAN),
+        r.auc.unwrap_or(f64::NAN)
+    );
+    if let Some(path) = args.get("dump-weights") {
+        let mut t = dpfw::textio::CsvTable::new(["index", "weight"]);
+        for (j, v) in r.output.weights.nonzeros() {
+            t.push_row([j.to_string(), format!("{v:.6e}")]);
+        }
+        t.write_file(path)?;
+        println!("wrote nonzero weights to {path}");
+    }
+    if let Some(out) = args.get("out") {
+        let mut reg = dpfw::coordinator::Registry::new();
+        reg.add(r);
+        reg.write_json(out)?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_gen_data(args: &Args) -> Result<()> {
+    let ds = load_dataset(args)?;
+    let out = args.get("out").context("gen-data requires --out FILE")?;
+    libsvm::write_file(&ds, out)?;
+    println!(
+        "wrote {} ({} rows, {} cols, {} nnz)",
+        out,
+        ds.n_rows(),
+        ds.n_cols(),
+        ds.nnz()
+    );
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .context("exp requires a name: datasets fig1..fig4 table3 table4 eps-sweep all")?;
+    let cfg = ExpConfig {
+        scale: args.get_f64("scale", 1.0)?,
+        iters: args.get_usize("iters", 1000)?,
+        seed: args.get_u64("seed", 42)?,
+        out_dir: args.get_or("out", "exp_out").into(),
+        workers: args.get_usize(
+            "workers",
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4),
+        )?,
+    };
+    std::fs::create_dir_all(&cfg.out_dir)?;
+    let run = |name: &str, cfg: &ExpConfig| -> Result<()> {
+        let t = match name {
+            "datasets" => tables::datasets_table(cfg)?,
+            "fig1" => figures::fig1_convergence(cfg)?,
+            "fig2" => figures::fig2_flops_ratio(cfg)?,
+            "fig3" => figures::fig3_pops_ratio(cfg)?,
+            "fig4" => figures::fig4_gap_vs_flops(cfg)?,
+            "table3" => tables::table3_speedup(cfg)?,
+            "table4" => tables::table4_utility(cfg)?,
+            "eps-sweep" => tables::eps_sweep(cfg)?,
+            other => bail!("unknown experiment {other:?}"),
+        };
+        println!("== {name} ==");
+        println!("{}", t.to_pretty());
+        Ok(())
+    };
+    if which == "all" {
+        for name in ["datasets", "fig1", "fig2", "fig3", "fig4", "table3", "table4", "eps-sweep"]
+        {
+            run(name, &cfg)?;
+        }
+    } else {
+        run(which, &cfg)?;
+    }
+    println!("CSV output in {}", cfg.out_dir.display());
+    Ok(())
+}
+
+fn cmd_oracle_check(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let mut oracle = DenseOracle::open(&dir)?;
+    println!(
+        "oracle tile: {}×{} (from {dir}/manifest.txt)",
+        oracle.n_tile(),
+        oracle.d_tile()
+    );
+    // RCV1-shaped workload sized to the oracle tile: D = d_tile exactly,
+    // N spanning several row tiles (exercises the tiled accumulation).
+    let ds = SynthConfig {
+        name: "oracle-check".into(),
+        n_cols: oracle.d_tile(),
+        n_rows: oracle.n_tile() * 5 / 2,
+        avg_row_nnz: 40.0,
+        zipf_exponent: 1.2,
+        n_informative: 40,
+        n_dense: 0,
+        label_noise: 0.05,
+            bias_col: true,
+    }
+    .generate(args.get_u64("seed", 42)?);
+    // Train briefly, then compare the solver's dense-recomputed alpha to
+    // the Pallas/XLA oracle's alpha at the trained weights.
+    let cfg = FwConfig { iters: 100, lambda: 10.0, ..Default::default() };
+    let out = dpfw::fw::fast::FastFrankWolfe::new(&ds, cfg).run();
+    let w = out.weights.as_slice();
+    let a_oracle = oracle.alpha(&ds, w)?;
+    let mut q = vec![0.0f64; ds.n_rows()];
+    let mut v = vec![0.0f64; ds.n_rows()];
+    ds.csr.matvec(w, &mut v);
+    for i in 0..ds.n_rows() {
+        q[i] = dpfw::fw::loss::sigmoid(v[i]) - ds.labels[i] as f64;
+    }
+    let mut a_rust = vec![0.0f64; ds.n_cols()];
+    ds.csr.matvec_t_add(&q, &mut a_rust);
+    assert_slices_close(&a_rust, &a_oracle, 5e-4, 5e-4);
+    let p = oracle.predict(&ds, w)?;
+    let acc = dpfw::eval::accuracy(&p, &ds.labels);
+    let (loss, gap) = oracle.loss_and_gap(&ds, w, 10.0)?;
+    println!(
+        "oracle-check OK: alpha agrees (D={}), oracle acc {:.2}%, loss {:.4}, gap {:.4e} \
+         (solver's final gap {:.4e})",
+        ds.n_cols(),
+        acc,
+        loss,
+        gap,
+        out.final_gap
+    );
+    Ok(())
+}

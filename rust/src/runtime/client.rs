@@ -1,0 +1,103 @@
+//! PJRT client wrapper: compile HLO-text artifacts once, execute many.
+//!
+//! Interchange is HLO *text* (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md): `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`. All
+//! artifact entry computations return tuples (the lowering uses
+//! `return_tuple=True`), so results are decomposed before returning.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Compiled-artifact cache over one PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Oracle tile shape from the manifest.
+    pub n_tile: usize,
+    pub d_tile: usize,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Open the artifact directory (default `artifacts/`), read the
+    /// manifest, and create the PJRT CPU client. Compilation is lazy: an
+    /// artifact is compiled on first [`Runtime::execute`].
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest).with_context(|| {
+            format!("read {} — run `make artifacts` first", manifest.display())
+        })?;
+        let mut n_tile = 0usize;
+        let mut d_tile = 0usize;
+        for line in text.lines() {
+            if let Some(v) = line.strip_prefix("n_tile=") {
+                n_tile = v.parse().context("bad n_tile in manifest")?;
+            } else if let Some(v) = line.strip_prefix("d_tile=") {
+                d_tile = v.parse().context("bad d_tile in manifest")?;
+            }
+        }
+        if n_tile == 0 || d_tile == 0 {
+            bail!("manifest missing n_tile/d_tile");
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Self { client, executables: HashMap::new(), n_tile, d_tile, dir })
+    }
+
+    /// Default location relative to the repo root.
+    pub fn open_default() -> Result<Self> {
+        Self::open("artifacts")
+    }
+
+    /// Compile (or fetch the cached) artifact `<name>.hlo.txt`.
+    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.executables.contains_key(name) {
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e}"))?;
+            self.executables.insert(name.to_string(), exe);
+        }
+        Ok(&self.executables[name])
+    }
+
+    /// Execute artifact `name` with the given inputs; returns the tuple
+    /// elements of the (single-device) result.
+    pub fn execute(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {name}: {e}"))?;
+        let literal = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("execute {name}: empty result"))?
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name} result: {e}"))?;
+        literal.to_tuple().map_err(|e| anyhow!("untuple {name}: {e}"))
+    }
+
+    /// Build an f32 matrix literal of shape `(rows, cols)` from row-major
+    /// data.
+    pub fn literal_matrix(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+        assert_eq!(data.len(), rows * cols);
+        xla::Literal::vec1(data)
+            .reshape(&[rows as i64, cols as i64])
+            .map_err(|e| anyhow!("reshape literal: {e}"))
+    }
+
+    pub fn literal_vec(data: &[f32]) -> xla::Literal {
+        xla::Literal::vec1(data)
+    }
+
+    pub fn literal_scalar(v: f32) -> xla::Literal {
+        xla::Literal::scalar(v)
+    }
+}

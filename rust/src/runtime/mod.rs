@@ -1,0 +1,14 @@
+//! PJRT runtime: load the JAX/Pallas-AOT'd HLO text artifacts and execute
+//! them from Rust. Python never runs here — `make artifacts` produced the
+//! `.hlo.txt` files at build time; this module compiles them once on the
+//! PJRT CPU client and executes them with concrete buffers.
+//!
+//! * [`client`] — artifact discovery (manifest), compilation, executable
+//!   cache, typed execute helpers.
+//! * [`oracle`] — the dense oracle over a [`crate::sparse::Dataset`]:
+//!   `α = Xᵀ(σ(Xw) − y)`, batch prediction and loss, computed by the
+//!   Pallas kernel through XLA and used to cross-check the sparse Rust
+//!   solver and to score models in the experiments.
+
+pub mod client;
+pub mod oracle;

@@ -1,0 +1,160 @@
+//! The dense oracle: paper quantities recomputed *densely* through the
+//! AOT-compiled JAX/Pallas artifacts, over a sparse [`Dataset`].
+//!
+//! Used for (a) cross-checking the sparse Rust solver's incremental state
+//! (integration tests), and (b) scoring trained models (accuracy/AUC in
+//! Table 4 / the e2e example). Rows are processed in tiles of the
+//! artifact's fixed `n_tile`; the last tile is zero-padded (zero rows are
+//! exact no-ops for `α`, and the row mask removes them from the loss).
+//! Requires `D ≤ d_tile` — the oracle is a small-scale correctness tool,
+//! not the training path.
+
+use anyhow::{bail, Result};
+
+use super::client::Runtime;
+use crate::sparse::Dataset;
+
+pub struct DenseOracle {
+    rt: Runtime,
+}
+
+impl DenseOracle {
+    pub fn new(rt: Runtime) -> Self {
+        Self { rt }
+    }
+
+    pub fn open(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        Ok(Self::new(Runtime::open(dir)?))
+    }
+
+    pub fn open_default() -> Result<Self> {
+        Ok(Self::new(Runtime::open_default()?))
+    }
+
+    pub fn n_tile(&self) -> usize {
+        self.rt.n_tile
+    }
+
+    pub fn d_tile(&self) -> usize {
+        self.rt.d_tile
+    }
+
+    fn check_dims(&self, ds: &Dataset) -> Result<()> {
+        if ds.n_cols() > self.rt.d_tile {
+            bail!(
+                "oracle tile supports D ≤ {}, dataset has D = {} — regenerate \
+                 artifacts with a larger --d",
+                self.rt.d_tile,
+                ds.n_cols()
+            );
+        }
+        Ok(())
+    }
+
+    /// Pad `w` (f64) to the tile width as f32.
+    fn w_literal(&self, w: &[f64]) -> Result<xla::Literal> {
+        let mut wf = vec![0.0f32; self.rt.d_tile];
+        for (dst, &src) in wf.iter_mut().zip(w) {
+            *dst = src as f32;
+        }
+        Ok(Runtime::literal_vec(&wf))
+    }
+
+    /// Densify rows `[lo, hi)` into an `(n_tile, d_tile)` f32 tile plus
+    /// the matching label and mask vectors.
+    fn tile(&self, ds: &Dataset, lo: usize, hi: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let nt = self.rt.n_tile;
+        let dt = self.rt.d_tile;
+        let mut x = vec![0.0f32; nt * dt];
+        let mut y = vec![0.0f32; nt];
+        let mut m = vec![0.0f32; nt];
+        for (r, i) in (lo..hi).enumerate() {
+            for (j, v) in ds.csr.row(i) {
+                x[r * dt + j] = v;
+            }
+            y[r] = ds.labels[i];
+            m[r] = 1.0;
+        }
+        (x, y, m)
+    }
+
+    /// Dense `α = Xᵀ(σ(Xw) − y)`, accumulated over row tiles (α is
+    /// additive across row blocks). Returns length-D f64.
+    pub fn alpha(&mut self, ds: &Dataset, w: &[f64]) -> Result<Vec<f64>> {
+        self.check_dims(ds)?;
+        assert_eq!(w.len(), ds.n_cols());
+        let nt = self.rt.n_tile;
+        let wl = self.w_literal(w)?;
+        let mut alpha = vec![0.0f64; ds.n_cols()];
+        let mut lo = 0;
+        while lo < ds.n_rows() {
+            let hi = (lo + nt).min(ds.n_rows());
+            let (x, y, m) = self.tile(ds, lo, hi);
+            let xl = Runtime::literal_matrix(&x, nt, self.rt.d_tile)?;
+            let out = self.rt.execute(
+                "alpha",
+                &[xl, wl.reshape(&[self.rt.d_tile as i64]).unwrap(), Runtime::literal_vec(&y), Runtime::literal_vec(&m)],
+            )?;
+            let a: Vec<f32> = out[0].to_vec().map_err(|e| anyhow::anyhow!("{e}"))?;
+            for (acc, &v) in alpha.iter_mut().zip(&a) {
+                *acc += v as f64;
+            }
+            lo = hi;
+        }
+        Ok(alpha)
+    }
+
+    /// Batch scores `p_i = σ(x_i · w)` for every row.
+    pub fn predict(&mut self, ds: &Dataset, w: &[f64]) -> Result<Vec<f64>> {
+        self.check_dims(ds)?;
+        let nt = self.rt.n_tile;
+        let wl = self.w_literal(w)?;
+        let mut p = Vec::with_capacity(ds.n_rows());
+        let mut lo = 0;
+        while lo < ds.n_rows() {
+            let hi = (lo + nt).min(ds.n_rows());
+            let (x, _, _) = self.tile(ds, lo, hi);
+            let xl = Runtime::literal_matrix(&x, nt, self.rt.d_tile)?;
+            let out = self.rt.execute(
+                "predict",
+                &[xl, wl.reshape(&[self.rt.d_tile as i64]).unwrap()],
+            )?;
+            let tile_p: Vec<f32> = out[0].to_vec().map_err(|e| anyhow::anyhow!("{e}"))?;
+            p.extend(tile_p[..hi - lo].iter().map(|&v| v as f64));
+            lo = hi;
+        }
+        Ok(p)
+    }
+
+    /// `(mean logistic loss, FW gap)` — loss summed over tiles then
+    /// divided by N; the gap recomputed from the tile-accumulated α.
+    pub fn loss_and_gap(&mut self, ds: &Dataset, w: &[f64], lam: f64) -> Result<(f64, f64)> {
+        self.check_dims(ds)?;
+        let nt = self.rt.n_tile;
+        let wl = self.w_literal(w)?;
+        let mut loss_sum = 0.0f64;
+        let mut lo = 0;
+        while lo < ds.n_rows() {
+            let hi = (lo + nt).min(ds.n_rows());
+            let (x, y, m) = self.tile(ds, lo, hi);
+            let xl = Runtime::literal_matrix(&x, nt, self.rt.d_tile)?;
+            let out = self.rt.execute(
+                "loss_gap",
+                &[
+                    xl,
+                    wl.reshape(&[self.rt.d_tile as i64]).unwrap(),
+                    Runtime::literal_vec(&y),
+                    Runtime::literal_vec(&m),
+                    Runtime::literal_scalar(lam as f32),
+                ],
+            )?;
+            let l: f32 = out[0].get_first_element().map_err(|e| anyhow::anyhow!("{e}"))?;
+            loss_sum += l as f64;
+            lo = hi;
+        }
+        let alpha = self.alpha(ds, w)?;
+        let aw: f64 = alpha.iter().zip(w).map(|(&a, &wk)| a * wk).sum();
+        let amax = alpha.iter().fold(0.0f64, |m, &a| m.max(a.abs()));
+        Ok((loss_sum / ds.n_rows() as f64, aw + lam * amax))
+    }
+}

@@ -1,0 +1,73 @@
+//! Substrate: weighted samplers implementing the exponential mechanism's
+//! selection step.
+//!
+//! The DP Frank-Wolfe selection problem: draw coordinate `j` with
+//! probability proportional to `exp(u_j)` where `u_j = |α_j| · scale` is a
+//! log-weight that changes sparsely between draws. Three implementations:
+//!
+//! * [`bsls`] — the paper's Algorithm 4 **Big-Step Little-Step** sampler:
+//!   `O(√D)` per draw, `O(1)` per update, log-scale throughout, cache-
+//!   friendly linear scans.
+//! * [`naive`] — `O(D)` Gumbel-max reference (exact exponential mechanism,
+//!   used to validate BSLS's distribution and as the "what you'd do
+//!   without Alg 4" baseline).
+//! * [`noisy_max`] — report-noisy-max via Laplace noise, the selection rule
+//!   of Talwar et al.'s original DP Frank-Wolfe (Algorithm 1's DP variant
+//!   and the paper's Table 3 "Alg 2" ablation column).
+
+pub mod bsls;
+pub mod naive;
+pub mod noisy_max;
+
+use crate::rng::Xoshiro256pp;
+
+/// A dynamic weighted sampler over items `0..len` with log-scale weights.
+pub trait WeightedSampler {
+    /// Replace item `j`'s log-weight.
+    fn update(&mut self, j: usize, log_weight: f64);
+    /// Draw one item with `P(j) ∝ exp(log_weight_j)`.
+    fn sample(&mut self, rng: &mut Xoshiro256pp) -> usize;
+    /// Current log-weight of `j`.
+    fn log_weight(&self, j: usize) -> f64;
+    /// log Σ_j exp(log_weight_j) (up to the sampler's internal drift bound).
+    fn log_total(&self) -> f64;
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Numerically-stable log(Σ exp(v_i)) over a slice.
+pub fn log_sum_exp(v: &[f64]) -> f64 {
+    let m = v.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    if !m.is_finite() {
+        return m; // empty or all -inf
+    }
+    let s: f64 = v.iter().map(|&x| (x - m).exp()).sum();
+    m + s.ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lse_basic() {
+        let v = [0.0, 0.0];
+        assert!((log_sum_exp(&v) - (2.0f64).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lse_handles_huge_values() {
+        let v = [1000.0, 1000.0 + (3.0f64).ln()];
+        assert!((log_sum_exp(&v) - (1000.0 + (4.0f64).ln())).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lse_handles_neg_inf() {
+        let v = [f64::NEG_INFINITY, 0.0];
+        assert!((log_sum_exp(&v) - 0.0).abs() < 1e-12);
+        assert_eq!(log_sum_exp(&[f64::NEG_INFINITY]), f64::NEG_INFINITY);
+        assert_eq!(log_sum_exp(&[]), f64::NEG_INFINITY);
+    }
+}

@@ -1,0 +1,97 @@
+//! `O(D)` exponential-mechanism reference sampler via the Gumbel-max trick:
+//! `argmax_j (v_j + Gumbel_j)` is distributed exactly `∝ exp(v_j)`.
+//!
+//! This is the "no Algorithm 4" baseline: correct, simple, and linear in D
+//! per draw — the thing BSLS is differentially tested against and the cost
+//! model the paper's Table 3 ablation implies when only Alg 2 is used with
+//! a dense selection pass.
+
+use super::WeightedSampler;
+use crate::rng::{dist, Xoshiro256pp};
+
+#[derive(Clone, Debug)]
+pub struct NaiveExpSampler {
+    v: Vec<f64>,
+}
+
+impl NaiveExpSampler {
+    pub fn new(n: usize, init: f64) -> Self {
+        assert!(n > 0);
+        Self { v: vec![init; n] }
+    }
+
+    pub fn from_weights(weights: &[f64]) -> Self {
+        Self { v: weights.to_vec() }
+    }
+}
+
+impl WeightedSampler for NaiveExpSampler {
+    fn update(&mut self, j: usize, log_weight: f64) {
+        self.v[j] = log_weight;
+    }
+
+    fn sample(&mut self, rng: &mut Xoshiro256pp) -> usize {
+        let mut best = 0usize;
+        let mut best_val = f64::NEG_INFINITY;
+        for (j, &vj) in self.v.iter().enumerate() {
+            let g = vj + dist::gumbel(rng);
+            if g > best_val {
+                best_val = g;
+                best = j;
+            }
+        }
+        best
+    }
+
+    fn log_weight(&self, j: usize) -> f64 {
+        self.v[j]
+    }
+
+    fn log_total(&self) -> f64 {
+        super::log_sum_exp(&self.v)
+    }
+
+    fn len(&self) -> usize {
+        self.v.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn respects_weight_ratios() {
+        let mut s = NaiveExpSampler::new(3, 0.0);
+        s.update(1, (3.0f64).ln());
+        // weights 1 : 3 : 1
+        let mut rng = Xoshiro256pp::seeded(21);
+        let mut counts = [0u64; 3];
+        let trials = 100_000;
+        for _ in 0..trials {
+            counts[s.sample(&mut rng)] += 1;
+        }
+        let p1 = counts[1] as f64 / trials as f64;
+        assert!((p1 - 0.6).abs() < 0.01, "p1={p1}");
+    }
+
+    #[test]
+    fn dominant_item_always_wins() {
+        let mut s = NaiveExpSampler::new(10, 0.0);
+        s.update(4, 100.0);
+        let mut rng = Xoshiro256pp::seeded(22);
+        for _ in 0..200 {
+            assert_eq!(s.sample(&mut rng), 4);
+        }
+    }
+
+    #[test]
+    fn neg_inf_items_never_selected() {
+        let mut s = NaiveExpSampler::new(4, 0.0);
+        s.update(0, f64::NEG_INFINITY);
+        let mut rng = Xoshiro256pp::seeded(23);
+        for _ in 0..1000 {
+            assert_ne!(s.sample(&mut rng), 0);
+        }
+    }
+}

@@ -1,0 +1,84 @@
+//! Report-noisy-max: the selection rule of the *original* DP Frank-Wolfe
+//! (Talwar, Thakurta, Zhang — "Nearly Optimal Private LASSO", NeurIPS
+//! 2015), used by Algorithm 1's DP variant and the Table 3 "Alg 2 only"
+//! ablation: add independent `Laplace(b)` noise to every coordinate's
+//! score `|α_j|` and return the argmax. Inherently `O(D)` per selection —
+//! exactly the cost Algorithm 4 removes.
+
+use crate::rng::{dist, Xoshiro256pp};
+
+/// One noisy-max selection over the magnitude scores of `alpha`.
+///
+/// `noise_scale` is the Laplace scale `b`; the paper's Algorithm 1 uses
+/// `b = λ L √(8T log(1/δ)) / (N ε)` (see [`crate::dp::accounting`]).
+/// Returns `(argmax_j, noisy_score)`.
+pub fn noisy_max(alpha: &[f64], noise_scale: f64, rng: &mut Xoshiro256pp) -> (usize, f64) {
+    assert!(!alpha.is_empty());
+    let mut best = 0usize;
+    let mut best_val = f64::NEG_INFINITY;
+    for (j, &a) in alpha.iter().enumerate() {
+        let s = a.abs() + dist::laplace(rng, noise_scale);
+        if s > best_val {
+            best_val = s;
+            best = j;
+        }
+    }
+    (best, best_val)
+}
+
+/// Non-private argmax of |α_j| (noise scale 0 short-circuit, used by the
+/// non-private Algorithm 1 baseline).
+pub fn arg_abs_max(alpha: &[f64]) -> usize {
+    let mut best = 0usize;
+    let mut best_val = f64::NEG_INFINITY;
+    for (j, &a) in alpha.iter().enumerate() {
+        let s = a.abs();
+        if s > best_val {
+            best_val = s;
+            best = j;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_noise_is_argmax() {
+        let alpha = [0.1, -3.0, 2.0, 0.0];
+        let mut rng = Xoshiro256pp::seeded(31);
+        let (j, _) = noisy_max(&alpha, 0.0, &mut rng);
+        assert_eq!(j, 1);
+        assert_eq!(arg_abs_max(&alpha), 1);
+    }
+
+    #[test]
+    fn noise_randomizes_near_ties() {
+        let alpha = [1.0, 1.0];
+        let mut rng = Xoshiro256pp::seeded(32);
+        let mut first = 0;
+        for _ in 0..1000 {
+            let (j, _) = noisy_max(&alpha, 1.0, &mut rng);
+            first += (j == 0) as usize;
+        }
+        assert!(first > 350 && first < 650, "first={first}");
+    }
+
+    #[test]
+    fn large_gap_resists_small_noise() {
+        let alpha = [100.0, 0.0, 0.0];
+        let mut rng = Xoshiro256pp::seeded(33);
+        for _ in 0..500 {
+            let (j, _) = noisy_max(&alpha, 0.5, &mut rng);
+            assert_eq!(j, 0);
+        }
+    }
+
+    #[test]
+    fn arg_abs_max_handles_negatives_and_empty_guard() {
+        assert_eq!(arg_abs_max(&[-5.0, 4.0]), 0);
+        assert_eq!(arg_abs_max(&[0.0]), 0);
+    }
+}

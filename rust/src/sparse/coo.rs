@@ -1,0 +1,172 @@
+//! COO (triplet) builder — the mutable construction format.
+//!
+//! Generators and parsers append `(row, col, value)` triplets, then convert
+//! once to CSR. Duplicate `(row, col)` entries are summed on conversion
+//! (scipy semantics), entries within a row come out column-sorted.
+
+use super::csr::CsrMatrix;
+
+#[derive(Clone, Debug, Default)]
+pub struct CooBuilder {
+    n_rows: usize,
+    n_cols: usize,
+    rows: Vec<u32>,
+    cols: Vec<u32>,
+    vals: Vec<f32>,
+}
+
+impl CooBuilder {
+    pub fn new(n_rows: usize, n_cols: usize) -> Self {
+        Self { n_rows, n_cols, rows: vec![], cols: vec![], vals: vec![] }
+    }
+
+    /// Append a new empty row, returning its index.
+    pub fn add_row(&mut self) -> usize {
+        self.n_rows += 1;
+        self.n_rows - 1
+    }
+
+    /// Push one triplet. Grows the matrix if `row`/`col` exceed the current
+    /// bounds (parsers discover dimensions as they read).
+    pub fn push(&mut self, row: usize, col: usize, val: f32) {
+        if val == 0.0 {
+            return; // never store explicit zeros
+        }
+        self.n_rows = self.n_rows.max(row + 1);
+        self.n_cols = self.n_cols.max(col + 1);
+        self.rows.push(row as u32);
+        self.cols.push(col as u32);
+        self.vals.push(val);
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    pub fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    /// Force the logical dimensions (e.g. LIBSVM headers that declare more
+    /// columns than appear in the data).
+    pub fn set_shape(&mut self, n_rows: usize, n_cols: usize) {
+        assert!(n_rows >= self.n_rows && n_cols >= self.n_cols);
+        self.n_rows = n_rows;
+        self.n_cols = n_cols;
+    }
+
+    /// Convert to CSR: counting sort by row, then per-row sort by column,
+    /// summing duplicates. O(nnz log S_c + N + nnz).
+    pub fn to_csr(&self) -> CsrMatrix {
+        let mut indptr = vec![0usize; self.n_rows + 1];
+        for &r in &self.rows {
+            indptr[r as usize + 1] += 1;
+        }
+        for i in 0..self.n_rows {
+            indptr[i + 1] += indptr[i];
+        }
+        let nnz = self.vals.len();
+        let mut cursor = indptr.clone();
+        let mut cols = vec![0u32; nnz];
+        let mut vals = vec![0.0f32; nnz];
+        for k in 0..nnz {
+            let r = self.rows[k] as usize;
+            let p = cursor[r];
+            cols[p] = self.cols[k];
+            vals[p] = self.vals[k];
+            cursor[r] = p + 1;
+        }
+        // per-row: sort by column, merge duplicates
+        let mut out_indptr = vec![0usize; self.n_rows + 1];
+        let mut out_cols: Vec<u32> = Vec::with_capacity(nnz);
+        let mut out_vals: Vec<f32> = Vec::with_capacity(nnz);
+        let mut scratch: Vec<(u32, f32)> = Vec::new();
+        for i in 0..self.n_rows {
+            scratch.clear();
+            scratch.extend(
+                cols[indptr[i]..indptr[i + 1]]
+                    .iter()
+                    .copied()
+                    .zip(vals[indptr[i]..indptr[i + 1]].iter().copied()),
+            );
+            scratch.sort_unstable_by_key(|&(c, _)| c);
+            let mut k = 0;
+            while k < scratch.len() {
+                let (c, mut v) = scratch[k];
+                k += 1;
+                while k < scratch.len() && scratch[k].0 == c {
+                    v += scratch[k].1;
+                    k += 1;
+                }
+                if v != 0.0 {
+                    out_cols.push(c);
+                    out_vals.push(v);
+                }
+            }
+            out_indptr[i + 1] = out_cols.len();
+        }
+        CsrMatrix::from_parts(self.n_rows, self.n_cols, out_indptr, out_cols, out_vals)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_sorted_csr() {
+        let mut b = CooBuilder::new(2, 3);
+        b.push(1, 1, 3.0);
+        b.push(0, 2, 2.0);
+        b.push(0, 0, 1.0);
+        let m = b.to_csr();
+        assert_eq!(m.row(0).collect::<Vec<_>>(), vec![(0, 1.0), (2, 2.0)]);
+        assert_eq!(m.row(1).collect::<Vec<_>>(), vec![(1, 3.0)]);
+    }
+
+    #[test]
+    fn sums_duplicates() {
+        let mut b = CooBuilder::new(1, 2);
+        b.push(0, 1, 2.0);
+        b.push(0, 1, 3.0);
+        let m = b.to_csr();
+        assert_eq!(m.row(0).collect::<Vec<_>>(), vec![(1, 5.0)]);
+        assert_eq!(m.nnz(), 1);
+    }
+
+    #[test]
+    fn drops_zeros() {
+        let mut b = CooBuilder::new(1, 2);
+        b.push(0, 0, 0.0);
+        b.push(0, 1, 1.0);
+        b.push(0, 1, -1.0); // cancels to zero
+        let m = b.to_csr();
+        assert_eq!(m.nnz(), 0);
+    }
+
+    #[test]
+    fn grows_shape() {
+        let mut b = CooBuilder::new(0, 0);
+        b.push(4, 7, 1.0);
+        assert_eq!(b.n_rows(), 5);
+        assert_eq!(b.n_cols(), 8);
+        let m = b.to_csr();
+        assert_eq!(m.n_rows(), 5);
+        assert_eq!(m.n_cols(), 8);
+    }
+
+    #[test]
+    fn set_shape_pads() {
+        let mut b = CooBuilder::new(1, 1);
+        b.push(0, 0, 1.0);
+        b.set_shape(3, 5);
+        let m = b.to_csr();
+        assert_eq!(m.n_rows(), 3);
+        assert_eq!(m.n_cols(), 5);
+        assert_eq!(m.row_nnz(2), 0);
+    }
+}

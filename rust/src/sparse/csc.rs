@@ -1,0 +1,165 @@
+//! Compressed Sparse Column matrix: the `X[:,j]` view.
+//!
+//! Algorithm 2's inner loop is "for all rows i of X with feature j" — that
+//! is exactly one CSC column scan (`S_r` entries on average). Built once
+//! from the CSR view at dataset load; the two views share nothing so each
+//! stays contiguous for its own scan direction.
+
+use super::csr::CsrMatrix;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct CscMatrix {
+    n_rows: usize,
+    n_cols: usize,
+    /// Column start offsets, length `n_cols + 1`.
+    indptr: Vec<usize>,
+    /// Row index of each stored value, length `nnz`.
+    indices: Vec<u32>,
+    /// Stored values, length `nnz`.
+    values: Vec<f32>,
+}
+
+impl CscMatrix {
+    /// Transpose-convert a CSR matrix with a counting sort: O(nnz + D).
+    pub fn from_csr(csr: &CsrMatrix) -> Self {
+        let n_rows = csr.n_rows();
+        let n_cols = csr.n_cols();
+        let nnz = csr.nnz();
+        let mut indptr = vec![0usize; n_cols + 1];
+        for i in 0..n_rows {
+            let (idx, _) = csr.row_raw(i);
+            for &j in idx {
+                indptr[j as usize + 1] += 1;
+            }
+        }
+        for j in 0..n_cols {
+            indptr[j + 1] += indptr[j];
+        }
+        let mut cursor = indptr.clone();
+        let mut indices = vec![0u32; nnz];
+        let mut values = vec![0.0f32; nnz];
+        for i in 0..n_rows {
+            let (idx, val) = csr.row_raw(i);
+            for (&j, &v) in idx.iter().zip(val) {
+                let p = cursor[j as usize];
+                indices[p] = i as u32;
+                values[p] = v;
+                cursor[j as usize] = p + 1;
+            }
+        }
+        Self { n_rows, n_cols, indptr, indices, values }
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    pub fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn col_nnz(&self, j: usize) -> usize {
+        self.indptr[j + 1] - self.indptr[j]
+    }
+
+    /// Iterate the nonzeros of column `j` as `(row, value)`.
+    #[inline]
+    pub fn col(&self, j: usize) -> impl Iterator<Item = (usize, f32)> + '_ {
+        let lo = self.indptr[j];
+        let hi = self.indptr[j + 1];
+        self.indices[lo..hi]
+            .iter()
+            .zip(&self.values[lo..hi])
+            .map(|(&i, &v)| (i as usize, v))
+    }
+
+    /// Raw slices of column `j` — hot-path accessor.
+    #[inline]
+    pub fn col_raw(&self, j: usize) -> (&[u32], &[f32]) {
+        let lo = self.indptr[j];
+        let hi = self.indptr[j + 1];
+        (&self.indices[lo..hi], &self.values[lo..hi])
+    }
+
+    /// `out[j] = Σ_i X[i,j] · q[i]` for every column — the `Xᵀq` product
+    /// driven from the column side (used by tests to cross-check CSR).
+    pub fn matvec_t(&self, q: &[f64], out: &mut [f64]) {
+        assert_eq!(q.len(), self.n_rows);
+        assert_eq!(out.len(), self.n_cols);
+        for j in 0..self.n_cols {
+            let (idx, val) = self.col_raw(j);
+            let mut acc = 0.0f64;
+            for (&i, &v) in idx.iter().zip(val) {
+                acc += v as f64 * q[i as usize];
+            }
+            out[j] = acc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_csr() -> CsrMatrix {
+        // [[1,0,2],[0,3,0],[4,0,5]]
+        CsrMatrix::from_parts(
+            3,
+            3,
+            vec![0, 2, 3, 5],
+            vec![0, 2, 1, 0, 2],
+            vec![1.0, 2.0, 3.0, 4.0, 5.0],
+        )
+    }
+
+    #[test]
+    fn conversion_preserves_entries() {
+        let csr = sample_csr();
+        let csc = CscMatrix::from_csr(&csr);
+        assert_eq!(csc.nnz(), 5);
+        let c0: Vec<_> = csc.col(0).collect();
+        assert_eq!(c0, vec![(0, 1.0), (2, 4.0)]);
+        let c1: Vec<_> = csc.col(1).collect();
+        assert_eq!(c1, vec![(1, 3.0)]);
+        let c2: Vec<_> = csc.col(2).collect();
+        assert_eq!(c2, vec![(0, 2.0), (2, 5.0)]);
+    }
+
+    #[test]
+    fn rows_within_column_are_sorted() {
+        // from_csr visits rows in order, so each column's rows come out
+        // ascending — the Alg 2 inner loop relies on this for locality.
+        let csc = CscMatrix::from_csr(&sample_csr());
+        for j in 0..3 {
+            let rows: Vec<_> = csc.col(j).map(|(i, _)| i).collect();
+            let mut sorted = rows.clone();
+            sorted.sort_unstable();
+            assert_eq!(rows, sorted);
+        }
+    }
+
+    #[test]
+    fn matvec_t_matches_csr() {
+        let csr = sample_csr();
+        let csc = CscMatrix::from_csr(&csr);
+        let q = [1.0, 2.0, 3.0];
+        let mut a = vec![0.0; 3];
+        let mut b = vec![0.0; 3];
+        csr.matvec_t_add(&q, &mut a);
+        csc.matvec_t(&q, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn empty_column() {
+        let csr = CsrMatrix::from_parts(2, 4, vec![0, 1, 2], vec![0, 3], vec![1.0, 2.0]);
+        let csc = CscMatrix::from_csr(&csr);
+        assert_eq!(csc.col_nnz(1), 0);
+        assert_eq!(csc.col_nnz(2), 0);
+        assert_eq!(csc.col(1).count(), 0);
+    }
+}

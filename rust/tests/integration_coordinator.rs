@@ -1,0 +1,140 @@
+//! Integration tests for the coordinator: a realistic experiment grid run
+//! through the worker pool, registry exports, and failure injection under
+//! load.
+
+use std::sync::Arc;
+
+use dpfw::coordinator::{Algo, Coordinator, JobSpec, Registry};
+use dpfw::dp::accounting::PrivacyParams;
+use dpfw::fw::config::{FwConfig, SelectorKind};
+use dpfw::sparse::synth::{DatasetPreset, SynthConfig};
+use dpfw::sparse::Dataset;
+
+fn small(p: DatasetPreset, seed: u64) -> Arc<Dataset> {
+    let sc = match p {
+        DatasetPreset::Rcv1 => 0.02,
+        DatasetPreset::News20 => 0.005,
+        _ => 0.0005,
+    };
+    Arc::new(SynthConfig::preset(p).scale(sc).generate(seed))
+}
+
+/// A mini Table-3 grid: 2 datasets × 2 ε × 3 configs = 12 jobs across 4
+/// workers, all succeed, results land in the registry with sane fields.
+#[test]
+fn mini_table3_grid() {
+    let mut coord = Coordinator::new(4);
+    let mut jobs = Vec::new();
+    let mut id = 0;
+    for p in [DatasetPreset::Rcv1, DatasetPreset::News20] {
+        let ds = small(p, 3);
+        let (train, test) = ds.split(0.25);
+        let (train, test) = (Arc::new(train), Arc::new(test));
+        for eps in [1.0, 0.1] {
+            for (algo, sel) in [
+                (Algo::Standard, SelectorKind::NoisyMax),
+                (Algo::Fast, SelectorKind::NoisyMax),
+                (Algo::Fast, SelectorKind::Bsls),
+            ] {
+                jobs.push(JobSpec {
+                    id,
+                    label: format!("{}|{}|{}|{}", p.name(), eps, algo.name(), sel.name()),
+                    data: train.clone(),
+                    algo,
+                    cfg: FwConfig {
+                        iters: 100,
+                        lambda: 10.0,
+                        privacy: Some(PrivacyParams::new(eps, 1e-6)),
+                        selector: sel,
+                        seed: 17,
+                        trace_every: 25,
+                        lipschitz: None,
+                    },
+                    test_data: Some(test.clone()),
+                });
+                id += 1;
+            }
+        }
+    }
+    let n_jobs = jobs.len();
+    let results = coord.run_all(jobs);
+    assert_eq!(results.len(), n_jobs);
+    let mut reg = Registry::new();
+    for r in results {
+        let r = r.expect("grid job failed");
+        assert!(r.output.wall_ms > 0.0);
+        assert!(r.output.flops > 0);
+        assert!(r.accuracy.is_some() && r.auc.is_some());
+        assert!(!r.output.trace.is_empty());
+        reg.add(r);
+    }
+    assert_eq!(reg.len(), n_jobs);
+    // exports
+    let dir = std::env::temp_dir().join("dpfw_coord_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    reg.write_csv(dir.join("grid.csv")).unwrap();
+    reg.write_json(dir.join("grid.json")).unwrap();
+    let csv = std::fs::read_to_string(dir.join("grid.csv")).unwrap();
+    assert_eq!(csv.lines().count(), n_jobs + 1);
+    let json = std::fs::read_to_string(dir.join("grid.json")).unwrap();
+    assert!(json.contains("\"jobs\":["));
+    // metrics
+    let done = coord.metrics.jobs_completed.load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(done as usize, n_jobs);
+}
+
+/// Failures mid-grid don't lose the other results or wedge the pool, and
+/// the pool stays usable for a second wave.
+#[test]
+fn failures_are_isolated_and_pool_reusable() {
+    let mut coord = Coordinator::new(3);
+    let ds = small(DatasetPreset::Rcv1, 5);
+    let good = |id: usize| JobSpec {
+        id,
+        label: format!("good{id}"),
+        data: ds.clone(),
+        algo: Algo::Fast,
+        cfg: FwConfig { iters: 50, lambda: 5.0, ..Default::default() },
+        test_data: None,
+    };
+    let mut bad = good(1);
+    bad.cfg.iters = 0; // validate() panics in the worker
+    coord.submit(good(0));
+    coord.submit(bad);
+    coord.submit(good(2));
+    let wave1 = coord.drain();
+    assert!(wave1[0].is_ok());
+    assert!(wave1[1].is_err());
+    assert!(wave1[2].is_ok());
+    // second wave on the same pool
+    let wave2 = coord.run_all((10..14).map(good).collect());
+    assert!(wave2.iter().all(|r| r.is_ok()));
+}
+
+/// Worker parallelism actually overlaps work: pool busy-time exceeds
+/// wall-clock elapsed on a multi-job run (i.e. >1 core really used).
+#[test]
+fn pool_runs_concurrently() {
+    let mut coord = Coordinator::new(4);
+    let ds = small(DatasetPreset::News20, 7);
+    let jobs: Vec<JobSpec> = (0..8)
+        .map(|id| JobSpec {
+            id,
+            label: format!("par{id}"),
+            data: ds.clone(),
+            algo: Algo::Standard, // deliberately slow: dense per-iter work
+            cfg: FwConfig { iters: 150, lambda: 5.0, ..Default::default() },
+            test_data: None,
+        })
+        .collect();
+    let t0 = std::time::Instant::now();
+    let results = coord.run_all(jobs);
+    let elapsed = t0.elapsed().as_secs_f64();
+    assert!(results.iter().all(|r| r.is_ok()));
+    let busy =
+        coord.metrics.busy_us.load(std::sync::atomic::Ordering::Relaxed) as f64 / 1e6;
+    assert!(
+        busy > 1.2 * elapsed,
+        "no overlap: busy {busy:.2}s vs elapsed {elapsed:.2}s"
+    );
+}

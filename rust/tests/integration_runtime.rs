@@ -1,0 +1,158 @@
+//! Integration tests for the PJRT runtime + dense oracle: the Rust side
+//! of the three-layer contract. These require `artifacts/` (built by
+//! `make artifacts`); they are skipped (with a loud message) when the
+//! artifacts are absent so `cargo test` works in a fresh checkout.
+
+use dpfw::fw::config::FwConfig;
+use dpfw::fw::fast::FastFrankWolfe;
+use dpfw::fw::loss::{sigmoid, Logistic, Loss};
+use dpfw::runtime::oracle::DenseOracle;
+use dpfw::sparse::synth::SynthConfig;
+use dpfw::sparse::Dataset;
+use dpfw::testkit::assert_slices_close;
+
+fn oracle() -> Option<DenseOracle> {
+    match DenseOracle::open("artifacts") {
+        Ok(o) => Some(o),
+        Err(e) => {
+            eprintln!("SKIP runtime tests: {e}");
+            None
+        }
+    }
+}
+
+fn tile_dataset(o: &DenseOracle, n_rows: usize, seed: u64) -> Dataset {
+    SynthConfig {
+        name: "rt".into(),
+        n_rows,
+        n_cols: o.d_tile(),
+        avg_row_nnz: 25.0,
+        zipf_exponent: 1.2,
+        n_informative: 24,
+        n_dense: 0,
+        label_noise: 0.05,
+        bias_col: true,
+    }
+    .generate(seed)
+}
+
+fn rust_alpha(ds: &Dataset, w: &[f64]) -> Vec<f64> {
+    let mut v = vec![0.0f64; ds.n_rows()];
+    ds.csr.matvec(w, &mut v);
+    let q: Vec<f64> = v
+        .iter()
+        .zip(&ds.labels)
+        .map(|(&vi, &yi)| sigmoid(vi) - yi as f64)
+        .collect();
+    let mut a = vec![0.0f64; ds.n_cols()];
+    ds.csr.matvec_t_add(&q, &mut a);
+    a
+}
+
+/// α from the Pallas/XLA artifact == α from the sparse Rust path, at the
+/// zero vector, at a trained model, and at a random point.
+#[test]
+fn oracle_alpha_matches_rust() {
+    let Some(mut o) = oracle() else { return };
+    let ds = tile_dataset(&o, o.n_tile() * 2, 7);
+    let d = ds.n_cols();
+    let zero = vec![0.0f64; d];
+    assert_slices_close(&rust_alpha(&ds, &zero), &o.alpha(&ds, &zero).unwrap(), 5e-4, 5e-4);
+
+    let trained = FastFrankWolfe::new(
+        &ds,
+        FwConfig { iters: 200, lambda: 10.0, ..Default::default() },
+    )
+    .run();
+    let w = trained.weights.as_slice();
+    assert_slices_close(&rust_alpha(&ds, w), &o.alpha(&ds, w).unwrap(), 5e-4, 5e-4);
+
+    let mut rnd = vec![0.0f64; d];
+    for (i, r) in rnd.iter_mut().enumerate() {
+        *r = ((i % 13) as f64 - 6.0) / 10.0;
+    }
+    assert_slices_close(&rust_alpha(&ds, &rnd), &o.alpha(&ds, &rnd).unwrap(), 5e-4, 5e-4);
+}
+
+/// Row-tile accumulation: a dataset spanning several tiles with a ragged
+/// final tile gives the same α as the single-row-block case.
+#[test]
+fn oracle_handles_ragged_tiles() {
+    let Some(mut o) = oracle() else { return };
+    // 2.5 tiles worth of rows
+    let ds = tile_dataset(&o, o.n_tile() * 5 / 2, 11);
+    let w = vec![0.05f64; ds.n_cols()];
+    assert_slices_close(&rust_alpha(&ds, &w), &o.alpha(&ds, &w).unwrap(), 5e-4, 5e-4);
+}
+
+/// predict == sigmoid(Xw) elementwise, across tile boundaries.
+#[test]
+fn oracle_predict_matches_rust() {
+    let Some(mut o) = oracle() else { return };
+    let ds = tile_dataset(&o, o.n_tile() + 17, 13);
+    let w: Vec<f64> = (0..ds.n_cols()).map(|j| ((j % 7) as f64 - 3.0) / 8.0).collect();
+    let p = o.predict(&ds, &w).unwrap();
+    assert_eq!(p.len(), ds.n_rows());
+    let mut v = vec![0.0f64; ds.n_rows()];
+    ds.csr.matvec(&w, &mut v);
+    for (pi, vi) in p.iter().zip(&v) {
+        assert!((pi - sigmoid(*vi)).abs() < 1e-4, "{pi} vs {}", sigmoid(*vi));
+    }
+}
+
+/// loss_and_gap: mean loss matches the Rust loss; gap matches the α-based
+/// formula.
+#[test]
+fn oracle_loss_gap_consistent() {
+    let Some(mut o) = oracle() else { return };
+    let ds = tile_dataset(&o, o.n_tile() * 2 - 31, 17);
+    let out = FastFrankWolfe::new(
+        &ds,
+        FwConfig { iters: 150, lambda: 8.0, ..Default::default() },
+    )
+    .run();
+    let w = out.weights.as_slice();
+    let lam = 8.0;
+    let (loss, gap) = o.loss_and_gap(&ds, w, lam).unwrap();
+    // rust loss
+    let mut v = vec![0.0f64; ds.n_rows()];
+    ds.csr.matvec(w, &mut v);
+    let want_loss: f64 = v
+        .iter()
+        .zip(&ds.labels)
+        .map(|(&vi, &yi)| Logistic.value(vi, yi as f64))
+        .sum::<f64>()
+        / ds.n_rows() as f64;
+    assert!((loss - want_loss).abs() < 1e-3, "loss {loss} vs {want_loss}");
+    // rust gap
+    let alpha = rust_alpha(&ds, w);
+    let aw: f64 = alpha.iter().zip(w).map(|(&a, &wk)| a * wk).sum();
+    let amax = alpha.iter().fold(0.0f64, |m, &a| m.max(a.abs()));
+    let want_gap = aw + lam * amax;
+    assert!(
+        (gap - want_gap).abs() < 1e-3 * (1.0 + want_gap.abs()),
+        "gap {gap} vs {want_gap}"
+    );
+}
+
+/// Oracle dimension guard: datasets wider than the tile are rejected with
+/// a helpful error, not wrong numbers.
+#[test]
+fn oracle_rejects_oversized_d() {
+    let Some(mut o) = oracle() else { return };
+    let ds = SynthConfig {
+        name: "too-wide".into(),
+        n_rows: 8,
+        n_cols: o.d_tile() + 1,
+        avg_row_nnz: 4.0,
+        zipf_exponent: 1.2,
+        n_informative: 4,
+        n_dense: 0,
+        label_noise: 0.0,
+        bias_col: false,
+    }
+    .generate(1);
+    let w = vec![0.0; ds.n_cols()];
+    let err = o.alpha(&ds, &w).unwrap_err().to_string();
+    assert!(err.contains("regenerate artifacts"), "unhelpful error: {err}");
+}

@@ -1,0 +1,202 @@
+//! Integration tests across solver + data + eval modules: end-to-end
+//! training behaviour on each paper-preset workload, LIBSVM round-trips
+//! through the real solver, and the DP speed/utility shape at test scale.
+
+use std::sync::Arc;
+
+use dpfw::coordinator::job::score;
+use dpfw::dp::accounting::PrivacyParams;
+use dpfw::eval::{accuracy, auc};
+use dpfw::fw::config::{FwConfig, SelectorKind};
+use dpfw::fw::fast::FastFrankWolfe;
+use dpfw::fw::standard::StandardFrankWolfe;
+use dpfw::sparse::synth::{DatasetPreset, SynthConfig};
+use dpfw::sparse::{libsvm, Dataset};
+
+fn preset_small(p: DatasetPreset) -> Dataset {
+    let sc = match p {
+        DatasetPreset::Rcv1 => 0.02,
+        DatasetPreset::News20 => 0.01,
+        DatasetPreset::Url => 0.0006,
+        DatasetPreset::Web => 0.0008,
+        DatasetPreset::Kdda => 0.0002,
+    };
+    SynthConfig::preset(p).scale(sc).generate(99)
+}
+
+/// Non-private training learns every preset's planted signal well above
+/// chance — the precondition for any of the paper's utility claims.
+#[test]
+fn nonprivate_learns_every_preset() {
+    for p in DatasetPreset::ALL {
+        let ds = preset_small(p);
+        let (train, test) = ds.split(0.25);
+        let out = FastFrankWolfe::new(
+            &train,
+            FwConfig {
+                iters: 1500,
+                lambda: 30.0,
+                selector: SelectorKind::FibHeap,
+                ..Default::default()
+            },
+        )
+        .run();
+        let pr = score(&test, out.weights.as_slice());
+        let a = auc(&pr, &test.labels);
+        assert!(a > 65.0, "{}: AUC {a}", p.name());
+    }
+}
+
+/// Moderate privacy costs some utility but must stay above chance, and
+/// strong privacy must not *crash* — the paper's Table 4 regime.
+#[test]
+fn dp_utility_degrades_gracefully() {
+    let ds = preset_small(DatasetPreset::Rcv1);
+    let (train, test) = ds.split(0.25);
+    let run = |eps: f64| {
+        let out = FastFrankWolfe::new(
+            &train,
+            FwConfig {
+                iters: 1500,
+                lambda: 30.0,
+                privacy: Some(PrivacyParams::new(eps, 1e-6)),
+                selector: SelectorKind::Bsls,
+                seed: 3,
+                trace_every: 0,
+                lipschitz: None,
+            },
+        )
+        .run();
+        let p = score(&test, out.weights.as_slice());
+        auc(&p, &test.labels)
+    };
+    let auc_loose = run(50.0); // nearly non-private
+    let auc_tight = run(0.1);
+    assert!(auc_loose > 70.0, "eps=50 AUC {auc_loose}");
+    assert!(auc_tight >= 35.0, "eps=0.1 AUC collapsed: {auc_tight}");
+    assert!(auc_loose >= auc_tight - 8.0, "more privacy gave better AUC?");
+}
+
+/// Wall-clock: Alg 2+BSLS beats Alg 1+noisy-max on a high-D sparse
+/// workload (Table 3's direction, at test scale).
+#[test]
+fn dp_fast_solver_is_faster() {
+    let ds = SynthConfig::preset(DatasetPreset::News20).scale(0.02).generate(5);
+    let privacy = Some(PrivacyParams::new(0.5, 1e-6));
+    let base = FwConfig {
+        iters: 300,
+        lambda: 30.0,
+        privacy,
+        selector: SelectorKind::NoisyMax,
+        seed: 1,
+        trace_every: 0,
+        lipschitz: None,
+    };
+    let slow = StandardFrankWolfe::new(&ds, base.clone()).run();
+    let fast = FastFrankWolfe::new(
+        &ds,
+        FwConfig { selector: SelectorKind::Bsls, ..base },
+    )
+    .run();
+    assert!(
+        fast.wall_ms < slow.wall_ms,
+        "no speedup: fast {} ms vs std {} ms",
+        fast.wall_ms,
+        slow.wall_ms
+    );
+    // and by a meaningful factor on D≈27k
+    assert!(slow.wall_ms / fast.wall_ms > 3.0, "speedup only {:.2}x", slow.wall_ms / fast.wall_ms);
+}
+
+/// A dataset written to LIBSVM text and read back trains to the same
+/// model (full-pipeline persistence round-trip).
+#[test]
+fn libsvm_roundtrip_preserves_training() {
+    let ds = preset_small(DatasetPreset::Rcv1);
+    let path = std::env::temp_dir().join("dpfw_integration_roundtrip.svm");
+    libsvm::write_file(&ds, &path).unwrap();
+    let ds2 = libsvm::read_file(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(ds.labels, ds2.labels);
+    let cfg = FwConfig { iters: 200, lambda: 10.0, ..Default::default() };
+    let a = FastFrankWolfe::new(&ds, cfg.clone()).run();
+    let b = FastFrankWolfe::new(&ds2, cfg).run();
+    // f32 text round-trip is exact for our generated values
+    assert_eq!(a.weights, b.weights);
+}
+
+/// The 2016-style large-T DP regime: many iterations at strong privacy
+/// still produce a sparse solution with nnz ≤ T and nontrivial signal —
+/// the mechanism behind the paper's Table 4.
+#[test]
+fn dp_large_t_stays_sparse() {
+    let ds = preset_small(DatasetPreset::News20);
+    let out = FastFrankWolfe::new(
+        &ds,
+        FwConfig {
+            iters: 4000,
+            lambda: 100.0,
+            privacy: Some(PrivacyParams::new(0.1, 1e-6)),
+            selector: SelectorKind::Bsls,
+            seed: 8,
+            trace_every: 0,
+            lipschitz: None,
+        },
+    )
+    .run();
+    let d = ds.n_cols() as f64;
+    let sparsity = 100.0 * (d - out.weights.nnz() as f64) / d;
+    assert!(sparsity > 50.0, "solution not sparse: {sparsity}%");
+    assert!(out.weights.nnz() <= 4000);
+}
+
+/// Accuracy metric plumbing: a model scored through the coordinator's
+/// sparse scorer matches a hand-rolled sigmoid pass.
+#[test]
+fn scorer_matches_manual_sigmoid() {
+    let ds = preset_small(DatasetPreset::Url);
+    let out = FastFrankWolfe::new(
+        &ds,
+        FwConfig { iters: 300, lambda: 10.0, ..Default::default() },
+    )
+    .run();
+    let p = score(&ds, out.weights.as_slice());
+    let mut v = vec![0.0f64; ds.n_rows()];
+    ds.csr.matvec(out.weights.as_slice(), &mut v);
+    for (pi, vi) in p.iter().zip(&v) {
+        let want = 1.0 / (1.0 + (-vi).exp());
+        assert!((pi - want).abs() < 1e-12);
+    }
+    let acc = accuracy(&p, &ds.labels);
+    assert!((0.0..=100.0).contains(&acc));
+}
+
+/// Arc-shared datasets across threads: the solver is Sync-safe over
+/// read-only data (what the coordinator relies on).
+#[test]
+fn concurrent_training_on_shared_data() {
+    let ds = Arc::new(preset_small(DatasetPreset::Rcv1));
+    let mut handles = Vec::new();
+    for seed in 0..4u64 {
+        let ds = Arc::clone(&ds);
+        handles.push(std::thread::spawn(move || {
+            FastFrankWolfe::new(
+                &ds,
+                FwConfig {
+                    iters: 150,
+                    lambda: 8.0,
+                    privacy: Some(PrivacyParams::new(1.0, 1e-6)),
+                    selector: SelectorKind::Bsls,
+                    seed,
+                    trace_every: 0,
+                    lipschitz: None,
+                },
+            )
+            .run()
+            .weights
+        }));
+    }
+    let outs: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    // different seeds should give different DP trajectories
+    assert!(outs.windows(2).any(|w| w[0] != w[1]));
+}
