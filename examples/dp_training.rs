@@ -50,6 +50,7 @@ fn main() {
                     seed: 11,
                     trace_every: 0,
                     lipschitz: None,
+                    threads: 0,
                 },
                 test_data: Some(test.clone()),
             });

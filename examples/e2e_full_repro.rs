@@ -108,6 +108,7 @@ fn main() -> anyhow::Result<()> {
                         seed: 5,
                         trace_every: 0,
                         lipschitz: None,
+                        threads: 0,
                     },
                     test_data: Some(test.clone()),
                 });
@@ -184,6 +185,7 @@ fn main() -> anyhow::Result<()> {
             seed: 6,
             trace_every: 0,
             lipschitz: None,
+            threads: 0,
         },
     )
     .run();

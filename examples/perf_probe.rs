@@ -6,7 +6,7 @@ fn main() {
     let out = FastFrankWolfe::new(&ds, FwConfig {
         iters: 20_000, lambda: 50.0,
         privacy: Some(PrivacyParams { epsilon: 0.5, delta: 1e-6 }),
-        selector: SelectorKind::Bsls, seed: 1, trace_every: 0, lipschitz: None,
+        selector: SelectorKind::Bsls, seed: 1, trace_every: 0, lipschitz: None, threads: 0,
     }).run();
     println!("gap {:.3e} wall {:.0} ms flops {:.2e}", out.final_gap, out.wall_ms, out.flops as f64);
 }

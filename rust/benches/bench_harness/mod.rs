@@ -3,9 +3,30 @@
 //! Provides warmup + repeated timed runs with mean/min/stddev reporting,
 //! in a criterion-like output format. Used by every `harness = false`
 //! bench target.
+//!
+//! ## Machine-readable results
+//!
+//! [`JsonReport`] optionally persists each benchmark's statistics as a
+//! JSON file so the perf trajectory is tracked across PRs (the
+//! `BENCH_iteration_cost.json` at the repo root is the canonical
+//! instance). The file carries `git describe` output so a result can be
+//! tied to the commit that produced it. Destination resolution:
+//! `DPFW_BENCH_JSON=<path>` overrides, `DPFW_BENCH_JSON=0` disables, and
+//! the default is `<repo root>/<name>` (one directory above the crate's
+//! manifest).
 #![allow(dead_code)] // each bench uses a subset of the harness
 
+use std::path::PathBuf;
 use std::time::Instant;
+
+/// Summary statistics of one benchmark, in seconds.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchStats {
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub stddev_s: f64,
+    pub runs: usize,
+}
 
 pub struct Bench {
     name: String,
@@ -30,7 +51,13 @@ impl Bench {
 
     /// Time `f` (which should return something to keep the optimizer
     /// honest); prints stats and returns the mean seconds.
-    pub fn run<T>(&self, mut f: impl FnMut() -> T) -> f64 {
+    pub fn run<T>(&self, f: impl FnMut() -> T) -> f64 {
+        self.run_stats(f).mean_s
+    }
+
+    /// Like [`Bench::run`] but returns the full statistics (for
+    /// [`JsonReport::record`]).
+    pub fn run_stats<T>(&self, mut f: impl FnMut() -> T) -> BenchStats {
         for _ in 0..self.warmup {
             std::hint::black_box(f());
         }
@@ -51,7 +78,11 @@ impl Bench {
             fmt_time(min),
             fmt_time(var.sqrt())
         );
-        mean
+        BenchStats { mean_s: mean, min_s: min, stddev_s: var.sqrt(), runs: self.runs }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
     }
 }
 
@@ -69,4 +100,92 @@ pub fn fmt_time(s: f64) -> String {
 
 pub fn section(title: &str) {
     println!("\n=== {title} ===");
+}
+
+// ------------------------------------------------------------------------
+// JSON persistence
+// ------------------------------------------------------------------------
+
+/// Accumulates benchmark entries and writes them as a single JSON document
+/// (hand-rolled — serde is not in the offline crate set).
+pub struct JsonReport {
+    /// `None` = disabled via `DPFW_BENCH_JSON=0`.
+    path: Option<PathBuf>,
+    entries: Vec<String>,
+}
+
+impl JsonReport {
+    /// Resolve the destination for a report named e.g.
+    /// `"BENCH_iteration_cost.json"` (see module docs) and start an empty
+    /// report.
+    pub fn new(default_name: &str) -> Self {
+        let path = match std::env::var("DPFW_BENCH_JSON") {
+            Ok(v) if v == "0" => None,
+            Ok(v) => Some(PathBuf::from(v)),
+            Err(_) => {
+                // <crate>/.. is the repo root in this workspace layout
+                let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..");
+                Some(root.join(default_name))
+            }
+        };
+        Self { path, entries: Vec::new() }
+    }
+
+    /// Record one benchmark's statistics plus free-form key/value context
+    /// (dataset preset, selector, D, ...). Values are stored as strings.
+    pub fn record(&mut self, name: &str, stats: BenchStats, extra: &[(&str, String)]) {
+        let mut fields = vec![
+            format!("\"name\": {}", json_string(name)),
+            format!("\"mean_ns\": {:.1}", stats.mean_s * 1e9),
+            format!("\"min_ns\": {:.1}", stats.min_s * 1e9),
+            format!("\"stddev_ns\": {:.1}", stats.stddev_s * 1e9),
+            format!("\"runs\": {}", stats.runs),
+        ];
+        for (k, v) in extra {
+            fields.push(format!("{}: {}", json_string(k), json_string(v)));
+        }
+        self.entries.push(format!("    {{{}}}", fields.join(", ")));
+    }
+
+    /// Write the report; returns the path written (None when disabled).
+    pub fn write(&self) -> std::io::Result<Option<PathBuf>> {
+        let Some(path) = &self.path else { return Ok(None) };
+        let doc = format!(
+            "{{\n  \"schema\": \"dpfw-bench-v1\",\n  \"git\": {},\n  \"results\": [\n{}\n  ]\n}}\n",
+            json_string(&git_describe()),
+            self.entries.join(",\n")
+        );
+        std::fs::write(path, doc)?;
+        println!("\nwrote {}", path.display());
+        Ok(Some(path.clone()))
+    }
+}
+
+fn git_describe() -> String {
+    std::process::Command::new("git")
+        .args(["describe", "--tags", "--always", "--dirty"])
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
+        .unwrap_or_else(|| "unknown".into())
+}
+
+fn json_string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
 }

@@ -3,15 +3,23 @@
 //! headline complexity claim: Alg 1 scales O(D) per iteration while
 //! Alg 2+BSLS scales ~O(√D). The printed `us/iter vs D` series is the
 //! scaling law the paper's Table 1 promises.
+//!
+//! Results are also persisted to `BENCH_iteration_cost.json` at the repo
+//! root (override/disable via `DPFW_BENCH_JSON`, see `bench_harness`), so
+//! the perf trajectory of the fused-scan engine is tracked across PRs. The
+//! `news20-bsls` entries are the canonical regression series: the fast
+//! solver on the News20 preset with the DP BSLS selector, both cold
+//! (per-run workspace) and warm (reused workspace).
 
 mod bench_harness;
 
-use bench_harness::{section, Bench};
+use bench_harness::{section, Bench, JsonReport};
 use dpfw::dp::accounting::PrivacyParams;
 use dpfw::fw::config::{FwConfig, SelectorKind};
 use dpfw::fw::fast::FastFrankWolfe;
 use dpfw::fw::standard::StandardFrankWolfe;
-use dpfw::sparse::synth::SynthConfig;
+use dpfw::fw::workspace::FwWorkspace;
+use dpfw::sparse::synth::{DatasetPreset, SynthConfig};
 use dpfw::sparse::Dataset;
 
 fn dataset(d: usize, seed: u64) -> Dataset {
@@ -30,6 +38,7 @@ fn dataset(d: usize, seed: u64) -> Dataset {
 }
 
 fn main() {
+    let mut report = JsonReport::new("BENCH_iteration_cost.json");
     let iters = 200;
     section("per-iteration cost vs D (N=2000, S_c=40, T=200, eps=1)");
     println!(
@@ -47,27 +56,83 @@ fn main() {
             seed: 3,
             trace_every: 0,
             lipschitz: None,
+            threads: 0,
         };
-        let t1 = Bench::new(format!("alg1+noisymax D={d}"))
+        let extra_owned = |sel: &str| -> Vec<(&'static str, String)> {
+            vec![
+                ("dataset", format!("synth-d{d}")),
+                ("selector", sel.to_string()),
+                ("iters", iters.to_string()),
+            ]
+        };
+        let s1 = Bench::new(format!("alg1+noisymax D={d}")).runs(3).run_stats(|| {
+            StandardFrankWolfe::new(&ds, cfg(SelectorKind::NoisyMax, dp)).run().flops
+        });
+        report.record(&format!("alg1-noisymax-d{d}"), s1, &extra_owned("noisymax"));
+        let s2 = Bench::new(format!("alg2+bsls     D={d}"))
             .runs(3)
-            .run(|| StandardFrankWolfe::new(&ds, cfg(SelectorKind::NoisyMax, dp)).run().flops);
-        let t2 = Bench::new(format!("alg2+bsls     D={d}"))
+            .run_stats(|| FastFrankWolfe::new(&ds, cfg(SelectorKind::Bsls, dp)).run().flops);
+        report.record(&format!("alg2-bsls-d{d}"), s2, &extra_owned("bsls"));
+        let s3 = Bench::new(format!("alg2+fibheap  D={d} (non-private)"))
             .runs(3)
-            .run(|| FastFrankWolfe::new(&ds, cfg(SelectorKind::Bsls, dp)).run().flops);
-        let t3 = Bench::new(format!("alg2+fibheap  D={d} (non-private)"))
-            .runs(3)
-            .run(|| FastFrankWolfe::new(&ds, cfg(SelectorKind::FibHeap, None)).run().flops);
+            .run_stats(|| FastFrankWolfe::new(&ds, cfg(SelectorKind::FibHeap, None)).run().flops);
+        report.record(&format!("alg2-fibheap-d{d}"), s3, &extra_owned("fibheap"));
         println!(
             "{:>10} {:>16.1} {:>16.1} {:>16.1} {:>9.1}x",
             d,
-            t1 * 1e6 / iters as f64,
-            t2 * 1e6 / iters as f64,
-            t3 * 1e6 / iters as f64,
-            t1 / t2
+            s1.mean_s * 1e6 / iters as f64,
+            s2.mean_s * 1e6 / iters as f64,
+            s3.mean_s * 1e6 / iters as f64,
+            s1.mean_s / s2.mean_s
         );
     }
     println!(
         "\nExpect: alg1 column ~4x per D step (O(D)); alg2+bsls column ~2x per D \
          step (O(sqrt(D))) — the paper's Table 1 scaling separation."
     );
+
+    // ---- the cross-PR regression series: News20 preset + BSLS ----------
+    section("news20 preset + BSLS (fused-scan regression series)");
+    let ds = SynthConfig::preset(DatasetPreset::News20).scale(0.05).generate(42);
+    println!(
+        "workload: news20@0.05  N={} D={} nnz={}",
+        ds.n_rows(),
+        ds.n_cols(),
+        ds.nnz()
+    );
+    let n20_iters = 2000usize;
+    let mk = || FwConfig {
+        iters: n20_iters,
+        lambda: 50.0,
+        privacy: Some(PrivacyParams::new(1.0, 1e-6)),
+        selector: SelectorKind::Bsls,
+        seed: 9,
+        trace_every: 0,
+        lipschitz: None,
+        threads: 0,
+    };
+    let n20_extra = |variant: &str| -> Vec<(&'static str, String)> {
+        vec![
+            ("dataset", "news20@0.05".into()),
+            ("selector", "bsls".into()),
+            ("iters", n20_iters.to_string()),
+            ("variant", variant.into()),
+        ]
+    };
+    let cold = Bench::new("news20 alg2+bsls T=2000 (cold workspace)")
+        .runs(5)
+        .run_stats(|| FastFrankWolfe::new(&ds, mk()).run().flops);
+    report.record("news20-bsls-cold", cold, &n20_extra("cold"));
+    let mut ws = FwWorkspace::new();
+    let warm = Bench::new("news20 alg2+bsls T=2000 (warm workspace)")
+        .runs(5)
+        .run_stats(|| FastFrankWolfe::new(&ds, mk()).run_in(&mut ws).flops);
+    report.record("news20-bsls-warm", warm, &n20_extra("warm"));
+    println!(
+        "  per-iteration: cold {:.2} us, warm {:.2} us",
+        cold.mean_s * 1e6 / n20_iters as f64,
+        warm.mean_s * 1e6 / n20_iters as f64
+    );
+
+    report.write().expect("write bench json");
 }

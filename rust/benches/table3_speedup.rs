@@ -41,6 +41,7 @@ fn main() {
                 seed: 9,
                 trace_every: 0,
                 lipschitz: None,
+                threads: 0,
             };
             let t_alg1 = Bench::new(format!("{} eps={eps} alg1+noisymax", p.name()))
                 .runs(3)

@@ -7,6 +7,7 @@ use crate::fw::config::FwConfig;
 use crate::fw::fast::FastFrankWolfe;
 use crate::fw::standard::StandardFrankWolfe;
 use crate::fw::trace::FwOutput;
+use crate::fw::workspace::FwWorkspace;
 use crate::sparse::Dataset;
 
 /// Which solver implementation to run.
@@ -51,15 +52,32 @@ pub struct JobSpec {
 }
 
 impl JobSpec {
-    /// Execute synchronously (the coordinator calls this on a worker).
+    /// Execute synchronously with a one-shot workspace.
     pub fn run(&self) -> JobResult {
+        self.run_in(&mut FwWorkspace::new())
+    }
+
+    /// Execute inside a reusable workspace — the coordinator keeps one per
+    /// worker thread so a grid sweep's hundreds of runs share solver
+    /// buffers and selector storage instead of reallocating per job.
+    /// Bit-exactly equivalent to [`JobSpec::run`].
+    pub fn run_in(&self, ws: &mut FwWorkspace) -> JobResult {
         let out = match self.algo {
-            Algo::Standard => StandardFrankWolfe::new(&self.data, self.cfg.clone()).run(),
-            Algo::Fast => FastFrankWolfe::new(&self.data, self.cfg.clone()).run(),
+            Algo::Standard => {
+                StandardFrankWolfe::new(&self.data, self.cfg.clone()).run_in(ws)
+            }
+            Algo::Fast => FastFrankWolfe::new(&self.data, self.cfg.clone()).run_in(ws),
         };
         let (accuracy, auc) = match &self.test_data {
             Some(test) => {
-                let p = score(test, out.weights.as_slice());
+                // Respect the job's thread budget: pooled jobs arrive with
+                // threads pinned to 1 by the scheduler, so scoring must not
+                // fan back out underneath the worker pool.
+                let threads = match self.cfg.threads {
+                    0 => crate::sparse::auto_threads(test.nnz()),
+                    t => t,
+                };
+                let p = score_with_threads(test, out.weights.as_slice(), threads);
                 (Some(eval::accuracy(&p, &test.labels)), Some(eval::auc(&p, &test.labels)))
             }
             None => (None, None),
@@ -78,9 +96,17 @@ impl JobSpec {
 }
 
 /// Sparse scorer `p_i = σ(x_i·w)` (training path: no Python, no XLA).
+/// Row-block parallel for paper-scale datasets; bit-identical to the
+/// serial matvec at any thread count.
 pub fn score(ds: &Dataset, w: &[f64]) -> Vec<f64> {
+    score_with_threads(ds, w, crate::sparse::auto_threads(ds.nnz()))
+}
+
+/// [`score`] with an explicit thread budget (the coordinator passes the
+/// job's pinned count so pooled scoring doesn't oversubscribe the pool).
+pub fn score_with_threads(ds: &Dataset, w: &[f64], threads: usize) -> Vec<f64> {
     let mut v = vec![0.0f64; ds.n_rows()];
-    ds.csr.matvec(w, &mut v);
+    ds.csr.matvec_par(w, &mut v, threads);
     v.iter().map(|&vi| crate::fw::loss::sigmoid(vi)).collect()
 }
 

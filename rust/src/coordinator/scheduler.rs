@@ -14,6 +14,7 @@ use std::time::Instant;
 
 use super::job::{JobResult, JobSpec};
 use super::metrics::Metrics;
+use crate::fw::workspace::FwWorkspace;
 
 /// Outcome of one job: the result, or the panic message.
 pub type JobOutcome = Result<JobResult, String>;
@@ -42,42 +43,59 @@ impl Coordinator {
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("dpfw-worker-{worker_id}"))
-                    .spawn(move || loop {
-                        let job = {
-                            let guard = rx.lock().expect("job queue poisoned");
-                            guard.recv()
-                        };
-                        let Ok(job) = job else { break }; // channel closed
-                        let id = job.id;
-                        let start = Instant::now();
-                        let outcome =
-                            std::panic::catch_unwind(AssertUnwindSafe(|| job.run()));
-                        let busy_us = start.elapsed().as_micros() as u64;
-                        let outcome = match outcome {
-                            Ok(res) => {
-                                metrics.record_completion(
-                                    res.output.iters_run as u64,
-                                    res.output.flops,
-                                    busy_us,
-                                );
-                                Ok(res)
+                    .spawn(move || {
+                        // One workspace per worker: every job this thread
+                        // executes reuses the same solver buffers and
+                        // selector storage (bit-exact; a panicking job
+                        // merely drops its taken buffers, so the pool
+                        // self-heals on the next run).
+                        let mut ws = FwWorkspace::new();
+                        loop {
+                            let job = {
+                                let guard = rx.lock().expect("job queue poisoned");
+                                guard.recv()
+                            };
+                            let Ok(mut job) = job else { break }; // channel closed
+                            // The pool already saturates the machine; stop
+                            // auto-threaded jobs from oversubscribing it
+                            // during their parallel bootstrap (output is
+                            // bit-identical at any thread count, so this is
+                            // safe).
+                            if n_workers > 1 && job.cfg.threads == 0 {
+                                job.cfg.threads = 1;
                             }
-                            Err(p) => {
-                                metrics
-                                    .jobs_failed
-                                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                                let msg = p
-                                    .downcast_ref::<String>()
-                                    .cloned()
-                                    .or_else(|| {
-                                        p.downcast_ref::<&str>().map(|s| s.to_string())
-                                    })
-                                    .unwrap_or_else(|| "<non-string panic>".into());
-                                Err(msg)
+                            let id = job.id;
+                            let start = Instant::now();
+                            let outcome = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                                job.run_in(&mut ws)
+                            }));
+                            let busy_us = start.elapsed().as_micros() as u64;
+                            let outcome = match outcome {
+                                Ok(res) => {
+                                    metrics.record_completion(
+                                        res.output.iters_run as u64,
+                                        res.output.flops,
+                                        busy_us,
+                                    );
+                                    Ok(res)
+                                }
+                                Err(p) => {
+                                    metrics
+                                        .jobs_failed
+                                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                                    let msg = p
+                                        .downcast_ref::<String>()
+                                        .cloned()
+                                        .or_else(|| {
+                                            p.downcast_ref::<&str>().map(|s| s.to_string())
+                                        })
+                                        .unwrap_or_else(|| "<non-string panic>".into());
+                                    Err(msg)
+                                }
+                            };
+                            if tx.send((id, outcome)).is_err() {
+                                break; // coordinator dropped
                             }
-                        };
-                        if tx.send((id, outcome)).is_err() {
-                            break; // coordinator dropped
                         }
                     })
                     .expect("spawn worker"),

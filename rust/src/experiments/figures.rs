@@ -104,10 +104,12 @@ pub fn fig4_gap_vs_flops(cfg: &ExpConfig) -> Result<CsvTable> {
     for idx in 0..EVAL_PRESETS.len() {
         let (name, a1, a2) = nonprivate_pair(idx, cfg);
         for r in &a1.trace {
-            t.push_row([name.clone(), "alg1".into(), r.flops.to_string(), format!("{:.6e}", r.gap)]);
+            let gap = format!("{:.6e}", r.gap);
+            t.push_row([name.clone(), "alg1".into(), r.flops.to_string(), gap]);
         }
         for r in &a2.trace {
-            t.push_row([name.clone(), "alg2".into(), r.flops.to_string(), format!("{:.6e}", r.gap)]);
+            let gap = format!("{:.6e}", r.gap);
+            t.push_row([name.clone(), "alg2".into(), r.flops.to_string(), gap]);
         }
     }
     t.write_file(cfg.out_dir.join("fig4_gap_vs_flops.csv"))?;

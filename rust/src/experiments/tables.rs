@@ -62,6 +62,7 @@ fn dp_job(
             seed,
             trace_every: 0,
             lipschitz: None,
+            threads: 0,
         },
         test_data: None,
     }
@@ -163,12 +164,14 @@ pub fn table4_utility(cfg: &ExpConfig) -> Result<CsvTable> {
                 seed: cfg.seed,
                 trace_every: 0,
                 lipschitz: None,
+                threads: 0,
             },
             test_data: Some(test),
         });
     }
     let results = coord.run_all(jobs);
-    let mut t = CsvTable::new(["dataset", "accuracy_pct", "auc_pct", "sparsity_pct", "nnz", "iters"]);
+    let mut t =
+        CsvTable::new(["dataset", "accuracy_pct", "auc_pct", "sparsity_pct", "nnz", "iters"]);
     for r in results {
         let r = r.map_err(|e| anyhow::anyhow!("table4 job failed: {e}"))?;
         t.push_row([

@@ -74,6 +74,16 @@ pub struct FwConfig {
     pub trace_every: usize,
     /// Override the loss Lipschitz constant (None = take it from the loss).
     pub lipschitz: Option<f64>,
+    /// Worker threads for the solver's block-parallel phases (the dense
+    /// bootstrap `α = Xᵀq̄`). `0` = automatic: available parallelism for
+    /// paper-scale inputs, serial below `sparse::PAR_MIN_NNZ` where
+    /// thread-spawn overhead dominates. An explicit count is honored
+    /// verbatim. Any value produces **bit-identical** output — the
+    /// parallel kernels partition work so each f64 is summed in the same
+    /// order regardless of thread count (property-tested) — so this is
+    /// purely a performance/oversubscription knob (e.g. the coordinator
+    /// pins its workers' jobs to 1).
+    pub threads: usize,
 }
 
 impl Default for FwConfig {
@@ -86,11 +96,22 @@ impl Default for FwConfig {
             seed: 0,
             trace_every: 0,
             lipschitz: None,
+            threads: 0,
         }
     }
 }
 
 impl FwConfig {
+    /// Resolve [`FwConfig::threads`]: the explicit count, or available
+    /// parallelism when 0.
+    pub fn effective_threads(&self) -> usize {
+        if self.threads == 0 {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+        } else {
+            self.threads
+        }
+    }
+
     /// Panics on inconsistent combinations (DP selector without privacy
     /// params and vice versa) — failing loudly beats silently training
     /// with the wrong guarantee.
@@ -155,5 +176,12 @@ mod tests {
         assert_eq!(c.iters, 4000);
         assert_eq!(c.lambda, 50.0);
         c.validate();
+    }
+
+    #[test]
+    fn effective_threads_resolves_auto() {
+        assert!(FwConfig::default().effective_threads() >= 1);
+        let c = FwConfig { threads: 3, ..Default::default() };
+        assert_eq!(c.effective_threads(), 3);
     }
 }

@@ -5,28 +5,50 @@
 //! * **Sparse `w` update** (lines 19-20): the global shrink
 //!   `w ← (1−η)w` becomes one multiply on the co-scalar `w_m`
 //!   (`w = w_m·ŵ`), and only coordinate `j` of `ŵ` is touched. `O(1)`.
-//! * **Sparse `v̄`/`α` updates** (lines 22-28): changing `w_j` perturbs
-//!   `v̄_i` only for the `S_r` rows with feature `j` (one CSC column
-//!   scan); each such row's gradient change `γ_i` propagates to `α` along
-//!   that row's `S_c` nonzero columns (one CSR row scan). `O(S_r·S_c)`.
+//! * **Fused sparse `v̄`/`α`/notify maintenance** (lines 22-29): changing
+//!   `w_j` perturbs `v̄_i` only for the `S_r` rows with feature `j` (one
+//!   CSC column scan); each such row's gradient change `γ_i` propagates to
+//!   `α` along that row's `S_c` nonzero columns (one CSR row scan). The
+//!   same scan records each *first-touched* coordinate into a reusable
+//!   `touched` list (epoch-stamp dedup), and the line-29 queue
+//!   notifications are driven off that list afterwards — the paper's
+//!   footnote-2 re-iteration without its second full CSC-column + CSR-row
+//!   traversal. One pass over the gathers instead of two: `O(S_r·S_c)`
+//!   touched memory once per iteration, which matters because the scan is
+//!   memory-bound (see `sparse/csr.rs`).
 //! * **Sparse gap maintenance** (lines 17, 21, 27): `g̃ = ⟨α, w⟩` is
 //!   rescaled by `(1−η)`, bumped by the single-coordinate term, and — one
 //!   step beyond the paper's `O(S_c)` line 27 — each row's contribution
 //!   `γ_i·⟨X[i,:], w⟩` is exactly `γ_i·w_m·v̂_i`, already at hand: `O(1)`
-//!   (documented deviation; identical arithmetic value).
+//!   (documented deviation; identical arithmetic value — DESIGN.md §4.2).
 //!
-//! Iteration cost is therefore `selection + O(S_r·S_c)`, with selection
-//! `O(‖w*‖₀ log D)` (Fibonacci heap, non-private) or `O(√D)` (BSLS, DP) —
-//! the paper's headline complexities.
+//! Iteration cost is therefore `selection + O(S_r·S_c)` with a *single*
+//! traversal of the touched nonzeros, and selection `O(‖w*‖₀ log D)`
+//! (Fibonacci heap, non-private) or `O(√D)` (BSLS, DP) — the paper's
+//! headline complexities.
+//!
+//! Two engine-level additions on top of the paper (DESIGN.md §6):
+//!
+//! * **Workspaces**: [`FastFrankWolfe::run_in`] executes inside a caller
+//!   -supplied [`FwWorkspace`], so repeated runs (grid sweeps, benches,
+//!   the coordinator's workers) reuse every solver buffer and the
+//!   selector's internal storage instead of reallocating. `run()` keeps
+//!   its signature via a private per-call workspace. Reuse is bit-exact.
+//! * **Parallel bootstrap**: the `O(N·S_c)` dense first iteration
+//!   `α = Xᵀq̄` fans out over contiguous CSC column blocks
+//!   (`CscMatrix::matvec_t_par`, disjoint output slices, no atomics),
+//!   gated by [`FwConfig::threads`]. The block sums are per-column
+//!   sequential either way, so any thread count produces bit-identical
+//!   results.
 
 use std::time::Instant;
 
 use crate::fw::config::FwConfig;
 use crate::fw::flops::{FlopCounter, FLOPS_SIGMOID};
 use crate::fw::loss::{Logistic, Loss};
-use crate::fw::queue::build_selector;
 use crate::fw::sign;
 use crate::fw::trace::{FwOutput, TraceRecord, WeightVector};
+use crate::fw::workspace::FwWorkspace;
 use crate::rng::Xoshiro256pp;
 use crate::sparse::Dataset;
 
@@ -76,9 +98,19 @@ impl<'a> FastFrankWolfe<'a> {
         self
     }
 
-    /// One-shot run (the public entry point).
+    /// One-shot run (the public entry point). Allocates a private
+    /// workspace; sweep drivers should prefer [`FastFrankWolfe::run_in`].
     pub fn run(&self) -> FwOutput {
-        self.run_with_observer(|_, _| {})
+        self.run_in(&mut FwWorkspace::new())
+    }
+
+    /// Run inside a caller-supplied workspace: all solver state (ŵ, v̂, q̄,
+    /// α, the notify stamp/touched scratch, and the selector's internal
+    /// storage) is drawn from — and returned to — `ws`, so repeated runs
+    /// allocate nothing beyond the escaping output. A dirty workspace is
+    /// bit-exactly equivalent to a fresh one (property-tested).
+    pub fn run_in(&self, ws: &mut FwWorkspace) -> FwOutput {
+        self.run_in_with_observer(ws, |_, _| {})
     }
 
     /// Run, invoking `observe(t, &state)` after every iteration — the hook
@@ -86,6 +118,14 @@ impl<'a> FastFrankWolfe<'a> {
     /// empty.
     pub(crate) fn run_with_observer(
         &self,
+        observe: impl FnMut(usize, &FastState),
+    ) -> FwOutput {
+        self.run_in_with_observer(&mut FwWorkspace::new(), observe)
+    }
+
+    pub(crate) fn run_in_with_observer(
+        &self,
+        ws: &mut FwWorkspace,
         mut observe: impl FnMut(usize, &FastState),
     ) -> FwOutput {
         let start = Instant::now();
@@ -102,37 +142,57 @@ impl<'a> FastFrankWolfe<'a> {
             Some(p) => (p.exp_mech_scale(t_total, lip), p.noisy_max_scale(t_total, lip)),
             None => (0.0, 0.0),
         };
-        let mut selector = build_selector(self.cfg.selector, d, exp_scale, nm_scale);
+        let mut selector = ws.take_selector(self.cfg.selector, d, exp_scale, nm_scale);
         let mut rng = Xoshiro256pp::seeded(self.cfg.seed);
         let mut flops = FlopCounter::new();
 
         // ---- lines 8-14: dense first iteration --------------------------
         // w = 0 ⇒ v̄ = 0, q̄_i = ∇L(0, y_i), α = Xᵀq̄, g̃ = ⟨α, 0⟩ = 0.
         let mut st = FastState {
-            hat_w: vec![0.0f64; d],
+            hat_w: ws.take_f64(d, 0.0),
             w_m: 1.0,
-            hat_v: vec![0.0f64; n],
-            q: (0..n).map(|i| self.loss.grad(0.0, y[i] as f64)).collect(),
-            alpha: vec![0.0f64; d],
+            hat_v: ws.take_f64(n, 0.0),
+            q: ws.take_f64(n, 0.0),
+            alpha: ws.take_f64(d, 0.0),
             g_base: 0.0,
         };
+        for (qi, &yi) in st.q.iter_mut().zip(y.iter()) {
+            *qi = self.loss.grad(0.0, yi as f64);
+        }
         flops.add(n as u64 * FLOPS_SIGMOID);
-        csr.matvec_t_add(&st.q, &mut st.alpha);
+        // The one O(N·S_c) pass of the whole run: column-block parallel,
+        // bit-identical to the serial CSR-driven product (see
+        // `CscMatrix::matvec_t_par`). An explicit `threads` is honored
+        // verbatim (the thread-invariance property tests rely on that);
+        // auto (0) applies the PAR_MIN_NNZ gate so tiny problems don't pay
+        // thread-spawn overhead.
+        let boot_threads = if self.cfg.threads == 0 {
+            crate::sparse::auto_threads(csr.nnz())
+        } else {
+            self.cfg.threads
+        };
+        csc.matvec_t_par(&st.q, &mut st.alpha, boot_threads);
         flops.add(2 * csr.nnz() as u64);
         selector.init(&st.alpha, &mut flops);
 
         let mut trace = Vec::new();
         let mut gap = f64::NAN;
-        // §Perf: dedup stamp for the line-29 notify pass — rows sharing
-        // popular columns would otherwise notify the same coordinate once
-        // per row (the paper's "naive re-iteration", footnote 2). One u32
-        // epoch per coordinate; cleared implicitly by epoch bump.
-        let mut stamp = vec![0u32; d];
+        // §Perf: first-touch dedup for the fused update+notify scan — rows
+        // sharing popular columns would otherwise notify the same
+        // coordinate once per row (the paper's "naive re-iteration",
+        // footnote 2). One u32 epoch per coordinate, cleared implicitly by
+        // the epoch bump; `touched` collects each deduped coordinate so
+        // notifications can fire *after* its α value is final.
+        let mut stamp = ws.take_u32(d, 0);
         let mut epoch = 0u32;
+        let mut touched = ws.take_u32_scratch();
 
         // Phase timers (set DPFW_PHASE_TIMING=1): where iteration time
-        // goes — selection vs sparse state update vs queue notification.
-        // The §Perf pass drives its decisions off this breakdown.
+        // goes — selection vs the fused sparse scan vs draining the
+        // touched-list into the queue. The §Perf pass drives its decisions
+        // off this breakdown. Pre-fusion, `notify` was a second traversal
+        // of the same nonzeros and cost about as much as `update`; it is
+        // now the O(touched) drain only.
         let timing = std::env::var_os("DPFW_PHASE_TIMING").is_some();
         let (mut ns_select, mut ns_update, mut ns_notify) = (0u128, 0u128, 0u128);
 
@@ -151,18 +211,28 @@ impl<'a> FastFrankWolfe<'a> {
             flops.add(6);
 
             // ---- lines 19-21: O(1) weight & gap updates -----------------
+            let step = eta * s;
             st.w_m *= 1.0 - eta;
-            st.hat_w[j] += eta * s / st.w_m;
-            st.g_base = (1.0 - eta) * st.g_base + eta * s * st.alpha[j];
+            // loop-invariant: η·s/w_m, hoisted out of the row scan below
+            let vcoef = step / st.w_m;
+            st.hat_w[j] += vcoef;
+            st.g_base = (1.0 - eta) * st.g_base + step * st.alpha[j];
             flops.add(8);
 
-            // ---- lines 22-28: sparse α / v̄ / g̃ maintenance -------------
+            // ---- lines 22-29 fused: one scan updates v̄/α/g̃ AND records
+            // the first touch of every perturbed coordinate ---------------
             let p0 = timing.then(Instant::now);
+            epoch = epoch.wrapping_add(1);
+            if epoch == 0 {
+                stamp.fill(0);
+                epoch = 1;
+            }
+            touched.clear();
             let (rows, xvals) = csc.col_raw(j);
             for (&i_u32, &xij) in rows.iter().zip(xvals) {
                 let i = i_u32 as usize;
                 // v̂_i += η·s·X[i,j]/w_m   (so v_i = w_m·v̂_i is exact)
-                st.hat_v[i] += eta * s * xij as f64 / st.w_m;
+                st.hat_v[i] += vcoef * xij as f64;
                 let v_new = st.w_m * st.hat_v[i];
                 let gamma = self.loss.grad(v_new, y[i] as f64) - st.q[i];
                 flops.add(6 + FLOPS_SIGMOID);
@@ -170,38 +240,34 @@ impl<'a> FastFrankWolfe<'a> {
                     continue;
                 }
                 st.q[i] += gamma;
-                // α += γ · X[i,:]
+                // α += γ · X[i,:]; the stamp marks coordinates whose α
+                // changes this iteration (rows with γ = 0 leave α — and
+                // hence the queue — untouched, so skipping them here is
+                // exactly the old second-pass behaviour: notify was a
+                // no-op for unchanged values).
                 let (cols, rvals) = csr.row_raw(i);
                 for (&k, &xik) in cols.iter().zip(rvals) {
-                    st.alpha[k as usize] += gamma * xik as f64;
+                    let ku = k as usize;
+                    st.alpha[ku] += gamma * xik as f64;
+                    if stamp[ku] != epoch {
+                        stamp[ku] = epoch;
+                        touched.push(k);
+                    }
                 }
                 flops.add(2 * cols.len() as u64 + 1);
                 // g̃ += γ·⟨X[i,:], w⟩ = γ·v_i  (see module docs)
                 st.g_base += gamma * v_new;
                 flops.add(2);
             }
-
             if let Some(p) = p0 {
                 ns_update += p.elapsed().as_nanos();
             }
 
-            // ---- line 29: propagate final α values to the queue ---------
-            // (paper footnote 2's re-iteration, deduplicated by stamp)
+            // ---- line 29: drain the touched-list into the queue, with
+            // final α values (no re-traversal of the matrix) --------------
             let p0 = timing.then(Instant::now);
-            epoch = epoch.wrapping_add(1);
-            if epoch == 0 {
-                stamp.fill(0);
-                epoch = 1;
-            }
-            for &i_u32 in rows {
-                let (cols, _) = csr.row_raw(i_u32 as usize);
-                for &k in cols {
-                    let k = k as usize;
-                    if stamp[k] != epoch {
-                        stamp[k] = epoch;
-                        selector.notify(k, st.alpha[k], &mut flops);
-                    }
-                }
+            for &k in touched.iter() {
+                selector.notify(k as usize, st.alpha[k as usize], &mut flops);
             }
             if let Some(p) = p0 {
                 ns_notify += p.elapsed().as_nanos();
@@ -235,8 +301,8 @@ impl<'a> FastFrankWolfe<'a> {
         if timing {
             let tot = start.elapsed().as_nanos().max(1) as f64;
             eprintln!(
-                "[phase-timing] select {:.1}% update {:.1}% notify {:.1}% other {:.1}% \
-                 (total {:.1} ms, {} iters)",
+                "[phase-timing] select {:.1}% update+touch(fused) {:.1}% \
+                 notify-drain {:.1}% other {:.1}% (total {:.1} ms, {} iters)",
                 100.0 * ns_select as f64 / tot,
                 100.0 * ns_update as f64 / tot,
                 100.0 * ns_notify as f64 / tot,
@@ -253,7 +319,7 @@ impl<'a> FastFrankWolfe<'a> {
             selected: usize::MAX,
             wall_ns: start.elapsed().as_nanos(),
         });
-        FwOutput {
+        let out = FwOutput {
             weights: WeightVector(st.weights()),
             final_gap: gap,
             flops: flops.total(),
@@ -261,7 +327,16 @@ impl<'a> FastFrankWolfe<'a> {
             selector_stats: selector.stats(),
             trace,
             iters_run: t_total - 1,
-        }
+        };
+        // ---- return every buffer to the workspace for the next run -----
+        ws.recycle_f64(st.hat_w);
+        ws.recycle_f64(st.hat_v);
+        ws.recycle_f64(st.q);
+        ws.recycle_f64(st.alpha);
+        ws.recycle_u32(stamp);
+        ws.recycle_u32(touched);
+        ws.recycle_selector(selector, d, exp_scale, nm_scale);
+        out
     }
 }
 

@@ -10,9 +10,14 @@
 //! * [`queue`] — the selector abstraction: non-private argmax, Alg 3's
 //!   Fibonacci-heap queue, Alg 4's BSLS exponential sampler, the noisy-max
 //!   ablation, and the naive `O(D)` exponential mechanism.
+//! * [`workspace`] — reusable run-to-run buffer pools ([`workspace::FwWorkspace`]):
+//!   both solvers expose `run_in(&mut FwWorkspace)` so sweep drivers and
+//!   the coordinator's workers execute repeated runs without allocating
+//!   solver state or rebuilding selector storage. Reuse is bit-exact.
 //! * [`loss`], [`flops`], [`trace`], [`config`] — losses with the DP
 //!   Lipschitz constants, FLOP accounting (Figures 2 & 4), per-iteration
-//!   traces (Figures 1 & 3), and run configuration.
+//!   traces (Figures 1 & 3), and run configuration (including the
+//!   `threads` knob for the block-parallel bootstrap).
 
 pub mod config;
 pub mod fast;
@@ -21,6 +26,7 @@ pub mod loss;
 pub mod queue;
 pub mod standard;
 pub mod trace;
+pub mod workspace;
 
 /// Three-valued sign (`sign(0) = 0`), shared with the data generator.
 #[inline]

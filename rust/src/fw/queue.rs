@@ -50,6 +50,13 @@ pub trait CoordinateSelector {
         -> usize;
     /// `α_k` changed to `alpha_k` (Alg 2 l.29). Idempotent per value.
     fn notify(&mut self, k: usize, alpha_k: f64, flops: &mut FlopCounter);
+    /// Restore the exactly-fresh state of a newly built selector over the
+    /// same item universe, retaining internal allocations (heap arenas,
+    /// sampler group arrays). A reset selector followed by `init` must be
+    /// bit-identically equivalent to a freshly constructed one — the
+    /// workspace selector cache ([`crate::fw::workspace::FwWorkspace`])
+    /// depends on this.
+    fn reset(&mut self);
     fn stats(&self) -> SelectorStats;
     fn kind(&self) -> SelectorKind;
 }
@@ -78,6 +85,10 @@ impl CoordinateSelector for ArgmaxSelector {
     }
 
     fn notify(&mut self, _k: usize, _alpha_k: f64, _flops: &mut FlopCounter) {}
+
+    fn reset(&mut self) {
+        self.stats = SelectorStats::default();
+    }
 
     fn stats(&self) -> SelectorStats {
         self.stats
@@ -183,6 +194,12 @@ impl<H: DecreaseKeyHeap> CoordinateSelector for HeapSelector<H> {
         self.heap.decrease_key(k, -alpha_k.abs());
     }
 
+    fn reset(&mut self) {
+        self.heap.clear();
+        self.popped.clear();
+        self.stats = SelectorStats::default();
+    }
+
     fn stats(&self) -> SelectorStats {
         self.stats
     }
@@ -258,6 +275,11 @@ impl<S: WeightedSampler> CoordinateSelector for ExpMechSelector<S> {
         self.sampler.update(k, alpha_k.abs() * self.scale);
     }
 
+    fn reset(&mut self) {
+        self.sampler.reset();
+        self.stats = SelectorStats::default();
+    }
+
     fn stats(&self) -> SelectorStats {
         let mut s = self.stats;
         s.big_steps = self.big_steps();
@@ -325,6 +347,10 @@ impl CoordinateSelector for NoisyMaxSelector {
     }
 
     fn notify(&mut self, _k: usize, _alpha_k: f64, _flops: &mut FlopCounter) {}
+
+    fn reset(&mut self) {
+        self.stats = SelectorStats::default();
+    }
 
     fn stats(&self) -> SelectorStats {
         self.stats

@@ -16,9 +16,9 @@ use std::time::Instant;
 use crate::fw::config::{FwConfig, SelectorKind};
 use crate::fw::flops::{FlopCounter, FLOPS_SIGMOID};
 use crate::fw::loss::{Logistic, Loss};
-use crate::fw::queue::build_selector;
 use crate::fw::sign;
 use crate::fw::trace::{FwOutput, TraceRecord, WeightVector};
+use crate::fw::workspace::FwWorkspace;
 use crate::rng::Xoshiro256pp;
 use crate::sparse::Dataset;
 
@@ -44,7 +44,16 @@ impl<'a> StandardFrankWolfe<'a> {
         self
     }
 
+    /// One-shot run with a private workspace; sweep drivers should prefer
+    /// [`StandardFrankWolfe::run_in`].
     pub fn run(&self) -> FwOutput {
+        self.run_in(&mut FwWorkspace::new())
+    }
+
+    /// Run inside a caller-supplied workspace (see
+    /// [`crate::fw::workspace`]): the four dense state vectors and the
+    /// selector are pooled across runs. Bit-exactly equivalent to `run`.
+    pub fn run_in(&self, ws: &mut FwWorkspace) -> FwOutput {
         let start = Instant::now();
         let csr = &self.data.csr;
         let y = &self.data.labels;
@@ -58,14 +67,14 @@ impl<'a> StandardFrankWolfe<'a> {
             Some(p) => (p.exp_mech_scale(t_total, lip), p.noisy_max_scale(t_total, lip)),
             None => (0.0, 0.0),
         };
-        let mut selector = build_selector(self.cfg.selector, d, exp_scale, nm_scale);
+        let mut selector = ws.take_selector(self.cfg.selector, d, exp_scale, nm_scale);
         let mut rng = Xoshiro256pp::seeded(self.cfg.seed);
         let mut flops = FlopCounter::new();
 
-        let mut w = vec![0.0f64; d];
-        let mut v = vec![0.0f64; n];
-        let mut q = vec![0.0f64; n];
-        let mut alpha = vec![0.0f64; d];
+        let mut w = ws.take_f64(d, 0.0);
+        let mut v = ws.take_f64(n, 0.0);
+        let mut q = ws.take_f64(n, 0.0);
+        let mut alpha = ws.take_f64(d, 0.0);
         let mut trace = Vec::new();
         let mut gap = f64::NAN;
         let mut initialized = false;
@@ -127,15 +136,23 @@ impl<'a> StandardFrankWolfe<'a> {
             selected: usize::MAX,
             wall_ns: start.elapsed().as_nanos(),
         });
-        FwOutput {
-            weights: WeightVector(w),
+        let out = FwOutput {
+            // the weight vector escapes the run: clone it out of the pool
+            // rather than surrendering the pooled buffer
+            weights: WeightVector(w.clone()),
             final_gap: gap,
             flops: flops.total(),
             wall_ms,
             selector_stats: selector.stats(),
             trace,
             iters_run: t_total - 1,
-        }
+        };
+        ws.recycle_f64(w);
+        ws.recycle_f64(v);
+        ws.recycle_f64(q);
+        ws.recycle_f64(alpha);
+        ws.recycle_selector(selector, d, exp_scale, nm_scale);
+        out
     }
 }
 

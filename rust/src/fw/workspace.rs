@@ -1,0 +1,190 @@
+//! Reusable solver workspaces: run-to-run buffer pooling for the
+//! Frank-Wolfe engines.
+//!
+//! The coordinator's grid sweeps (Table 3/4, ε-sweeps) run the solver
+//! hundreds of times over the same dataset. Before this module every run
+//! allocated its full state from scratch — five `O(N)`/`O(D)` vectors plus
+//! the selector's heap/sampler storage — which at News20 scale is tens of
+//! MB of allocator traffic per grid cell. [`FwWorkspace`] keeps those
+//! buffers (and the selector, including its heap arena / group-sum arrays)
+//! alive between runs:
+//!
+//! * [`FwWorkspace::take_f64`] / [`FwWorkspace::take_u32`] hand out
+//!   cleared, right-sized buffers that reuse retained capacity — after the
+//!   first run on a given problem shape, **no solver-state allocation
+//!   happens at all** (the returned `FwOutput` still owns its weight
+//!   vector, which must escape the run).
+//! * [`FwWorkspace::take_selector`] caches the boxed
+//!   [`CoordinateSelector`] from the previous run. When the next run asks
+//!   for the same `(kind, D, scales)` configuration the cached selector is
+//!   [`CoordinateSelector::reset`] — restoring its exactly-fresh logical
+//!   state while keeping every internal allocation (Fibonacci-heap arena,
+//!   binary-heap storage, BSLS group arrays) — instead of rebuilt.
+//!
+//! Reuse is **bit-exact**: a `run_in` on a dirty workspace must produce
+//! output identical to a fresh `run` (enforced by
+//! `tests/prop_equivalence.rs::prop_workspace_reuse_bit_identical`). The
+//! pool is therefore purely an allocation cache; nothing about the
+//! trajectory may depend on what a buffer previously held.
+//!
+//! One workspace per worker thread is the intended topology (see
+//! `coordinator/scheduler.rs`); the type is deliberately `!Sync` — cheap
+//! single-owner mutation, no locking.
+
+use crate::fw::config::SelectorKind;
+use crate::fw::queue::{build_selector, CoordinateSelector};
+
+/// A cached selector plus the configuration key it was built for.
+struct CachedSelector {
+    kind: SelectorKind,
+    n_items: usize,
+    /// Exponential-mechanism scale the selector was built with. Compared
+    /// bitwise: a selector built for a different privacy budget must not
+    /// be reused.
+    exp_scale: u64,
+    /// Noisy-max Laplace scale, compared bitwise like `exp_scale`.
+    nm_scale: u64,
+    sel: Box<dyn CoordinateSelector>,
+}
+
+/// Reusable buffer pool for [`crate::fw::fast::FastFrankWolfe`] and
+/// [`crate::fw::standard::StandardFrankWolfe`] runs. See the module docs.
+#[derive(Default)]
+pub struct FwWorkspace {
+    f64_pool: Vec<Vec<f64>>,
+    u32_pool: Vec<Vec<u32>>,
+    selector: Option<CachedSelector>,
+}
+
+impl FwWorkspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A length-`len` buffer filled with `fill`, reusing pooled capacity
+    /// when available.
+    pub(crate) fn take_f64(&mut self, len: usize, fill: f64) -> Vec<f64> {
+        let mut v = self.f64_pool.pop().unwrap_or_default();
+        v.clear();
+        v.resize(len, fill);
+        v
+    }
+
+    /// A length-`len` `u32` buffer filled with `fill` (the stamp array and
+    /// the `touched` scratch both live here).
+    pub(crate) fn take_u32(&mut self, len: usize, fill: u32) -> Vec<u32> {
+        let mut v = self.u32_pool.pop().unwrap_or_default();
+        v.clear();
+        v.resize(len, fill);
+        v
+    }
+
+    /// An empty `u32` scratch vector with retained capacity (for the
+    /// fused-scan `touched` list, which grows and clears every iteration).
+    pub(crate) fn take_u32_scratch(&mut self) -> Vec<u32> {
+        let mut v = self.u32_pool.pop().unwrap_or_default();
+        v.clear();
+        v
+    }
+
+    pub(crate) fn recycle_f64(&mut self, v: Vec<f64>) {
+        self.f64_pool.push(v);
+    }
+
+    pub(crate) fn recycle_u32(&mut self, v: Vec<u32>) {
+        self.u32_pool.push(v);
+    }
+
+    /// The selector for `(kind, n_items, scales)`: the cached one (reset to
+    /// fresh logical state, allocations retained) when the key matches,
+    /// otherwise a newly built one.
+    pub(crate) fn take_selector(
+        &mut self,
+        kind: SelectorKind,
+        n_items: usize,
+        exp_scale: f64,
+        nm_scale: f64,
+    ) -> Box<dyn CoordinateSelector> {
+        if let Some(c) = self.selector.take() {
+            if c.kind == kind
+                && c.n_items == n_items
+                && c.exp_scale == exp_scale.to_bits()
+                && c.nm_scale == nm_scale.to_bits()
+            {
+                let mut sel = c.sel;
+                sel.reset();
+                return sel;
+            }
+        }
+        build_selector(kind, n_items, exp_scale, nm_scale)
+    }
+
+    /// Return a selector to the cache for the next run.
+    pub(crate) fn recycle_selector(
+        &mut self,
+        sel: Box<dyn CoordinateSelector>,
+        n_items: usize,
+        exp_scale: f64,
+        nm_scale: f64,
+    ) {
+        self.selector = Some(CachedSelector {
+            kind: sel.kind(),
+            n_items,
+            exp_scale: exp_scale.to_bits(),
+            nm_scale: nm_scale.to_bits(),
+            sel,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffers_are_reused_not_reallocated() {
+        let mut ws = FwWorkspace::new();
+        let a = ws.take_f64(1000, 0.0);
+        let ptr = a.as_ptr();
+        ws.recycle_f64(a);
+        // same-or-smaller sizes must come back from the pool (same block)
+        let b = ws.take_f64(500, 1.0);
+        assert_eq!(b.as_ptr(), ptr);
+        assert!(b.iter().all(|&x| x == 1.0), "stale contents leaked");
+        ws.recycle_f64(b);
+        let c = ws.take_f64(1000, 2.0);
+        assert_eq!(c.as_ptr(), ptr);
+        assert!(c.iter().all(|&x| x == 2.0));
+    }
+
+    #[test]
+    fn u32_scratch_keeps_capacity_and_clears() {
+        let mut ws = FwWorkspace::new();
+        let mut t = ws.take_u32_scratch();
+        t.extend(0..256u32);
+        let cap = t.capacity();
+        ws.recycle_u32(t);
+        let t2 = ws.take_u32_scratch();
+        assert!(t2.is_empty());
+        assert!(t2.capacity() >= cap);
+    }
+
+    #[test]
+    fn selector_cache_hits_on_matching_key_only() {
+        let mut ws = FwWorkspace::new();
+        let s = ws.take_selector(SelectorKind::FibHeap, 64, 0.0, 0.0);
+        let ptr = &*s as *const dyn CoordinateSelector as *const u8;
+        ws.recycle_selector(s, 64, 0.0, 0.0);
+        // same key: cached instance comes back
+        let s2 = ws.take_selector(SelectorKind::FibHeap, 64, 0.0, 0.0);
+        assert_eq!(&*s2 as *const dyn CoordinateSelector as *const u8, ptr);
+        ws.recycle_selector(s2, 64, 0.0, 0.0);
+        // different D: rebuilt
+        let s3 = ws.take_selector(SelectorKind::FibHeap, 65, 0.0, 0.0);
+        assert_eq!(s3.kind(), SelectorKind::FibHeap);
+        // different kind after recycling: rebuilt
+        ws.recycle_selector(s3, 65, 0.0, 0.0);
+        let s4 = ws.take_selector(SelectorKind::BinHeap, 65, 0.0, 0.0);
+        assert_eq!(s4.kind(), SelectorKind::BinHeap);
+    }
+}

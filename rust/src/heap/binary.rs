@@ -119,6 +119,11 @@ impl DecreaseKeyHeap for IndexedBinaryHeap {
         }
     }
 
+    fn clear(&mut self) {
+        self.heap.clear();
+        self.pos.fill(ABSENT);
+    }
+
     fn len(&self) -> usize {
         self.heap.len()
     }

@@ -293,6 +293,15 @@ impl DecreaseKeyHeap for FibonacciHeap {
         }
     }
 
+    fn clear(&mut self) {
+        self.arena.clear();
+        self.free.clear();
+        self.slot.fill(NIL);
+        self.min = NIL;
+        self.len = 0;
+        self.degree_table.clear();
+    }
+
     fn len(&self) -> usize {
         self.len
     }

@@ -23,6 +23,11 @@ pub trait DecreaseKeyHeap {
     fn decrease_key(&mut self, item: usize, key: f64);
     /// Current key of `item`, if present.
     fn key_of(&self, item: usize) -> Option<f64>;
+    /// Remove every entry, retaining allocations. After `clear` the heap
+    /// behaves exactly like a freshly constructed one over the same item
+    /// universe — the workspace selector cache relies on this for
+    /// bit-exact run reuse.
+    fn clear(&mut self);
     fn len(&self) -> usize;
     fn is_empty(&self) -> bool {
         self.len() == 0

@@ -42,6 +42,7 @@ COMMON FLAGS
   --selector K  argmax fibheap binheap noisymax bsls naive-exp [argmax]
   --eps E --delta D   privacy (selector must be a DP kind)
   --iters T --lambda L --seed N --trace-every K
+  --threads N   solver threads for the parallel bootstrap (0 = auto)
   --out PATH    output dir (exp) / file (gen-data)
   --workers N   coordinator threads (exp)
 ";
@@ -111,6 +112,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         seed: args.get_u64("seed", 0)?,
         trace_every: args.get_usize("trace-every", 0)?,
         lipschitz: None,
+        threads: args.get_usize("threads", 0)?,
     };
     let algo = Algo::from_name(&args.get_or("algo", "alg2")).context("bad --algo")?;
     println!(

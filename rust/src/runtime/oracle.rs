@@ -93,7 +93,12 @@ impl DenseOracle {
             let xl = Runtime::literal_matrix(&x, nt, self.rt.d_tile)?;
             let out = self.rt.execute(
                 "alpha",
-                &[xl, wl.reshape(&[self.rt.d_tile as i64]).unwrap(), Runtime::literal_vec(&y), Runtime::literal_vec(&m)],
+                &[
+                    xl,
+                    wl.reshape(&[self.rt.d_tile as i64]).unwrap(),
+                    Runtime::literal_vec(&y),
+                    Runtime::literal_vec(&m),
+                ],
             )?;
             let a: Vec<f32> = out[0].to_vec().map_err(|e| anyhow::anyhow!("{e}"))?;
             for (acc, &v) in alpha.iter_mut().zip(&a) {

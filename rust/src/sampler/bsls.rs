@@ -74,6 +74,9 @@ pub struct BslsSampler {
     z: f64,
     z_dirty: bool,
     group_size: usize,
+    /// Initial log-weight from construction, restored by
+    /// [`WeightedSampler::reset`].
+    init: f64,
     /// Updates since the last exact global rebuild.
     updates_since_rebuild: usize,
     /// Exact-rebuild cadence (defaults to D — amortized O(1) per update).
@@ -105,6 +108,7 @@ impl BslsSampler {
             z: f64::NEG_INFINITY,
             z_dirty: false,
             group_size,
+            init,
             updates_since_rebuild: 0,
             rebuild_every: n.max(1024),
             stats: BslsStats::default(),
@@ -209,6 +213,15 @@ impl BslsSampler {
 }
 
 impl WeightedSampler for BslsSampler {
+    fn reset(&mut self) {
+        // Exactly the state `new(len, init)` leaves behind: uniform
+        // log-weights, fresh telemetry, then one exact global rebuild
+        // (whose counter bump `new` also performs).
+        self.v.fill(self.init);
+        self.stats = BslsStats::default();
+        self.rebuild_all();
+    }
+
     fn update(&mut self, j: usize, log_weight: f64) {
         let old = self.v[j];
         if old == log_weight {

@@ -25,6 +25,10 @@ use crate::rng::Xoshiro256pp;
 pub trait WeightedSampler {
     /// Replace item `j`'s log-weight.
     fn update(&mut self, j: usize, log_weight: f64);
+    /// Restore the exactly-fresh state of `new(len, init)` (same item
+    /// count, same initial log-weight, telemetry zeroed) while retaining
+    /// internal allocations. Powers workspace selector reuse.
+    fn reset(&mut self);
     /// Draw one item with `P(j) ∝ exp(log_weight_j)`.
     fn sample(&mut self, rng: &mut Xoshiro256pp) -> usize;
     /// Current log-weight of `j`.

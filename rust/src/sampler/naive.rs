@@ -12,22 +12,29 @@ use crate::rng::{dist, Xoshiro256pp};
 #[derive(Clone, Debug)]
 pub struct NaiveExpSampler {
     v: Vec<f64>,
+    /// The `init` the sampler was constructed with, so [`WeightedSampler::reset`]
+    /// restores the exactly-fresh state.
+    init: f64,
 }
 
 impl NaiveExpSampler {
     pub fn new(n: usize, init: f64) -> Self {
         assert!(n > 0);
-        Self { v: vec![init; n] }
+        Self { v: vec![init; n], init }
     }
 
     pub fn from_weights(weights: &[f64]) -> Self {
-        Self { v: weights.to_vec() }
+        Self { v: weights.to_vec(), init: 0.0 }
     }
 }
 
 impl WeightedSampler for NaiveExpSampler {
     fn update(&mut self, j: usize, log_weight: f64) {
         self.v[j] = log_weight;
+    }
+
+    fn reset(&mut self) {
+        self.v.fill(self.init);
     }
 
     fn sample(&mut self, rng: &mut Xoshiro256pp) -> usize {

@@ -20,6 +20,125 @@ pub struct CscMatrix {
 }
 
 impl CscMatrix {
+    /// Block-parallel transpose-convert. Counting: disjoint nnz slices
+    /// into private per-thread count arrays, merged serially (one shared
+    /// pass; falls back to column-block rescans when the private arrays
+    /// would blow the memory budget). Scatter: columns partitioned into
+    /// contiguous nnz-balanced blocks, each thread placing only the
+    /// entries whose column falls in its block into disjoint slices of
+    /// `indices`/`values` (no atomics; each thread re-reads the row
+    /// stream, but writes stay block-local). Every entry's final position
+    /// depends only on the counting sort, so the result is **identical**
+    /// to the serial [`CscMatrix::from_csr`] at any thread count.
+    pub fn from_csr_threaded(csr: &CsrMatrix, threads: usize) -> Self {
+        if threads <= 1 || csr.n_cols() < 2 || csr.nnz() == 0 {
+            return Self::from_csr(csr);
+        }
+        let n_rows = csr.n_rows();
+        let n_cols = csr.n_cols();
+        let nnz = csr.nnz();
+        let cols_flat = csr.col_indices();
+
+        // ---- phase 1: per-column counts ---------------------------------
+        // Preferred: each thread counts a disjoint slice of the flat index
+        // stream into a private count array, merged serially — one shared
+        // pass over the nnz stream total. Falls back to column-block
+        // rescans (threads × nnz reads, but no extra memory) when the
+        // private arrays would be large (KDDA-scale D × many cores).
+        let mut counts = vec![0usize; n_cols];
+        const COUNT_MEM_BUDGET: usize = 1 << 24; // ≤ 64 MB of u32 counts total
+        let chunk_nnz = nnz.div_ceil(threads);
+        if n_cols.saturating_mul(threads) <= COUNT_MEM_BUDGET && chunk_nnz <= u32::MAX as usize
+        {
+            std::thread::scope(|s| {
+                let handles: Vec<_> = (0..threads)
+                    .map(|t| {
+                        let lo = (t * chunk_nnz).min(nnz);
+                        let hi = ((t + 1) * chunk_nnz).min(nnz);
+                        let slice = &cols_flat[lo..hi];
+                        s.spawn(move || {
+                            let mut local = vec![0u32; n_cols];
+                            for &j in slice {
+                                local[j as usize] += 1;
+                            }
+                            local
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    let local = h.join().expect("count worker panicked");
+                    for (c, l) in counts.iter_mut().zip(local) {
+                        *c += l as usize;
+                    }
+                }
+            });
+        } else {
+            let block = n_cols.div_ceil(threads);
+            std::thread::scope(|s| {
+                let mut rest: &mut [usize] = &mut counts;
+                let mut lo = 0usize;
+                while !rest.is_empty() {
+                    let len = rest.len().min(block);
+                    let (chunk, tail) = rest.split_at_mut(len);
+                    rest = tail;
+                    let hi = lo + len;
+                    s.spawn(move || {
+                        for &j in cols_flat {
+                            let j = j as usize;
+                            if j >= lo && j < hi {
+                                chunk[j - lo] += 1;
+                            }
+                        }
+                    });
+                    lo = hi;
+                }
+            });
+        }
+        let mut indptr = vec![0usize; n_cols + 1];
+        for j in 0..n_cols {
+            indptr[j + 1] = indptr[j] + counts[j];
+        }
+
+        // ---- phase 2: scatter into nnz-balanced column blocks ----------
+        let mut indices = vec![0u32; nnz];
+        let mut values = vec![0.0f32; nnz];
+        let ranges = super::balanced_ranges(&indptr, threads);
+        std::thread::scope(|s| {
+            let mut rest_i: &mut [u32] = &mut indices;
+            let mut rest_v: &mut [f32] = &mut values;
+            let indptr_ref: &[usize] = &indptr;
+            for r in ranges {
+                let span = indptr_ref[r.end] - indptr_ref[r.start];
+                let (ci, ti) = rest_i.split_at_mut(span);
+                let (cv, tv) = rest_v.split_at_mut(span);
+                rest_i = ti;
+                rest_v = tv;
+                if r.is_empty() {
+                    continue;
+                }
+                s.spawn(move || {
+                    let base = indptr_ref[r.start];
+                    // block-local cursors, offset so writes index `ci`/`cv`
+                    let mut cursor: Vec<usize> =
+                        indptr_ref[r.start..r.end].iter().map(|&p| p - base).collect();
+                    for i in 0..n_rows {
+                        let (idx, val) = csr.row_raw(i);
+                        for (&j, &v) in idx.iter().zip(val) {
+                            let j = j as usize;
+                            if j >= r.start && j < r.end {
+                                let p = cursor[j - r.start];
+                                ci[p] = i as u32;
+                                cv[p] = v;
+                                cursor[j - r.start] = p + 1;
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        Self { n_rows, n_cols, indptr, indices, values }
+    }
+
     /// Transpose-convert a CSR matrix with a counting sort: O(nnz + D).
     pub fn from_csr(csr: &CsrMatrix) -> Self {
         let n_rows = csr.n_rows();
@@ -86,18 +205,53 @@ impl CscMatrix {
     }
 
     /// `out[j] = Σ_i X[i,j] · q[i]` for every column — the `Xᵀq` product
-    /// driven from the column side (used by tests to cross-check CSR).
+    /// driven from the column side. Because each column's rows are stored
+    /// ascending, the per-column addition sequence is exactly the one the
+    /// CSR-driven [`super::csr::CsrMatrix::matvec_t_add`] performs into a
+    /// zeroed output, so the two are bit-identical (the solvers' parallel
+    /// bootstrap relies on this).
     pub fn matvec_t(&self, q: &[f64], out: &mut [f64]) {
         assert_eq!(q.len(), self.n_rows);
         assert_eq!(out.len(), self.n_cols);
-        for j in 0..self.n_cols {
+        self.matvec_t_range(q, 0..self.n_cols, out);
+    }
+
+    /// The column-range slice of [`CscMatrix::matvec_t`]:
+    /// `out[j - cols.start] = Σ_i X[i,j] · q[i]` for `j ∈ cols`.
+    pub fn matvec_t_range(&self, q: &[f64], cols: std::ops::Range<usize>, out: &mut [f64]) {
+        assert_eq!(out.len(), cols.len());
+        for (slot, j) in out.iter_mut().zip(cols) {
             let (idx, val) = self.col_raw(j);
             let mut acc = 0.0f64;
             for (&i, &v) in idx.iter().zip(val) {
                 acc += v as f64 * q[i as usize];
             }
-            out[j] = acc;
+            *slot = acc;
         }
+    }
+
+    /// Block-parallel `out = Xᵀq`: columns split into `threads` contiguous
+    /// nnz-balanced blocks, each writing a disjoint slice of `out` — no
+    /// atomics, and bit-identical to [`CscMatrix::matvec_t`] (each column
+    /// is still summed by exactly one thread, rows ascending) at any
+    /// thread count. This is Algorithm 2's `O(N·S_c)` dense first
+    /// iteration (`α = Xᵀq̄`), the one phase of the fast solver that still
+    /// touches every nonzero.
+    pub fn matvec_t_par(&self, q: &[f64], out: &mut [f64], threads: usize) {
+        assert_eq!(q.len(), self.n_rows);
+        assert_eq!(out.len(), self.n_cols);
+        if threads <= 1 || self.n_cols < 2 {
+            return self.matvec_t(q, out);
+        }
+        let ranges = super::balanced_ranges(&self.indptr, threads);
+        std::thread::scope(|s| {
+            let mut rest: &mut [f64] = out;
+            for r in ranges {
+                let (chunk, tail) = rest.split_at_mut(r.len());
+                rest = tail;
+                s.spawn(move || self.matvec_t_range(q, r, chunk));
+            }
+        });
     }
 }
 
@@ -161,5 +315,59 @@ mod tests {
         assert_eq!(csc.col_nnz(1), 0);
         assert_eq!(csc.col_nnz(2), 0);
         assert_eq!(csc.col(1).count(), 0);
+    }
+
+    fn zipfish_csr(seed: u64) -> CsrMatrix {
+        // Paper-shaped skewed matrix via the synth generator (Zipf column
+        // popularity, empty columns, ragged rows).
+        crate::sparse::synth::SynthConfig {
+            name: "csc-par".into(),
+            n_rows: 300,
+            n_cols: 500,
+            avg_row_nnz: 9.0,
+            zipf_exponent: 1.2,
+            n_informative: 12,
+            n_dense: 2,
+            label_noise: 0.0,
+            bias_col: true,
+        }
+        .generate(seed)
+        .csr
+        .clone()
+    }
+
+    #[test]
+    fn threaded_conversion_identical_to_serial() {
+        let csr = zipfish_csr(11);
+        let serial = CscMatrix::from_csr(&csr);
+        for threads in [2usize, 3, 8, 64] {
+            let par = CscMatrix::from_csr_threaded(&csr, threads);
+            assert_eq!(par, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn matvec_t_par_bit_identical_all_drivers() {
+        let csr = zipfish_csr(13);
+        let csc = CscMatrix::from_csr(&csr);
+        // +0.1 keeps every q_i nonzero: matvec_t_add skips zero rows while
+        // the CSC driver includes them, which is only bit-neutral when no
+        // exact zeros occur (the solvers' q̄ is ±σ-residuals, never 0).
+        let q: Vec<f64> = (0..csr.n_rows()).map(|i| (i as f64 * 0.71 + 0.1).sin()).collect();
+        // CSR-driven reference (the pre-fusion bootstrap path)
+        let mut csr_driven = vec![0.0f64; csr.n_cols()];
+        csr.matvec_t_add(&q, &mut csr_driven);
+        let mut serial = vec![f64::NAN; csr.n_cols()];
+        csc.matvec_t(&q, &mut serial);
+        for (a, b) in csr_driven.iter().zip(&serial) {
+            assert_eq!(a.to_bits(), b.to_bits(), "CSC column order drifted from CSR");
+        }
+        for threads in [2usize, 4, 32] {
+            let mut par = vec![f64::NAN; csr.n_cols()];
+            csc.matvec_t_par(&q, &mut par, threads);
+            for (a, b) in serial.iter().zip(&par) {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads={threads}");
+            }
+        }
     }
 }

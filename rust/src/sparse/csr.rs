@@ -74,18 +74,54 @@ impl CsrMatrix {
         (&self.indices[lo..hi], &self.values[lo..hi])
     }
 
+    /// The flat column-index stream (length `nnz`, row-major order) —
+    /// used by the parallel CSC transpose build's counting phase.
+    #[inline]
+    pub fn col_indices(&self) -> &[u32] {
+        &self.indices
+    }
+
     /// `out = X · w` (dense `w`, length `n_cols`), accumulated in f64.
     pub fn matvec(&self, w: &[f64], out: &mut [f64]) {
         assert_eq!(w.len(), self.n_cols);
         assert_eq!(out.len(), self.n_rows);
-        for i in 0..self.n_rows {
+        self.matvec_range(w, 0..self.n_rows, out);
+    }
+
+    /// The row-range slice of [`CsrMatrix::matvec`]:
+    /// `out[i - rows.start] = x_i · w` for `i ∈ rows`.
+    pub fn matvec_range(&self, w: &[f64], rows: std::ops::Range<usize>, out: &mut [f64]) {
+        assert_eq!(out.len(), rows.len());
+        for (slot, i) in out.iter_mut().zip(rows) {
             let (idx, val) = self.row_raw(i);
             let mut acc = 0.0f64;
             for (&j, &v) in idx.iter().zip(val) {
                 acc += v as f64 * w[j as usize];
             }
-            out[i] = acc;
+            *slot = acc;
         }
+    }
+
+    /// Block-parallel `out = X · w`: rows are split into `threads`
+    /// contiguous nnz-balanced blocks, each writing a disjoint slice of
+    /// `out` — no atomics, and (since every row is still summed by one
+    /// thread in index order) **bit-identical** to the serial
+    /// [`CsrMatrix::matvec`] at any thread count.
+    pub fn matvec_par(&self, w: &[f64], out: &mut [f64], threads: usize) {
+        assert_eq!(w.len(), self.n_cols);
+        assert_eq!(out.len(), self.n_rows);
+        if threads <= 1 || self.n_rows < 2 {
+            return self.matvec(w, out);
+        }
+        let ranges = super::balanced_ranges(&self.indptr, threads);
+        std::thread::scope(|s| {
+            let mut rest: &mut [f64] = out;
+            for r in ranges {
+                let (chunk, tail) = rest.split_at_mut(r.len());
+                rest = tail;
+                s.spawn(move || self.matvec_range(w, r, chunk));
+            }
+        });
     }
 
     /// `out += Xᵀ · q` (dense `q`, length `n_rows`), accumulated in f64.
@@ -237,5 +273,40 @@ mod tests {
         let m = CsrMatrix::from_parts(0, 0, vec![0], vec![], vec![]);
         assert_eq!(m.nnz(), 0);
         assert_eq!(m.max_abs_value(), 0.0);
+    }
+
+    #[test]
+    fn matvec_par_bit_identical_to_serial() {
+        // A ragged random-ish matrix large enough that blocks are nonempty
+        // for several thread counts.
+        let n_rows = 97;
+        let n_cols = 53;
+        let mut indptr = vec![0usize];
+        let mut indices = vec![];
+        let mut values = vec![];
+        let mut state = 12345u64;
+        for i in 0..n_rows {
+            let mut nnz_row = (i * 7) % 9; // includes empty rows
+            let mut j = (i * 13) % n_cols;
+            while nnz_row > 0 && j < n_cols {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+                indices.push(j as u32);
+                values.push(((state >> 33) as f32 / 2.0_f32.powi(31)) - 1.0);
+                j += 1 + (state as usize % 5);
+                nnz_row -= 1;
+            }
+            indptr.push(indices.len());
+        }
+        let m = CsrMatrix::from_parts(n_rows, n_cols, indptr, indices, values);
+        let w: Vec<f64> = (0..n_cols).map(|j| (j as f64) * 0.37 - 3.0).collect();
+        let mut serial = vec![0.0f64; n_rows];
+        m.matvec(&w, &mut serial);
+        for threads in [2usize, 3, 4, 16] {
+            let mut par = vec![f64::NAN; n_rows];
+            m.matvec_par(&w, &mut par, threads);
+            for (a, b) in serial.iter().zip(&par) {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads={threads}");
+            }
+        }
     }
 }

@@ -17,6 +17,48 @@ pub mod synth;
 use csc::CscMatrix;
 use csr::CsrMatrix;
 
+/// Minimum nnz before the block-parallel kernels (`matvec_par`,
+/// `matvec_t_par`, `from_csr_threaded`) are worth their thread-spawn
+/// overhead; below this the parallel entry points fall back to the serial
+/// loops at call sites that gate on it. Outputs are bit-identical either
+/// way — the gate is purely a performance heuristic.
+pub const PAR_MIN_NNZ: usize = 1 << 15;
+
+/// Default worker count for parallel substrate kernels: all available
+/// cores for large inputs, serial below [`PAR_MIN_NNZ`].
+pub fn auto_threads(nnz: usize) -> usize {
+    if nnz < PAR_MIN_NNZ {
+        1
+    } else {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    }
+}
+
+/// Split the `0..n` items described by a CSR/CSC `indptr` (length `n+1`,
+/// monotone prefix-nnz) into at most `blocks` contiguous ranges of
+/// approximately equal nnz. Every range boundary is found by binary search
+/// on the prefix sums, so the partition is deterministic in the matrix
+/// alone — thread count never changes which block a column/row lands in,
+/// only who computes it.
+pub(crate) fn balanced_ranges(indptr: &[usize], blocks: usize) -> Vec<std::ops::Range<usize>> {
+    let n = indptr.len() - 1;
+    let blocks = blocks.max(1).min(n.max(1));
+    let total = indptr[n];
+    let mut ranges = Vec::with_capacity(blocks);
+    let mut lo = 0usize;
+    for b in 1..=blocks {
+        let hi = if b == blocks {
+            n
+        } else {
+            let target = total * b / blocks;
+            indptr.partition_point(|&p| p < target).min(n).max(lo)
+        };
+        ranges.push(lo..hi);
+        lo = hi;
+    }
+    ranges
+}
+
 /// A binary-classification dataset: both sparse views of `X` plus labels.
 #[derive(Clone, Debug)]
 pub struct Dataset {
@@ -33,7 +75,9 @@ pub struct Dataset {
 impl Dataset {
     pub fn new(csr: CsrMatrix, labels: Vec<f32>, name: impl Into<String>) -> Self {
         assert_eq!(csr.n_rows(), labels.len(), "label count != row count");
-        let csc = CscMatrix::from_csr(&csr);
+        // Block-parallel transpose for paper-scale matrices; the output is
+        // bit-identical to the serial counting sort at any thread count.
+        let csc = CscMatrix::from_csr_threaded(&csr, auto_threads(csr.nnz()));
         Self { csr, csc, labels, name: name.into() }
     }
 
@@ -142,5 +186,25 @@ mod tests {
         assert_eq!(tr.n_rows() + te.n_rows(), d.n_rows());
         assert_eq!(te.n_rows(), 1);
         assert_eq!(tr.n_cols(), d.n_cols());
+    }
+
+    #[test]
+    fn balanced_ranges_partition_exactly() {
+        // skewed prefix sums: most mass in the first items
+        let indptr = vec![0usize, 100, 150, 160, 164, 166, 167, 167, 168];
+        for blocks in 1..=10 {
+            let ranges = balanced_ranges(&indptr, blocks);
+            assert!(ranges.len() <= blocks.max(1));
+            // contiguous, exhaustive cover of 0..n
+            let mut next = 0usize;
+            for r in &ranges {
+                assert_eq!(r.start, next);
+                next = r.end;
+            }
+            assert_eq!(next, indptr.len() - 1);
+        }
+        // degenerate: empty item set
+        let ranges = balanced_ranges(&[0usize], 4);
+        assert_eq!(ranges, vec![0..0]);
     }
 }

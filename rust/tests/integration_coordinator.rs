@@ -49,6 +49,7 @@ fn mini_table3_grid() {
                         seed: 17,
                         trace_every: 25,
                         lipschitz: None,
+                        threads: 0,
                     },
                     test_data: Some(test.clone()),
                 });

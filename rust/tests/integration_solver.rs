@@ -64,6 +64,7 @@ fn dp_utility_degrades_gracefully() {
                 seed: 3,
                 trace_every: 0,
                 lipschitz: None,
+                threads: 0,
             },
         )
         .run();
@@ -91,6 +92,7 @@ fn dp_fast_solver_is_faster() {
         seed: 1,
         trace_every: 0,
         lipschitz: None,
+        threads: 0,
     };
     let slow = StandardFrankWolfe::new(&ds, base.clone()).run();
     let fast = FastFrankWolfe::new(
@@ -141,6 +143,7 @@ fn dp_large_t_stays_sparse() {
             seed: 8,
             trace_every: 0,
             lipschitz: None,
+            threads: 0,
         },
     )
     .run();
@@ -190,6 +193,7 @@ fn concurrent_training_on_shared_data() {
                     seed,
                     trace_every: 0,
                     lipschitz: None,
+                    threads: 0,
                 },
             )
             .run()

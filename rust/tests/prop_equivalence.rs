@@ -7,6 +7,8 @@ use dpfw::dp::accounting::PrivacyParams;
 use dpfw::fw::config::{FwConfig, SelectorKind};
 use dpfw::fw::fast::FastFrankWolfe;
 use dpfw::fw::standard::StandardFrankWolfe;
+use dpfw::fw::trace::FwOutput;
+use dpfw::fw::workspace::FwWorkspace;
 use dpfw::heap::binary::IndexedBinaryHeap;
 use dpfw::heap::fibonacci::FibonacciHeap;
 use dpfw::heap::DecreaseKeyHeap;
@@ -89,6 +91,15 @@ fn prop_dense_data_exact_equivalence() {
             if a.selected != usize::MAX {
                 assert_eq!(a.selected, b.selected, "selection diverged at t={}", a.iter);
             }
+            // post-fusion the incrementally maintained gap must still track
+            // Alg 1's densely recomputed one
+            assert!(
+                (a.gap - b.gap).abs() < 1e-6 * (1.0 + b.gap.abs()),
+                "gap diverged at t={}: fast {} vs std {}",
+                a.iter,
+                a.gap,
+                b.gap
+            );
         }
     });
 }
@@ -218,6 +229,7 @@ fn prop_dp_seed_determinism() {
             seed: s,
             trace_every: 0,
             lipschitz: None,
+            threads: 0,
         };
         for sel in [SelectorKind::Bsls, SelectorKind::NoisyMax, SelectorKind::NaiveExp] {
             let a = FastFrankWolfe::new(&ds, mk(seed, sel)).run();
@@ -230,6 +242,102 @@ fn prop_dp_seed_determinism() {
                 assert!(ds.n_cols() < 40, "{sel:?} ignored the seed");
             }
         }
+    });
+}
+
+/// Bit-level output equality (stricter than `==`, which would conflate
+/// `0.0` and `-0.0`): weights, final gap, selector telemetry, and the full
+/// trace except wall-clock.
+fn assert_outputs_bit_identical(a: &FwOutput, b: &FwOutput, what: &str) {
+    assert_eq!(a.weights.dim(), b.weights.dim(), "{what}: dim");
+    for (i, (x, y)) in a.weights.as_slice().iter().zip(b.weights.as_slice()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: weight {i} differs: {x} vs {y}");
+    }
+    assert_eq!(a.final_gap.to_bits(), b.final_gap.to_bits(), "{what}: final gap");
+    assert_eq!(a.flops, b.flops, "{what}: flops");
+    assert_eq!(a.selector_stats, b.selector_stats, "{what}: selector stats");
+    assert_eq!(a.trace.len(), b.trace.len(), "{what}: trace length");
+    for (ta, tb) in a.trace.iter().zip(&b.trace) {
+        assert_eq!(ta.iter, tb.iter, "{what}: trace iter");
+        assert_eq!(ta.selected, tb.selected, "{what}: trace selection");
+        assert_eq!(ta.gap.to_bits(), tb.gap.to_bits(), "{what}: trace gap");
+        assert_eq!(ta.flops, tb.flops, "{what}: trace flops");
+    }
+}
+
+fn random_selector_cfg(rng: &mut Xoshiro256pp, iters: usize, lam: f64) -> FwConfig {
+    let selectors = [
+        SelectorKind::Argmax,
+        SelectorKind::FibHeap,
+        SelectorKind::BinHeap,
+        SelectorKind::Bsls,
+        SelectorKind::NoisyMax,
+        SelectorKind::NaiveExp,
+    ];
+    let sel = selectors[rng.next_below(selectors.len() as u64) as usize];
+    FwConfig {
+        iters,
+        lambda: lam,
+        privacy: sel.is_private().then(|| PrivacyParams::new(0.5 + rng.next_f64(), 1e-6)),
+        selector: sel,
+        seed: rng.next_u64(),
+        trace_every: 10,
+        lipschitz: None,
+        threads: 0,
+    }
+}
+
+/// **Workspace reuse is bit-exact**: `run_in` on a dirty workspace — one
+/// that just executed a *different* dataset/selector/shape — produces
+/// output identical to a fresh `run`, for both solvers. This is the
+/// contract that makes the coordinator's per-worker workspaces and the
+/// warm-bench series trustworthy.
+#[test]
+fn prop_workspace_reuse_bit_identical() {
+    forall(8, |rng| {
+        let mut ws = FwWorkspace::new();
+        // three back-to-back runs through the same workspace, each with a
+        // fresh dataset and random selector: every run after the first
+        // sees dirty buffers and (sometimes) a cached selector
+        for round in 0..3 {
+            let ds = random_dataset(rng);
+            let iters = 20 + rng.next_below(60) as usize;
+            let cfg = random_selector_cfg(rng, iters, 1.0 + rng.next_f64() * 10.0);
+            let fresh = FastFrankWolfe::new(&ds, cfg.clone()).run();
+            let reused = FastFrankWolfe::new(&ds, cfg.clone()).run_in(&mut ws);
+            assert_outputs_bit_identical(&fresh, &reused, &format!("fast round {round}"));
+            if !matches!(cfg.selector, SelectorKind::FibHeap | SelectorKind::BinHeap) {
+                let fresh_s = StandardFrankWolfe::new(&ds, cfg.clone()).run();
+                let reused_s = StandardFrankWolfe::new(&ds, cfg).run_in(&mut ws);
+                assert_outputs_bit_identical(
+                    &fresh_s,
+                    &reused_s,
+                    &format!("standard round {round}"),
+                );
+            }
+        }
+    });
+}
+
+/// **Thread-count invariance**: the block-parallel bootstrap (and the
+/// parallel CSC build underneath `Dataset::new`) must produce bit-identical
+/// runs for `threads ∈ {1, 4}` — parallelism may only change who computes
+/// each value, never the value.
+#[test]
+fn prop_parallel_bootstrap_thread_invariant() {
+    forall(8, |rng| {
+        let ds = random_dataset(rng);
+        let iters = 20 + rng.next_below(60) as usize;
+        let base = random_selector_cfg(rng, iters, 1.0 + rng.next_f64() * 10.0);
+        let serial = FastFrankWolfe::new(&ds, FwConfig { threads: 1, ..base.clone() }).run();
+        for threads in [4usize, 16] {
+            let par =
+                FastFrankWolfe::new(&ds, FwConfig { threads, ..base.clone() }).run();
+            assert_outputs_bit_identical(&serial, &par, &format!("threads={threads}"));
+        }
+        // auto (0) resolves to available parallelism — still identical
+        let auto = FastFrankWolfe::new(&ds, FwConfig { threads: 0, ..base }).run();
+        assert_outputs_bit_identical(&serial, &auto, "threads=auto");
     });
 }
 
@@ -258,6 +366,7 @@ fn prop_sparsity_and_feasibility_all_selectors() {
                 seed: rng.next_u64(),
                 trace_every: 0,
                 lipschitz: None,
+                threads: 0,
             };
             let out = FastFrankWolfe::new(&ds, cfg).run();
             assert!(out.weights.l1_norm() <= lam + 1e-6, "{sel:?} left the ball");

@@ -1,0 +1,126 @@
+//! Offline shim for the `anyhow` crate — exactly the subset `dpfw` uses.
+//!
+//! The build container has no crates.io access, so this path dependency
+//! stands in for the real crate. API-compatible for: `Result`, `Error`,
+//! `anyhow!`, `bail!`, and the `Context` extension trait on both
+//! `Result<T, E>` and `Option<T>`. Error values are a message string plus
+//! the stringified cause chain (`{:#}` prints `context: cause`, matching
+//! anyhow's alternate formatting closely enough for CLI output).
+//!
+//! Like the real crate, [`Error`] deliberately does **not** implement
+//! `std::error::Error`: that keeps the blanket `From<E: std::error::Error>`
+//! conversion (which powers `?`) coherent with the reflexive
+//! `From<Error> for Error` impl in core.
+
+/// Dynamic error type: a message plus an optional stringified cause.
+pub struct Error {
+    msg: String,
+    cause: Option<String>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: std::fmt::Display>(message: M) -> Self {
+        Self { msg: message.to_string(), cause: None }
+    }
+
+    fn with_cause<M: std::fmt::Display, C: std::fmt::Display>(message: M, cause: C) -> Self {
+        Self { msg: message.to_string(), cause: Some(cause.to_string()) }
+    }
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match (&self.cause, f.alternate()) {
+            (Some(cause), true) => write!(f, "{}: {}", self.msg, cause),
+            _ => f.write_str(&self.msg),
+        }
+    }
+}
+
+impl std::fmt::Debug for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.msg)?;
+        if let Some(cause) = &self.cause {
+            write!(f, "\n\nCaused by:\n    {cause}")?;
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Self::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => { $crate::Error::msg(::std::format!($($arg)*)) };
+}
+
+/// Return early with an [`Error`] built from format arguments.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return ::std::result::Result::Err($crate::anyhow!($($arg)*)) };
+}
+
+/// Attach context to failures: `result.context("msg")?` /
+/// `option.with_context(|| format!(...))?`.
+pub trait Context<T> {
+    fn context<C: std::fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: std::fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: std::fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::with_cause(context, e))
+    }
+
+    fn with_context<C: std::fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::with_cause(f(), e))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: std::fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: std::fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<i32> {
+        let n: i32 = s.parse().with_context(|| format!("bad int {s:?}"))?;
+        if n < 0 {
+            bail!("negative: {n}");
+        }
+        Ok(n)
+    }
+
+    #[test]
+    fn question_mark_and_bail() {
+        assert_eq!(parse("3").unwrap(), 3);
+        let e = parse("x").unwrap_err();
+        assert!(e.to_string().contains("bad int"));
+        assert!(format!("{e:#}").contains("invalid digit"));
+        assert!(parse("-1").unwrap_err().to_string().contains("negative"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        assert!(v.context("missing").is_err());
+        assert_eq!(Some(1u8).context("missing").unwrap(), 1);
+    }
+}
