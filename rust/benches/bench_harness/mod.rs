@@ -102,6 +102,14 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// True when `DPFW_BENCH_SMOKE` is set: benches shrink their workloads to
+/// seconds so CI can exercise every code path and JSON emitter without
+/// paying full measurement cost. Smoke numbers are not comparable to real
+/// runs — the emitted JSON exists to prove the emitters still work.
+pub fn smoke_mode() -> bool {
+    std::env::var_os("DPFW_BENCH_SMOKE").is_some()
+}
+
 // ------------------------------------------------------------------------
 // JSON persistence
 // ------------------------------------------------------------------------
@@ -119,7 +127,15 @@ impl JsonReport {
     /// `"BENCH_iteration_cost.json"` (see module docs) and start an empty
     /// report.
     pub fn new(default_name: &str) -> Self {
-        let path = match std::env::var("DPFW_BENCH_JSON") {
+        Self::with_env(default_name, "DPFW_BENCH_JSON")
+    }
+
+    /// Like [`JsonReport::new`] but resolving the override/disable from a
+    /// custom environment variable, so one bench binary can emit several
+    /// reports (e.g. `BENCH_iteration_cost.json` *and*
+    /// `BENCH_path_sweep.json`) without the overrides colliding.
+    pub fn with_env(default_name: &str, env_key: &str) -> Self {
+        let path = match std::env::var(env_key) {
             Ok(v) if v == "0" => None,
             Ok(v) => Some(PathBuf::from(v)),
             Err(_) => {

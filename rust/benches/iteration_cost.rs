@@ -10,10 +10,20 @@
 //! `news20-bsls` entries are the canonical regression series: the fast
 //! solver on the News20 preset with the DP BSLS selector, both cold
 //! (per-run workspace) and warm (reused workspace).
+//!
+//! A second report, `BENCH_path_sweep.json` (override via
+//! `DPFW_BENCH_PATH_JSON`), tracks the regularization-path engine: per-λ
+//! wall time of a 10-point λ-path on the News20-shaped synth + BSLS,
+//! independent runs vs `run_path`, cold and warm workspace. `run_path`
+//! per-λ must sit strictly below independent per-λ for K ≥ 3 — the
+//! shared-bootstrap acceptance line.
+//!
+//! `DPFW_BENCH_SMOKE=1` shrinks every workload to CI-smoke size (the JSON
+//! emitters still run end-to-end; the numbers are not comparable).
 
 mod bench_harness;
 
-use bench_harness::{section, Bench, JsonReport};
+use bench_harness::{section, smoke_mode, Bench, JsonReport};
 use dpfw::dp::accounting::PrivacyParams;
 use dpfw::fw::config::{FwConfig, SelectorKind};
 use dpfw::fw::fast::FastFrankWolfe;
@@ -38,14 +48,17 @@ fn dataset(d: usize, seed: u64) -> Dataset {
 }
 
 fn main() {
+    let smoke = smoke_mode();
     let mut report = JsonReport::new("BENCH_iteration_cost.json");
-    let iters = 200;
-    section("per-iteration cost vs D (N=2000, S_c=40, T=200, eps=1)");
+    let iters = if smoke { 40 } else { 200 };
+    let runs = if smoke { 1 } else { 3 };
+    section("per-iteration cost vs D (N=2000, S_c=40, eps=1)");
     println!(
         "{:>10} {:>16} {:>16} {:>16} {:>10}",
         "D", "alg1 us/iter", "alg2+bsls us/it", "alg2+fib us/it", "speedup"
     );
-    for d in [4_000usize, 16_000, 64_000, 256_000] {
+    let d_grid: &[usize] = if smoke { &[4_000] } else { &[4_000, 16_000, 64_000, 256_000] };
+    for &d in d_grid {
         let ds = dataset(d, 7);
         let dp = Some(PrivacyParams::new(1.0, 1e-6));
         let cfg = |sel, privacy| FwConfig {
@@ -65,16 +78,16 @@ fn main() {
                 ("iters", iters.to_string()),
             ]
         };
-        let s1 = Bench::new(format!("alg1+noisymax D={d}")).runs(3).run_stats(|| {
+        let s1 = Bench::new(format!("alg1+noisymax D={d}")).runs(runs).run_stats(|| {
             StandardFrankWolfe::new(&ds, cfg(SelectorKind::NoisyMax, dp)).run().flops
         });
         report.record(&format!("alg1-noisymax-d{d}"), s1, &extra_owned("noisymax"));
         let s2 = Bench::new(format!("alg2+bsls     D={d}"))
-            .runs(3)
+            .runs(runs)
             .run_stats(|| FastFrankWolfe::new(&ds, cfg(SelectorKind::Bsls, dp)).run().flops);
         report.record(&format!("alg2-bsls-d{d}"), s2, &extra_owned("bsls"));
         let s3 = Bench::new(format!("alg2+fibheap  D={d} (non-private)"))
-            .runs(3)
+            .runs(runs)
             .run_stats(|| FastFrankWolfe::new(&ds, cfg(SelectorKind::FibHeap, None)).run().flops);
         report.record(&format!("alg2-fibheap-d{d}"), s3, &extra_owned("fibheap"));
         println!(
@@ -93,14 +106,15 @@ fn main() {
 
     // ---- the cross-PR regression series: News20 preset + BSLS ----------
     section("news20 preset + BSLS (fused-scan regression series)");
-    let ds = SynthConfig::preset(DatasetPreset::News20).scale(0.05).generate(42);
+    let n20_scale = if smoke { 0.01 } else { 0.05 };
+    let ds = SynthConfig::preset(DatasetPreset::News20).scale(n20_scale).generate(42);
     println!(
-        "workload: news20@0.05  N={} D={} nnz={}",
+        "workload: news20@{n20_scale}  N={} D={} nnz={}",
         ds.n_rows(),
         ds.n_cols(),
         ds.nnz()
     );
-    let n20_iters = 2000usize;
+    let n20_iters = if smoke { 200 } else { 2000usize };
     let mk = || FwConfig {
         iters: n20_iters,
         lambda: 50.0,
@@ -113,19 +127,20 @@ fn main() {
     };
     let n20_extra = |variant: &str| -> Vec<(&'static str, String)> {
         vec![
-            ("dataset", "news20@0.05".into()),
+            ("dataset", format!("news20@{n20_scale}")),
             ("selector", "bsls".into()),
             ("iters", n20_iters.to_string()),
             ("variant", variant.into()),
         ]
     };
-    let cold = Bench::new("news20 alg2+bsls T=2000 (cold workspace)")
-        .runs(5)
+    let n20_runs = if smoke { 1 } else { 5 };
+    let cold = Bench::new(format!("news20 alg2+bsls T={n20_iters} (cold workspace)"))
+        .runs(n20_runs)
         .run_stats(|| FastFrankWolfe::new(&ds, mk()).run().flops);
     report.record("news20-bsls-cold", cold, &n20_extra("cold"));
     let mut ws = FwWorkspace::new();
-    let warm = Bench::new("news20 alg2+bsls T=2000 (warm workspace)")
-        .runs(5)
+    let warm = Bench::new(format!("news20 alg2+bsls T={n20_iters} (warm workspace)"))
+        .runs(n20_runs)
         .run_stats(|| FastFrankWolfe::new(&ds, mk()).run_in(&mut ws).flops);
     report.record("news20-bsls-warm", warm, &n20_extra("warm"));
     println!(
@@ -135,4 +150,77 @@ fn main() {
     );
 
     report.write().expect("write bench json");
+
+    // ---- the path-engine series: 10-point λ path, independent vs
+    // run_path, on the same News20-shaped synth + BSLS -------------------
+    let mut path_report = JsonReport::with_env("BENCH_path_sweep.json", "DPFW_BENCH_PATH_JSON");
+    section("10-point lambda path: independent runs vs run_path (news20 + BSLS)");
+    let k_points = 10usize;
+    // geometric grid 5 → 500, bracketing the paper's λ regimes
+    let lambdas: Vec<f64> =
+        (0..k_points).map(|i| 5.0 * 100.0f64.powf(i as f64 / (k_points - 1) as f64)).collect();
+    let path_iters = if smoke { 100 } else { 1000 };
+    let path_cfg = |lambda: f64| FwConfig {
+        iters: path_iters,
+        lambda,
+        privacy: Some(PrivacyParams::new(1.0, 1e-6)),
+        selector: SelectorKind::Bsls,
+        seed: 9,
+        trace_every: 0,
+        lipschitz: None,
+        threads: 0,
+    };
+    let path_extra = |variant: &str, per_lambda_us: f64| -> Vec<(&'static str, String)> {
+        vec![
+            ("dataset", format!("news20@{n20_scale}")),
+            ("selector", "bsls".into()),
+            ("iters", path_iters.to_string()),
+            ("k", k_points.to_string()),
+            ("variant", variant.into()),
+            ("per_lambda_us", format!("{per_lambda_us:.1}")),
+        ]
+    };
+    let path_runs = if smoke { 1 } else { 5 };
+    let per_lam = |s: bench_harness::BenchStats| s.mean_s * 1e6 / k_points as f64;
+    // independent: one fresh run (and workspace) per λ — the pre-path
+    // consumption mode every (λ, ε) grid sweep used to pay
+    let ind = Bench::new("independent per-λ runs").runs(path_runs).run_stats(|| {
+        lambdas
+            .iter()
+            .map(|&lam| FastFrankWolfe::new(&ds, path_cfg(lam)).run().flops)
+            .sum::<u64>()
+    });
+    path_report.record("path-independent", ind, &path_extra("independent", per_lam(ind)));
+    // run_path, cold: a fresh workspace per timed call (first λ pays the
+    // bootstrap, the other K−1 share it)
+    let cold_path = Bench::new("run_path (cold workspace)").runs(path_runs).run_stats(|| {
+        let mut ws = FwWorkspace::new();
+        FastFrankWolfe::new(&ds, path_cfg(lambdas[0])).run_path(&lambdas, &mut ws).len()
+    });
+    path_report.record(
+        "path-run-path-cold",
+        cold_path,
+        &path_extra("run_path-cold", per_lam(cold_path)),
+    );
+    // run_path, warm: one workspace across timed calls (primed by the
+    // harness warmup, so even the first λ hits the bootstrap cache)
+    let mut path_ws = FwWorkspace::new();
+    let warm_path = Bench::new("run_path (warm workspace)").runs(path_runs).run_stats(|| {
+        FastFrankWolfe::new(&ds, path_cfg(lambdas[0])).run_path(&lambdas, &mut path_ws).len()
+    });
+    path_report.record(
+        "path-run-path-warm",
+        warm_path,
+        &path_extra("run_path-warm", per_lam(warm_path)),
+    );
+    println!(
+        "  per-λ: independent {:.1} us, run_path cold {:.1} us, warm {:.1} us \
+         (speedup cold {:.2}x, warm {:.2}x)",
+        per_lam(ind),
+        per_lam(cold_path),
+        per_lam(warm_path),
+        ind.mean_s / cold_path.mean_s,
+        ind.mean_s / warm_path.mean_s
+    );
+    path_report.write().expect("write path sweep json");
 }

@@ -68,29 +68,144 @@ impl JobSpec {
             }
             Algo::Fast => FastFrankWolfe::new(&self.data, self.cfg.clone()).run_in(ws),
         };
-        let (accuracy, auc) = match &self.test_data {
-            Some(test) => {
-                // Respect the job's thread budget: pooled jobs arrive with
-                // threads pinned to 1 by the scheduler, so scoring must not
-                // fan back out underneath the worker pool.
-                let threads = match self.cfg.threads {
-                    0 => crate::sparse::auto_threads(test.nnz()),
-                    t => t,
-                };
-                let p = score_with_threads(test, out.weights.as_slice(), threads);
-                (Some(eval::accuracy(&p, &test.labels)), Some(eval::auc(&p, &test.labels)))
+        finish_result(
+            self.id,
+            self.label.clone(),
+            self.algo,
+            &self.cfg,
+            self.test_data.as_deref(),
+            out,
+        )
+    }
+}
+
+/// Score (when a held-out set is present) and package one solver output.
+fn finish_result(
+    id: usize,
+    label: String,
+    algo: Algo,
+    cfg: &FwConfig,
+    test_data: Option<&Dataset>,
+    out: FwOutput,
+) -> JobResult {
+    let (accuracy, auc) = match test_data {
+        Some(test) => {
+            // Respect the job's thread budget: pooled jobs arrive with
+            // threads pinned to 1 by the scheduler, so scoring must not
+            // fan back out underneath the worker pool.
+            let threads = match cfg.threads {
+                0 => crate::sparse::auto_threads(test.nnz()),
+                t => t,
+            };
+            let p = score_with_threads(test, out.weights.as_slice(), threads);
+            (Some(eval::accuracy(&p, &test.labels)), Some(eval::auc(&p, &test.labels)))
+        }
+        None => (None, None),
+    };
+    JobResult {
+        id,
+        label,
+        algo,
+        selector: cfg.selector.name().to_string(),
+        accuracy,
+        auc,
+        sparsity_pct: eval::sparsity_pct(out.weights.as_slice()),
+        output: out,
+    }
+}
+
+/// One regularization-path job: a whole λ-grid over one dataset,
+/// dispatched to a single worker/workspace so the dense bootstrap
+/// `α = Xᵀq̄` — identical for every λ — is computed once per path (the
+/// solvers' `run_path`, DESIGN.md §6.5) instead of once per cell. Produces
+/// one [`JobResult`] per λ, with ids `base_id .. base_id + lambdas.len()`
+/// and labels `"{label}|lam{λ}"`.
+#[derive(Clone)]
+pub struct PathJob {
+    /// Id of the first λ's result; later points get consecutive ids.
+    pub base_id: usize,
+    pub label: String,
+    pub data: Arc<Dataset>,
+    pub algo: Algo,
+    /// Per-run config; its `lambda` is ignored in favour of `lambdas`.
+    pub cfg: FwConfig,
+    /// The λ grid, trained in order through one workspace.
+    pub lambdas: Vec<f64>,
+    pub test_data: Option<Arc<Dataset>>,
+}
+
+impl PathJob {
+    /// Execute synchronously with a one-shot workspace.
+    pub fn run(&self) -> Vec<JobResult> {
+        self.run_in(&mut FwWorkspace::new())
+    }
+
+    /// Execute inside a reusable workspace. Every output is bit-identical
+    /// to the corresponding independent [`JobSpec`] at that λ (modulo the
+    /// skipped bootstrap FLOPs — see `FwOutput::bootstrap_flops`).
+    pub fn run_in(&self, ws: &mut FwWorkspace) -> Vec<JobResult> {
+        let outs = match self.algo {
+            Algo::Standard => StandardFrankWolfe::new(&self.data, self.cfg.clone())
+                .run_path(&self.lambdas, ws),
+            Algo::Fast => {
+                FastFrankWolfe::new(&self.data, self.cfg.clone()).run_path(&self.lambdas, ws)
             }
-            None => (None, None),
         };
-        JobResult {
-            id: self.id,
-            label: self.label.clone(),
-            algo: self.algo,
-            selector: self.cfg.selector.name().to_string(),
-            accuracy,
-            auc,
-            sparsity_pct: eval::sparsity_pct(out.weights.as_slice()),
-            output: out,
+        outs.into_iter()
+            .zip(&self.lambdas)
+            .enumerate()
+            .map(|(k, (out, &lam))| {
+                finish_result(
+                    self.base_id + k,
+                    format!("{}|lam{}", self.label, lam),
+                    self.algo,
+                    &self.cfg,
+                    self.test_data.as_deref(),
+                    out,
+                )
+            })
+            .collect()
+    }
+}
+
+/// What the scheduler dispatches: one grid cell, or a whole λ-path that
+/// must stay on one worker to share its workspace's bootstrap cache.
+#[derive(Clone)]
+pub enum Job {
+    Cell(JobSpec),
+    Path(PathJob),
+}
+
+impl Job {
+    /// How many [`JobResult`]s this job produces.
+    pub fn n_results(&self) -> usize {
+        match self {
+            Job::Cell(_) => 1,
+            Job::Path(p) => p.lambdas.len(),
+        }
+    }
+
+    /// The result ids this job will emit (used to report per-result
+    /// failures when a job panics).
+    pub fn result_ids(&self) -> std::ops::Range<usize> {
+        match self {
+            Job::Cell(c) => c.id..c.id + 1,
+            Job::Path(p) => p.base_id..p.base_id + p.lambdas.len(),
+        }
+    }
+
+    /// Execute inside a reusable workspace.
+    pub fn run_in(&self, ws: &mut FwWorkspace) -> Vec<JobResult> {
+        match self {
+            Job::Cell(c) => vec![c.run_in(ws)],
+            Job::Path(p) => p.run_in(ws),
+        }
+    }
+
+    pub(crate) fn cfg_mut(&mut self) -> &mut FwConfig {
+        match self {
+            Job::Cell(c) => &mut c.cfg,
+            Job::Path(p) => &mut p.cfg,
         }
     }
 }
@@ -161,6 +276,40 @@ mod tests {
         assert!(r.accuracy.unwrap() > 60.0, "acc={:?}", r.accuracy);
         assert!(r.auc.unwrap() > 60.0);
         assert!(r.sparsity_pct > 0.0);
+    }
+
+    #[test]
+    fn path_job_matches_independent_cells() {
+        let d = ds();
+        let lambdas = vec![3.0, 6.0];
+        let pj = PathJob {
+            base_id: 10,
+            label: "p".into(),
+            data: d.clone(),
+            algo: Algo::Fast,
+            cfg: FwConfig { iters: 80, lambda: 1.0, ..Default::default() },
+            lambdas: lambdas.clone(),
+            test_data: Some(d.clone()),
+        };
+        let rs = pj.run();
+        assert_eq!(rs.len(), 2);
+        assert_eq!((rs[0].id, rs[1].id), (10, 11));
+        assert!(rs[1].label.ends_with("|lam6"), "{}", rs[1].label);
+        assert!(rs[1].output.bootstrap_flops == 0, "second λ must be warm");
+        for (r, &lam) in rs.iter().zip(&lambdas) {
+            let cell = JobSpec {
+                id: 0,
+                label: "c".into(),
+                data: d.clone(),
+                algo: Algo::Fast,
+                cfg: FwConfig { iters: 80, lambda: lam, ..Default::default() },
+                test_data: Some(d.clone()),
+            }
+            .run();
+            assert_eq!(cell.output.weights, r.output.weights);
+            assert_eq!(cell.accuracy, r.accuracy);
+            assert_eq!(cell.auc, r.auc);
+        }
     }
 
     #[test]

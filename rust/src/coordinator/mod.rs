@@ -8,12 +8,18 @@
 //! [`metrics::Metrics`], and lands everything in a [`registry::Registry`]
 //! for CSV/JSON export. The experiment harness (`experiments/`) and the
 //! e2e example drive all runs through this path.
+//!
+//! Work comes in two granularities: single cells ([`job::JobSpec`]) and
+//! whole regularization paths ([`job::PathJob`]) — a λ-grid the scheduler
+//! pins to one worker so every λ shares the workspace's cached bootstrap
+//! (DESIGN.md §6.5) instead of paying the `O(N·S_c)` dense first
+//! iteration per cell.
 
 pub mod job;
 pub mod metrics;
 pub mod registry;
 pub mod scheduler;
 
-pub use job::{Algo, JobResult, JobSpec};
+pub use job::{Algo, Job, JobResult, JobSpec, PathJob};
 pub use registry::Registry;
 pub use scheduler::Coordinator;

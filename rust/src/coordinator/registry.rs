@@ -42,6 +42,17 @@ impl Registry {
         self.results.iter().find(|r| r.label == label)
     }
 
+    /// All cells of a λ-path, in submission (id) order: path results carry
+    /// labels `"{base}|lam{λ}"` (see [`super::job::PathJob`]), so this
+    /// collects every result whose label extends `base` that way.
+    pub fn find_path(&self, base: &str) -> Vec<&JobResult> {
+        let prefix = format!("{base}|lam");
+        let mut out: Vec<&JobResult> =
+            self.results.iter().filter(|r| r.label.starts_with(&prefix)).collect();
+        out.sort_by_key(|r| r.id);
+        out
+    }
+
     /// Flat per-job summary table.
     pub fn to_csv(&self) -> CsvTable {
         let mut t = CsvTable::new([
@@ -162,5 +173,42 @@ mod tests {
         assert!(json.contains("\"trace\":["));
         assert!(reg.find("cell-a").is_some());
         assert!(reg.find("nope").is_none());
+    }
+
+    #[test]
+    fn find_path_collects_lambda_cells_in_id_order() {
+        use crate::coordinator::job::PathJob;
+        let ds = Arc::new(
+            SynthConfig {
+                name: "regpath".into(),
+                n_rows: 50,
+                n_cols: 30,
+                avg_row_nnz: 5.0,
+                zipf_exponent: 1.2,
+                n_informative: 6,
+                n_dense: 0,
+                label_noise: 0.02,
+                bias_col: true,
+            }
+            .generate(6),
+        );
+        let mut reg = Registry::new();
+        reg.extend(
+            PathJob {
+                base_id: 3,
+                label: "news".into(),
+                data: ds,
+                algo: Algo::Fast,
+                cfg: FwConfig { iters: 30, lambda: 1.0, ..Default::default() },
+                lambdas: vec![2.0, 4.0],
+                test_data: None,
+            }
+            .run(),
+        );
+        let path = reg.find_path("news");
+        assert_eq!(path.len(), 2);
+        assert_eq!((path[0].id, path[1].id), (3, 4));
+        assert!(path[0].label.ends_with("|lam2"));
+        assert!(reg.find_path("nope").is_empty());
     }
 }

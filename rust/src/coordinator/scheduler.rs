@@ -5,6 +5,14 @@
 //! irrelevant), one result channel back. Panics in a job are caught and
 //! reported as failures rather than poisoning the pool — a failed grid
 //! cell must not take down a week-long experiment sweep.
+//!
+//! Jobs come in two shapes ([`Job`]): single grid cells, and whole
+//! regularization paths ([`super::job::PathJob`]) that the scheduler
+//! deliberately keeps on **one** worker so every λ shares that worker's
+//! workspace — and therefore its cached bootstrap (DESIGN.md §6.5). A
+//! path counts as `lambdas.len()` submissions: its per-λ results come back
+//! through the same channel with consecutive ids, so [`Coordinator::drain`]
+//! and the registry treat path cells and independent cells uniformly.
 
 use std::panic::AssertUnwindSafe;
 use std::sync::mpsc;
@@ -12,7 +20,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use super::job::{JobResult, JobSpec};
+use super::job::{Job, JobResult, JobSpec, PathJob};
 use super::metrics::Metrics;
 use crate::fw::workspace::FwWorkspace;
 
@@ -20,7 +28,7 @@ use crate::fw::workspace::FwWorkspace;
 pub type JobOutcome = Result<JobResult, String>;
 
 pub struct Coordinator {
-    job_tx: Option<mpsc::Sender<JobSpec>>,
+    job_tx: Option<mpsc::Sender<Job>>,
     result_rx: mpsc::Receiver<(usize, JobOutcome)>,
     workers: Vec<JoinHandle<()>>,
     pub metrics: Arc<Metrics>,
@@ -31,7 +39,7 @@ impl Coordinator {
     /// Spawn `n_workers` worker threads (min 1).
     pub fn new(n_workers: usize) -> Self {
         let n_workers = n_workers.max(1);
-        let (job_tx, job_rx) = mpsc::channel::<JobSpec>();
+        let (job_tx, job_rx) = mpsc::channel::<Job>();
         let job_rx = Arc::new(Mutex::new(job_rx));
         let (result_tx, result_rx) = mpsc::channel();
         let metrics = Arc::new(Metrics::new());
@@ -61,28 +69,35 @@ impl Coordinator {
                             // during their parallel bootstrap (output is
                             // bit-identical at any thread count, so this is
                             // safe).
-                            if n_workers > 1 && job.cfg.threads == 0 {
-                                job.cfg.threads = 1;
+                            if n_workers > 1 && job.cfg_mut().threads == 0 {
+                                job.cfg_mut().threads = 1;
                             }
-                            let id = job.id;
+                            let ids = job.result_ids();
                             let start = Instant::now();
                             let outcome = std::panic::catch_unwind(AssertUnwindSafe(|| {
                                 job.run_in(&mut ws)
                             }));
-                            let busy_us = start.elapsed().as_micros() as u64;
-                            let outcome = match outcome {
-                                Ok(res) => {
-                                    metrics.record_completion(
-                                        res.output.iters_run as u64,
-                                        res.output.flops,
-                                        busy_us,
-                                    );
-                                    Ok(res)
+                            // Per-result busy time: a path's wall time is
+                            // attributed evenly across its λ cells.
+                            let busy_us = start.elapsed().as_micros() as u64
+                                / ids.len().max(1) as u64;
+                            let mut hung_up = false;
+                            match outcome {
+                                Ok(results) => {
+                                    for res in results {
+                                        metrics.record_completion(
+                                            res.output.iters_run as u64,
+                                            res.output.flops,
+                                            busy_us,
+                                        );
+                                        let id = res.id;
+                                        if tx.send((id, Ok(res))).is_err() {
+                                            hung_up = true; // coordinator dropped
+                                            break;
+                                        }
+                                    }
                                 }
                                 Err(p) => {
-                                    metrics
-                                        .jobs_failed
-                                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                                     let msg = p
                                         .downcast_ref::<String>()
                                         .cloned()
@@ -90,11 +105,21 @@ impl Coordinator {
                                             p.downcast_ref::<&str>().map(|s| s.to_string())
                                         })
                                         .unwrap_or_else(|| "<non-string panic>".into());
-                                    Err(msg)
+                                    // every result this job owed becomes a
+                                    // failure (a path panic fails all its λs)
+                                    for id in ids {
+                                        metrics
+                                            .jobs_failed
+                                            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                                        if tx.send((id, Err(msg.clone()))).is_err() {
+                                            hung_up = true;
+                                            break;
+                                        }
+                                    }
                                 }
-                            };
-                            if tx.send((id, outcome)).is_err() {
-                                break; // coordinator dropped
+                            }
+                            if hung_up {
+                                break;
                             }
                         }
                     })
@@ -104,12 +129,26 @@ impl Coordinator {
         Self { job_tx: Some(job_tx), result_rx, workers, metrics, submitted: 0 }
     }
 
-    /// Enqueue a job (non-blocking).
+    /// Enqueue a single-cell job (non-blocking).
     pub fn submit(&mut self, job: JobSpec) {
+        self.submit_job(Job::Cell(job));
+    }
+
+    /// Enqueue a whole λ-path as one unit of work: it will run on a single
+    /// worker, sharing that worker's workspace (and bootstrap cache)
+    /// across every λ. Counts as `lambdas.len()` submissions — `drain`
+    /// returns one outcome per λ, ids `base_id..base_id + len`.
+    pub fn submit_path(&mut self, path: PathJob) {
+        assert!(!path.lambdas.is_empty(), "empty lambda grid");
+        self.submit_job(Job::Path(path));
+    }
+
+    fn submit_job(&mut self, job: Job) {
+        let n = job.n_results();
         self.metrics
             .jobs_submitted
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        self.submitted += 1;
+            .fetch_add(n as u64, std::sync::atomic::Ordering::Relaxed);
+        self.submitted += n;
         self.job_tx
             .as_ref()
             .expect("coordinator already shut down")
@@ -230,6 +269,62 @@ mod tests {
         assert_eq!(
             c.metrics.jobs_failed.load(std::sync::atomic::Ordering::Relaxed),
             1
+        );
+    }
+
+    #[test]
+    fn path_jobs_interleave_with_cells_and_order_results() {
+        let mut c = Coordinator::new(3);
+        let d = ds(5);
+        c.submit(job(0, d.clone()));
+        c.submit_path(PathJob {
+            base_id: 1,
+            label: "path".into(),
+            data: d.clone(),
+            algo: Algo::Fast,
+            cfg: FwConfig { iters: 60, lambda: 1.0, ..Default::default() },
+            lambdas: vec![2.0, 4.0, 8.0],
+            test_data: None,
+        });
+        c.submit(job(4, d));
+        let results = c.drain();
+        assert_eq!(results.len(), 5);
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.as_ref().expect("job failed").id, i);
+        }
+        // the path ran on one worker/workspace: its warm λs skipped the
+        // bootstrap entirely
+        assert!(results[1].as_ref().unwrap().output.bootstrap_flops > 0);
+        assert_eq!(results[2].as_ref().unwrap().output.bootstrap_flops, 0);
+        assert_eq!(results[3].as_ref().unwrap().output.bootstrap_flops, 0);
+        let ord = std::sync::atomic::Ordering::Relaxed;
+        assert_eq!(c.metrics.jobs_submitted.load(ord), 5);
+        assert_eq!(c.metrics.jobs_completed.load(ord), 5);
+    }
+
+    #[test]
+    fn path_panic_fails_every_lambda_without_poisoning_pool() {
+        let mut c = Coordinator::new(2);
+        let d = ds(6);
+        c.submit_path(PathJob {
+            base_id: 0,
+            label: "bad".into(),
+            data: d.clone(),
+            algo: Algo::Fast,
+            cfg: FwConfig { iters: 60, lambda: 1.0, ..Default::default() },
+            lambdas: vec![2.0, -1.0, 3.0], // second λ panics mid-path
+            test_data: None,
+        });
+        c.submit(job(3, d));
+        let results = c.drain();
+        assert_eq!(results.len(), 4);
+        for r in &results[..3] {
+            assert!(r.is_err(), "a path panic must fail all its λ cells");
+        }
+        assert!(results[3].is_ok(), "pool must survive a failed path");
+        assert_eq!(
+            c.metrics.jobs_failed.load(std::sync::atomic::Ordering::Relaxed),
+            3
         );
     }
 

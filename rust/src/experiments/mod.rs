@@ -9,6 +9,9 @@
 //! * Table 3 — DP wall-clock speedups ([`tables::table3_speedup`])
 //! * Table 4 — DP utility at ε=0.1 ([`tables::table4_utility`])
 //! * §4.2 — URL ε-sweep ([`tables::eps_sweep`])
+//! * Regularization path — per-λ utility over a K-point grid via the
+//!   shared-bootstrap path engine ([`tables::lambda_path`]; beyond the
+//!   paper, the standard consumption mode for LASSO-family solvers)
 //!
 //! Every entry point takes an [`ExpConfig`], writes a CSV under
 //! `out_dir`, and returns the table for console display. Workloads are

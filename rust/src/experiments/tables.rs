@@ -5,7 +5,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use super::{build_dataset, ExpConfig, EVAL_PRESETS};
-use crate::coordinator::{Algo, Coordinator, JobSpec};
+use crate::coordinator::{Algo, Coordinator, JobSpec, PathJob};
 use crate::dp::accounting::PrivacyParams;
 use crate::fw::config::{FwConfig, SelectorKind};
 use crate::sparse::synth::DatasetPreset;
@@ -187,6 +187,74 @@ pub fn table4_utility(cfg: &ExpConfig) -> Result<CsvTable> {
     Ok(t)
 }
 
+/// The λ grid the regularization-path experiment sweeps (brackets the
+/// paper's Table 3 λ = 50 and Table 4 λ↑ regimes).
+pub const PATH_LAMBDAS: [f64; 7] = [5.0, 10.0, 20.0, 50.0, 100.0, 200.0, 500.0];
+
+/// **Regularization path** — the path engine's consumption mode: one
+/// [`PathJob`] per dataset (the K-point λ grid above, DP Alg 2 + Alg 4 at
+/// ε = 1), dispatched *whole* to a single worker/workspace, so the dense
+/// bootstrap `α = Xᵀq̄` — identical across λ — is computed once per
+/// dataset instead of once per grid cell (DESIGN.md §6.5). Reports
+/// utility, sparsity, per-λ wall time, and the bootstrap FLOPs actually
+/// performed (zero for every warm λ).
+pub fn lambda_path(cfg: &ExpConfig) -> Result<CsvTable> {
+    let k = PATH_LAMBDAS.len();
+    let mut coord = Coordinator::new(cfg.workers);
+    for (i, p) in EVAL_PRESETS.iter().enumerate() {
+        let ds = build_dataset(*p, cfg);
+        let (train, test) = ds.split(0.25);
+        coord.submit_path(PathJob {
+            base_id: i * k,
+            label: p.name().to_string(),
+            data: Arc::new(train),
+            algo: Algo::Fast,
+            cfg: FwConfig {
+                iters: cfg.iters,
+                lambda: PATH_LAMBDAS[0], // per-λ values come from `lambdas`
+                privacy: Some(PrivacyParams::new(1.0, 1e-6)),
+                selector: SelectorKind::Bsls,
+                seed: cfg.seed,
+                trace_every: 0,
+                lipschitz: None,
+                threads: 0,
+            },
+            lambdas: PATH_LAMBDAS.to_vec(),
+            test_data: Some(Arc::new(test)),
+        });
+    }
+    let results = coord.drain();
+    let mut t = CsvTable::new([
+        "dataset",
+        "lambda",
+        "accuracy_pct",
+        "auc_pct",
+        "sparsity_pct",
+        "nnz",
+        "wall_ms",
+        "bootstrap_flops",
+    ]);
+    for (i, p) in EVAL_PRESETS.iter().enumerate() {
+        for (j, &lam) in PATH_LAMBDAS.iter().enumerate() {
+            let r = results[i * k + j]
+                .as_ref()
+                .map_err(|e| anyhow::anyhow!("lambda-path job failed: {e}"))?;
+            t.push_row([
+                p.name().to_string(),
+                format!("{lam}"),
+                format!("{:.2}", r.accuracy.unwrap_or(f64::NAN)),
+                format!("{:.2}", r.auc.unwrap_or(f64::NAN)),
+                format!("{:.2}", r.sparsity_pct),
+                r.output.weights.nnz().to_string(),
+                format!("{:.3}", r.output.wall_ms),
+                r.output.bootstrap_flops.to_string(),
+            ]);
+        }
+    }
+    t.write_file(cfg.out_dir.join("lambda_path.csv"))?;
+    Ok(t)
+}
+
 /// **§4.2** — the URL ε-sweep: speedup of Alg 2+4 over Alg 1 as ε varies.
 /// The paper's explanation: at large ε the (slow, dense) informative
 /// features are selected often; as ε shrinks, selection spreads to the
@@ -270,6 +338,19 @@ mod tests {
         let news = t.rows.iter().find(|r| r[0] == "news20").unwrap();
         let sp: f64 = news[1].parse().unwrap();
         assert!(sp > 1.0, "news20 speedup {sp}");
+    }
+
+    #[test]
+    fn lambda_path_reports_full_grid_with_one_bootstrap_each() {
+        let cfg = ExpConfig { iters: 40, ..tiny_cfg("dpfw_lp") };
+        let t = lambda_path(&cfg).unwrap();
+        assert_eq!(t.rows.len(), 5 * PATH_LAMBDAS.len());
+        // per dataset: first λ cold (bootstrap > 0), all others warm (0)
+        for rows in t.rows.chunks(PATH_LAMBDAS.len()) {
+            let boot: Vec<u64> = rows.iter().map(|r| r[7].parse().unwrap()).collect();
+            assert!(boot[0] > 0, "{rows:?}");
+            assert!(boot[1..].iter().all(|&b| b == 0), "{rows:?}");
+        }
     }
 
     #[test]

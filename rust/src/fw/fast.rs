@@ -40,6 +40,12 @@
 //!   gated by [`FwConfig::threads`]. The block sums are per-column
 //!   sequential either way, so any thread count produces bit-identical
 //!   results.
+//! * **Regularization paths**: [`FastFrankWolfe::run_path`] trains a whole
+//!   λ-grid through one workspace, computing that bootstrap **once** — it
+//!   is identical for every λ at fixed data — and caching it in the
+//!   workspace keyed by dataset identity (DESIGN.md §6.5). Warm per-λ
+//!   solves do zero `O(N·S_c)` work; [`FwOutput::bootstrap_flops`]
+//!   records exactly what was skipped.
 
 use std::time::Instant;
 
@@ -48,7 +54,7 @@ use crate::fw::flops::{FlopCounter, FLOPS_SIGMOID};
 use crate::fw::loss::{Logistic, Loss};
 use crate::fw::sign;
 use crate::fw::trace::{FwOutput, TraceRecord, WeightVector};
-use crate::fw::workspace::FwWorkspace;
+use crate::fw::workspace::{BootKey, Bootstrap, FwWorkspace};
 use crate::rng::Xoshiro256pp;
 use crate::sparse::Dataset;
 
@@ -113,6 +119,27 @@ impl<'a> FastFrankWolfe<'a> {
         self.run_in_with_observer(ws, |_, _| {})
     }
 
+    /// Train an entire regularization path — one run per λ in `lambdas`,
+    /// everything else taken from the solver's config (whose own `lambda`
+    /// is ignored) — sharing the dense bootstrap `α = Xᵀq̄` across the
+    /// whole grid through the workspace's [`BootKey`]-keyed cache. The
+    /// first λ (on a workspace that has not seen this dataset) computes
+    /// and caches it; every later λ copies it back in `O(N+D)`, so warm
+    /// per-λ solves do zero `O(N·S_c)` bootstrap work and zero
+    /// solver-state allocation ([`FwOutput::bootstrap_flops`] proves it).
+    /// Each output is bit-identical to an independent
+    /// [`FastFrankWolfe::run_in`] at that λ, except that `flops` omits
+    /// exactly the skipped bootstrap work (property-tested).
+    pub fn run_path(&self, lambdas: &[f64], ws: &mut FwWorkspace) -> Vec<FwOutput> {
+        lambdas
+            .iter()
+            .map(|&lam| {
+                assert!(lam > 0.0, "path lambda must be positive");
+                self.run_core(ws, lam, Bootstrap::Shared, |_, _| {})
+            })
+            .collect()
+    }
+
     /// Run, invoking `observe(t, &state)` after every iteration — the hook
     /// the equivalence property tests use. Zero-cost when the closure is
     /// empty.
@@ -126,6 +153,16 @@ impl<'a> FastFrankWolfe<'a> {
     pub(crate) fn run_in_with_observer(
         &self,
         ws: &mut FwWorkspace,
+        observe: impl FnMut(usize, &FastState),
+    ) -> FwOutput {
+        self.run_core(ws, self.cfg.lambda, Bootstrap::PerRun, observe)
+    }
+
+    fn run_core(
+        &self,
+        ws: &mut FwWorkspace,
+        lam: f64,
+        boot: Bootstrap,
         mut observe: impl FnMut(usize, &FastState),
     ) -> FwOutput {
         let start = Instant::now();
@@ -135,7 +172,6 @@ impl<'a> FastFrankWolfe<'a> {
         let n = csr.n_rows();
         let d = csr.n_cols();
         let t_total = self.cfg.iters;
-        let lam = self.cfg.lambda;
         let lip = self.cfg.lipschitz.unwrap_or_else(|| self.loss.lipschitz());
 
         let (exp_scale, nm_scale) = match self.cfg.privacy {
@@ -156,23 +192,38 @@ impl<'a> FastFrankWolfe<'a> {
             alpha: ws.take_f64(d, 0.0),
             g_base: 0.0,
         };
-        for (qi, &yi) in st.q.iter_mut().zip(y.iter()) {
-            *qi = self.loss.grad(0.0, yi as f64);
+        let boot_key = BootKey::of(self.data, self.loss.name());
+        let cached = boot == Bootstrap::Shared
+            && match ws.bootstrap_get(&boot_key) {
+                Some(cache) => {
+                    st.q.copy_from_slice(cache.q0());
+                    st.alpha.copy_from_slice(cache.alpha0());
+                    true
+                }
+                None => false,
+            };
+        if !cached {
+            for (qi, &yi) in st.q.iter_mut().zip(y.iter()) {
+                *qi = self.loss.grad(0.0, yi as f64);
+            }
+            flops.add_boot(n as u64 * FLOPS_SIGMOID);
+            // The one O(N·S_c) pass of the whole run: column-block parallel,
+            // bit-identical to the serial CSR-driven product (see
+            // `CscMatrix::matvec_t_par`). An explicit `threads` is honored
+            // verbatim (the thread-invariance property tests rely on that);
+            // auto (0) applies the PAR_MIN_NNZ gate so tiny problems don't pay
+            // thread-spawn overhead.
+            let boot_threads = if self.cfg.threads == 0 {
+                crate::sparse::auto_threads(csr.nnz())
+            } else {
+                self.cfg.threads
+            };
+            csc.matvec_t_par(&st.q, &mut st.alpha, boot_threads);
+            flops.add_boot(2 * csr.nnz() as u64);
+            if boot == Bootstrap::Shared {
+                ws.bootstrap_put(boot_key, &st.q, &st.alpha);
+            }
         }
-        flops.add(n as u64 * FLOPS_SIGMOID);
-        // The one O(N·S_c) pass of the whole run: column-block parallel,
-        // bit-identical to the serial CSR-driven product (see
-        // `CscMatrix::matvec_t_par`). An explicit `threads` is honored
-        // verbatim (the thread-invariance property tests rely on that);
-        // auto (0) applies the PAR_MIN_NNZ gate so tiny problems don't pay
-        // thread-spawn overhead.
-        let boot_threads = if self.cfg.threads == 0 {
-            crate::sparse::auto_threads(csr.nnz())
-        } else {
-            self.cfg.threads
-        };
-        csc.matvec_t_par(&st.q, &mut st.alpha, boot_threads);
-        flops.add(2 * csr.nnz() as u64);
         selector.init(&st.alpha, &mut flops);
 
         let mut trace = Vec::new();
@@ -323,6 +374,7 @@ impl<'a> FastFrankWolfe<'a> {
             weights: WeightVector(st.weights()),
             final_gap: gap,
             flops: flops.total(),
+            bootstrap_flops: flops.bootstrap(),
             wall_ms,
             selector_stats: selector.stats(),
             trace,
@@ -511,6 +563,38 @@ mod tests {
         let out = FastFrankWolfe::new(&ds, cfg).run();
         assert!(out.weights.l1_norm() <= 8.0 + 1e-9);
         assert!(out.flops > 0);
+    }
+
+    /// A K-λ path performs exactly one bootstrap `α = Xᵀq̄`: the flops
+    /// counter's bootstrap category is positive for the first (cold) λ and
+    /// zero for every warm one, and each warm total is lower than the
+    /// corresponding independent run's by exactly the skipped bootstrap.
+    #[test]
+    fn run_path_shares_one_bootstrap() {
+        let ds = small_ds(9);
+        let cfg = FwConfig { iters: 80, lambda: 1.0, trace_every: 0, ..Default::default() };
+        let mut ws = FwWorkspace::new();
+        let lambdas = [2.0, 4.0, 8.0];
+        let outs = FastFrankWolfe::new(&ds, cfg.clone()).run_path(&lambdas, &mut ws);
+        assert!(outs[0].bootstrap_flops > 0, "cold λ must perform the bootstrap");
+        for o in &outs[1..] {
+            assert_eq!(o.bootstrap_flops, 0, "warm λ must record zero bootstrap work");
+        }
+        for (o, &lam) in outs.iter().zip(&lambdas) {
+            let fresh = FastFrankWolfe::new(&ds, FwConfig { lambda: lam, ..cfg.clone() }).run();
+            assert_eq!(fresh.weights, o.weights);
+            assert_eq!(
+                o.flops + (fresh.bootstrap_flops - o.bootstrap_flops),
+                fresh.flops,
+                "warm totals must differ by exactly the skipped bootstrap"
+            );
+        }
+        // a second path through the same workspace is warm from its first λ
+        let outs2 = FastFrankWolfe::new(&ds, cfg).run_path(&lambdas, &mut ws);
+        assert!(outs2.iter().all(|o| o.bootstrap_flops == 0));
+        for (a, b) in outs.iter().zip(&outs2) {
+            assert_eq!(a.weights, b.weights);
+        }
     }
 
     #[test]

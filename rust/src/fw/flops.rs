@@ -14,6 +14,13 @@ pub const FLOPS_LN: u64 = 4;
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct FlopCounter {
     total: u64,
+    /// The slice of `total` attributable to the dense bootstrap (the
+    /// `O(N·S_c)` `α = Xᵀq̄` at `w = 0`). Tracked separately so the path
+    /// engine can *prove* that warm per-λ solves skipped it: a run that
+    /// drew the bootstrap from the workspace cache reports
+    /// `bootstrap() == 0` and a `total` lower than a cold run by exactly
+    /// the cold run's `bootstrap()`.
+    boot: u64,
 }
 
 impl FlopCounter {
@@ -26,13 +33,28 @@ impl FlopCounter {
         self.total += n;
     }
 
+    /// Record `n` FLOPs of bootstrap work (counted into `total` *and* the
+    /// bootstrap category). Only the solvers' `α = Xᵀq̄` phase uses this.
+    #[inline]
+    pub fn add_boot(&mut self, n: u64) {
+        self.total += n;
+        self.boot += n;
+    }
+
     #[inline]
     pub fn total(&self) -> u64 {
         self.total
     }
 
+    /// FLOPs recorded through [`FlopCounter::add_boot`].
+    #[inline]
+    pub fn bootstrap(&self) -> u64 {
+        self.boot
+    }
+
     pub fn reset(&mut self) {
         self.total = 0;
+        self.boot = 0;
     }
 }
 
@@ -48,5 +70,16 @@ mod tests {
         assert_eq!(f.total(), 15);
         f.reset();
         assert_eq!(f.total(), 0);
+    }
+
+    #[test]
+    fn bootstrap_category_counts_into_total() {
+        let mut f = FlopCounter::new();
+        f.add(10);
+        f.add_boot(7);
+        assert_eq!(f.total(), 17);
+        assert_eq!(f.bootstrap(), 7);
+        f.reset();
+        assert_eq!(f.bootstrap(), 0);
     }
 }

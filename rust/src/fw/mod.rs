@@ -13,7 +13,10 @@
 //! * [`workspace`] — reusable run-to-run buffer pools ([`workspace::FwWorkspace`]):
 //!   both solvers expose `run_in(&mut FwWorkspace)` so sweep drivers and
 //!   the coordinator's workers execute repeated runs without allocating
-//!   solver state or rebuilding selector storage. Reuse is bit-exact.
+//!   solver state or rebuilding selector storage, and
+//!   `run_path(&[f64], &mut FwWorkspace)` to train whole regularization
+//!   paths sharing one dense bootstrap through the workspace's cache
+//!   (DESIGN.md §6.5). Reuse is bit-exact.
 //! * [`loss`], [`flops`], [`trace`], [`config`] — losses with the DP
 //!   Lipschitz constants, FLOP accounting (Figures 2 & 4), per-iteration
 //!   traces (Figures 1 & 3), and run configuration (including the

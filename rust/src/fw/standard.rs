@@ -18,7 +18,7 @@ use crate::fw::flops::{FlopCounter, FLOPS_SIGMOID};
 use crate::fw::loss::{Logistic, Loss};
 use crate::fw::sign;
 use crate::fw::trace::{FwOutput, TraceRecord, WeightVector};
-use crate::fw::workspace::FwWorkspace;
+use crate::fw::workspace::{BootKey, Bootstrap, FwWorkspace};
 use crate::rng::Xoshiro256pp;
 use crate::sparse::Dataset;
 
@@ -54,14 +54,37 @@ impl<'a> StandardFrankWolfe<'a> {
     /// [`crate::fw::workspace`]): the four dense state vectors and the
     /// selector are pooled across runs. Bit-exactly equivalent to `run`.
     pub fn run_in(&self, ws: &mut FwWorkspace) -> FwOutput {
+        self.run_core(ws, self.cfg.lambda, Bootstrap::PerRun)
+    }
+
+    /// Train a regularization path — one run per λ in `lambdas` (the
+    /// config's own `lambda` is ignored) — sharing the t = 1 dense
+    /// recompute across the grid: at `w = 0` it is exactly the bootstrap
+    /// `v̄ = 0, q̄ = ∇L(0, y), α = Xᵀq̄`, identical for every λ, so warm
+    /// solves copy it from the workspace cache instead of redoing the two
+    /// `O(nnz)` matvecs. Outputs are bit-identical to independent
+    /// [`StandardFrankWolfe::run_in`] calls except that `flops` omits
+    /// exactly the skipped bootstrap work (see
+    /// [`FwOutput::bootstrap_flops`]).
+    pub fn run_path(&self, lambdas: &[f64], ws: &mut FwWorkspace) -> Vec<FwOutput> {
+        lambdas
+            .iter()
+            .map(|&lam| {
+                assert!(lam > 0.0, "path lambda must be positive");
+                self.run_core(ws, lam, Bootstrap::Shared)
+            })
+            .collect()
+    }
+
+    fn run_core(&self, ws: &mut FwWorkspace, lam: f64, boot: Bootstrap) -> FwOutput {
         let start = Instant::now();
         let csr = &self.data.csr;
         let y = &self.data.labels;
         let n = csr.n_rows();
         let d = csr.n_cols();
         let t_total = self.cfg.iters;
-        let lam = self.cfg.lambda;
         let lip = self.cfg.lipschitz.unwrap_or_else(|| self.loss.lipschitz());
+        let boot_key = BootKey::of(self.data, self.loss.name());
 
         let (exp_scale, nm_scale) = match self.cfg.privacy {
             Some(p) => (p.exp_mech_scale(t_total, lip), p.noisy_max_scale(t_total, lip)),
@@ -81,15 +104,38 @@ impl<'a> StandardFrankWolfe<'a> {
 
         for t in 1..t_total {
             // ---- lines 4-7: dense recompute of the gradient -------------
-            csr.matvec(&w, &mut v); // v̄ = X w
-            flops.add(2 * csr.nnz() as u64);
-            for i in 0..n {
-                q[i] = self.loss.grad(v[i], y[i] as f64); // q̄ = ∇L(v̄)
+            // At t = 1 (w = 0) this *is* the bootstrap — v̄ = 0,
+            // q̄ = ∇L(0, y), α = Xᵀq̄ — identical for every λ, so path mode
+            // copies it from the workspace cache when present (v keeps the
+            // exact zeros it was taken with; the matvec at w = 0 would
+            // write +0.0 into every slot anyway).
+            let cached = t == 1
+                && boot == Bootstrap::Shared
+                && match ws.bootstrap_get(&boot_key) {
+                    Some(c) => {
+                        q.copy_from_slice(c.q0());
+                        alpha.copy_from_slice(c.alpha0());
+                        true
+                    }
+                    None => false,
+                };
+            if !cached {
+                csr.matvec(&w, &mut v); // v̄ = X w
+                for i in 0..n {
+                    q[i] = self.loss.grad(v[i], y[i] as f64); // q̄ = ∇L(v̄)
+                }
+                alpha.iter_mut().for_each(|a| *a = 0.0);
+                csr.matvec_t_add(&q, &mut alpha); // α = Xᵀ q̄  (ȳ fused into q̄)
+                let cost = 4 * csr.nnz() as u64 + n as u64 * FLOPS_SIGMOID + d as u64;
+                if t == 1 {
+                    flops.add_boot(cost);
+                    if boot == Bootstrap::Shared {
+                        ws.bootstrap_put(boot_key, &q, &alpha);
+                    }
+                } else {
+                    flops.add(cost);
+                }
             }
-            flops.add(n as u64 * FLOPS_SIGMOID);
-            alpha.iter_mut().for_each(|a| *a = 0.0);
-            csr.matvec_t_add(&q, &mut alpha); // α = Xᵀ q̄  (ȳ fused into q̄)
-            flops.add(2 * csr.nnz() as u64 + d as u64);
             if !initialized {
                 selector.init(&alpha, &mut flops);
                 initialized = true;
@@ -142,6 +188,7 @@ impl<'a> StandardFrankWolfe<'a> {
             weights: WeightVector(w.clone()),
             final_gap: gap,
             flops: flops.total(),
+            bootstrap_flops: flops.bootstrap(),
             wall_ms,
             selector_stats: selector.stats(),
             trace,
@@ -220,6 +267,31 @@ mod tests {
         let out = StandardFrankWolfe::new(&ds, cfg).run();
         assert!(out.weights.l1_norm() <= 5.0 + 1e-9);
         assert!(out.flops > 0);
+    }
+
+    /// The t = 1 dense recompute is shared across a λ-path: cold once,
+    /// then zero bootstrap flops, with totals offset by exactly the
+    /// skipped work and identical weights.
+    #[test]
+    fn run_path_shares_t1_bootstrap() {
+        let ds = small_ds();
+        let cfg = FwConfig { iters: 50, lambda: 1.0, ..Default::default() };
+        let mut ws = FwWorkspace::new();
+        let lambdas = [3.0, 6.0, 12.0];
+        let outs = StandardFrankWolfe::new(&ds, cfg.clone()).run_path(&lambdas, &mut ws);
+        assert!(outs[0].bootstrap_flops > 0);
+        for o in &outs[1..] {
+            assert_eq!(o.bootstrap_flops, 0);
+        }
+        for (o, &lam) in outs.iter().zip(&lambdas) {
+            let fresh =
+                StandardFrankWolfe::new(&ds, FwConfig { lambda: lam, ..cfg.clone() }).run();
+            assert_eq!(fresh.weights, o.weights);
+            assert_eq!(
+                o.flops + (fresh.bootstrap_flops - o.bootstrap_flops),
+                fresh.flops
+            );
+        }
     }
 
     #[test]

@@ -31,6 +31,13 @@ pub struct FwOutput {
     pub final_gap: f64,
     /// Total FLOPs for the run (per the convention in [`crate::fw::flops`]).
     pub flops: u64,
+    /// The slice of `flops` spent on the dense bootstrap `α = Xᵀq̄`. A run
+    /// whose bootstrap came from the workspace path cache
+    /// (see [`crate::fw::workspace::FwWorkspace`] and `run_path`) reports
+    /// `0` here, and its `flops` is lower than a cold run's by exactly the
+    /// cold run's `bootstrap_flops` — the accounting stays honest instead
+    /// of pretending the cached work was redone.
+    pub bootstrap_flops: u64,
     /// Wall-clock milliseconds.
     pub wall_ms: f64,
     /// Selector telemetry (pops / draws / step counts).

@@ -13,13 +13,22 @@
 //!   cleared, right-sized buffers that reuse retained capacity — after the
 //!   first run on a given problem shape, **no solver-state allocation
 //!   happens at all** (the returned `FwOutput` still owns its weight
-//!   vector, which must escape the run).
+//!   vector, which must escape the run). Selection is best-fit, not LIFO:
+//!   the smallest pooled buffer whose capacity already covers the request,
+//!   else the largest available, so a small buffer can never shadow a
+//!   fitting one and force a realloc.
 //! * [`FwWorkspace::take_selector`] caches the boxed
 //!   [`CoordinateSelector`] from the previous run. When the next run asks
 //!   for the same `(kind, D, scales)` configuration the cached selector is
 //!   [`CoordinateSelector::reset`] — restoring its exactly-fresh logical
 //!   state while keeping every internal allocation (Fibonacci-heap arena,
 //!   binary-heap storage, BSLS group arrays) — instead of rebuilt.
+//! * The workspace also owns the **path-engine bootstrap cache**
+//!   ([`BootstrapCache`], DESIGN.md §6.5): `run_path` stores the dense
+//!   `q̄₀` / `α₀ = Xᵀq̄₀` of the first λ it solves, keyed by a dataset
+//!   identity token, and every later λ — and every later path over the
+//!   same dataset through the same workspace — copies it back in `O(N+D)`
+//!   instead of redoing the `O(N·S_c)` matvec.
 //!
 //! Reuse is **bit-exact**: a `run_in` on a dirty workspace must produce
 //! output identical to a fresh `run` (enforced by
@@ -33,6 +42,99 @@
 
 use crate::fw::config::SelectorKind;
 use crate::fw::queue::{build_selector, CoordinateSelector};
+use crate::sparse::Dataset;
+
+/// How a run sources its dense first iteration `α = Xᵀq̄` (DESIGN.md §6.5).
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Bootstrap {
+    /// Compute it inside the run and leave no trace in the workspace —
+    /// `run`/`run_in`'s behaviour, byte-for-byte what it was pre-path.
+    PerRun,
+    /// Consult the workspace's bootstrap cache: copy it back on a key hit
+    /// (recording zero bootstrap FLOPs), compute-and-store on a miss —
+    /// `run_path`'s mode.
+    Shared,
+}
+
+/// Identity key for the cached path-engine bootstrap (DESIGN.md §6.5):
+/// the dataset's construction token plus shape guards, and the loss whose
+/// gradient-at-zero the cached `q̄₀`/`α₀` were computed from. Any mismatch
+/// evicts the (single-slot) cache; a match guarantees bit-identical
+/// bootstrap values because `α₀ = Xᵀq̄₀` is itself thread-invariant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) struct BootKey {
+    token: u64,
+    n_rows: usize,
+    n_cols: usize,
+    nnz: usize,
+    loss: &'static str,
+}
+
+impl BootKey {
+    pub(crate) fn of(data: &Dataset, loss: &'static str) -> Self {
+        Self {
+            token: data.token(),
+            n_rows: data.n_rows(),
+            n_cols: data.n_cols(),
+            nnz: data.nnz(),
+            loss,
+        }
+    }
+}
+
+/// The cached dense bootstrap: the gradient at `w = 0` and `α₀ = Xᵀq̄₀`,
+/// owned by the workspace so every λ of a path (and every later path over
+/// the same dataset) skips the one `O(N·S_c)` phase of the fast solver.
+pub(crate) struct BootstrapCache {
+    key: BootKey,
+    q0: Vec<f64>,
+    alpha0: Vec<f64>,
+}
+
+impl BootstrapCache {
+    pub(crate) fn q0(&self) -> &[f64] {
+        &self.q0
+    }
+
+    pub(crate) fn alpha0(&self) -> &[f64] {
+        &self.alpha0
+    }
+}
+
+/// Pop the pooled vector that serves a length-`len` request best: the
+/// smallest capacity that already fits (no realloc), else the largest
+/// available (one realloc now, and the pool converges on a buffer big
+/// enough for the workload's largest shape instead of thrashing). A plain
+/// LIFO pop could return a small buffer while a fitting one sits idle —
+/// every mixed-shape sweep then reallocates once per run, forever.
+/// `len = usize::MAX` is the "scratch" request: nothing fits, so it yields
+/// the largest-capacity buffer.
+fn take_best<T>(pool: &mut Vec<Vec<T>>, len: usize) -> Vec<T> {
+    let mut best: Option<(usize, usize, bool)> = None; // (index, capacity, fits)
+    for (i, v) in pool.iter().enumerate() {
+        let cap = v.capacity();
+        let fits = cap >= len;
+        let better = match best {
+            None => true,
+            Some((_, bcap, bfits)) => {
+                if fits != bfits {
+                    fits
+                } else if fits {
+                    cap < bcap // best fit: smallest adequate capacity
+                } else {
+                    cap > bcap // nothing fits yet: keep the largest
+                }
+            }
+        };
+        if better {
+            best = Some((i, cap, fits));
+        }
+    }
+    match best {
+        Some((i, _, _)) => pool.swap_remove(i),
+        None => Vec::new(),
+    }
+}
 
 /// A cached selector plus the configuration key it was built for.
 struct CachedSelector {
@@ -54,6 +156,7 @@ pub struct FwWorkspace {
     f64_pool: Vec<Vec<f64>>,
     u32_pool: Vec<Vec<u32>>,
     selector: Option<CachedSelector>,
+    boot: Option<BootstrapCache>,
 }
 
 impl FwWorkspace {
@@ -61,10 +164,10 @@ impl FwWorkspace {
         Self::default()
     }
 
-    /// A length-`len` buffer filled with `fill`, reusing pooled capacity
-    /// when available.
+    /// A length-`len` buffer filled with `fill`, reusing the best-fit
+    /// pooled capacity when available (see [`take_best`]).
     pub(crate) fn take_f64(&mut self, len: usize, fill: f64) -> Vec<f64> {
-        let mut v = self.f64_pool.pop().unwrap_or_default();
+        let mut v = take_best(&mut self.f64_pool, len);
         v.clear();
         v.resize(len, fill);
         v
@@ -73,7 +176,7 @@ impl FwWorkspace {
     /// A length-`len` `u32` buffer filled with `fill` (the stamp array and
     /// the `touched` scratch both live here).
     pub(crate) fn take_u32(&mut self, len: usize, fill: u32) -> Vec<u32> {
-        let mut v = self.u32_pool.pop().unwrap_or_default();
+        let mut v = take_best(&mut self.u32_pool, len);
         v.clear();
         v.resize(len, fill);
         v
@@ -81,10 +184,33 @@ impl FwWorkspace {
 
     /// An empty `u32` scratch vector with retained capacity (for the
     /// fused-scan `touched` list, which grows and clears every iteration).
+    /// Picks the *largest* pooled buffer — scratch has no target length,
+    /// so retained capacity is the whole point.
     pub(crate) fn take_u32_scratch(&mut self) -> Vec<u32> {
-        let mut v = self.u32_pool.pop().unwrap_or_default();
+        let mut v = take_best(&mut self.u32_pool, usize::MAX);
         v.clear();
         v
+    }
+
+    /// The cached bootstrap for `key`, if the workspace holds one.
+    pub(crate) fn bootstrap_get(&self, key: &BootKey) -> Option<&BootstrapCache> {
+        self.boot.as_ref().filter(|b| b.key == *key)
+    }
+
+    /// Store (or overwrite — the cache is single-slot, matching the
+    /// one-dataset-per-path access pattern) the bootstrap for `key`,
+    /// reusing the previous cache's allocations.
+    pub(crate) fn bootstrap_put(&mut self, key: BootKey, q0: &[f64], alpha0: &[f64]) {
+        let b = self.boot.get_or_insert_with(|| BootstrapCache {
+            key,
+            q0: Vec::new(),
+            alpha0: Vec::new(),
+        });
+        b.key = key;
+        b.q0.clear();
+        b.q0.extend_from_slice(q0);
+        b.alpha0.clear();
+        b.alpha0.extend_from_slice(alpha0);
     }
 
     pub(crate) fn recycle_f64(&mut self, v: Vec<f64>) {
@@ -155,6 +281,70 @@ mod tests {
         let c = ws.take_f64(1000, 2.0);
         assert_eq!(c.as_ptr(), ptr);
         assert!(c.iter().all(|&x| x == 2.0));
+    }
+
+    #[test]
+    fn best_fit_beats_lifo_pool_order() {
+        let mut ws = FwWorkspace::new();
+        let big = ws.take_f64(1000, 0.0);
+        let big_ptr = big.as_ptr();
+        let small = ws.take_f64(10, 0.0);
+        let small_ptr = small.as_ptr();
+        ws.recycle_f64(big);
+        ws.recycle_f64(small); // LIFO top is now the small buffer
+        // a D-sized request must get the big buffer even though the small
+        // one was recycled last (LIFO would realloc here)
+        let d = ws.take_f64(1000, 0.0);
+        assert_eq!(d.as_ptr(), big_ptr, "large request must find the large buffer");
+        // and the small request gets the small buffer (best fit, not max)
+        let s = ws.take_f64(10, 0.0);
+        assert_eq!(s.as_ptr(), small_ptr, "small request must not consume a big buffer");
+        ws.recycle_f64(d);
+        ws.recycle_f64(s);
+        // scratch request takes the *largest* capacity
+        let mut wu = FwWorkspace::new();
+        let a = wu.take_u32(512, 0);
+        let a_ptr = a.as_ptr();
+        let b = wu.take_u32(8, 0); // allocated while `a` is out
+        wu.recycle_u32(a);
+        wu.recycle_u32(b); // small buffer on the LIFO top
+        let scratch = wu.take_u32_scratch();
+        assert_eq!(scratch.as_ptr(), a_ptr, "scratch wants retained capacity");
+    }
+
+    #[test]
+    fn bootstrap_cache_hits_on_key_match_only() {
+        use crate::sparse::synth::SynthConfig;
+        let ds = SynthConfig {
+            name: "boot".into(),
+            n_rows: 20,
+            n_cols: 10,
+            avg_row_nnz: 3.0,
+            zipf_exponent: 1.2,
+            n_informative: 4,
+            n_dense: 0,
+            label_noise: 0.0,
+            bias_col: true,
+        }
+        .generate(1);
+        let other = ds.clone(); // same token: clones alias the data
+        let mut ws = FwWorkspace::new();
+        let key = BootKey::of(&ds, "logistic");
+        assert!(ws.bootstrap_get(&key).is_none());
+        let q0 = vec![0.5; ds.n_rows()];
+        let a0 = vec![1.0; ds.n_cols()];
+        ws.bootstrap_put(key, &q0, &a0);
+        assert_eq!(ws.bootstrap_get(&key).unwrap().q0(), &q0[..]);
+        assert_eq!(ws.bootstrap_get(&BootKey::of(&other, "logistic")).unwrap().alpha0(), &a0[..]);
+        // different loss: miss
+        assert!(ws.bootstrap_get(&BootKey::of(&ds, "squared")).is_none());
+        // different dataset (fresh token): miss, and put evicts
+        let ds2 = ds.split(0.5).0;
+        let key2 = BootKey::of(&ds2, "logistic");
+        assert!(ws.bootstrap_get(&key2).is_none());
+        ws.bootstrap_put(key2, &q0[..ds2.n_rows()], &a0);
+        assert!(ws.bootstrap_get(&key).is_none(), "single-slot cache must evict");
+        assert!(ws.bootstrap_get(&key2).is_some());
     }
 
     #[test]

@@ -31,7 +31,8 @@ COMMANDS
   train         train one model (prints metrics; --help-flags below)
   gen-data      generate a synthetic preset as a LIBSVM file
   exp NAME      regenerate a paper table/figure:
-                datasets fig1 fig2 fig3 fig4 table3 table4 eps-sweep all
+                datasets fig1 fig2 fig3 fig4 table3 table4 eps-sweep
+                lambda-path all
   oracle-check  verify the sparse solver against the PJRT dense oracle
 
 COMMON FLAGS
@@ -186,7 +187,9 @@ fn cmd_exp(args: &Args) -> Result<()> {
         .positional
         .get(1)
         .map(|s| s.as_str())
-        .context("exp requires a name: datasets fig1..fig4 table3 table4 eps-sweep all")?;
+        .context(
+            "exp requires a name: datasets fig1..fig4 table3 table4 eps-sweep lambda-path all",
+        )?;
     let cfg = ExpConfig {
         scale: args.get_f64("scale", 1.0)?,
         iters: args.get_usize("iters", 1000)?,
@@ -208,6 +211,7 @@ fn cmd_exp(args: &Args) -> Result<()> {
             "table3" => tables::table3_speedup(cfg)?,
             "table4" => tables::table4_utility(cfg)?,
             "eps-sweep" => tables::eps_sweep(cfg)?,
+            "lambda-path" => tables::lambda_path(cfg)?,
             other => bail!("unknown experiment {other:?}"),
         };
         println!("== {name} ==");
@@ -215,8 +219,17 @@ fn cmd_exp(args: &Args) -> Result<()> {
         Ok(())
     };
     if which == "all" {
-        for name in ["datasets", "fig1", "fig2", "fig3", "fig4", "table3", "table4", "eps-sweep"]
-        {
+        for name in [
+            "datasets",
+            "fig1",
+            "fig2",
+            "fig3",
+            "fig4",
+            "table3",
+            "table4",
+            "eps-sweep",
+            "lambda-path",
+        ] {
             run(name, &cfg)?;
         }
     } else {

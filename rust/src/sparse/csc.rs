@@ -7,6 +7,14 @@
 
 use super::csr::CsrMatrix;
 
+/// Raw-pointer wrapper that lets the scoped scatter threads share the
+/// output arrays. Safe to send because every write index is provably
+/// disjoint across threads (see the SAFETY comment at the write site and
+/// rust/DESIGN.md §6.3).
+#[derive(Clone, Copy)]
+struct SendPtr<T>(*mut T);
+unsafe impl<T: Send> Send for SendPtr<T> {}
+
 #[derive(Clone, Debug, PartialEq)]
 pub struct CscMatrix {
     n_rows: usize,
@@ -20,118 +28,132 @@ pub struct CscMatrix {
 }
 
 impl CscMatrix {
-    /// Block-parallel transpose-convert. Counting: disjoint nnz slices
-    /// into private per-thread count arrays, merged serially (one shared
-    /// pass; falls back to column-block rescans when the private arrays
-    /// would blow the memory budget). Scatter: columns partitioned into
-    /// contiguous nnz-balanced blocks, each thread placing only the
-    /// entries whose column falls in its block into disjoint slices of
-    /// `indices`/`values` (no atomics; each thread re-reads the row
-    /// stream, but writes stay block-local). Every entry's final position
-    /// depends only on the counting sort, so the result is **identical**
-    /// to the serial [`CscMatrix::from_csr`] at any thread count.
+    /// Block-parallel transpose-convert with a **single-read scatter**
+    /// (DESIGN.md §6.3). Counting: each thread counts a disjoint chunk of
+    /// the flat column-index stream into a private count array — one
+    /// shared pass. The serial merge turns the totals into `indptr` and,
+    /// in the same sweep, each thread's counts into its per-(thread,
+    /// column) *exclusive prefix*: the cursor where chunk `t`'s entries of
+    /// column `j` start inside that column's segment. Scatter: each thread
+    /// then re-walks only **its own chunk** of the entry stream (so the
+    /// nnz stream is read exactly once per phase, independent of thread
+    /// count — the old implementation re-read the whole row stream per
+    /// thread, `O(threads × nnz)`) and writes through raw pointers into
+    /// positions that are disjoint by the prefix-sum construction. Every
+    /// entry's final position depends only on the counting sort, so the
+    /// result is **identical** to the serial [`CscMatrix::from_csr`] at
+    /// any thread count. Worker count is capped so the cursor tables stay
+    /// within a fixed memory budget — fewer threads, never re-reads.
     pub fn from_csr_threaded(csr: &CsrMatrix, threads: usize) -> Self {
-        if threads <= 1 || csr.n_cols() < 2 || csr.nnz() == 0 {
-            return Self::from_csr(csr);
-        }
         let n_rows = csr.n_rows();
         let n_cols = csr.n_cols();
         let nnz = csr.nnz();
+        // Serial fallback: trivial inputs, or an nnz so large that a
+        // single chunk's per-column count could overflow `u32`
+        // (unreachable at paper scale — row indices are `u32` — but it
+        // keeps the disjointness reasoning unconditional).
+        if threads <= 1 || n_cols < 2 || nnz == 0 || nnz > u32::MAX as usize {
+            return Self::from_csr(csr);
+        }
+        // ≤ 256 MB of transient u32 cursors: cap workers instead of
+        // rescanning. Sized so even the widest paper presets keep
+        // parallelism (KDDA D ≈ 20.2M → 3 workers, Web D ≈ 16.6M → 4)
+        // while D × many-core machines can't allocate unboundedly; the
+        // tables are freed before the function returns, and matrices this
+        // wide carry nnz buffers far larger than the cursors.
+        const COUNT_MEM_BUDGET: usize = 1 << 26;
+        let t_eff = threads.min((COUNT_MEM_BUDGET / n_cols).max(1)).min(nnz);
+        if t_eff <= 1 {
+            return Self::from_csr(csr);
+        }
+        let chunk = nnz.div_ceil(t_eff);
         let cols_flat = csr.col_indices();
+        let vals_flat = csr.values_flat();
+        let row_ptr = csr.row_ptr();
 
-        // ---- phase 1: per-column counts ---------------------------------
-        // Preferred: each thread counts a disjoint slice of the flat index
-        // stream into a private count array, merged serially — one shared
-        // pass over the nnz stream total. Falls back to column-block
-        // rescans (threads × nnz reads, but no extra memory) when the
-        // private arrays would be large (KDDA-scale D × many cores).
-        let mut counts = vec![0usize; n_cols];
-        const COUNT_MEM_BUDGET: usize = 1 << 24; // ≤ 64 MB of u32 counts total
-        let chunk_nnz = nnz.div_ceil(threads);
-        if n_cols.saturating_mul(threads) <= COUNT_MEM_BUDGET && chunk_nnz <= u32::MAX as usize
-        {
-            std::thread::scope(|s| {
-                let handles: Vec<_> = (0..threads)
-                    .map(|t| {
-                        let lo = (t * chunk_nnz).min(nnz);
-                        let hi = ((t + 1) * chunk_nnz).min(nnz);
-                        let slice = &cols_flat[lo..hi];
-                        s.spawn(move || {
-                            let mut local = vec![0u32; n_cols];
-                            for &j in slice {
-                                local[j as usize] += 1;
-                            }
-                            local
-                        })
-                    })
-                    .collect();
-                for h in handles {
-                    let local = h.join().expect("count worker panicked");
-                    for (c, l) in counts.iter_mut().zip(local) {
-                        *c += l as usize;
-                    }
-                }
-            });
-        } else {
-            let block = n_cols.div_ceil(threads);
-            std::thread::scope(|s| {
-                let mut rest: &mut [usize] = &mut counts;
-                let mut lo = 0usize;
-                while !rest.is_empty() {
-                    let len = rest.len().min(block);
-                    let (chunk, tail) = rest.split_at_mut(len);
-                    rest = tail;
-                    let hi = lo + len;
+        // ---- phase 1: one shared pass over the column stream → private
+        // per-thread counts of the same disjoint chunks the scatter will
+        // later write ----------------------------------------------------
+        let mut locals: Vec<Vec<u32>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..t_eff)
+                .map(|t| {
+                    let lo = (t * chunk).min(nnz);
+                    let hi = ((t + 1) * chunk).min(nnz);
+                    let slice = &cols_flat[lo..hi];
                     s.spawn(move || {
-                        for &j in cols_flat {
-                            let j = j as usize;
-                            if j >= lo && j < hi {
-                                chunk[j - lo] += 1;
-                            }
+                        let mut local = vec![0u32; n_cols];
+                        for &j in slice {
+                            local[j as usize] += 1;
                         }
-                    });
-                    lo = hi;
-                }
-            });
+                        local
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("count worker panicked"))
+                .collect()
+        });
+
+        // ---- merge: column totals → indptr, and — same sweep — each
+        // thread's counts → its exclusive per-column prefix (its scatter
+        // cursor start within the column segment) ------------------------
+        let mut col_nnz = vec![0u32; n_cols];
+        for local in locals.iter_mut() {
+            for (c, tot) in local.iter_mut().zip(col_nnz.iter_mut()) {
+                let cnt = *c;
+                *c = *tot;
+                *tot += cnt;
+            }
         }
         let mut indptr = vec![0usize; n_cols + 1];
         for j in 0..n_cols {
-            indptr[j + 1] = indptr[j] + counts[j];
+            indptr[j + 1] = indptr[j] + col_nnz[j] as usize;
         }
 
-        // ---- phase 2: scatter into nnz-balanced column blocks ----------
+        // ---- phase 2: single-read scatter — each thread walks only its
+        // own chunk of the entry stream, recovering row indices from the
+        // CSR indptr, and writes through per-(thread, column) cursors ----
         let mut indices = vec![0u32; nnz];
         let mut values = vec![0.0f32; nnz];
-        let ranges = super::balanced_ranges(&indptr, threads);
+        let idx_out = SendPtr(indices.as_mut_ptr());
+        let val_out = SendPtr(values.as_mut_ptr());
+        let indptr_ref: &[usize] = &indptr;
         std::thread::scope(|s| {
-            let mut rest_i: &mut [u32] = &mut indices;
-            let mut rest_v: &mut [f32] = &mut values;
-            let indptr_ref: &[usize] = &indptr;
-            for r in ranges {
-                let span = indptr_ref[r.end] - indptr_ref[r.start];
-                let (ci, ti) = rest_i.split_at_mut(span);
-                let (cv, tv) = rest_v.split_at_mut(span);
-                rest_i = ti;
-                rest_v = tv;
-                if r.is_empty() {
+            for (t, mut cursor) in locals.into_iter().enumerate() {
+                let lo = (t * chunk).min(nnz);
+                let hi = ((t + 1) * chunk).min(nnz);
+                if lo >= hi {
                     continue;
                 }
                 s.spawn(move || {
-                    let base = indptr_ref[r.start];
-                    // block-local cursors, offset so writes index `ci`/`cv`
-                    let mut cursor: Vec<usize> =
-                        indptr_ref[r.start..r.end].iter().map(|&p| p - base).collect();
-                    for i in 0..n_rows {
-                        let (idx, val) = csr.row_raw(i);
-                        for (&j, &v) in idx.iter().zip(val) {
-                            let j = j as usize;
-                            if j >= r.start && j < r.end {
-                                let p = cursor[j - r.start];
-                                ci[p] = i as u32;
-                                cv[p] = v;
-                                cursor[j - r.start] = p + 1;
+                    // last row starting at or before flat position `lo`
+                    let mut i = row_ptr.partition_point(|&p| p <= lo) - 1;
+                    let mut p = lo;
+                    while p < hi {
+                        while row_ptr[i + 1] <= p {
+                            i += 1; // skip empty (and exhausted) rows
+                        }
+                        let end = row_ptr[i + 1].min(hi);
+                        let iu = i as u32;
+                        for (&j, &v) in cols_flat[p..end].iter().zip(&vals_flat[p..end]) {
+                            let ju = j as usize;
+                            let dst = indptr_ref[ju] + cursor[ju] as usize;
+                            cursor[ju] += 1;
+                            // SAFETY: thread `t` writes column `j` exactly
+                            // at offsets [prefix_t(j), prefix_t(j) +
+                            // count_t(j)) within the column's segment,
+                            // where prefix_t is the exclusive prefix of
+                            // the phase-1 private counts — disjoint across
+                            // threads by construction, and their union is
+                            // [indptr[j], indptr[j+1]) ⊂ [0, nnz). No two
+                            // threads can ever produce the same `dst`.
+                            unsafe {
+                                *idx_out.0.add(dst) = iu;
+                                *val_out.0.add(dst) = v;
                             }
                         }
+                        p = end;
                     }
                 });
             }
@@ -343,6 +365,50 @@ mod tests {
         for threads in [2usize, 3, 8, 64] {
             let par = CscMatrix::from_csr_threaded(&csr, threads);
             assert_eq!(par, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn threaded_conversion_handles_ragged_and_empty_extremes() {
+        // Adversarial shape for the single-read scatter: leading/trailing
+        // empty columns, empty rows (chunk boundaries must skip them), one
+        // hot column holding most of the mass (many threads write the same
+        // column via their disjoint prefix cursors), and ragged rows.
+        let n_rows = 64usize;
+        let n_cols = 12usize;
+        let mut indptr = vec![0usize];
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        for i in 0..n_rows {
+            match i % 4 {
+                0 => {} // empty row
+                1 => {
+                    // hot column 5 only
+                    indices.push(5);
+                    values.push(i as f32);
+                }
+                2 => {
+                    // ragged: hot column + a tail column (never 0 or 11)
+                    indices.extend([1, 5, 9]);
+                    values.extend([1.0, 2.0 + i as f32, 3.0]);
+                }
+                _ => {
+                    indices.extend([5, 10]);
+                    values.extend([-(i as f32), 0.5]);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        let csr = CsrMatrix::from_parts(n_rows, n_cols, indptr, indices, values);
+        let serial = CscMatrix::from_csr(&csr);
+        assert_eq!(serial.col_nnz(0), 0, "want empty leading column");
+        assert_eq!(serial.col_nnz(11), 0, "want empty trailing column");
+        for threads in [1usize, 2, 4, 16, 33] {
+            assert_eq!(
+                CscMatrix::from_csr_threaded(&csr, threads),
+                serial,
+                "threads={threads}"
+            );
         }
     }
 

@@ -81,6 +81,22 @@ impl CsrMatrix {
         &self.indices
     }
 
+    /// The flat value stream (length `nnz`, row-major order, parallel to
+    /// [`CsrMatrix::col_indices`]) — used by the parallel CSC transpose
+    /// build's single-read scatter phase.
+    #[inline]
+    pub fn values_flat(&self) -> &[f32] {
+        &self.values
+    }
+
+    /// The row start offsets (length `n_rows + 1`, monotone prefix-nnz) —
+    /// lets the scatter phase recover the row index of any flat stream
+    /// position without re-reading rows.
+    #[inline]
+    pub fn row_ptr(&self) -> &[usize] {
+        &self.indptr
+    }
+
     /// `out = X · w` (dense `w`, length `n_cols`), accumulated in f64.
     pub fn matvec(&self, w: &[f64], out: &mut [f64]) {
         assert_eq!(w.len(), self.n_cols);

@@ -70,6 +70,12 @@ pub struct Dataset {
     pub labels: Vec<f32>,
     /// Optional human-readable name (preset / file stem).
     pub name: String,
+    /// Process-unique identity token assigned at construction and shared
+    /// by clones (which alias the same immutable content). Keys the path
+    /// engine's bootstrap cache (see rust/DESIGN.md §6.5); mutating a
+    /// `Dataset`'s fields in place after construction is outside that
+    /// cache's contract.
+    token: u64,
 }
 
 impl Dataset {
@@ -78,7 +84,14 @@ impl Dataset {
         // Block-parallel transpose for paper-scale matrices; the output is
         // bit-identical to the serial counting sort at any thread count.
         let csc = CscMatrix::from_csr_threaded(&csr, auto_threads(csr.nnz()));
-        Self { csr, csc, labels, name: name.into() }
+        static NEXT_TOKEN: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
+        let token = NEXT_TOKEN.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Self { csr, csc, labels, name: name.into(), token }
+    }
+
+    /// The dataset's identity token (see the field docs).
+    pub fn token(&self) -> u64 {
+        self.token
     }
 
     pub fn n_rows(&self) -> usize {
@@ -177,6 +190,14 @@ mod tests {
             }
         }
         assert_eq!(d.csr.nnz(), d.csc.nnz());
+    }
+
+    #[test]
+    fn tokens_unique_per_construction_shared_by_clones() {
+        let a = tiny();
+        let b = tiny();
+        assert_ne!(a.token(), b.token(), "distinct constructions must differ");
+        assert_eq!(a.token(), a.clone().token(), "clones alias the same data");
     }
 
     #[test]

@@ -255,6 +255,7 @@ fn assert_outputs_bit_identical(a: &FwOutput, b: &FwOutput, what: &str) {
     }
     assert_eq!(a.final_gap.to_bits(), b.final_gap.to_bits(), "{what}: final gap");
     assert_eq!(a.flops, b.flops, "{what}: flops");
+    assert_eq!(a.bootstrap_flops, b.bootstrap_flops, "{what}: bootstrap flops");
     assert_eq!(a.selector_stats, b.selector_stats, "{what}: selector stats");
     assert_eq!(a.trace.len(), b.trace.len(), "{what}: trace length");
     for (ta, tb) in a.trace.iter().zip(&b.trace) {
@@ -315,6 +316,102 @@ fn prop_workspace_reuse_bit_identical() {
                     &format!("standard round {round}"),
                 );
             }
+        }
+    });
+}
+
+/// A `run_path` output must equal an independent fresh run at the same λ
+/// bit-for-bit, except that every cumulative FLOP count is lower by
+/// exactly the bootstrap work the warm run skipped (zero for a cold one).
+fn assert_path_output_matches(fresh: &FwOutput, warm: &FwOutput, what: &str) {
+    assert!(
+        fresh.bootstrap_flops >= warm.bootstrap_flops,
+        "{what}: a path run cannot do more bootstrap work than a fresh one"
+    );
+    let offset = fresh.bootstrap_flops - warm.bootstrap_flops;
+    assert_eq!(fresh.weights.dim(), warm.weights.dim(), "{what}: dim");
+    let pairs = fresh.weights.as_slice().iter().zip(warm.weights.as_slice());
+    for (i, (x, y)) in pairs.enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: weight {i} differs: {x} vs {y}");
+    }
+    assert_eq!(fresh.final_gap.to_bits(), warm.final_gap.to_bits(), "{what}: final gap");
+    assert_eq!(warm.flops + offset, fresh.flops, "{what}: flops modulo bootstrap");
+    assert_eq!(fresh.selector_stats, warm.selector_stats, "{what}: selector stats");
+    assert_eq!(fresh.trace.len(), warm.trace.len(), "{what}: trace length");
+    for (ta, tb) in fresh.trace.iter().zip(&warm.trace) {
+        assert_eq!(ta.iter, tb.iter, "{what}: trace iter");
+        assert_eq!(ta.selected, tb.selected, "{what}: trace selection");
+        assert_eq!(ta.gap.to_bits(), tb.gap.to_bits(), "{what}: trace gap");
+        assert_eq!(tb.flops + offset, ta.flops, "{what}: trace flops modulo bootstrap");
+    }
+}
+
+/// **The path engine is a pure amortization**: for λ grids of length
+/// {1, 3, 7}, every `run_path` output is bit-identical to the
+/// corresponding independent `run` with a fresh workspace (modulo the
+/// skipped-bootstrap FLOP offset, which the helper pins down exactly), on
+/// both solvers and across random selectors. Exactly one bootstrap is
+/// performed per (workspace, dataset): the first fast λ is cold, every
+/// later λ — and the standard solver's whole path, which reuses the fast
+/// solver's cached bootstrap through the same workspace — records zero
+/// bootstrap FLOPs.
+#[test]
+fn prop_run_path_bit_identical_and_single_bootstrap() {
+    forall(6, |rng| {
+        let ds = random_dataset(rng);
+        let iters = 20 + rng.next_below(60) as usize;
+        let base = random_selector_cfg(rng, iters, 1.0 + rng.next_f64() * 10.0);
+        for k in [1usize, 3, 7] {
+            let lambdas: Vec<f64> =
+                (0..k).map(|i| 1.0 + i as f64 + rng.next_f64() * 3.0).collect();
+            let mut ws = FwWorkspace::new();
+            let outs = FastFrankWolfe::new(&ds, base.clone()).run_path(&lambdas, &mut ws);
+            assert_eq!(outs.len(), k);
+            assert!(outs[0].bootstrap_flops > 0, "first λ must be the one cold bootstrap");
+            assert!(
+                outs[1..].iter().all(|o| o.bootstrap_flops == 0),
+                "warm λ solves must do zero bootstrap work"
+            );
+            for (i, (out, &lam)) in outs.iter().zip(&lambdas).enumerate() {
+                let fresh =
+                    FastFrankWolfe::new(&ds, FwConfig { lambda: lam, ..base.clone() }).run();
+                assert_path_output_matches(&fresh, out, &format!("fast k={k} i={i}"));
+            }
+            if !matches!(base.selector, SelectorKind::FibHeap | SelectorKind::BinHeap) {
+                // same workspace, same dataset+loss: the standard solver's
+                // t = 1 dense recompute is served entirely from the cache
+                // the fast path just populated (cross-solver sharing is
+                // bit-safe because the CSC- and CSR-driven α₀ agree
+                // bitwise — property-tested in sparse::csc).
+                let outs =
+                    StandardFrankWolfe::new(&ds, base.clone()).run_path(&lambdas, &mut ws);
+                assert!(outs.iter().all(|o| o.bootstrap_flops == 0));
+                for (i, (out, &lam)) in outs.iter().zip(&lambdas).enumerate() {
+                    let fresh =
+                        StandardFrankWolfe::new(&ds, FwConfig { lambda: lam, ..base.clone() })
+                            .run();
+                    assert_path_output_matches(&fresh, out, &format!("std k={k} i={i}"));
+                }
+            }
+        }
+    });
+}
+
+/// **Single-read CSC scatter**: the cursor-based `from_csr_threaded` must
+/// produce a layout-identical matrix to the serial counting sort at any
+/// thread count, on ragged/empty-column inputs.
+#[test]
+fn prop_csc_threaded_scatter_layout_identical() {
+    use dpfw::sparse::csc::CscMatrix;
+    forall(10, |rng| {
+        let ds = random_dataset(rng); // Zipf columns ⇒ ragged + empty cols
+        let serial = CscMatrix::from_csr(&ds.csr);
+        for threads in [1usize, 4, 16] {
+            assert_eq!(
+                CscMatrix::from_csr_threaded(&ds.csr, threads),
+                serial,
+                "threads={threads}"
+            );
         }
     });
 }
