@@ -8,5 +8,11 @@ fn main() {
         privacy: Some(PrivacyParams { epsilon: 0.5, delta: 1e-6 }),
         selector: SelectorKind::Bsls, seed: 1, trace_every: 0, lipschitz: None, threads: 0,
     }).run();
-    println!("gap {:.3e} wall {:.0} ms flops {:.2e}", out.final_gap, out.wall_ms, out.flops as f64);
+    println!(
+        "gap {:.3e} wall {:.0} ms flops {:.2e} bytes {:.2e} ({})",
+        out.final_gap, out.wall_ms, out.flops as f64, out.bytes_moved as f64, ds.index_kind(),
+    );
+    if let Some(p) = out.phase {
+        println!("phase ns: select {} update {} notify {}", p.select_ns, p.update_ns, p.notify_ns);
+    }
 }

@@ -109,10 +109,11 @@ fn main() {
     let n20_scale = if smoke { 0.01 } else { 0.05 };
     let ds = SynthConfig::preset(DatasetPreset::News20).scale(n20_scale).generate(42);
     println!(
-        "workload: news20@{n20_scale}  N={} D={} nnz={}",
+        "workload: news20@{n20_scale}  N={} D={} nnz={} index={}",
         ds.n_rows(),
         ds.n_cols(),
-        ds.nnz()
+        ds.nnz(),
+        ds.index_kind()
     );
     let n20_iters = if smoke { 200 } else { 2000usize };
     let mk = || FwConfig {
@@ -147,6 +148,89 @@ fn main() {
         "  per-iteration: cold {:.2} us, warm {:.2} us",
         cold.mean_s * 1e6 / n20_iters as f64,
         warm.mean_s * 1e6 / n20_iters as f64
+    );
+
+    // ---- bytes-moved series: compact u16-delta vs stripped u32 ---------
+    // (DESIGN.md §6.6). `bytes_moved` is deterministic, so the reduction
+    // assert runs even in smoke mode; wall-clock is recorded alongside so
+    // CI hardware accumulates the traffic-vs-time trajectory.
+    section("news20 + BSLS: compact u16-delta vs u32 substrate");
+    let mut ds_u32 = ds.clone();
+    ds_u32.strip_compact();
+    let mut traffic = (0u64, 0u64); // (compact, u32) bytes_moved
+    let compact_stats =
+        Bench::new(format!("news20 alg2+bsls T={n20_iters} (u16-delta substrate)"))
+            .runs(n20_runs)
+            .run_stats(|| {
+                let out = FastFrankWolfe::new(&ds, mk()).run();
+                traffic.0 = out.bytes_moved;
+                out.flops
+            });
+    let u32_stats = Bench::new(format!("news20 alg2+bsls T={n20_iters} (u32 substrate)"))
+        .runs(n20_runs)
+        .run_stats(|| {
+            let out = FastFrankWolfe::new(&ds_u32, mk()).run();
+            traffic.1 = out.bytes_moved;
+            out.flops
+        });
+    let per_iter = |b: u64| b as f64 / n20_iters as f64;
+    assert!(
+        traffic.0 < traffic.1,
+        "sanity: compact substrate must move fewer bytes ({} vs {})",
+        traffic.0,
+        traffic.1
+    );
+    let traffic_extra = |variant: &str, bytes: u64| {
+        let mut e = n20_extra(variant);
+        e.push(("index_kind", if variant == "u16-delta" { "u16-delta" } else { "u32" }.into()));
+        e.push(("bytes_moved", bytes.to_string()));
+        e.push(("bytes_per_iter", format!("{:.1}", per_iter(bytes))));
+        e
+    };
+    report.record(
+        "news20-bsls-compact-substrate",
+        compact_stats,
+        &traffic_extra("u16-delta", traffic.0),
+    );
+    report.record("news20-bsls-u32-substrate", u32_stats, &traffic_extra("u32", traffic.1));
+    println!(
+        "  bytes/iter: u16-delta {:.0}, u32 {:.0} ({:.1}% of baseline)",
+        per_iter(traffic.0),
+        per_iter(traffic.1),
+        100.0 * traffic.0 as f64 / traffic.1 as f64
+    );
+
+    // ---- phase breakdown (structured, from FwOutput::phase) ------------
+    // One instrumented probe run outside the timed series, so the
+    // Instant reads never pollute the regression numbers.
+    std::env::set_var("DPFW_PHASE_TIMING", "1");
+    let probe = FastFrankWolfe::new(&ds, mk()).run();
+    std::env::remove_var("DPFW_PHASE_TIMING");
+    let phase = probe.phase.expect("DPFW_PHASE_TIMING was set");
+    let probe_stats = bench_harness::BenchStats {
+        mean_s: probe.wall_ms / 1e3,
+        min_s: probe.wall_ms / 1e3,
+        stddev_s: 0.0,
+        runs: 1,
+    };
+    report.record(
+        "news20-bsls-phases",
+        probe_stats,
+        &[
+            ("dataset", format!("news20@{n20_scale}")),
+            ("selector", "bsls".into()),
+            ("iters", n20_iters.to_string()),
+            ("select_ns", phase.select_ns.to_string()),
+            ("update_ns", phase.update_ns.to_string()),
+            ("notify_ns", phase.notify_ns.to_string()),
+            ("bytes_moved", probe.bytes_moved.to_string()),
+        ],
+    );
+    println!(
+        "  phase ns/iter: select {:.0}, update {:.0}, notify {:.0}",
+        phase.select_ns as f64 / n20_iters as f64,
+        phase.update_ns as f64 / n20_iters as f64,
+        phase.notify_ns as f64 / n20_iters as f64
     );
 
     report.write().expect("write bench json");
@@ -193,9 +277,12 @@ fn main() {
     path_report.record("path-independent", ind, &path_extra("independent", per_lam(ind)));
     // run_path, cold: a fresh workspace per timed call (first λ pays the
     // bootstrap, the other K−1 share it)
+    let mut path_flops = (0u64, 0u64); // (cold, warm) summed FLOP totals
     let cold_path = Bench::new("run_path (cold workspace)").runs(path_runs).run_stats(|| {
         let mut ws = FwWorkspace::new();
-        FastFrankWolfe::new(&ds, path_cfg(lambdas[0])).run_path(&lambdas, &mut ws).len()
+        let outs = FastFrankWolfe::new(&ds, path_cfg(lambdas[0])).run_path(&lambdas, &mut ws);
+        path_flops.0 = outs.iter().map(|o| o.flops).sum();
+        outs.len()
     });
     path_report.record(
         "path-run-path-cold",
@@ -206,12 +293,24 @@ fn main() {
     // harness warmup, so even the first λ hits the bootstrap cache)
     let mut path_ws = FwWorkspace::new();
     let warm_path = Bench::new("run_path (warm workspace)").runs(path_runs).run_stats(|| {
-        FastFrankWolfe::new(&ds, path_cfg(lambdas[0])).run_path(&lambdas, &mut path_ws).len()
+        let outs =
+            FastFrankWolfe::new(&ds, path_cfg(lambdas[0])).run_path(&lambdas, &mut path_ws);
+        path_flops.1 = outs.iter().map(|o| o.flops).sum();
+        outs.len()
     });
     path_report.record(
         "path-run-path-warm",
         warm_path,
         &path_extra("run_path-warm", per_lam(warm_path)),
+    );
+    // Sanity (deterministic, so it holds even under DPFW_BENCH_SMOKE=1
+    // where wall-clock would be noise): a warm path skips the one cold
+    // bootstrap, so its total counted work must be strictly lower.
+    assert!(
+        path_flops.1 < path_flops.0,
+        "sanity: warm path totals ({}) must be below cold totals ({})",
+        path_flops.1,
+        path_flops.0
     );
     println!(
         "  per-λ: independent {:.1} us, run_path cold {:.1} us, warm {:.1} us \

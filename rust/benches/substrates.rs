@@ -50,6 +50,33 @@ fn main() {
         acc
     });
 
+    section("compact u16-delta substrate vs u32 (same kernels)");
+    let mut plain = ds.clone();
+    plain.strip_compact();
+    println!(
+        "index bytes: {} ({}) vs {} (u32) — {:.1}%",
+        ds.csr.index_bytes_total(),
+        ds.index_kind(),
+        plain.csr.index_bytes_total(),
+        100.0 * ds.csr.index_bytes_total() as f64 / plain.csr.index_bytes_total().max(1) as f64
+    );
+    Bench::new("csr matvec (u16-delta)").runs(10).run(|| {
+        ds.csr.matvec(&w, &mut v);
+        v[0]
+    });
+    Bench::new("csr matvec (u32)").runs(10).run(|| {
+        plain.csr.matvec(&w, &mut v);
+        v[0]
+    });
+    Bench::new("csc matvec_t (u16-delta)").runs(10).run(|| {
+        ds.csc.matvec_t(&q, &mut alpha);
+        alpha[0]
+    });
+    Bench::new("csc matvec_t (u32)").runs(10).run(|| {
+        plain.csc.matvec_t(&q, &mut alpha);
+        alpha[0]
+    });
+
     section("construction");
     Bench::new("csc from_csr (counting sort)").runs(5).run(|| CscMatrix::from_csr(&ds.csr).nnz());
     Bench::new("synth generate rcv1@0.1").runs(3).run(|| {

@@ -75,14 +75,15 @@ pub struct FwConfig {
     /// Override the loss Lipschitz constant (None = take it from the loss).
     pub lipschitz: Option<f64>,
     /// Worker threads for the solver's block-parallel phases (the dense
-    /// bootstrap `α = Xᵀq̄`). `0` = automatic: available parallelism for
-    /// paper-scale inputs, serial below `sparse::PAR_MIN_NNZ` where
-    /// thread-spawn overhead dominates. An explicit count is honored
-    /// verbatim. Any value produces **bit-identical** output — the
-    /// parallel kernels partition work so each f64 is summed in the same
-    /// order regardless of thread count (property-tested) — so this is
-    /// purely a performance/oversubscription knob (e.g. the coordinator
-    /// pins its workers' jobs to 1).
+    /// bootstrap `α = Xᵀq̄`). `0` = automatic (available parallelism).
+    /// The parallel kernels themselves fall back to serial below
+    /// `sparse::PAR_MIN_NNZ`, where thread-spawn overhead dominates —
+    /// the gate lives inside the `_par` entry points, so any requested
+    /// count is safe on tiny inputs. Any value produces **bit-identical**
+    /// output — the parallel kernels partition work so each f64 is summed
+    /// in the same order regardless of thread count (property-tested) —
+    /// so this is purely a performance/oversubscription knob (e.g. the
+    /// coordinator pins its workers' jobs to 1).
     pub threads: usize,
 }
 

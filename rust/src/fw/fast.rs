@@ -15,7 +15,11 @@
 //!   footnote-2 re-iteration without its second full CSC-column + CSR-row
 //!   traversal. One pass over the gathers instead of two: `O(S_r·S_c)`
 //!   touched memory once per iteration, which matters because the scan is
-//!   memory-bound (see `sparse/csr.rs`).
+//!   memory-bound (see `sparse/csr.rs`). The scan itself runs through the
+//!   shared [`crate::fw::scan`] kernels: compact `u16-delta` index
+//!   streams when the dataset carries them (half the index traffic),
+//!   software prefetch on the `α`/`stamp`/`v̂`/`q̄` gathers, and modeled
+//!   byte-traffic accounting (`FwOutput::bytes_moved`, DESIGN.md §6.6).
 //! * **Sparse gap maintenance** (lines 17, 21, 27): `g̃ = ⟨α, w⟩` is
 //!   rescaled by `(1−η)`, bumped by the single-coordinate term, and — one
 //!   step beyond the paper's `O(S_c)` line 27 — each row's contribution
@@ -50,10 +54,14 @@
 use std::time::Instant;
 
 use crate::fw::config::FwConfig;
-use crate::fw::flops::{FlopCounter, FLOPS_SIGMOID};
+use crate::fw::flops::{
+    FlopCounter, BYTES_F32_READ, BYTES_F64_READ, BYTES_F64_RMW, BYTES_U32_RMW,
+    FLOPS_SIGMOID,
+};
 use crate::fw::loss::{Logistic, Loss};
+use crate::fw::scan;
 use crate::fw::sign;
-use crate::fw::trace::{FwOutput, TraceRecord, WeightVector};
+use crate::fw::trace::{FwOutput, PhaseTiming, TraceRecord, WeightVector};
 use crate::fw::workspace::{BootKey, Bootstrap, FwWorkspace};
 use crate::rng::Xoshiro256pp;
 use crate::sparse::Dataset;
@@ -207,12 +215,13 @@ impl<'a> FastFrankWolfe<'a> {
                 *qi = self.loss.grad(0.0, yi as f64);
             }
             flops.add_boot(n as u64 * FLOPS_SIGMOID);
+            // label reads + q̄ writes
+            flops.add_boot_bytes((BYTES_F32_READ + BYTES_F64_READ) * n as u64);
             // The one O(N·S_c) pass of the whole run: column-block parallel,
             // bit-identical to the serial CSR-driven product (see
-            // `CscMatrix::matvec_t_par`). An explicit `threads` is honored
-            // verbatim (the thread-invariance property tests rely on that);
-            // auto (0) applies the PAR_MIN_NNZ gate so tiny problems don't pay
-            // thread-spawn overhead.
+            // `CscMatrix::matvec_t_par`, which also owns the PAR_MIN_NNZ
+            // serial-fallback gate — tiny problems never pay thread-spawn
+            // overhead regardless of the requested count).
             let boot_threads = if self.cfg.threads == 0 {
                 crate::sparse::auto_threads(csr.nnz())
             } else {
@@ -220,6 +229,12 @@ impl<'a> FastFrankWolfe<'a> {
             };
             csc.matvec_t_par(&st.q, &mut st.alpha, boot_threads);
             flops.add_boot(2 * csr.nnz() as u64);
+            // full CSC sweep: index + value streams, q̄ gathers, α writes
+            flops.add_boot_bytes(
+                csc.index_bytes_total()
+                    + (BYTES_F32_READ + BYTES_F64_READ) * csr.nnz() as u64
+                    + BYTES_F64_READ * d as u64,
+            );
             if boot == Bootstrap::Shared {
                 ws.bootstrap_put(boot_key, &st.q, &st.alpha);
             }
@@ -237,13 +252,21 @@ impl<'a> FastFrankWolfe<'a> {
         let mut stamp = ws.take_u32(d, 0);
         let mut epoch = 0u32;
         let mut touched = ws.take_u32_scratch();
+        // decode scratch for the compact u16-delta substrate (DESIGN.md
+        // §6.6): the column's row indices and each row's column indices
+        // are decoded into these before the gather loops. Pooled like
+        // every other buffer; untouched on the u32 substrate.
+        let mut col_scratch = ws.take_u32_scratch();
+        let mut row_scratch = ws.take_u32_scratch();
 
         // Phase timers (set DPFW_PHASE_TIMING=1): where iteration time
         // goes — selection vs the fused sparse scan vs draining the
         // touched-list into the queue. The §Perf pass drives its decisions
-        // off this breakdown. Pre-fusion, `notify` was a second traversal
-        // of the same nonzeros and cost about as much as `update`; it is
-        // now the O(touched) drain only.
+        // off this breakdown, which lands structured on
+        // `FwOutput::phase` (and from there in the bench JSON).
+        // Pre-fusion, `notify` was a second traversal of the same nonzeros
+        // and cost about as much as `update`; it is now the O(touched)
+        // drain only.
         let timing = std::env::var_os("DPFW_PHASE_TIMING").is_some();
         let (mut ns_select, mut ns_update, mut ns_notify) = (0u128, 0u128, 0u128);
 
@@ -279,8 +302,23 @@ impl<'a> FastFrankWolfe<'a> {
                 epoch = 1;
             }
             touched.clear();
-            let (rows, xvals) = csc.col_raw(j);
-            for (&i_u32, &xij) in rows.iter().zip(xvals) {
+            let (col_seg, xvals) = csc.col_seg(j);
+            let col_nnz = xvals.len() as u64;
+            // §6.6 traffic model — column scan: index + value streams,
+            // then per row a v̂ read-modify-write, a q̄ read, a label read.
+            flops.add_bytes(
+                col_seg.index_bytes()
+                    + (2 * BYTES_F32_READ + BYTES_F64_RMW + BYTES_F64_READ) * col_nnz,
+            );
+            let rows = scan::resolve(col_seg, &mut col_scratch);
+            for (r, (&i_u32, &xij)) in rows.iter().zip(xvals).enumerate() {
+                // hide the margin-state gather latency: the index stream
+                // tells us which v̂/q̄ slots the scan needs PF_DIST rows
+                // from now, so start their cache fills here
+                if let Some(&ip) = rows.get(r + scan::PF_DIST) {
+                    scan::prefetch_read(&st.hat_v, ip as usize);
+                    scan::prefetch_read(&st.q, ip as usize);
+                }
                 let i = i_u32 as usize;
                 // v̂_i += η·s·X[i,j]/w_m   (so v_i = w_m·v̂_i is exact)
                 st.hat_v[i] += vcoef * xij as f64;
@@ -291,21 +329,31 @@ impl<'a> FastFrankWolfe<'a> {
                     continue;
                 }
                 st.q[i] += gamma;
-                // α += γ · X[i,:]; the stamp marks coordinates whose α
+                // α += γ · X[i,:]; the kernel stamps coordinates whose α
                 // changes this iteration (rows with γ = 0 leave α — and
                 // hence the queue — untouched, so skipping them here is
                 // exactly the old second-pass behaviour: notify was a
                 // no-op for unchanged values).
-                let (cols, rvals) = csr.row_raw(i);
-                for (&k, &xik) in cols.iter().zip(rvals) {
-                    let ku = k as usize;
-                    st.alpha[ku] += gamma * xik as f64;
-                    if stamp[ku] != epoch {
-                        stamp[ku] = epoch;
-                        touched.push(k);
-                    }
-                }
-                flops.add(2 * cols.len() as u64 + 1);
+                let (row_seg, rvals) = csr.row_seg(i);
+                let row_nnz = rvals.len() as u64;
+                // q̄ write-back + row streams + per entry an α rmw and a
+                // stamp rmw
+                flops.add_bytes(
+                    BYTES_F64_READ
+                        + row_seg.index_bytes()
+                        + (BYTES_F32_READ + BYTES_F64_RMW + BYTES_U32_RMW) * row_nnz,
+                );
+                let cols = scan::resolve(row_seg, &mut row_scratch);
+                scan::update_touch(
+                    cols,
+                    rvals,
+                    gamma,
+                    &mut st.alpha,
+                    &mut stamp,
+                    epoch,
+                    &mut touched,
+                );
+                flops.add(2 * row_nnz + 1);
                 // g̃ += γ·⟨X[i,:], w⟩ = γ·v_i  (see module docs)
                 st.g_base += gamma * v_new;
                 flops.add(2);
@@ -320,6 +368,8 @@ impl<'a> FastFrankWolfe<'a> {
             for &k in touched.iter() {
                 selector.notify(k as usize, st.alpha[k as usize], &mut flops);
             }
+            // touched-list reads + the α re-reads handed to the selector
+            flops.add_bytes((4 + BYTES_F64_READ) * touched.len() as u64);
             if let Some(p) = p0 {
                 ns_notify += p.elapsed().as_nanos();
             }
@@ -340,6 +390,7 @@ impl<'a> FastFrankWolfe<'a> {
                     iter: t,
                     gap,
                     flops: flops.total(),
+                    bytes: flops.bytes(),
                     pops: selector.stats().pops,
                     selected: j,
                     wall_ns: start.elapsed().as_nanos(),
@@ -366,6 +417,7 @@ impl<'a> FastFrankWolfe<'a> {
             iter: t_total - 1,
             gap,
             flops: flops.total(),
+            bytes: flops.bytes(),
             pops: selector.stats().pops,
             selected: usize::MAX,
             wall_ns: start.elapsed().as_nanos(),
@@ -375,7 +427,14 @@ impl<'a> FastFrankWolfe<'a> {
             final_gap: gap,
             flops: flops.total(),
             bootstrap_flops: flops.bootstrap(),
+            bytes_moved: flops.bytes(),
+            bootstrap_bytes: flops.bootstrap_bytes(),
             wall_ms,
+            phase: timing.then(|| PhaseTiming {
+                select_ns: ns_select as u64,
+                update_ns: ns_update as u64,
+                notify_ns: ns_notify as u64,
+            }),
             selector_stats: selector.stats(),
             trace,
             iters_run: t_total - 1,
@@ -387,6 +446,8 @@ impl<'a> FastFrankWolfe<'a> {
         ws.recycle_f64(st.alpha);
         ws.recycle_u32(stamp);
         ws.recycle_u32(touched);
+        ws.recycle_u32(col_scratch);
+        ws.recycle_u32(row_scratch);
         ws.recycle_selector(selector, d, exp_scale, nm_scale);
         out
     }
@@ -595,6 +656,47 @@ mod tests {
         for (a, b) in outs.iter().zip(&outs2) {
             assert_eq!(a.weights, b.weights);
         }
+    }
+
+    /// The compact u16-delta substrate is invisible to the trajectory:
+    /// stripping it changes the reported byte traffic (strictly down on
+    /// the compact side) and *nothing else*, bit for bit.
+    #[test]
+    fn compact_substrate_bit_identical_to_u32() {
+        let ds = small_ds(19);
+        assert_eq!(ds.index_kind(), "u16-delta");
+        let mut plain = ds.clone();
+        plain.strip_compact();
+        let cfg = FwConfig { iters: 150, lambda: 6.0, trace_every: 10, ..Default::default() };
+        let a = FastFrankWolfe::new(&ds, cfg.clone()).run();
+        let b = FastFrankWolfe::new(&plain, cfg).run();
+        assert_eq!(a.weights, b.weights);
+        assert_eq!(a.final_gap.to_bits(), b.final_gap.to_bits());
+        assert_eq!(a.flops, b.flops, "FLOP accounting is substrate-invariant");
+        assert!(
+            a.bytes_moved < b.bytes_moved,
+            "compact must move fewer bytes: {} vs {}",
+            a.bytes_moved,
+            b.bytes_moved
+        );
+        assert!(a.bootstrap_bytes < b.bootstrap_bytes);
+    }
+
+    #[test]
+    fn phase_timing_env_var_populates_structured_output() {
+        let ds = small_ds(23);
+        let cfg = FwConfig { iters: 60, lambda: 5.0, ..Default::default() };
+        assert!(
+            FastFrankWolfe::new(&ds, cfg.clone()).run().phase.is_none(),
+            "timing off by default"
+        );
+        // set_var is safe (and race-free enough) here: rust 2021, and the
+        // briefly-visible var only toggles instrumentation
+        std::env::set_var("DPFW_PHASE_TIMING", "1");
+        let out = FastFrankWolfe::new(&ds, cfg).run();
+        std::env::remove_var("DPFW_PHASE_TIMING");
+        let phase = out.phase.expect("timing enabled");
+        assert!(phase.select_ns + phase.update_ns + phase.notify_ns > 0);
     }
 
     #[test]

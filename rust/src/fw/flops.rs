@@ -1,15 +1,31 @@
-//! FLOP accounting — the measurement behind the paper's Figures 2 and 4.
+//! FLOP and byte-traffic accounting — the measurements behind the paper's
+//! Figures 2 and 4, and the bandwidth series of DESIGN.md §6.6.
 //!
 //! The counters use one fixed convention across both solvers so ratios are
 //! meaningful: multiply/add/compare = 1 FLOP each, transcendentals
 //! (`exp`, `ln`) = 4. Counting is by block (`add(n)` at the top of each
 //! loop) rather than per-op instrumentation, so the counted code is the
 //! same code that the wall-clock benches time.
+//!
+//! **Bytes moved** is tracked alongside FLOPs because the Alg 2 hot loop's
+//! cost *is* memory traffic: the byte counts follow the analytic model of
+//! DESIGN.md §6.6 (index + value stream bytes per scanned segment, plus
+//! [`BYTES_F64_READ`]/[`BYTES_F64_RMW`]-style costs per dense slot
+//! touched), accumulated at the same call sites as the FLOP blocks. The
+//! model is deterministic — independent of thread count, workspace state,
+//! and wall clock — so byte totals participate in the same bit-identity
+//! property tests as everything else.
 
 /// Cost convention constants.
 pub const FLOPS_SIGMOID: u64 = 6; // exp(4) + add + div
 pub const FLOPS_EXP: u64 = 4;
 pub const FLOPS_LN: u64 = 4;
+
+/// Byte-traffic convention (DESIGN.md §6.6).
+pub const BYTES_F64_READ: u64 = 8;
+pub const BYTES_F64_RMW: u64 = 16; // read + write back
+pub const BYTES_F32_READ: u64 = 4;
+pub const BYTES_U32_RMW: u64 = 8; // stamp words: read + (amortized) write
 
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct FlopCounter {
@@ -21,6 +37,11 @@ pub struct FlopCounter {
     /// `bootstrap() == 0` and a `total` lower than a cold run by exactly
     /// the cold run's `bootstrap()`.
     boot: u64,
+    /// Modeled bytes moved (DESIGN.md §6.6).
+    bytes: u64,
+    /// The slice of `bytes` attributable to the dense bootstrap — the
+    /// traffic analogue of `boot`, with the same warm-run contract.
+    boot_bytes: u64,
 }
 
 impl FlopCounter {
@@ -52,9 +73,33 @@ impl FlopCounter {
         self.boot
     }
 
+    /// Record `n` modeled bytes of memory traffic.
+    #[inline]
+    pub fn add_bytes(&mut self, n: u64) {
+        self.bytes += n;
+    }
+
+    /// Record `n` bytes of bootstrap traffic (counted into the total
+    /// *and* the bootstrap category — mirrors [`FlopCounter::add_boot`]).
+    #[inline]
+    pub fn add_boot_bytes(&mut self, n: u64) {
+        self.bytes += n;
+        self.boot_bytes += n;
+    }
+
+    #[inline]
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    /// Bytes recorded through [`FlopCounter::add_boot_bytes`].
+    #[inline]
+    pub fn bootstrap_bytes(&self) -> u64 {
+        self.boot_bytes
+    }
+
     pub fn reset(&mut self) {
-        self.total = 0;
-        self.boot = 0;
+        *self = Self::default();
     }
 }
 
@@ -81,5 +126,18 @@ mod tests {
         assert_eq!(f.bootstrap(), 7);
         f.reset();
         assert_eq!(f.bootstrap(), 0);
+    }
+
+    #[test]
+    fn byte_categories_mirror_flop_categories() {
+        let mut f = FlopCounter::new();
+        f.add_bytes(100);
+        f.add_boot_bytes(40);
+        assert_eq!(f.bytes(), 140);
+        assert_eq!(f.bootstrap_bytes(), 40);
+        assert_eq!(f.total(), 0, "bytes must not leak into FLOPs");
+        f.reset();
+        assert_eq!(f.bytes(), 0);
+        assert_eq!(f.bootstrap_bytes(), 0);
     }
 }

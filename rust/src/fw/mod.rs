@@ -10,6 +10,10 @@
 //! * [`queue`] — the selector abstraction: non-private argmax, Alg 3's
 //!   Fibonacci-heap queue, Alg 4's BSLS exponential sampler, the noisy-max
 //!   ablation, and the naive `O(D)` exponential mechanism.
+//! * [`scan`] — the shared decode-and-gather kernel layer (DESIGN.md
+//!   §6.6): every hot sparse loop routes through it, consuming either the
+//!   plain `u32` or the compact `u16-delta` index substrate with explicit
+//!   software prefetch and bit-identical accumulation order.
 //! * [`workspace`] — reusable run-to-run buffer pools ([`workspace::FwWorkspace`]):
 //!   both solvers expose `run_in(&mut FwWorkspace)` so sweep drivers and
 //!   the coordinator's workers execute repeated runs without allocating
@@ -27,6 +31,7 @@ pub mod fast;
 pub mod flops;
 pub mod loss;
 pub mod queue;
+pub mod scan;
 pub mod standard;
 pub mod trace;
 pub mod workspace;

@@ -1,0 +1,288 @@
+//! The shared scan-kernel layer (DESIGN.md §6.6): every hot sparse loop in
+//! the codebase — the fast solver's fused update+notify scan, Alg 1's
+//! `matvec`/`matvec_t_add`, the CSC-driven bootstrap, the coordinator's
+//! scorer — routes its decode-and-gather through this module.
+//!
+//! Three ideas, one contract:
+//!
+//! * **Decode to scratch, gather from `u32`.** A compact
+//!   ([`crate::sparse::compact`]) segment is first decoded into a
+//!   caller-provided `u32` scratch buffer ([`resolve`]); the gather loops
+//!   then run on plain `u32` indices either way. The scratch stays
+//!   L1-resident (it is reused segment after segment), so DRAM index
+//!   traffic is the half-width `u16` stream while the gather code — and
+//!   therefore the accumulation order — is *identical* across substrates.
+//!   On the `u32` substrate [`resolve`] is a zero-cost borrow.
+//! * **Software prefetch.** The gather targets (`w[j]`, `α[k]`,
+//!   `stamp[k]`, `v̂[i]`) are random-access into arrays far larger than
+//!   cache; the index stream tells us the next addresses [`PF_DIST`]
+//!   elements early, so each kernel issues explicit prefetches that far
+//!   ahead ([`prefetch_read`], a portable shim over `_mm_prefetch` that
+//!   compiles to nothing off x86_64). Prefetching is a pure hint: it
+//!   cannot change any computed value.
+//! * **Bit-identical by construction.** Every kernel accumulates in the
+//!   exact serial order of the pre-existing loops (single accumulator,
+//!   sequential adds — the manual 4× unrolls keep one dependency chain),
+//!   so routing a call site through this module never changes its output
+//!   bits (property-tested compact-vs-u32 and against the old loops'
+//!   golden outputs), per the DESIGN.md §2 convention.
+//!
+//! Layering note: this module lives in `fw/` (it is the solver family's
+//! kernel layer) but depends only on `sparse::compact` — never on the
+//! matrix types or solvers — while `sparse::{csr,csc}` call *into* it.
+//! That one deliberate up-reference keeps a single copy of every gather
+//! loop; see DESIGN.md §6.6.
+
+use crate::sparse::compact::{decode_words, IndexSeg};
+
+/// Prefetch lookahead distance, in stream elements. Far enough that a
+/// DRAM fetch (~100 ns) completes before the gather loop (~1–2 ns/element
+/// of ALU work) arrives; near enough not to thrash L1. Tuned for the
+/// paper-preset shapes; see DESIGN.md §6.6.
+pub const PF_DIST: usize = 16;
+
+#[cfg(target_arch = "x86_64")]
+#[inline(always)]
+fn prefetch_ptr<T>(p: *const T) {
+    // SAFETY: prefetch is a non-faulting hint; the pointer is derived
+    // from an in-bounds slice element and never dereferenced here.
+    unsafe {
+        core::arch::x86_64::_mm_prefetch::<{ core::arch::x86_64::_MM_HINT_T0 }>(p.cast::<i8>())
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+#[inline(always)]
+fn prefetch_ptr<T>(p: *const T) {
+    let _ = p;
+}
+
+/// Hint the cache to load `slice[i]`; a no-op when `i` is out of bounds
+/// (stream tails) or the target has no prefetch instruction.
+#[inline(always)]
+pub fn prefetch_read<T>(slice: &[T], i: usize) {
+    if let Some(r) = slice.get(i) {
+        prefetch_ptr(r);
+    }
+}
+
+/// Materialize a segment's indices as `u32`: the borrowed stream itself
+/// on the plain substrate, or a decode into `scratch` on the compact one.
+/// `scratch` is only touched on the compact path, so passing a fresh
+/// `Vec::new()` on the `u32` substrate allocates nothing.
+#[inline]
+pub fn resolve<'a>(seg: IndexSeg<'a>, scratch: &'a mut Vec<u32>) -> &'a [u32] {
+    match seg {
+        IndexSeg::U32(idx) => idx,
+        IndexSeg::U16 { words, nnz } => {
+            decode_words(words, nnz, scratch);
+            &scratch[..]
+        }
+    }
+}
+
+/// `Σ_k vals[k]·w[idx[k]]` — the sparse·dense dot product behind
+/// `matvec`, `row_dot`, and the CSC column sweep. Single accumulator,
+/// strictly sequential adds: bit-identical to the naive loop.
+#[inline]
+pub fn dot_gather(idx: &[u32], vals: &[f32], w: &[f64]) -> f64 {
+    debug_assert_eq!(idx.len(), vals.len());
+    let n = idx.len();
+    let mut acc = 0.0f64;
+    let mut k = 0;
+    while k + 4 <= n {
+        if k + PF_DIST + 4 <= n {
+            prefetch_read(w, idx[k + PF_DIST] as usize);
+            prefetch_read(w, idx[k + PF_DIST + 1] as usize);
+            prefetch_read(w, idx[k + PF_DIST + 2] as usize);
+            prefetch_read(w, idx[k + PF_DIST + 3] as usize);
+        }
+        acc += vals[k] as f64 * w[idx[k] as usize];
+        acc += vals[k + 1] as f64 * w[idx[k + 1] as usize];
+        acc += vals[k + 2] as f64 * w[idx[k + 2] as usize];
+        acc += vals[k + 3] as f64 * w[idx[k + 3] as usize];
+        k += 4;
+    }
+    while k < n {
+        acc += vals[k] as f64 * w[idx[k] as usize];
+        k += 1;
+    }
+    acc
+}
+
+/// `out[idx[k]] += vals[k]·coef` for every k — the scattered AXPY behind
+/// `matvec_t_add`. Stream order, so repeated indices accumulate exactly
+/// as the naive loop does.
+#[inline]
+pub fn axpy_gather(idx: &[u32], vals: &[f32], coef: f64, out: &mut [f64]) {
+    debug_assert_eq!(idx.len(), vals.len());
+    let n = idx.len();
+    let mut k = 0;
+    while k + 4 <= n {
+        if k + PF_DIST + 4 <= n {
+            prefetch_read(out, idx[k + PF_DIST] as usize);
+            prefetch_read(out, idx[k + PF_DIST + 1] as usize);
+            prefetch_read(out, idx[k + PF_DIST + 2] as usize);
+            prefetch_read(out, idx[k + PF_DIST + 3] as usize);
+        }
+        out[idx[k] as usize] += vals[k] as f64 * coef;
+        out[idx[k + 1] as usize] += vals[k + 1] as f64 * coef;
+        out[idx[k + 2] as usize] += vals[k + 2] as f64 * coef;
+        out[idx[k + 3] as usize] += vals[k + 3] as f64 * coef;
+        k += 4;
+    }
+    while k < n {
+        out[idx[k] as usize] += vals[k] as f64 * coef;
+        k += 1;
+    }
+}
+
+/// The fast solver's fused row kernel (Alg 2 lines 26–28 + the line 29
+/// touched-list recording): `α[k] += γ·x_ik` along one CSR row, stamping
+/// each coordinate's *first* touch of the iteration into `touched` so the
+/// notify drain can run afterwards on final α values. Prefetches both
+/// `alpha[k]` and `stamp[k]` [`PF_DIST`] elements ahead — the two gather
+/// streams this loop is bound on.
+#[inline]
+pub fn update_touch(
+    idx: &[u32],
+    vals: &[f32],
+    gamma: f64,
+    alpha: &mut [f64],
+    stamp: &mut [u32],
+    epoch: u32,
+    touched: &mut Vec<u32>,
+) {
+    debug_assert_eq!(idx.len(), vals.len());
+    let n = idx.len();
+    // one element of the strictly sequential scan — the macro keeps the
+    // 4× unrolled and tail loops textually identical
+    macro_rules! step {
+        ($k:expr) => {{
+            let j = idx[$k];
+            let ju = j as usize;
+            alpha[ju] += gamma * vals[$k] as f64;
+            if stamp[ju] != epoch {
+                stamp[ju] = epoch;
+                touched.push(j);
+            }
+        }};
+    }
+    let mut k = 0;
+    while k + 4 <= n {
+        if k + PF_DIST + 4 <= n {
+            prefetch_read(alpha, idx[k + PF_DIST] as usize);
+            prefetch_read(stamp, idx[k + PF_DIST] as usize);
+            prefetch_read(alpha, idx[k + PF_DIST + 1] as usize);
+            prefetch_read(stamp, idx[k + PF_DIST + 1] as usize);
+            prefetch_read(alpha, idx[k + PF_DIST + 2] as usize);
+            prefetch_read(stamp, idx[k + PF_DIST + 2] as usize);
+            prefetch_read(alpha, idx[k + PF_DIST + 3] as usize);
+            prefetch_read(stamp, idx[k + PF_DIST + 3] as usize);
+        }
+        step!(k);
+        step!(k + 1);
+        step!(k + 2);
+        step!(k + 3);
+        k += 4;
+    }
+    while k < n {
+        step!(k);
+        k += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::compact::CompactIndices;
+
+    fn naive_dot(idx: &[u32], vals: &[f32], w: &[f64]) -> f64 {
+        let mut acc = 0.0;
+        for (&j, &v) in idx.iter().zip(vals) {
+            acc += v as f64 * w[j as usize];
+        }
+        acc
+    }
+
+    fn stream(n: usize, seed: u64) -> (Vec<u32>, Vec<f32>, Vec<f64>) {
+        let mut state = seed;
+        let mut idx = Vec::new();
+        let mut vals = Vec::new();
+        let mut j = 0u32;
+        for _ in 0..n {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+            j += 1 + (state >> 40) as u32 % 7;
+            idx.push(j);
+            vals.push(((state >> 20) as f32 / 2.0_f32.powi(30)) - 2.0);
+        }
+        let dim = j as usize + 1;
+        let w: Vec<f64> = (0..dim).map(|k| (k as f64 * 0.13).sin()).collect();
+        (idx, vals, w)
+    }
+
+    #[test]
+    fn dot_gather_bit_identical_to_naive_all_tail_lengths() {
+        // cover every `n mod 4` remainder and the sub-PF_DIST sizes
+        for n in [0usize, 1, 2, 3, 4, 5, 7, 15, 16, 17, 63, 64, 100] {
+            let (idx, vals, w) = stream(n, 42 + n as u64);
+            let a = dot_gather(&idx, &vals, &w);
+            let b = naive_dot(&idx, &vals, &w);
+            assert_eq!(a.to_bits(), b.to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn axpy_gather_bit_identical_to_naive() {
+        for n in [0usize, 3, 16, 33, 100] {
+            let (idx, vals, w) = stream(n, 7 + n as u64);
+            let mut a = w.clone();
+            let mut b = w;
+            axpy_gather(&idx, &vals, 1.7, &mut a);
+            for (&j, &v) in idx.iter().zip(&vals) {
+                b[j as usize] += v as f64 * 1.7;
+            }
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn update_touch_matches_naive_stamp_loop() {
+        let (idx, vals, w) = stream(50, 99);
+        let dim = w.len();
+        let (mut a1, mut s1, mut t1) = (vec![0.0f64; dim], vec![0u32; dim], Vec::new());
+        let (mut a2, mut s2, mut t2) = (vec![0.0f64; dim], vec![0u32; dim], Vec::new());
+        update_touch(&idx, &vals, 0.37, &mut a1, &mut s1, 5, &mut t1);
+        for (&j, &v) in idx.iter().zip(&vals) {
+            let ju = j as usize;
+            a2[ju] += 0.37 * v as f64;
+            if s2[ju] != 5 {
+                s2[ju] = 5;
+                t2.push(j);
+            }
+        }
+        assert_eq!(t1, t2);
+        assert_eq!(s1, s2);
+        for (x, y) in a1.iter().zip(&a2) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn resolve_borrows_u32_and_decodes_u16() {
+        let (idx, _, _) = stream(40, 11);
+        let mut scratch = Vec::new();
+        let got = resolve(IndexSeg::U32(&idx), &mut scratch);
+        assert_eq!(got, &idx[..]);
+        assert!(scratch.capacity() == 0, "u32 path must not touch scratch");
+        let indptr = [0usize, idx.len()];
+        let c = CompactIndices::build(&indptr, &idx).expect("small deltas must qualify");
+        let mut scratch = Vec::new();
+        let seg = IndexSeg::U16 { words: c.seg_words(0), nnz: idx.len() };
+        assert_eq!(seg.nnz(), idx.len());
+        let got = resolve(seg, &mut scratch);
+        assert_eq!(got, &idx[..]);
+    }
+}

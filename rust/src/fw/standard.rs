@@ -14,7 +14,9 @@
 use std::time::Instant;
 
 use crate::fw::config::{FwConfig, SelectorKind};
-use crate::fw::flops::{FlopCounter, FLOPS_SIGMOID};
+use crate::fw::flops::{
+    FlopCounter, BYTES_F32_READ, BYTES_F64_READ, BYTES_F64_RMW, FLOPS_SIGMOID,
+};
 use crate::fw::loss::{Logistic, Loss};
 use crate::fw::sign;
 use crate::fw::trace::{FwOutput, TraceRecord, WeightVector};
@@ -98,6 +100,9 @@ impl<'a> StandardFrankWolfe<'a> {
         let mut v = ws.take_f64(n, 0.0);
         let mut q = ws.take_f64(n, 0.0);
         let mut alpha = ws.take_f64(d, 0.0);
+        // pooled decode scratch for the compact substrate: keeps the
+        // per-iteration matvec passes allocation-free (workspace contract)
+        let mut scratch = ws.take_u32_scratch();
         let mut trace = Vec::new();
         let mut gap = f64::NAN;
         let mut initialized = false;
@@ -120,20 +125,34 @@ impl<'a> StandardFrankWolfe<'a> {
                     None => false,
                 };
             if !cached {
-                csr.matvec(&w, &mut v); // v̄ = X w
+                csr.matvec_in(&w, &mut v, &mut scratch); // v̄ = X w
                 for i in 0..n {
                     q[i] = self.loss.grad(v[i], y[i] as f64); // q̄ = ∇L(v̄)
                 }
                 alpha.iter_mut().for_each(|a| *a = 0.0);
-                csr.matvec_t_add(&q, &mut alpha); // α = Xᵀ q̄  (ȳ fused into q̄)
+                // α = Xᵀ q̄  (ȳ fused into q̄)
+                csr.matvec_t_add_in(&q, &mut alpha, &mut scratch);
                 let cost = 4 * csr.nnz() as u64 + n as u64 * FLOPS_SIGMOID + d as u64;
+                // §6.6 traffic model: both matvec passes stream the index
+                // and value structures; per nonzero a w gather (first
+                // pass) and an α rmw (second); per row a v̄ write, the
+                // grad sweep (v̄ + label reads, q̄ write), and a q̄ gather;
+                // plus the α zeroing.
+                let nnz_u = csr.nnz() as u64;
+                let bytes = 2 * csr.index_bytes_total()
+                    + 2 * BYTES_F32_READ * nnz_u
+                    + (BYTES_F64_READ + BYTES_F64_RMW) * nnz_u
+                    + (4 * BYTES_F64_READ + BYTES_F32_READ) * n as u64
+                    + BYTES_F64_READ * d as u64;
                 if t == 1 {
                     flops.add_boot(cost);
+                    flops.add_boot_bytes(bytes);
                     if boot == Bootstrap::Shared {
                         ws.bootstrap_put(boot_key, &q, &alpha);
                     }
                 } else {
                     flops.add(cost);
+                    flops.add_bytes(bytes);
                 }
             }
             if !initialized {
@@ -160,12 +179,15 @@ impl<'a> StandardFrankWolfe<'a> {
             }
             w[j] += eta * s;
             flops.add(d as u64 + 2);
+            // ⟨α,w⟩ streams both dense vectors; the shrink is a w rmw
+            flops.add_bytes((2 * BYTES_F64_READ + BYTES_F64_RMW) * d as u64);
 
             if self.cfg.trace_every > 0 && t % self.cfg.trace_every == 0 {
                 trace.push(TraceRecord {
                     iter: t,
                     gap,
                     flops: flops.total(),
+                    bytes: flops.bytes(),
                     pops: selector.stats().pops,
                     selected: j,
                     wall_ns: start.elapsed().as_nanos(),
@@ -178,6 +200,7 @@ impl<'a> StandardFrankWolfe<'a> {
             iter: t_total - 1,
             gap,
             flops: flops.total(),
+            bytes: flops.bytes(),
             pops: selector.stats().pops,
             selected: usize::MAX,
             wall_ns: start.elapsed().as_nanos(),
@@ -189,7 +212,10 @@ impl<'a> StandardFrankWolfe<'a> {
             final_gap: gap,
             flops: flops.total(),
             bootstrap_flops: flops.bootstrap(),
+            bytes_moved: flops.bytes(),
+            bootstrap_bytes: flops.bootstrap_bytes(),
             wall_ms,
+            phase: None, // Alg 1 has no fused-scan phase breakdown
             selector_stats: selector.stats(),
             trace,
             iters_run: t_total - 1,
@@ -198,6 +224,7 @@ impl<'a> StandardFrankWolfe<'a> {
         ws.recycle_f64(v);
         ws.recycle_f64(q);
         ws.recycle_f64(alpha);
+        ws.recycle_u32(scratch);
         ws.recycle_selector(selector, d, exp_scale, nm_scale);
         out
     }

@@ -14,12 +14,31 @@ pub struct TraceRecord {
     pub gap: f64,
     /// Cumulative FLOPs when this point was recorded.
     pub flops: u64,
+    /// Cumulative modeled bytes moved (the DESIGN.md §6.6 traffic model)
+    /// when this point was recorded.
+    pub bytes: u64,
     /// Cumulative queue pops (Fibonacci/binary heap selectors; 0 others).
     pub pops: u64,
     /// Selected coordinate.
     pub selected: usize,
     /// Wall-clock nanoseconds since the run started.
     pub wall_ns: u128,
+}
+
+/// Wall-clock nanoseconds spent in each phase of the fast solver's
+/// iteration loop, accumulated across all iterations. Populated only when
+/// phase timing is enabled (`DPFW_PHASE_TIMING`, see `fw/fast.rs`) — the
+/// per-phase `Instant` reads are not free, so the default run path skips
+/// them. Consumed by the bench JSON emitters so the breakdown lands in
+/// `BENCH_iteration_cost.json` instead of only on stderr.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PhaseTiming {
+    /// Selection (line 15: argmax / heap pop / BSLS draw).
+    pub select_ns: u64,
+    /// The fused update+touch scan (lines 22–28).
+    pub update_ns: u64,
+    /// The touched-list notify drain (line 29).
+    pub notify_ns: u64,
 }
 
 /// Result of one solver run.
@@ -38,8 +57,21 @@ pub struct FwOutput {
     /// cold run's `bootstrap_flops` — the accounting stays honest instead
     /// of pretending the cached work was redone.
     pub bootstrap_flops: u64,
+    /// Modeled bytes of memory traffic for the run (DESIGN.md §6.6): the
+    /// quantity that actually governs the Alg 2 iteration cost. Like
+    /// `flops`, deterministic — substrate-dependent (the compact `u16`
+    /// index streams report genuinely fewer bytes than `u32`), but
+    /// invariant to threads, workspace state, and wall clock.
+    pub bytes_moved: u64,
+    /// The slice of `bytes_moved` spent on the dense bootstrap; `0` for a
+    /// warm path run, with the same exact-offset contract as
+    /// [`FwOutput::bootstrap_flops`].
+    pub bootstrap_bytes: u64,
     /// Wall-clock milliseconds.
     pub wall_ms: f64,
+    /// Per-phase wall-clock breakdown (fast solver, only when
+    /// `DPFW_PHASE_TIMING` is set; `None` otherwise and for Alg 1).
+    pub phase: Option<PhaseTiming>,
     /// Selector telemetry (pops / draws / step counts).
     pub selector_stats: SelectorStats,
     /// Trace points (at `trace_every` cadence plus the final iteration).

@@ -173,8 +173,9 @@ impl FwWorkspace {
         v
     }
 
-    /// A length-`len` `u32` buffer filled with `fill` (the stamp array and
-    /// the `touched` scratch both live here).
+    /// A length-`len` `u32` buffer filled with `fill` (the stamp array,
+    /// the `touched` scratch, and the compact-substrate decode buffers
+    /// all live here).
     pub(crate) fn take_u32(&mut self, len: usize, fill: u32) -> Vec<u32> {
         let mut v = take_best(&mut self.u32_pool, len);
         v.clear();
@@ -182,8 +183,9 @@ impl FwWorkspace {
         v
     }
 
-    /// An empty `u32` scratch vector with retained capacity (for the
-    /// fused-scan `touched` list, which grows and clears every iteration).
+    /// An empty `u32` scratch vector with retained capacity (the
+    /// fused-scan `touched` list and the compact-substrate column/row
+    /// decode buffers, all of which grow and clear every iteration).
     /// Picks the *largest* pooled buffer — scratch has no target length,
     /// so retained capacity is the whole point.
     pub(crate) fn take_u32_scratch(&mut self) -> Vec<u32> {

@@ -72,7 +72,7 @@ pub mod prelude {
     pub use crate::fw::config::{FwConfig, SelectorKind};
     pub use crate::fw::fast::FastFrankWolfe;
     pub use crate::fw::standard::StandardFrankWolfe;
-    pub use crate::fw::trace::{FwOutput, TraceRecord};
+    pub use crate::fw::trace::{FwOutput, PhaseTiming, TraceRecord};
     pub use crate::fw::workspace::FwWorkspace;
     pub use crate::sparse::csr::CsrMatrix;
     pub use crate::sparse::synth::{DatasetPreset, SynthConfig};

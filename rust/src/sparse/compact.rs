@@ -1,0 +1,251 @@
+//! Delta-compressed `u16` index streams — the compact sparse substrate
+//! (DESIGN.md §6.6).
+//!
+//! The Alg 2 hot loops are memory-bound gathers whose traffic is dominated
+//! by the index streams (`sparse/csr.rs` already chose `u32` over `usize`
+//! for exactly this reason). Within one CSR row or CSC column the indices
+//! are sorted ascending, so consecutive *deltas* are small on every
+//! paper-shaped dataset: storing deltas as `u16` words halves index
+//! traffic again. Deltas that do not fit (first index of a segment far
+//! from zero, or a gap ≥ 2¹⁶ − 1) are carried by **escape blocks**: the
+//! marker word [`ESCAPE`] followed by the full `u32` delta in two words.
+//!
+//! A per-matrix **qualifier** keeps the encoding honest: [`CompactIndices::build`]
+//! returns `None` — and the matrix stays on the plain `u32` substrate —
+//! when any segment is unsorted (hand-built matrices) or when escape
+//! blocks are so common that the `u16` stream would not be strictly
+//! smaller than the `u32` one it mirrors. The compact stream is *derived*
+//! data: the `u32` stream remains the canonical representation (builders,
+//! I/O, and equality all use it), so carrying both costs at most +50%
+//! index memory while the hot loops read only the half-width stream.
+//!
+//! Decoding is exact and order-preserving: [`decode_words`] reproduces the
+//! original `u32` indices in their original order, which is what makes
+//! every kernel routed through [`crate::fw::scan`] bit-identical to its
+//! `u32` counterpart.
+
+/// Marker word opening a 3-word escape block: `ESCAPE, lo16, hi16` carries
+/// a full `u32` delta. A delta equal to `ESCAPE` itself must be escaped,
+/// so plain words cover deltas `0 ..= 2¹⁶ − 2`.
+pub const ESCAPE: u16 = u16::MAX;
+
+/// Delta-encoded `u16` mirror of one CSR/CSC index array, segmented the
+/// same way (one segment per row / column).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CompactIndices {
+    /// Word offsets per segment, length `n_segments + 1`.
+    ptr: Vec<usize>,
+    /// The delta/escape word stream.
+    words: Vec<u16>,
+}
+
+impl CompactIndices {
+    /// Encode `indices` segmented by `indptr` (the standard CSR/CSC pair).
+    /// Returns `None` when the encoding would not pay: a segment is not
+    /// sorted ascending (deltas would be negative), or the `u16` stream is
+    /// not strictly smaller than the `4·nnz`-byte `u32` stream it mirrors
+    /// (escape-heavy matrices, and the trivial `nnz = 0` case).
+    pub fn build(indptr: &[usize], indices: &[u32]) -> Option<Self> {
+        let n_seg = indptr.len() - 1;
+        let nnz = indices.len();
+        let mut ptr = Vec::with_capacity(n_seg + 1);
+        // nnz words exactly when no escapes occur; reserve a little slack
+        let mut words: Vec<u16> = Vec::with_capacity(nnz + nnz / 8 + 4);
+        ptr.push(0);
+        for s in 0..n_seg {
+            let mut prev = 0u32; // first index is encoded as a delta from 0
+            for &j in &indices[indptr[s]..indptr[s + 1]] {
+                if j < prev {
+                    return None; // unsorted segment: stay on u32
+                }
+                let delta = j - prev;
+                if delta < ESCAPE as u32 {
+                    words.push(delta as u16);
+                } else {
+                    words.push(ESCAPE);
+                    words.push(delta as u16); // low 16 bits
+                    words.push((delta >> 16) as u16); // high 16 bits
+                }
+                prev = j;
+            }
+            ptr.push(words.len());
+        }
+        // Qualifier: 2 bytes/word must strictly beat 4 bytes/index.
+        if 2 * words.len() >= 4 * nnz {
+            return None;
+        }
+        Some(Self { ptr, words })
+    }
+
+    pub fn n_segments(&self) -> usize {
+        self.ptr.len() - 1
+    }
+
+    /// The word stream of segment `s` (row `s` / column `s`).
+    #[inline]
+    pub fn seg_words(&self, s: usize) -> &[u16] {
+        &self.words[self.ptr[s]..self.ptr[s + 1]]
+    }
+
+    /// Word count of segment `s` — O(1), for byte-traffic accounting.
+    #[inline]
+    pub fn seg_word_count(&self, s: usize) -> usize {
+        self.ptr[s + 1] - self.ptr[s]
+    }
+
+    /// Total words across all segments.
+    pub fn total_words(&self) -> usize {
+        self.words.len()
+    }
+}
+
+/// One segment of an index array, in whichever representation the matrix
+/// carries. The scan kernels ([`crate::fw::scan`]) accept either and
+/// produce bit-identical results.
+#[derive(Clone, Copy)]
+pub enum IndexSeg<'a> {
+    /// Plain `u32` indices — the canonical fallback substrate.
+    U32(&'a [u32]),
+    /// Delta-compressed word stream holding `nnz` indices.
+    U16 { words: &'a [u16], nnz: usize },
+}
+
+impl IndexSeg<'_> {
+    /// Number of indices in the segment.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        match self {
+            IndexSeg::U32(idx) => idx.len(),
+            IndexSeg::U16 { nnz, .. } => *nnz,
+        }
+    }
+
+    /// Bytes this segment's index stream occupies (the traffic a scan of
+    /// it moves): `4·nnz` for `u32`, `2·words` for the compact stream.
+    #[inline]
+    pub fn index_bytes(&self) -> u64 {
+        match self {
+            IndexSeg::U32(idx) => 4 * idx.len() as u64,
+            IndexSeg::U16 { words, .. } => 2 * words.len() as u64,
+        }
+    }
+}
+
+/// Decode one segment's word stream into `out` (cleared first), restoring
+/// the original `u32` indices in their original order. `nnz` is the known
+/// index count (from the matrix `indptr`), used only to size `out`.
+#[inline]
+pub fn decode_words(words: &[u16], nnz: usize, out: &mut Vec<u32>) {
+    out.clear();
+    out.reserve(nnz);
+    let mut prev = 0u32;
+    let mut i = 0;
+    while i < words.len() {
+        let w0 = words[i];
+        let delta = if w0 != ESCAPE {
+            i += 1;
+            w0 as u32
+        } else {
+            debug_assert!(i + 2 < words.len(), "truncated escape block");
+            let lo = words[i + 1] as u32;
+            let hi = words[i + 2] as u32;
+            i += 3;
+            lo | (hi << 16)
+        };
+        prev = prev.wrapping_add(delta);
+        out.push(prev);
+    }
+    debug_assert_eq!(out.len(), nnz, "decoded count != segment nnz");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(indptr: &[usize], indices: &[u32]) -> Option<CompactIndices> {
+        let c = CompactIndices::build(indptr, indices)?;
+        let mut out = Vec::new();
+        for s in 0..c.n_segments() {
+            let nnz = indptr[s + 1] - indptr[s];
+            decode_words(c.seg_words(s), nnz, &mut out);
+            assert_eq!(&out[..], &indices[indptr[s]..indptr[s + 1]], "segment {s}");
+        }
+        Some(c)
+    }
+
+    #[test]
+    fn roundtrip_simple() {
+        let c = roundtrip(&[0, 3, 3, 5], &[0, 2, 7, 1, 60_000]).unwrap();
+        assert_eq!(c.n_segments(), 3);
+        assert_eq!(c.seg_word_count(1), 0, "empty segment");
+        // no escapes: one word per index
+        assert_eq!(c.total_words(), 5);
+    }
+
+    #[test]
+    fn escape_blocks_roundtrip() {
+        // three escape deltas (a 70k first-index jump, a 130k mid-row gap,
+        // a 4e9 first index near the u32 ceiling) diluted with enough
+        // plain deltas that the qualifier still accepts the matrix
+        let indices =
+            [70_000u32, 70_001, 70_002, 70_003, 70_004, 200_000, 4_000_000_000, 4_000_000_001];
+        let c = roundtrip(&[0, 6, 8], &indices).unwrap();
+        // 3 escapes × 3 words + 5 plain words
+        assert_eq!(c.total_words(), 14);
+    }
+
+    #[test]
+    fn escape_boundary_is_exact() {
+        // delta 65_534 fits a plain word; 65_535 (== ESCAPE) must escape;
+        // 65_536 exercises the hi-word path. Three plain deltas per
+        // segment keep the qualifier satisfied.
+        let fits = roundtrip(&[0, 4], &[0, 1, 2, 65_536]).unwrap(); // tail delta 65_534
+        assert_eq!(fits.total_words(), 4);
+        let escaped = roundtrip(&[0, 4], &[0, 1, 2, 65_537]).unwrap(); // tail delta 65_535
+        assert_eq!(escaped.total_words(), 6);
+        let hi = roundtrip(&[0, 4], &[0, 1, 2, 65_538]).unwrap(); // tail delta 65_536
+        assert_eq!(hi.total_words(), 6);
+    }
+
+    #[test]
+    fn qualifier_is_a_strict_byte_win_boundary() {
+        // 1 escape per 2 indices: words = 2 + 3·1... exactly 2·nnz words
+        // would tie the u32 stream — the qualifier must reject ties.
+        // [0, 65_535]: words = 1 + 3 = 4, nnz = 2 → 8 bytes vs 8 bytes.
+        assert!(CompactIndices::build(&[0, 2], &[0, 65_535]).is_none());
+        // one more plain word tips it into a strict win
+        assert!(CompactIndices::build(&[0, 3], &[0, 1, 65_536]).is_some());
+    }
+
+    #[test]
+    fn leading_and_trailing_empty_segments() {
+        roundtrip(&[0, 0, 2, 2, 2], &[5, 9]).unwrap();
+    }
+
+    #[test]
+    fn duplicate_indices_allowed() {
+        // non-decreasing (delta 0) is legal — duplicate-summing happens
+        // upstream in CooBuilder, but the encoding must not assume it
+        roundtrip(&[0, 3], &[4, 4, 9]).unwrap();
+    }
+
+    #[test]
+    fn unsorted_segment_disqualifies() {
+        assert!(CompactIndices::build(&[0, 2], &[7, 3]).is_none());
+    }
+
+    #[test]
+    fn escape_heavy_matrix_disqualifies() {
+        // every index needs an escape block: 3 words (6 bytes) per index
+        // vs 4 bytes on u32 — compaction must refuse
+        let indices: Vec<u32> = (1..=10u32).map(|k| k * 100_000).collect();
+        let indptr: Vec<usize> = (0..=10).collect();
+        assert!(CompactIndices::build(&indptr, &indices).is_none());
+    }
+
+    #[test]
+    fn empty_matrix_disqualifies() {
+        assert!(CompactIndices::build(&[0], &[]).is_none());
+        assert!(CompactIndices::build(&[0, 0, 0], &[]).is_none());
+    }
+}

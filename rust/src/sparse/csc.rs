@@ -5,7 +5,9 @@
 //! from the CSR view at dataset load; the two views share nothing so each
 //! stays contiguous for its own scan direction.
 
+use super::compact::{CompactIndices, IndexSeg};
 use super::csr::CsrMatrix;
+use crate::fw::scan;
 
 /// Raw-pointer wrapper that lets the scoped scatter threads share the
 /// output arrays. Safe to send because every write index is provably
@@ -15,7 +17,7 @@ use super::csr::CsrMatrix;
 struct SendPtr<T>(*mut T);
 unsafe impl<T: Send> Send for SendPtr<T> {}
 
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug)]
 pub struct CscMatrix {
     n_rows: usize,
     n_cols: usize,
@@ -25,6 +27,23 @@ pub struct CscMatrix {
     indices: Vec<u32>,
     /// Stored values, length `nnz`.
     values: Vec<f32>,
+    /// Delta-compressed `u16` mirror of `indices` (DESIGN.md §6.6);
+    /// `None` until [`CscMatrix::build_compact`] or when the qualifier
+    /// rejects the matrix. Always valid here when built: the counting
+    /// sort emits each column's rows ascending.
+    compact: Option<CompactIndices>,
+}
+
+/// Structural equality on the canonical `u32` representation; the derived
+/// compact stream is excluded (same contract as `CsrMatrix`).
+impl PartialEq for CscMatrix {
+    fn eq(&self, other: &Self) -> bool {
+        self.n_rows == other.n_rows
+            && self.n_cols == other.n_cols
+            && self.indptr == other.indptr
+            && self.indices == other.indices
+            && self.values == other.values
+    }
 }
 
 impl CscMatrix {
@@ -48,11 +67,13 @@ impl CscMatrix {
         let n_rows = csr.n_rows();
         let n_cols = csr.n_cols();
         let nnz = csr.nnz();
-        // Serial fallback: trivial inputs, or an nnz so large that a
-        // single chunk's per-column count could overflow `u32`
-        // (unreachable at paper scale — row indices are `u32` — but it
-        // keeps the disjointness reasoning unconditional).
-        if threads <= 1 || n_cols < 2 || nnz == 0 || nnz > u32::MAX as usize {
+        // Serial fallback: inputs below the PAR_MIN_NNZ gate (which lives
+        // here, not at call sites — tiny matrices never pay thread-spawn
+        // overhead no matter what the caller asks for), trivial shapes,
+        // or an nnz so large that a single chunk's per-column count could
+        // overflow `u32` (unreachable at paper scale — row indices are
+        // `u32` — but it keeps the disjointness reasoning unconditional).
+        if threads <= 1 || nnz < super::PAR_MIN_NNZ || n_cols < 2 || nnz > u32::MAX as usize {
             return Self::from_csr(csr);
         }
         // ≤ 256 MB of transient u32 cursors: cap workers instead of
@@ -158,7 +179,7 @@ impl CscMatrix {
                 });
             }
         });
-        Self { n_rows, n_cols, indptr, indices, values }
+        Self { n_rows, n_cols, indptr, indices, values, compact: None }
     }
 
     /// Transpose-convert a CSR matrix with a counting sort: O(nnz + D).
@@ -188,7 +209,27 @@ impl CscMatrix {
                 cursor[j as usize] = p + 1;
             }
         }
-        Self { n_rows, n_cols, indptr, indices, values }
+        Self { n_rows, n_cols, indptr, indices, values, compact: None }
+    }
+
+    /// Build (or rebuild) the delta-compressed `u16` index mirror
+    /// (DESIGN.md §6.6). Called once by `Dataset::new`; idempotent.
+    pub fn build_compact(&mut self) {
+        self.compact = CompactIndices::build(&self.indptr, &self.indices);
+    }
+
+    /// Drop the compact mirror, pinning the matrix to the `u32` substrate.
+    pub fn clear_compact(&mut self) {
+        self.compact = None;
+    }
+
+    /// `"u16-delta"` after a successful build, else `"u32"`.
+    pub fn index_kind(&self) -> &'static str {
+        if self.compact.is_some() {
+            "u16-delta"
+        } else {
+            "u32"
+        }
     }
 
     pub fn n_rows(&self) -> usize {
@@ -218,12 +259,35 @@ impl CscMatrix {
             .map(|(&i, &v)| (i as usize, v))
     }
 
-    /// Raw slices of column `j` — hot-path accessor.
+    /// Raw slices of column `j` — the canonical `u32` accessor. Hot loops
+    /// should prefer [`CscMatrix::col_seg`].
     #[inline]
     pub fn col_raw(&self, j: usize) -> (&[u32], &[f32]) {
         let lo = self.indptr[j];
         let hi = self.indptr[j + 1];
         (&self.indices[lo..hi], &self.values[lo..hi])
+    }
+
+    /// Column `j` in whichever index representation the matrix carries —
+    /// the hot-path accessor the scan kernels consume.
+    #[inline]
+    pub fn col_seg(&self, j: usize) -> (IndexSeg<'_>, &[f32]) {
+        let lo = self.indptr[j];
+        let hi = self.indptr[j + 1];
+        let vals = &self.values[lo..hi];
+        match &self.compact {
+            Some(c) => (IndexSeg::U16 { words: c.seg_words(j), nnz: hi - lo }, vals),
+            None => (IndexSeg::U32(&self.indices[lo..hi]), vals),
+        }
+    }
+
+    /// Bytes a full sweep of the index structure moves (per-segment byte
+    /// counts come from `IndexSeg::index_bytes`).
+    pub fn index_bytes_total(&self) -> u64 {
+        match &self.compact {
+            Some(c) => 2 * c.total_words() as u64,
+            None => 4 * self.nnz() as u64,
+        }
     }
 
     /// `out[j] = Σ_i X[i,j] · q[i]` for every column — the `Xᵀq` product
@@ -241,14 +305,23 @@ impl CscMatrix {
     /// The column-range slice of [`CscMatrix::matvec_t`]:
     /// `out[j - cols.start] = Σ_i X[i,j] · q[i]` for `j ∈ cols`.
     pub fn matvec_t_range(&self, q: &[f64], cols: std::ops::Range<usize>, out: &mut [f64]) {
+        self.matvec_t_range_in(q, cols, out, &mut Vec::new());
+    }
+
+    /// Scratch-threaded body of [`CscMatrix::matvec_t_range`] (one decode
+    /// scratch reused across the whole column range; untouched on `u32`).
+    pub fn matvec_t_range_in(
+        &self,
+        q: &[f64],
+        cols: std::ops::Range<usize>,
+        out: &mut [f64],
+        scratch: &mut Vec<u32>,
+    ) {
         assert_eq!(out.len(), cols.len());
         for (slot, j) in out.iter_mut().zip(cols) {
-            let (idx, val) = self.col_raw(j);
-            let mut acc = 0.0f64;
-            for (&i, &v) in idx.iter().zip(val) {
-                acc += v as f64 * q[i as usize];
-            }
-            *slot = acc;
+            let (seg, vals) = self.col_seg(j);
+            let idx = scan::resolve(seg, scratch);
+            *slot = scan::dot_gather(idx, vals, q);
         }
     }
 
@@ -258,10 +331,12 @@ impl CscMatrix {
     /// is still summed by exactly one thread, rows ascending) at any
     /// thread count. This is Algorithm 2's `O(N·S_c)` dense first
     /// iteration (`α = Xᵀq̄`), the one phase of the fast solver that still
-    /// touches every nonzero.
+    /// touches every nonzero. The [`super::PAR_MIN_NNZ`] serial-fallback
+    /// gate lives here, not at call sites.
     pub fn matvec_t_par(&self, q: &[f64], out: &mut [f64], threads: usize) {
         assert_eq!(q.len(), self.n_rows);
         assert_eq!(out.len(), self.n_cols);
+        let threads = if self.nnz() < super::PAR_MIN_NNZ { 1 } else { threads };
         if threads <= 1 || self.n_cols < 2 {
             return self.matvec_t(q, out);
         }
@@ -358,13 +433,41 @@ mod tests {
         .clone()
     }
 
+    fn zipfish_csr_big(seed: u64) -> CsrMatrix {
+        // Same Zipf shape but above PAR_MIN_NNZ, so the in-kernel gate
+        // does not serialize and the threaded paths genuinely run.
+        crate::sparse::synth::SynthConfig {
+            name: "csc-par-big".into(),
+            n_rows: 4000,
+            n_cols: 1500,
+            avg_row_nnz: 12.0,
+            zipf_exponent: 1.2,
+            n_informative: 12,
+            n_dense: 2,
+            label_noise: 0.0,
+            bias_col: true,
+        }
+        .generate(seed)
+        .csr
+        .clone()
+    }
+
     #[test]
     fn threaded_conversion_identical_to_serial() {
+        // below the gate: serialized inside the entry point, still identical
         let csr = zipfish_csr(11);
         let serial = CscMatrix::from_csr(&csr);
         for threads in [2usize, 3, 8, 64] {
             let par = CscMatrix::from_csr_threaded(&csr, threads);
             assert_eq!(par, serial, "threads={threads}");
+        }
+        // above the gate: the parallel scatter actually runs
+        let csr = zipfish_csr_big(11);
+        assert!(csr.nnz() >= crate::sparse::PAR_MIN_NNZ, "fixture must clear the gate");
+        let serial = CscMatrix::from_csr(&csr);
+        for threads in [2usize, 3, 8, 64] {
+            let par = CscMatrix::from_csr_threaded(&csr, threads);
+            assert_eq!(par, serial, "big threads={threads}");
         }
     }
 
@@ -374,7 +477,9 @@ mod tests {
         // empty columns, empty rows (chunk boundaries must skip them), one
         // hot column holding most of the mass (many threads write the same
         // column via their disjoint prefix cursors), and ragged rows.
-        let n_rows = 64usize;
+        // 24k rows × 1.5 nnz/row keeps the fixture above PAR_MIN_NNZ so
+        // the in-kernel gate does not serialize it away.
+        let n_rows = 24_000usize;
         let n_cols = 12usize;
         let mut indptr = vec![0usize];
         let mut indices = Vec::new();
@@ -400,6 +505,7 @@ mod tests {
             indptr.push(indices.len());
         }
         let csr = CsrMatrix::from_parts(n_rows, n_cols, indptr, indices, values);
+        assert!(csr.nnz() >= crate::sparse::PAR_MIN_NNZ, "fixture must clear the gate");
         let serial = CscMatrix::from_csr(&csr);
         assert_eq!(serial.col_nnz(0), 0, "want empty leading column");
         assert_eq!(serial.col_nnz(11), 0, "want empty trailing column");
@@ -409,6 +515,44 @@ mod tests {
                 serial,
                 "threads={threads}"
             );
+        }
+    }
+
+    #[test]
+    fn compact_column_kernels_bit_identical_including_dense_column() {
+        // zipfish includes URL-style dense columns (n_dense = 2) plus the
+        // bias column — every row appears in them, deltas of 1 throughout.
+        let csr = zipfish_csr(29);
+        let plain = CscMatrix::from_csr(&csr);
+        let mut compact = plain.clone();
+        compact.build_compact();
+        assert_eq!(compact.index_kind(), "u16-delta");
+        assert_eq!(plain, compact, "compact mirror must not affect equality");
+        assert!(compact.index_bytes_total() < plain.index_bytes_total());
+        let q: Vec<f64> = (0..csr.n_rows()).map(|i| (i as f64 * 0.71 + 0.1).sin()).collect();
+        let mut a = vec![0.0f64; csr.n_cols()];
+        let mut b = vec![f64::NAN; csr.n_cols()];
+        plain.matvec_t(&q, &mut a);
+        compact.matvec_t(&q, &mut b);
+        for (j, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "col {j} diverged");
+        }
+    }
+
+    #[test]
+    fn matvec_t_par_above_gate_bit_identical() {
+        let csr = zipfish_csr_big(17);
+        assert!(csr.nnz() >= crate::sparse::PAR_MIN_NNZ, "fixture must clear the gate");
+        let csc = CscMatrix::from_csr(&csr);
+        let q: Vec<f64> = (0..csr.n_rows()).map(|i| (i as f64 * 0.31 + 0.1).cos()).collect();
+        let mut serial = vec![0.0f64; csr.n_cols()];
+        csc.matvec_t(&q, &mut serial);
+        for threads in [2usize, 4, 32] {
+            let mut par = vec![f64::NAN; csr.n_cols()];
+            csc.matvec_t_par(&q, &mut par, threads);
+            for (a, b) in serial.iter().zip(&par) {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads={threads}");
+            }
         }
     }
 

@@ -5,8 +5,15 @@
 //! solvers touch them. Column indices are `u32` (D ≤ 4.29e9 covers the
 //! paper's 20.2M-feature KDDA with room to spare) to halve index memory
 //! traffic — this matters: the Alg 2 inner loop is memory-bound gathers.
+//! [`CsrMatrix::build_compact`] optionally mirrors the indices as a
+//! delta-compressed `u16` stream (DESIGN.md §6.6) that halves the index
+//! traffic again; all scan kernels consume either representation through
+//! [`crate::fw::scan`] with bit-identical results.
 
-#[derive(Clone, Debug, PartialEq)]
+use super::compact::{CompactIndices, IndexSeg};
+use crate::fw::scan;
+
+#[derive(Clone, Debug)]
 pub struct CsrMatrix {
     n_rows: usize,
     n_cols: usize,
@@ -16,6 +23,25 @@ pub struct CsrMatrix {
     indices: Vec<u32>,
     /// Stored values, length `nnz`.
     values: Vec<f32>,
+    /// Delta-compressed `u16` mirror of `indices` (DESIGN.md §6.6);
+    /// `None` until [`CsrMatrix::build_compact`], and permanently `None`
+    /// when the qualifier rejects the matrix (unsorted rows, or escape
+    /// blocks would make the stream larger than the `u32` one).
+    compact: Option<CompactIndices>,
+}
+
+/// Structural equality on the canonical `u32` representation. The compact
+/// stream is deliberately excluded: it is derived data (a pure function
+/// of `indices` when present), so two logically equal matrices compare
+/// equal whether or not either has built it.
+impl PartialEq for CsrMatrix {
+    fn eq(&self, other: &Self) -> bool {
+        self.n_rows == other.n_rows
+            && self.n_cols == other.n_cols
+            && self.indptr == other.indptr
+            && self.indices == other.indices
+            && self.values == other.values
+    }
 }
 
 impl CsrMatrix {
@@ -35,7 +61,31 @@ impl CsrMatrix {
             indices.iter().all(|&j| (j as usize) < n_cols),
             "column index out of range"
         );
-        Self { n_rows, n_cols, indptr, indices, values }
+        Self { n_rows, n_cols, indptr, indices, values, compact: None }
+    }
+
+    /// Build (or rebuild) the delta-compressed `u16` index mirror.
+    /// Called once by `Dataset::new`; a matrix the qualifier rejects
+    /// simply stays on the `u32` substrate. Idempotent — the compact
+    /// stream is a pure function of `indices`.
+    pub fn build_compact(&mut self) {
+        self.compact = CompactIndices::build(&self.indptr, &self.indices);
+    }
+
+    /// Drop the compact mirror, pinning the matrix to the `u32` substrate
+    /// (the benchmark/test baseline; see `Dataset::strip_compact`).
+    pub fn clear_compact(&mut self) {
+        self.compact = None;
+    }
+
+    /// Which index substrate the hot loops will read: `"u16-delta"` after
+    /// a successful [`CsrMatrix::build_compact`], else `"u32"`.
+    pub fn index_kind(&self) -> &'static str {
+        if self.compact.is_some() {
+            "u16-delta"
+        } else {
+            "u32"
+        }
     }
 
     pub fn n_rows(&self) -> usize {
@@ -65,13 +115,37 @@ impl CsrMatrix {
             .map(|(&j, &v)| (j as usize, v))
     }
 
-    /// Raw slices of row `i` — the hot-path accessor (no per-element zip
-    /// overhead; lets the caller keep the gather loop tight).
+    /// Raw slices of row `i` — the canonical `u32` accessor (construction,
+    /// I/O, the CSC transpose build). Hot loops should prefer
+    /// [`CsrMatrix::row_seg`], which serves the compact stream when built.
     #[inline]
     pub fn row_raw(&self, i: usize) -> (&[u32], &[f32]) {
         let lo = self.indptr[i];
         let hi = self.indptr[i + 1];
         (&self.indices[lo..hi], &self.values[lo..hi])
+    }
+
+    /// Row `i` in whichever index representation the matrix carries —
+    /// the hot-path accessor the scan kernels consume.
+    #[inline]
+    pub fn row_seg(&self, i: usize) -> (IndexSeg<'_>, &[f32]) {
+        let lo = self.indptr[i];
+        let hi = self.indptr[i + 1];
+        let vals = &self.values[lo..hi];
+        match &self.compact {
+            Some(c) => (IndexSeg::U16 { words: c.seg_words(i), nnz: hi - lo }, vals),
+            None => (IndexSeg::U32(&self.indices[lo..hi]), vals),
+        }
+    }
+
+    /// Bytes a full sweep of the index structure moves (per-segment byte
+    /// counts come from `IndexSeg::index_bytes`, the single source of the
+    /// DESIGN.md §6.6 formula).
+    pub fn index_bytes_total(&self) -> u64 {
+        match &self.compact {
+            Some(c) => 2 * c.total_words() as u64,
+            None => 4 * self.nnz() as u64,
+        }
     }
 
     /// The flat column-index stream (length `nnz`, row-major order) —
@@ -105,16 +179,36 @@ impl CsrMatrix {
     }
 
     /// The row-range slice of [`CsrMatrix::matvec`]:
-    /// `out[i - rows.start] = x_i · w` for `i ∈ rows`.
+    /// `out[i - rows.start] = x_i · w` for `i ∈ rows`. Allocates a decode
+    /// scratch once per call on the compact substrate; pooled-workspace
+    /// callers should prefer [`CsrMatrix::matvec_in`].
     pub fn matvec_range(&self, w: &[f64], rows: std::ops::Range<usize>, out: &mut [f64]) {
+        self.matvec_range_in(w, rows, out, &mut Vec::new());
+    }
+
+    /// `out = X · w` with a caller-provided decode scratch (the solvers'
+    /// pooled workspaces use this so repeated runs stay allocation-free
+    /// on the compact substrate; the scratch is untouched on `u32`).
+    pub fn matvec_in(&self, w: &[f64], out: &mut [f64], scratch: &mut Vec<u32>) {
+        assert_eq!(w.len(), self.n_cols);
+        assert_eq!(out.len(), self.n_rows);
+        self.matvec_range_in(w, 0..self.n_rows, out, scratch);
+    }
+
+    /// Scratch-threaded body of [`CsrMatrix::matvec_range`]: the scratch
+    /// is reused across the whole range so it stays L1-hot.
+    pub fn matvec_range_in(
+        &self,
+        w: &[f64],
+        rows: std::ops::Range<usize>,
+        out: &mut [f64],
+        scratch: &mut Vec<u32>,
+    ) {
         assert_eq!(out.len(), rows.len());
         for (slot, i) in out.iter_mut().zip(rows) {
-            let (idx, val) = self.row_raw(i);
-            let mut acc = 0.0f64;
-            for (&j, &v) in idx.iter().zip(val) {
-                acc += v as f64 * w[j as usize];
-            }
-            *slot = acc;
+            let (seg, vals) = self.row_seg(i);
+            let idx = scan::resolve(seg, scratch);
+            *slot = scan::dot_gather(idx, vals, w);
         }
     }
 
@@ -122,10 +216,14 @@ impl CsrMatrix {
     /// contiguous nnz-balanced blocks, each writing a disjoint slice of
     /// `out` — no atomics, and (since every row is still summed by one
     /// thread in index order) **bit-identical** to the serial
-    /// [`CsrMatrix::matvec`] at any thread count.
+    /// [`CsrMatrix::matvec`] at any thread count. The
+    /// [`super::PAR_MIN_NNZ`] serial-fallback gate lives *here*, not at
+    /// call sites: tiny inputs never pay thread-spawn overhead no matter
+    /// what thread count the caller asks for.
     pub fn matvec_par(&self, w: &[f64], out: &mut [f64], threads: usize) {
         assert_eq!(w.len(), self.n_cols);
         assert_eq!(out.len(), self.n_rows);
+        let threads = if self.nnz() < super::PAR_MIN_NNZ { 1 } else { threads };
         if threads <= 1 || self.n_rows < 2 {
             return self.matvec(w, out);
         }
@@ -142,7 +240,14 @@ impl CsrMatrix {
 
     /// `out += Xᵀ · q` (dense `q`, length `n_rows`), accumulated in f64.
     /// This is the CSR-driven transpose product used by Alg 1's line 6.
+    /// Allocates a decode scratch once per call on the compact substrate;
+    /// pooled-workspace callers should prefer [`CsrMatrix::matvec_t_add_in`].
     pub fn matvec_t_add(&self, q: &[f64], out: &mut [f64]) {
+        self.matvec_t_add_in(q, out, &mut Vec::new());
+    }
+
+    /// Scratch-threaded body of [`CsrMatrix::matvec_t_add`].
+    pub fn matvec_t_add_in(&self, q: &[f64], out: &mut [f64], scratch: &mut Vec<u32>) {
         assert_eq!(q.len(), self.n_rows);
         assert_eq!(out.len(), self.n_cols);
         for i in 0..self.n_rows {
@@ -150,22 +255,21 @@ impl CsrMatrix {
             if qi == 0.0 {
                 continue;
             }
-            let (idx, val) = self.row_raw(i);
-            for (&j, &v) in idx.iter().zip(val) {
-                out[j as usize] += v as f64 * qi;
-            }
+            let (seg, vals) = self.row_seg(i);
+            let idx = scan::resolve(seg, scratch);
+            scan::axpy_gather(idx, vals, qi, out);
         }
     }
 
-    /// Dot product of row `i` with dense `w`.
+    /// Dot product of row `i` with dense `w`. Deliberately stays on the
+    /// canonical `u32` stream: a leaf accessor with no caller scratch
+    /// would pay an allocation per call to decode the compact mirror
+    /// (bit-identical either way — the matvec kernels carry the compact
+    /// win; this keeps the prefetched gather).
     #[inline]
     pub fn row_dot(&self, i: usize, w: &[f64]) -> f64 {
         let (idx, val) = self.row_raw(i);
-        let mut acc = 0.0f64;
-        for (&j, &v) in idx.iter().zip(val) {
-            acc += v as f64 * w[j as usize];
-        }
-        acc
+        scan::dot_gather(idx, val, w)
     }
 
     /// Densify (tests / the PJRT oracle path only — O(N·D) memory).
@@ -291,10 +395,82 @@ mod tests {
         assert_eq!(m.max_abs_value(), 0.0);
     }
 
+    fn ragged(n_rows: usize, n_cols: usize) -> CsrMatrix {
+        let mut indptr = vec![0usize];
+        let mut indices = vec![];
+        let mut values = vec![];
+        let mut state = 12345u64;
+        for i in 0..n_rows {
+            let mut nnz_row = (i * 7) % 9; // includes empty rows
+            let mut j = (i * 13) % n_cols;
+            while nnz_row > 0 && j < n_cols {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+                indices.push(j as u32);
+                values.push(((state >> 33) as f32 / 2.0_f32.powi(31)) - 1.0);
+                j += 1 + (state as usize % 5);
+                nnz_row -= 1;
+            }
+            indptr.push(indices.len());
+        }
+        CsrMatrix::from_parts(n_rows, n_cols, indptr, indices, values)
+    }
+
+    #[test]
+    fn compact_kernels_bit_identical_to_u32() {
+        let plain = ragged(300, 4000);
+        let mut compact = plain.clone();
+        compact.build_compact();
+        assert_eq!(compact.index_kind(), "u16-delta");
+        assert_eq!(plain.index_kind(), "u32");
+        assert_eq!(plain, compact, "compact mirror must not affect equality");
+        assert!(compact.index_bytes_total() < plain.index_bytes_total());
+        let w: Vec<f64> = (0..plain.n_cols()).map(|j| (j as f64 * 0.31).cos()).collect();
+        let mut a = vec![0.0f64; plain.n_rows()];
+        let mut b = vec![f64::NAN; plain.n_rows()];
+        plain.matvec(&w, &mut a);
+        compact.matvec(&w, &mut b);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "matvec diverged");
+        }
+        let q: Vec<f64> = (0..plain.n_rows()).map(|i| (i as f64 * 0.7 + 0.1).sin()).collect();
+        let mut ta = vec![0.0f64; plain.n_cols()];
+        let mut tb = vec![0.0f64; plain.n_cols()];
+        plain.matvec_t_add(&q, &mut ta);
+        compact.matvec_t_add(&q, &mut tb);
+        for (x, y) in ta.iter().zip(&tb) {
+            assert_eq!(x.to_bits(), y.to_bits(), "matvec_t_add diverged");
+        }
+        for i in 0..plain.n_rows() {
+            assert_eq!(
+                plain.row_dot(i, &w).to_bits(),
+                compact.row_dot(i, &w).to_bits(),
+                "row_dot diverged at row {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn matvec_par_above_gate_runs_parallel_and_bit_identical() {
+        // nnz ≥ PAR_MIN_NNZ so the in-kernel gate does NOT serialize:
+        // this exercises the genuinely threaded path.
+        let m = ragged(12_000, 900);
+        assert!(m.nnz() >= crate::sparse::PAR_MIN_NNZ, "fixture must clear the gate");
+        let w: Vec<f64> = (0..m.n_cols()).map(|j| (j as f64) * 0.37 - 3.0).collect();
+        let mut serial = vec![0.0f64; m.n_rows()];
+        m.matvec(&w, &mut serial);
+        for threads in [2usize, 4, 16] {
+            let mut par = vec![f64::NAN; m.n_rows()];
+            m.matvec_par(&w, &mut par, threads);
+            for (a, b) in serial.iter().zip(&par) {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads={threads}");
+            }
+        }
+    }
+
     #[test]
     fn matvec_par_bit_identical_to_serial() {
-        // A ragged random-ish matrix large enough that blocks are nonempty
-        // for several thread counts.
+        // A ragged random-ish matrix below PAR_MIN_NNZ: the in-kernel gate
+        // serializes, and the output must still be bit-identical.
         let n_rows = 97;
         let n_cols = 53;
         let mut indptr = vec![0usize];

@@ -8,6 +8,7 @@
 //! data; [`libsvm`] reads/writes the standard LIBSVM text format used by
 //! the paper's real datasets (RCV1, News20, URL, Web, KDDA).
 
+pub mod compact;
 pub mod coo;
 pub mod csc;
 pub mod csr;
@@ -19,9 +20,10 @@ use csr::CsrMatrix;
 
 /// Minimum nnz before the block-parallel kernels (`matvec_par`,
 /// `matvec_t_par`, `from_csr_threaded`) are worth their thread-spawn
-/// overhead; below this the parallel entry points fall back to the serial
-/// loops at call sites that gate on it. Outputs are bit-identical either
-/// way — the gate is purely a performance heuristic.
+/// overhead. The serial fallback is enforced *inside* those entry points
+/// — callers may request any thread count without risking thread spawns
+/// on tiny inputs. Outputs are bit-identical either way — the gate is
+/// purely a performance heuristic.
 pub const PAR_MIN_NNZ: usize = 1 << 15;
 
 /// Default worker count for parallel substrate kernels: all available
@@ -79,14 +81,38 @@ pub struct Dataset {
 }
 
 impl Dataset {
-    pub fn new(csr: CsrMatrix, labels: Vec<f32>, name: impl Into<String>) -> Self {
+    pub fn new(mut csr: CsrMatrix, labels: Vec<f32>, name: impl Into<String>) -> Self {
         assert_eq!(csr.n_rows(), labels.len(), "label count != row count");
         // Block-parallel transpose for paper-scale matrices; the output is
-        // bit-identical to the serial counting sort at any thread count.
-        let csc = CscMatrix::from_csr_threaded(&csr, auto_threads(csr.nnz()));
+        // bit-identical to the serial counting sort at any thread count
+        // (the PAR_MIN_NNZ gate inside the entry point serializes tiny
+        // inputs).
+        let mut csc = CscMatrix::from_csr_threaded(&csr, auto_threads(csr.nnz()));
+        // Compact u16-delta index mirrors for both views (DESIGN.md §6.6):
+        // built once here so every hot loop downstream reads half-width
+        // index streams. Matrices the qualifier rejects stay on u32.
+        csr.build_compact();
+        csc.build_compact();
         static NEXT_TOKEN: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
         let token = NEXT_TOKEN.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         Self { csr, csc, labels, name: name.into(), token }
+    }
+
+    /// Drop the compact `u16-delta` index mirrors from both views,
+    /// pinning the dataset to the plain `u32` substrate — the benchmark
+    /// and property-test baseline ("how many bytes would this run have
+    /// moved without compaction?"). Values and indices are untouched, so
+    /// training output stays bit-identical; only the traffic accounting
+    /// changes. Safe on clones: the compact stream never feeds the
+    /// bootstrap cache, whose values are substrate-invariant.
+    pub fn strip_compact(&mut self) {
+        self.csr.clear_compact();
+        self.csc.clear_compact();
+    }
+
+    /// The index substrate the hot loops read (`"u16-delta"` / `"u32"`).
+    pub fn index_kind(&self) -> &'static str {
+        self.csr.index_kind()
     }
 
     /// The dataset's identity token (see the field docs).
@@ -190,6 +216,17 @@ mod tests {
             }
         }
         assert_eq!(d.csr.nnz(), d.csc.nnz());
+    }
+
+    #[test]
+    fn dataset_builds_compact_mirrors_and_strip_reverts() {
+        let mut d = tiny();
+        assert_eq!(d.index_kind(), "u16-delta", "small indices must qualify");
+        assert_eq!(d.csc.index_kind(), "u16-delta");
+        assert!(d.csr.index_bytes_total() < 4 * d.nnz() as u64);
+        d.strip_compact();
+        assert_eq!(d.index_kind(), "u32");
+        assert_eq!(d.csr.index_bytes_total(), 4 * d.nnz() as u64);
     }
 
     #[test]

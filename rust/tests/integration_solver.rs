@@ -174,6 +174,74 @@ fn scorer_matches_manual_sigmoid() {
     assert!((0.0..=100.0).contains(&acc));
 }
 
+/// Compact-substrate adversarial shapes, end-to-end through the real
+/// solvers: a hand-built matrix whose rows force **escape blocks** (index
+/// deltas ≥ 2¹⁶ on a D = 200k feature space), a URL-style **dense
+/// column** every row hits, empty CSC columns in between, and all three
+/// paper selectors (Alg 3 heap, BSLS, noisy-max) at threads ∈ {1, 4, 16}
+/// (below PAR_MIN_NNZ, so the thread legs exercise the in-kernel gate;
+/// genuine parallel thread coverage lives in
+/// `prop_equivalence::prop_compact_substrate_bit_identical_to_u32`).
+/// The compact run must be bit-identical to the stripped-u32 run while
+/// reporting strictly fewer modeled bytes.
+#[test]
+fn compact_escape_blocks_dense_column_bit_identical_end_to_end() {
+    use dpfw::sparse::coo::CooBuilder;
+    let n_rows = 80usize;
+    let d = 200_000usize;
+    let mut b = CooBuilder::new(0, d);
+    let mut labels = Vec::new();
+    for r in 0..n_rows {
+        let row = b.add_row();
+        b.push(row, 0, 1.0); // dense column: every row
+        b.push(row, 40 + r % 7, 0.5 + r as f32 * 0.01); // small-delta region
+        // escape block: a jump of ≥ 2^16 from the previous index
+        b.push(row, 70_000 + r * 997, if r % 2 == 0 { 1.0 } else { -1.0 });
+        if r % 3 == 0 {
+            b.push(row, 199_990 + r % 9, 0.25); // second escape-sized jump
+        }
+        labels.push((r % 2) as f32);
+    }
+    b.set_shape(n_rows, d);
+    let ds = Dataset::new(b.to_csr(), labels, "escape-adversarial");
+    assert_eq!(ds.index_kind(), "u16-delta", "escape-sparse matrix must still qualify");
+    let mut plain = ds.clone();
+    plain.strip_compact();
+    for sel in [SelectorKind::FibHeap, SelectorKind::Bsls, SelectorKind::NoisyMax] {
+        for threads in [1usize, 4, 16] {
+            let cfg = FwConfig {
+                iters: 120,
+                lambda: 5.0,
+                privacy: sel.is_private().then(|| PrivacyParams::new(1.0, 1e-6)),
+                selector: sel,
+                seed: 11,
+                trace_every: 10,
+                lipschitz: None,
+                threads,
+            };
+            let a = FastFrankWolfe::new(&ds, cfg.clone()).run();
+            let c = FastFrankWolfe::new(&plain, cfg.clone()).run();
+            assert_eq!(a.weights, c.weights, "{sel:?} threads={threads}: weights diverged");
+            assert_eq!(
+                a.final_gap.to_bits(),
+                c.final_gap.to_bits(),
+                "{sel:?} threads={threads}: gap diverged"
+            );
+            assert_eq!(a.flops, c.flops, "{sel:?} threads={threads}: flops diverged");
+            assert!(
+                a.bytes_moved < c.bytes_moved,
+                "{sel:?} threads={threads}: compact moved no fewer bytes"
+            );
+            if sel != SelectorKind::FibHeap {
+                let a = StandardFrankWolfe::new(&ds, cfg.clone()).run();
+                let c = StandardFrankWolfe::new(&plain, cfg.clone()).run();
+                assert_eq!(a.weights, c.weights, "std {sel:?} threads={threads}");
+                assert!(a.bytes_moved < c.bytes_moved, "std {sel:?} threads={threads}: bytes");
+            }
+        }
+    }
+}
+
 /// Arc-shared datasets across threads: the solver is Sync-safe over
 /// read-only data (what the coordinator relies on).
 #[test]

@@ -36,6 +36,27 @@ fn random_dataset(rng: &mut Xoshiro256pp) -> Dataset {
     .generate(rng.next_u64())
 }
 
+/// Like [`random_dataset`] but with nnz safely above `PAR_MIN_NNZ`, so the
+/// in-kernel serial-fallback gate (moved inside the `_par` entry points in
+/// PR 4) does not serialize the run: tests that claim thread coverage must
+/// use this at least part of the time or they compare serial to serial.
+fn big_dataset(rng: &mut Xoshiro256pp) -> Dataset {
+    let ds = SynthConfig {
+        name: "prop-big".into(),
+        n_rows: 3000 + rng.next_below(400) as usize,
+        n_cols: 400 + rng.next_below(300) as usize,
+        avg_row_nnz: 14.0 + rng.next_f64() * 4.0,
+        zipf_exponent: 1.05 + rng.next_f64() * 0.5,
+        n_informative: 8 + rng.next_below(16) as usize,
+        n_dense: if rng.next_below(3) == 0 { 4 } else { 0 },
+        label_noise: rng.next_f64() * 0.1,
+        bias_col: rng.next_below(2) == 0,
+    }
+    .generate(rng.next_u64());
+    assert!(ds.nnz() >= dpfw::sparse::PAR_MIN_NNZ, "fixture must clear the gate");
+    ds
+}
+
 /// Alg 2's maintained state equals a dense recompute of its own stored
 /// quantities after every iteration, for random datasets/configs.
 #[test]
@@ -246,9 +267,11 @@ fn prop_dp_seed_determinism() {
 }
 
 /// Bit-level output equality (stricter than `==`, which would conflate
-/// `0.0` and `-0.0`): weights, final gap, selector telemetry, and the full
-/// trace except wall-clock.
-fn assert_outputs_bit_identical(a: &FwOutput, b: &FwOutput, what: &str) {
+/// `0.0` and `-0.0`) for everything *except* the byte-traffic accounting:
+/// weights, final gap, FLOPs, selector telemetry, and the full trace
+/// except wall-clock. Split out so the compact-vs-u32 substrate test can
+/// assert trajectory identity while byte totals legitimately differ.
+fn assert_outputs_bit_identical_modulo_traffic(a: &FwOutput, b: &FwOutput, what: &str) {
     assert_eq!(a.weights.dim(), b.weights.dim(), "{what}: dim");
     for (i, (x, y)) in a.weights.as_slice().iter().zip(b.weights.as_slice()).enumerate() {
         assert_eq!(x.to_bits(), y.to_bits(), "{what}: weight {i} differs: {x} vs {y}");
@@ -263,6 +286,17 @@ fn assert_outputs_bit_identical(a: &FwOutput, b: &FwOutput, what: &str) {
         assert_eq!(ta.selected, tb.selected, "{what}: trace selection");
         assert_eq!(ta.gap.to_bits(), tb.gap.to_bits(), "{what}: trace gap");
         assert_eq!(ta.flops, tb.flops, "{what}: trace flops");
+    }
+}
+
+/// Full bit-level equality: the modulo-traffic check plus identical byte
+/// accounting (same substrate on both sides).
+fn assert_outputs_bit_identical(a: &FwOutput, b: &FwOutput, what: &str) {
+    assert_outputs_bit_identical_modulo_traffic(a, b, what);
+    assert_eq!(a.bytes_moved, b.bytes_moved, "{what}: bytes moved");
+    assert_eq!(a.bootstrap_bytes, b.bootstrap_bytes, "{what}: bootstrap bytes");
+    for (ta, tb) in a.trace.iter().zip(&b.trace) {
+        assert_eq!(ta.bytes, tb.bytes, "{what}: trace bytes");
     }
 }
 
@@ -336,6 +370,13 @@ fn assert_path_output_matches(fresh: &FwOutput, warm: &FwOutput, what: &str) {
     }
     assert_eq!(fresh.final_gap.to_bits(), warm.final_gap.to_bits(), "{what}: final gap");
     assert_eq!(warm.flops + offset, fresh.flops, "{what}: flops modulo bootstrap");
+    // byte traffic obeys the identical warm-run contract
+    assert!(
+        fresh.bootstrap_bytes >= warm.bootstrap_bytes,
+        "{what}: warm bootstrap bytes exceed fresh"
+    );
+    let boffset = fresh.bootstrap_bytes - warm.bootstrap_bytes;
+    assert_eq!(warm.bytes_moved + boffset, fresh.bytes_moved, "{what}: bytes modulo bootstrap");
     assert_eq!(fresh.selector_stats, warm.selector_stats, "{what}: selector stats");
     assert_eq!(fresh.trace.len(), warm.trace.len(), "{what}: trace length");
     for (ta, tb) in fresh.trace.iter().zip(&warm.trace) {
@@ -343,6 +384,7 @@ fn assert_path_output_matches(fresh: &FwOutput, warm: &FwOutput, what: &str) {
         assert_eq!(ta.selected, tb.selected, "{what}: trace selection");
         assert_eq!(ta.gap.to_bits(), tb.gap.to_bits(), "{what}: trace gap");
         assert_eq!(tb.flops + offset, ta.flops, "{what}: trace flops modulo bootstrap");
+        assert_eq!(tb.bytes + boffset, ta.bytes, "{what}: trace bytes modulo bootstrap");
     }
 }
 
@@ -403,15 +445,68 @@ fn prop_run_path_bit_identical_and_single_bootstrap() {
 #[test]
 fn prop_csc_threaded_scatter_layout_identical() {
     use dpfw::sparse::csc::CscMatrix;
-    forall(10, |rng| {
-        let ds = random_dataset(rng); // Zipf columns ⇒ ragged + empty cols
-        let serial = CscMatrix::from_csr(&ds.csr);
-        for threads in [1usize, 4, 16] {
-            assert_eq!(
-                CscMatrix::from_csr_threaded(&ds.csr, threads),
-                serial,
-                "threads={threads}"
-            );
+    forall(6, |rng| {
+        // small datasets exercise the in-kernel PAR_MIN_NNZ gate; big ones
+        // clear it, so the parallel scatter genuinely runs
+        for big in [false, true] {
+            let ds = if big { big_dataset(rng) } else { random_dataset(rng) };
+            let serial = CscMatrix::from_csr(&ds.csr);
+            for threads in [1usize, 4, 16] {
+                assert_eq!(
+                    CscMatrix::from_csr_threaded(&ds.csr, threads),
+                    serial,
+                    "big={big} threads={threads}"
+                );
+            }
+        }
+    });
+}
+
+/// **Compact u16-delta substrate is trajectory-invisible** (the DESIGN.md
+/// §6.6 zero-tolerance guarantee): for random datasets, selectors, dirty
+/// workspaces, and threads ∈ {1, 4, 16}, a run on the compact index
+/// substrate is bit-identical to the same run on the stripped u32
+/// substrate — weights, gaps, FLOPs, selector telemetry, traces — while
+/// moving strictly fewer modeled bytes. Both solvers.
+#[test]
+fn prop_compact_substrate_bit_identical_to_u32() {
+    forall(4, |rng| {
+        // one below-gate and one above-gate dataset per case, so the
+        // threads ∈ {4, 16} legs genuinely exercise the parallel
+        // bootstrap on the compact substrate
+        for big in [false, true] {
+            let ds = if big { big_dataset(rng) } else { random_dataset(rng) };
+            assert_eq!(ds.index_kind(), "u16-delta", "small-delta synth must qualify");
+            let mut plain = ds.clone();
+            plain.strip_compact();
+            assert_eq!(plain.index_kind(), "u32");
+            // shared (dirty) workspaces across rounds, one per substrate
+            let mut ws_c = FwWorkspace::new();
+            let mut ws_p = FwWorkspace::new();
+            for round in 0..2 {
+                let iters = 20 + rng.next_below(60) as usize;
+                let base = random_selector_cfg(rng, iters, 1.0 + rng.next_f64() * 10.0);
+                for threads in [1usize, 4, 16] {
+                    let cfg = FwConfig { threads, ..base.clone() };
+                    let what = format!("fast big={big} round {round} threads {threads}");
+                    let a = FastFrankWolfe::new(&ds, cfg.clone()).run_in(&mut ws_c);
+                    let b = FastFrankWolfe::new(&plain, cfg.clone()).run_in(&mut ws_p);
+                    assert_outputs_bit_identical_modulo_traffic(&a, &b, &what);
+                    assert!(
+                        a.bytes_moved < b.bytes_moved,
+                        "{what}: compact must move fewer bytes ({} vs {})",
+                        a.bytes_moved,
+                        b.bytes_moved
+                    );
+                    if !matches!(cfg.selector, SelectorKind::FibHeap | SelectorKind::BinHeap) {
+                        let what = format!("std big={big} round {round} threads {threads}");
+                        let a = StandardFrankWolfe::new(&ds, cfg.clone()).run_in(&mut ws_c);
+                        let b = StandardFrankWolfe::new(&plain, cfg).run_in(&mut ws_p);
+                        assert_outputs_bit_identical_modulo_traffic(&a, &b, &what);
+                        assert!(a.bytes_moved < b.bytes_moved, "{what}: bytes not reduced");
+                    }
+                }
+            }
         }
     });
 }
@@ -422,19 +517,23 @@ fn prop_csc_threaded_scatter_layout_identical() {
 /// each value, never the value.
 #[test]
 fn prop_parallel_bootstrap_thread_invariant() {
-    forall(8, |rng| {
-        let ds = random_dataset(rng);
-        let iters = 20 + rng.next_below(60) as usize;
-        let base = random_selector_cfg(rng, iters, 1.0 + rng.next_f64() * 10.0);
-        let serial = FastFrankWolfe::new(&ds, FwConfig { threads: 1, ..base.clone() }).run();
-        for threads in [4usize, 16] {
-            let par =
-                FastFrankWolfe::new(&ds, FwConfig { threads, ..base.clone() }).run();
-            assert_outputs_bit_identical(&serial, &par, &format!("threads={threads}"));
+    forall(6, |rng| {
+        // alternate below-gate (gate path) and above-gate (genuinely
+        // parallel bootstrap + CSC build) datasets
+        for big in [false, true] {
+            let ds = if big { big_dataset(rng) } else { random_dataset(rng) };
+            let iters = 20 + rng.next_below(60) as usize;
+            let base = random_selector_cfg(rng, iters, 1.0 + rng.next_f64() * 10.0);
+            let serial = FastFrankWolfe::new(&ds, FwConfig { threads: 1, ..base.clone() }).run();
+            for threads in [4usize, 16] {
+                let par =
+                    FastFrankWolfe::new(&ds, FwConfig { threads, ..base.clone() }).run();
+                assert_outputs_bit_identical(&serial, &par, &format!("big={big} t={threads}"));
+            }
+            // auto (0) resolves to available parallelism — still identical
+            let auto = FastFrankWolfe::new(&ds, FwConfig { threads: 0, ..base }).run();
+            assert_outputs_bit_identical(&serial, &auto, &format!("big={big} t=auto"));
         }
-        // auto (0) resolves to available parallelism — still identical
-        let auto = FastFrankWolfe::new(&ds, FwConfig { threads: 0, ..base }).run();
-        assert_outputs_bit_identical(&serial, &auto, "threads=auto");
     });
 }
 
