@@ -51,6 +51,7 @@ fn main() {
                     trace_every: 0,
                     lipschitz: None,
                     threads: 0,
+                    direct_max_nnz: None,
                 },
                 test_data: Some(test.clone()),
             });

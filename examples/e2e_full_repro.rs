@@ -109,6 +109,7 @@ fn main() -> anyhow::Result<()> {
                         trace_every: 0,
                         lipschitz: None,
                         threads: 0,
+                        direct_max_nnz: None,
                     },
                     test_data: Some(test.clone()),
                 });
@@ -186,6 +187,7 @@ fn main() -> anyhow::Result<()> {
             trace_every: 0,
             lipschitz: None,
             threads: 0,
+            direct_max_nnz: None,
         },
     )
     .run();

@@ -1,5 +1,11 @@
 //! Perf probe: a heavy DP fast-solver run for profiling (pair with
 //! DPFW_PHASE_TIMING=1 or `perf record`). Used by the §Perf pass.
+//!
+//! Hot loops dispatch through the §6.7 segment-adaptive scan kernels —
+//! sweep the fused/scratch threshold via `direct_max_nnz` here (or
+//! `DPFW_DIRECT_MAX_NNZ` when it is `None`) and read the resulting
+//! direct/scratch segment split off the output, instead of hand-rolling
+//! `resolve` + gather pairs.
 use dpfw::prelude::*;
 fn main() {
     let ds = SynthConfig::preset(DatasetPreset::News20).scale(0.1).generate(7);
@@ -7,10 +13,15 @@ fn main() {
         iters: 20_000, lambda: 50.0,
         privacy: Some(PrivacyParams { epsilon: 0.5, delta: 1e-6 }),
         selector: SelectorKind::Bsls, seed: 1, trace_every: 0, lipschitz: None, threads: 0,
+        direct_max_nnz: None,
     }).run();
     println!(
         "gap {:.3e} wall {:.0} ms flops {:.2e} bytes {:.2e} ({})",
         out.final_gap, out.wall_ms, out.flops as f64, out.bytes_moved as f64, ds.index_kind(),
+    );
+    println!(
+        "scan tier: {} direct / {} scratch segments, {:.2e} L1 scratch bytes",
+        out.direct_segments, out.scratch_segments, out.scratch_bytes as f64,
     );
     if let Some(p) = out.phase {
         println!("phase ns: select {} update {} notify {}", p.select_ns, p.update_ns, p.notify_ns);

@@ -70,6 +70,7 @@ fn main() {
             trace_every: 0,
             lipschitz: None,
             threads: 0,
+            direct_max_nnz: None,
         };
         let extra_owned = |sel: &str| -> Vec<(&'static str, String)> {
             vec![
@@ -125,6 +126,7 @@ fn main() {
         trace_every: 0,
         lipschitz: None,
         threads: 0,
+        direct_max_nnz: None,
     };
     let n20_extra = |variant: &str| -> Vec<(&'static str, String)> {
         vec![
@@ -158,12 +160,16 @@ fn main() {
     let mut ds_u32 = ds.clone();
     ds_u32.strip_compact();
     let mut traffic = (0u64, 0u64); // (compact, u32) bytes_moved
+    // (direct_segments, scratch_segments, scratch_bytes) of the last
+    // compact run — the §6.7 dispatcher split the JSON series tracks
+    let mut split = (0u64, 0u64, 0u64);
     let compact_stats =
         Bench::new(format!("news20 alg2+bsls T={n20_iters} (u16-delta substrate)"))
             .runs(n20_runs)
             .run_stats(|| {
                 let out = FastFrankWolfe::new(&ds, mk()).run();
                 traffic.0 = out.bytes_moved;
+                split = (out.direct_segments, out.scratch_segments, out.scratch_bytes);
                 out.flops
             });
     let u32_stats = Bench::new(format!("news20 alg2+bsls T={n20_iters} (u32 substrate)"))
@@ -185,6 +191,11 @@ fn main() {
         e.push(("index_kind", if variant == "u16-delta" { "u16-delta" } else { "u32" }.into()));
         e.push(("bytes_moved", bytes.to_string()));
         e.push(("bytes_per_iter", format!("{:.1}", per_iter(bytes))));
+        if variant == "u16-delta" {
+            e.push(("direct_segments", split.0.to_string()));
+            e.push(("scratch_segments", split.1.to_string()));
+            e.push(("scratch_bytes", split.2.to_string()));
+        }
         e
     };
     report.record(
@@ -198,6 +209,79 @@ fn main() {
         per_iter(traffic.0),
         per_iter(traffic.1),
         100.0 * traffic.0 as f64 / traffic.1 as f64
+    );
+
+    // ---- §6.7 direct-decode dispatcher: all-fused vs all-scratch -------
+    // Wall-clock is the measurable win on CI hardware; the modeled-bytes
+    // invariants are deterministic and guard the tier even in smoke mode:
+    // the trajectory and DRAM byte model are threshold-invariant, the
+    // all-fused run pays zero scratch round-trips, and fused total
+    // modeled traffic (DRAM + L1 scratch) can never exceed scratch's.
+    section("news20 + BSLS: direct-decode dispatcher (fused vs scratch arms)");
+    let run_thr = |thr: Option<usize>| {
+        FastFrankWolfe::new(&ds, FwConfig { direct_max_nnz: thr, ..mk() }).run()
+    };
+    let mut fused_probe: Option<dpfw::fw::trace::FwOutput> = None;
+    let fused_stats = Bench::new(format!("news20 alg2+bsls T={n20_iters} (all-fused)"))
+        .runs(n20_runs)
+        .run_stats(|| {
+            let out = run_thr(Some(usize::MAX));
+            let f = out.flops;
+            fused_probe = Some(out);
+            f
+        });
+    let fused_probe = fused_probe.expect("bench ran at least once");
+    let mut scratch_probe: Option<dpfw::fw::trace::FwOutput> = None;
+    let scratch_stats = Bench::new(format!("news20 alg2+bsls T={n20_iters} (all-scratch)"))
+        .runs(n20_runs)
+        .run_stats(|| {
+            let out = run_thr(Some(0));
+            let f = out.flops;
+            scratch_probe = Some(out);
+            f
+        });
+    let scratch_probe = scratch_probe.expect("bench ran at least once");
+    let default_probe = run_thr(None);
+    assert_eq!(
+        fused_probe.flops, scratch_probe.flops,
+        "sanity: the dispatcher threshold must not change counted work"
+    );
+    assert_eq!(
+        fused_probe.bytes_moved, scratch_probe.bytes_moved,
+        "sanity: the DRAM byte model is threshold-invariant"
+    );
+    assert_eq!(fused_probe.scratch_bytes, 0, "sanity: all-fused pays no scratch round-trips");
+    assert!(
+        scratch_probe.scratch_segments > 0 && scratch_probe.scratch_bytes > 0,
+        "sanity: all-scratch must record the round-trips it pays"
+    );
+    assert!(
+        fused_probe.bytes_moved + fused_probe.scratch_bytes
+            <= scratch_probe.bytes_moved + scratch_probe.scratch_bytes,
+        "sanity: fused-kernel modeled bytes must not exceed scratch-kernel modeled bytes"
+    );
+    let tier_extra = |variant: &str, out: &dpfw::fw::trace::FwOutput| {
+        let mut e = n20_extra(variant);
+        e.push(("direct_segments", out.direct_segments.to_string()));
+        e.push(("scratch_segments", out.scratch_segments.to_string()));
+        e.push(("scratch_bytes", out.scratch_bytes.to_string()));
+        e.push(("bytes_moved", out.bytes_moved.to_string()));
+        e
+    };
+    report.record("news20-bsls-all-fused", fused_stats, &tier_extra("all-fused", &fused_probe));
+    report.record(
+        "news20-bsls-all-scratch",
+        scratch_stats,
+        &tier_extra("all-scratch", &scratch_probe),
+    );
+    println!(
+        "  dispatcher: default split {} direct / {} scratch segments \
+         ({:.2e} scratch bytes); all-fused {:.2} us/iter vs all-scratch {:.2} us/iter",
+        default_probe.direct_segments,
+        default_probe.scratch_segments,
+        default_probe.scratch_bytes as f64,
+        fused_stats.mean_s * 1e6 / n20_iters as f64,
+        scratch_stats.mean_s * 1e6 / n20_iters as f64
     );
 
     // ---- phase breakdown (structured, from FwOutput::phase) ------------
@@ -253,6 +337,7 @@ fn main() {
         trace_every: 0,
         lipschitz: None,
         threads: 0,
+        direct_max_nnz: None,
     };
     let path_extra = |variant: &str, per_lambda_us: f64| -> Vec<(&'static str, String)> {
         vec![

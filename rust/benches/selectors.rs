@@ -4,10 +4,16 @@
 //! update), and report-noisy-max scans, as D grows. This is the
 //! substrate-level evidence for Fig 2's "heap is algorithmically better
 //! but constant-factor worse" and Alg 4's O(√D) draw.
+//!
+//! Results are persisted to `BENCH_selectors.json` at the repo root
+//! (override/disable via `DPFW_BENCH_SELECTORS_JSON`), so the selector
+//! substrate has the same cross-PR perf series as the solver benches.
+//! `DPFW_BENCH_SMOKE=1` shrinks the D grids and draw counts to CI-smoke
+//! size (the JSON emitter still runs end-to-end).
 
 mod bench_harness;
 
-use bench_harness::{section, Bench};
+use bench_harness::{section, smoke_mode, Bench, JsonReport};
 use dpfw::heap::binary::IndexedBinaryHeap;
 use dpfw::heap::fibonacci::FibonacciHeap;
 use dpfw::heap::DecreaseKeyHeap;
@@ -16,9 +22,16 @@ use dpfw::sampler::bsls::BslsSampler;
 use dpfw::sampler::naive::NaiveExpSampler;
 use dpfw::sampler::{noisy_max, WeightedSampler};
 
-fn bench_heap<H: DecreaseKeyHeap>(mut h: H, n: usize, label: &str) {
+fn bench_heap<H: DecreaseKeyHeap>(
+    mut h: H,
+    n: usize,
+    label: &str,
+    slug: &str,
+    runs: usize,
+    report: &mut JsonReport,
+) {
     let mut rng = Xoshiro256pp::seeded(1);
-    Bench::new(format!("{label} D={n}: build+churn+drain")).runs(3).run(|| {
+    let stats = Bench::new(format!("{label} D={n}: build+churn+drain")).runs(runs).run_stats(|| {
         for j in 0..n {
             h.push(j, rng.next_f64());
         }
@@ -35,66 +48,113 @@ fn bench_heap<H: DecreaseKeyHeap>(mut h: H, n: usize, label: &str) {
         }
         acc
     });
+    report.record(
+        &format!("heap-{slug}-d{n}"),
+        stats,
+        &[("structure", slug.to_string()), ("d", n.to_string())],
+    );
 }
 
 fn main() {
+    let smoke = smoke_mode();
+    let mut report = JsonReport::with_env("BENCH_selectors.json", "DPFW_BENCH_SELECTORS_JSON");
+    let runs = if smoke { 1 } else { 3 };
+
     section("heaps (Alg 3 substrate)");
-    for n in [10_000usize, 100_000] {
-        bench_heap(FibonacciHeap::with_capacity(n), n, "fibonacci");
-        bench_heap(IndexedBinaryHeap::with_capacity(n), n, "binary   ");
+    let heap_grid: &[usize] = if smoke { &[10_000] } else { &[10_000, 100_000] };
+    for &n in heap_grid {
+        bench_heap(FibonacciHeap::with_capacity(n), n, "fibonacci", "fib", runs, &mut report);
+        bench_heap(IndexedBinaryHeap::with_capacity(n), n, "binary   ", "bin", runs, &mut report);
     }
 
     section("exponential-mechanism draws (Alg 4 vs naive)");
-    for d in [10_000usize, 100_000, 1_000_000] {
+    let draw_grid: &[usize] = if smoke { &[10_000] } else { &[10_000, 100_000, 1_000_000] };
+    for &d in draw_grid {
         let mut bsls = BslsSampler::new(d, 0.0);
         let mut naive = NaiveExpSampler::new(d, 0.0);
         for j in (0..d).step_by((d / 64).max(1)) {
             bsls.update(j, (j % 9) as f64);
             naive.update(j, (j % 9) as f64);
         }
+        let bsls_draws = if smoke { 10 } else { 100 };
         let mut rng = Xoshiro256pp::seeded(2);
-        Bench::new(format!("bsls  D={d}: 100 draws")).runs(5).run(|| {
-            let mut acc = 0usize;
-            for _ in 0..100 {
-                acc ^= bsls.sample(&mut rng);
-            }
-            acc
-        });
-        let draws = if d > 100_000 { 3 } else { 100 };
+        let stats =
+            Bench::new(format!("bsls  D={d}: {bsls_draws} draws")).runs(runs.max(3)).run_stats(
+                || {
+                    let mut acc = 0usize;
+                    for _ in 0..bsls_draws {
+                        acc ^= bsls.sample(&mut rng);
+                    }
+                    acc
+                },
+            );
+        report.record(
+            &format!("bsls-draw-d{d}"),
+            stats,
+            &[("sampler", "bsls".into()), ("d", d.to_string()), ("draws", bsls_draws.to_string())],
+        );
+        let draws = if smoke || d > 100_000 { 3 } else { 100 };
         let mut rng = Xoshiro256pp::seeded(2);
-        let t = Bench::new(format!("naive D={d}: {draws} draws")).runs(3).run(|| {
+        let stats = Bench::new(format!("naive D={d}: {draws} draws")).runs(runs).run_stats(|| {
             let mut acc = 0usize;
             for _ in 0..draws {
                 acc ^= naive.sample(&mut rng);
             }
             acc
         });
-        let _ = t;
+        report.record(
+            &format!("naive-draw-d{d}"),
+            stats,
+            &[("sampler", "naive".into()), ("d", d.to_string()), ("draws", draws.to_string())],
+        );
     }
 
     section("sampler updates (Alg 2 line 29 notify path)");
-    for d in [100_000usize, 1_000_000] {
+    let upd_grid: &[usize] = if smoke { &[100_000] } else { &[100_000, 1_000_000] };
+    let updates = if smoke { 1_000 } else { 10_000 };
+    for &d in upd_grid {
         let mut bsls = BslsSampler::new(d, 0.0);
         let mut rng = Xoshiro256pp::seeded(3);
-        Bench::new(format!("bsls D={d}: 10k updates")).runs(5).run(|| {
-            for _ in 0..10_000 {
-                let j = rng.next_below(d as u64) as usize;
-                bsls.update(j, rng.next_f64() * 8.0);
-            }
-            bsls.log_total()
-        });
+        let stats =
+            Bench::new(format!("bsls D={d}: {updates} updates")).runs(runs.max(5)).run_stats(|| {
+                for _ in 0..updates {
+                    let j = rng.next_below(d as u64) as usize;
+                    bsls.update(j, rng.next_f64() * 8.0);
+                }
+                bsls.log_total()
+            });
+        report.record(
+            &format!("bsls-update-d{d}"),
+            stats,
+            &[("sampler", "bsls".into()), ("d", d.to_string()), ("updates", updates.to_string())],
+        );
     }
 
     section("report-noisy-max scan (Alg 1 DP selection)");
-    for d in [10_000usize, 100_000, 1_000_000] {
+    let nm_grid: &[usize] = if smoke { &[10_000] } else { &[10_000, 100_000, 1_000_000] };
+    let selections = if smoke { 3 } else { 10 };
+    for &d in nm_grid {
         let alpha: Vec<f64> = (0..d).map(|j| ((j * 31) % 17) as f64).collect();
         let mut rng = Xoshiro256pp::seeded(4);
-        Bench::new(format!("noisy-max D={d}: 10 selections")).runs(3).run(|| {
-            let mut acc = 0usize;
-            for _ in 0..10 {
-                acc ^= noisy_max::noisy_max(&alpha, 1.0, &mut rng).0;
-            }
-            acc
-        });
+        let stats = Bench::new(format!("noisy-max D={d}: {selections} selections"))
+            .runs(runs)
+            .run_stats(|| {
+                let mut acc = 0usize;
+                for _ in 0..selections {
+                    acc ^= noisy_max::noisy_max(&alpha, 1.0, &mut rng).0;
+                }
+                acc
+            });
+        report.record(
+            &format!("noisymax-d{d}"),
+            stats,
+            &[
+                ("selector", "noisymax".into()),
+                ("d", d.to_string()),
+                ("selections", selections.to_string()),
+            ],
+        );
     }
+
+    report.write().expect("write selectors bench json");
 }

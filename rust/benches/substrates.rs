@@ -1,19 +1,211 @@
 //! Bench: substrate microbenchmarks — sparse matvec / transpose-matvec /
 //! column scans (the building blocks whose costs appear in every line of
-//! the paper's complexity annotations), CSR↔CSC conversion, LIBSVM parse,
-//! and synthetic generation throughput.
+//! the paper's complexity annotations), the §6.7 direct-decode kernel
+//! tier by segment length, CSR↔CSC conversion, LIBSVM parse, and
+//! synthetic generation throughput.
+//!
+//! Results are persisted to `BENCH_substrates.json` at the repo root
+//! (override/disable via `DPFW_BENCH_SUBSTRATES_JSON`). The
+//! per-segment-length series (nnz ∈ {4, 8, 16, 40, 200, 2000}; scratch
+//! vs. fused vs. u32 for both `dot_gather` and `update_touch`) is the
+//! empirical basis for the `DIRECT_MAX_NNZ` dispatcher threshold: the
+//! fused arm should win below the threshold and lose above it on CI
+//! hardware. `DPFW_BENCH_SMOKE=1` shrinks every workload to CI-smoke
+//! size (the JSON emitter still runs end-to-end).
 
 mod bench_harness;
 
-use bench_harness::{section, Bench};
+use bench_harness::{section, smoke_mode, Bench, JsonReport};
+use dpfw::fw::scan::{self, ScanKernel};
+use dpfw::sparse::compact::{CompactIndices, IndexSeg};
 use dpfw::sparse::csc::CscMatrix;
 use dpfw::sparse::libsvm;
 use dpfw::sparse::synth::{DatasetPreset, SynthConfig};
 
-fn main() {
-    let ds = SynthConfig::preset(DatasetPreset::Rcv1).scale(0.25).generate(5);
+/// A synthetic index structure of `n_segs` segments of `nnz` indices
+/// each: paper-shaped small deltas within a segment, per-segment base
+/// offsets spread across `dim` (often ≥ 2¹⁶, so escape blocks occur at
+/// realistic density). Returns `(indptr, indices, values)`.
+fn uniform_segments(n_segs: usize, nnz: usize, dim: usize) -> (Vec<usize>, Vec<u32>, Vec<f32>) {
+    let mut indptr = Vec::with_capacity(n_segs + 1);
+    let mut indices = Vec::with_capacity(n_segs * nnz);
+    let mut values = Vec::with_capacity(n_segs * nnz);
+    let mut state = 0x9e3779b97f4a7c15u64;
+    indptr.push(0);
+    for s in 0..n_segs {
+        let mut j = ((s * 9973) % (dim - 10 * nnz - 1)) as u32;
+        for _ in 0..nnz {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+            j += 1 + (state >> 40) as u32 % 9;
+            indices.push(j);
+            values.push(((state >> 20) as f32 / 2.0_f32.powi(30)) - 2.0);
+        }
+        indptr.push(indices.len());
+    }
+    (indptr, indices, values)
+}
+
+fn kernel_tier_series(report: &mut JsonReport, smoke: bool) {
+    section("direct-decode kernel tier: scratch vs fused vs u32 by segment nnz (DESIGN.md 6.7)");
+    let dim = 1 << 20; // 8 MB gather target: genuinely out of cache
+    let w: Vec<f64> = (0..dim).map(|k| (k as f64 * 0.13).sin()).collect();
+    let total_nnz: usize = if smoke { 20_000 } else { 2_000_000 };
+    let runs = if smoke { 1 } else { 5 };
+    let fused = ScanKernel::with_threshold(usize::MAX);
+    let scratchy = ScanKernel::with_threshold(0);
     println!(
-        "workload: rcv1@0.25  N={} D={} nnz={}",
+        "{:>8} {:>14} {:>14} {:>14}  (ns/element, dot_gather)",
+        "nnz", "scratch", "fused", "u32"
+    );
+    for &nnz in &[4usize, 8, 16, 40, 200, 2000] {
+        let n_segs = (total_nnz / nnz).max(8);
+        let (indptr, indices, values) = uniform_segments(n_segs, nnz, dim);
+        let compact =
+            CompactIndices::build(&indptr, &indices).expect("small-delta segments must qualify");
+        let elems = (n_segs * nnz) as f64;
+        let extra = |arm: &str, kernel: &str| -> Vec<(&'static str, String)> {
+            vec![
+                ("kernel", kernel.to_string()),
+                ("arm", arm.to_string()),
+                ("seg_nnz", nnz.to_string()),
+                ("n_segs", n_segs.to_string()),
+            ]
+        };
+
+        // ---- dot_gather: the matvec/column-sweep kernel -----------------
+        let mut scratch = Vec::new();
+        let dot_sweep = |kern: ScanKernel, scratch: &mut Vec<u32>| {
+            let mut acc = 0.0f64;
+            for s in 0..n_segs {
+                let seg = IndexSeg::U16 {
+                    words: compact.seg_words(s),
+                    nnz,
+                };
+                acc += kern.dot(seg, &values[indptr[s]..indptr[s + 1]], &w, scratch);
+            }
+            acc
+        };
+        let t_scr = Bench::new(format!("dot scratch nnz={nnz}"))
+            .runs(runs)
+            .run_stats(|| dot_sweep(scratchy, &mut scratch));
+        report.record(&format!("dot-scratch-nnz{nnz}"), t_scr, &extra("scratch", "dot"));
+        let t_fus = Bench::new(format!("dot fused   nnz={nnz}"))
+            .runs(runs)
+            .run_stats(|| dot_sweep(fused, &mut scratch));
+        report.record(&format!("dot-fused-nnz{nnz}"), t_fus, &extra("fused", "dot"));
+        let t_u32 = Bench::new(format!("dot u32     nnz={nnz}")).runs(runs).run_stats(|| {
+            let mut acc = 0.0f64;
+            for s in 0..n_segs {
+                acc += scan::dot_gather(
+                    &indices[indptr[s]..indptr[s + 1]],
+                    &values[indptr[s]..indptr[s + 1]],
+                    &w,
+                );
+            }
+            acc
+        });
+        report.record(&format!("dot-u32-nnz{nnz}"), t_u32, &extra("u32", "dot"));
+        println!(
+            "{:>8} {:>14.2} {:>14.2} {:>14.2}",
+            nnz,
+            t_scr.mean_s * 1e9 / elems,
+            t_fus.mean_s * 1e9 / elems,
+            t_u32.mean_s * 1e9 / elems
+        );
+
+        // ---- update_touch: the Alg 2 fused row kernel -------------------
+        let mut alpha = vec![0.0f64; dim];
+        let mut stamp = vec![0u32; dim];
+        let mut touched: Vec<u32> = Vec::new();
+        let mut epoch = 0u32;
+        let mut ut_sweep = |kern: ScanKernel, scratch: &mut Vec<u32>| {
+            epoch = epoch.wrapping_add(1);
+            if epoch == 0 {
+                stamp.fill(0);
+                epoch = 1;
+            }
+            touched.clear();
+            for s in 0..n_segs {
+                let seg = IndexSeg::U16 {
+                    words: compact.seg_words(s),
+                    nnz,
+                };
+                kern.update_touch(
+                    seg,
+                    &values[indptr[s]..indptr[s + 1]],
+                    0.37,
+                    &mut alpha,
+                    &mut stamp,
+                    epoch,
+                    &mut touched,
+                    scratch,
+                );
+            }
+            touched.len()
+        };
+        let t_scr = Bench::new(format!("update_touch scratch nnz={nnz}"))
+            .runs(runs)
+            .run_stats(|| ut_sweep(scratchy, &mut scratch));
+        report.record(
+            &format!("update-touch-scratch-nnz{nnz}"),
+            t_scr,
+            &extra("scratch", "update_touch"),
+        );
+        let t_fus = Bench::new(format!("update_touch fused   nnz={nnz}"))
+            .runs(runs)
+            .run_stats(|| ut_sweep(fused, &mut scratch));
+        report.record(
+            &format!("update-touch-fused-nnz{nnz}"),
+            t_fus,
+            &extra("fused", "update_touch"),
+        );
+        // u32 reference arm: the same sweep on the raw index stream
+        let t_u32 =
+            Bench::new(format!("update_touch u32     nnz={nnz}")).runs(runs).run_stats(|| {
+                epoch = epoch.wrapping_add(1);
+                if epoch == 0 {
+                    stamp.fill(0);
+                    epoch = 1;
+                }
+                touched.clear();
+                for s in 0..n_segs {
+                    scan::update_touch(
+                        &indices[indptr[s]..indptr[s + 1]],
+                        &values[indptr[s]..indptr[s + 1]],
+                        0.37,
+                        &mut alpha,
+                        &mut stamp,
+                        epoch,
+                        &mut touched,
+                    );
+                }
+                touched.len()
+            });
+        report.record(&format!("update-touch-u32-nnz{nnz}"), t_u32, &extra("u32", "update_touch"));
+        println!(
+            "{:>8} {:>14.2} {:>14.2} {:>14.2}  (ns/element, update_touch)",
+            nnz,
+            t_scr.mean_s * 1e9 / elems,
+            t_fus.mean_s * 1e9 / elems,
+            t_u32.mean_s * 1e9 / elems
+        );
+    }
+    println!(
+        "\nExpect: fused beats scratch at small nnz (the store+load round-trip \
+         dominates), scratch catches up as the decode amortizes — the crossover \
+         justifies DIRECT_MAX_NNZ = {}.",
+        scan::DIRECT_MAX_NNZ
+    );
+}
+
+fn main() {
+    let smoke = smoke_mode();
+    let mut report = JsonReport::with_env("BENCH_substrates.json", "DPFW_BENCH_SUBSTRATES_JSON");
+    let scale = if smoke { 0.02 } else { 0.25 };
+    let runs = if smoke { 1 } else { 10 };
+    let ds = SynthConfig::preset(DatasetPreset::Rcv1).scale(scale).generate(5);
+    println!(
+        "workload: rcv1@{scale}  N={} D={} nnz={}",
         ds.n_rows(),
         ds.n_cols(),
         ds.nnz()
@@ -22,18 +214,18 @@ fn main() {
     section("sparse kernels");
     let w = vec![0.01f64; ds.n_cols()];
     let mut v = vec![0.0f64; ds.n_rows()];
-    Bench::new("csr matvec (v = Xw)").runs(10).run(|| {
+    Bench::new("csr matvec (v = Xw)").runs(runs).run(|| {
         ds.csr.matvec(&w, &mut v);
         v[0]
     });
     let q = vec![0.1f64; ds.n_rows()];
     let mut alpha = vec![0.0f64; ds.n_cols()];
-    Bench::new("csr matvec_t_add (alpha += X^T q)").runs(10).run(|| {
+    Bench::new("csr matvec_t_add (alpha += X^T q)").runs(runs).run(|| {
         alpha.iter_mut().for_each(|a| *a = 0.0);
         ds.csr.matvec_t_add(&q, &mut alpha);
         alpha[0]
     });
-    Bench::new("csc full column sweep (S_r loop x D)").runs(10).run(|| {
+    Bench::new("csc full column sweep (S_r loop x D)").runs(runs).run(|| {
         let mut acc = 0.0f64;
         for j in 0..ds.n_cols() {
             for (_, x) in ds.csc.col(j) {
@@ -42,7 +234,7 @@ fn main() {
         }
         acc
     });
-    Bench::new("row_dot over all rows").runs(10).run(|| {
+    Bench::new("row_dot over all rows").runs(runs).run(|| {
         let mut acc = 0.0;
         for i in 0..ds.n_rows() {
             acc += ds.csr.row_dot(i, &w);
@@ -60,35 +252,54 @@ fn main() {
         plain.csr.index_bytes_total(),
         100.0 * ds.csr.index_bytes_total() as f64 / plain.csr.index_bytes_total().max(1) as f64
     );
-    Bench::new("csr matvec (u16-delta)").runs(10).run(|| {
+    let s = Bench::new("csr matvec (u16-delta)").runs(runs).run_stats(|| {
         ds.csr.matvec(&w, &mut v);
         v[0]
     });
-    Bench::new("csr matvec (u32)").runs(10).run(|| {
+    report.record("matvec-u16-delta", s, &[("kernel", "matvec".into()), ("arm", "dispatch".into())]);
+    let s = Bench::new("csr matvec (u32)").runs(runs).run_stats(|| {
         plain.csr.matvec(&w, &mut v);
         v[0]
     });
-    Bench::new("csc matvec_t (u16-delta)").runs(10).run(|| {
+    report.record("matvec-u32", s, &[("kernel", "matvec".into()), ("arm", "u32".into())]);
+    let s = Bench::new("csc matvec_t (u16-delta)").runs(runs).run_stats(|| {
         ds.csc.matvec_t(&q, &mut alpha);
         alpha[0]
     });
-    Bench::new("csc matvec_t (u32)").runs(10).run(|| {
+    report.record(
+        "matvec-t-u16-delta",
+        s,
+        &[("kernel", "matvec_t".into()), ("arm", "dispatch".into())],
+    );
+    let s = Bench::new("csc matvec_t (u32)").runs(runs).run_stats(|| {
         plain.csc.matvec_t(&q, &mut alpha);
         alpha[0]
     });
+    report.record("matvec-t-u32", s, &[("kernel", "matvec_t".into()), ("arm", "u32".into())]);
+
+    kernel_tier_series(&mut report, smoke);
 
     section("construction");
-    Bench::new("csc from_csr (counting sort)").runs(5).run(|| CscMatrix::from_csr(&ds.csr).nnz());
-    Bench::new("synth generate rcv1@0.1").runs(3).run(|| {
-        SynthConfig::preset(DatasetPreset::Rcv1).scale(0.1).generate(9).nnz()
+    let c_runs = if smoke { 1 } else { 5 };
+    Bench::new("csc from_csr (counting sort)")
+        .runs(c_runs)
+        .run(|| CscMatrix::from_csr(&ds.csr).nnz());
+    let g_scale = if smoke { 0.02 } else { 0.1 };
+    Bench::new(format!("synth generate rcv1@{g_scale}")).runs(if smoke { 1 } else { 3 }).run(|| {
+        SynthConfig::preset(DatasetPreset::Rcv1).scale(g_scale).generate(9).nnz()
     });
 
     section("LIBSVM I/O");
+    let io_runs = if smoke { 1 } else { 3 };
     let path = std::env::temp_dir().join("dpfw_bench_io.svm");
-    Bench::new("write").runs(3).run(|| {
+    Bench::new("write").runs(io_runs).run(|| {
         libsvm::write_file(&ds, &path).unwrap();
         0
     });
-    Bench::new("read+index (csr+csc)").runs(3).run(|| libsvm::read_file(&path).unwrap().nnz());
+    Bench::new("read+index (csr+csc)")
+        .runs(io_runs)
+        .run(|| libsvm::read_file(&path).unwrap().nnz());
     std::fs::remove_file(&path).ok();
+
+    report.write().expect("write substrates bench json");
 }

@@ -42,6 +42,7 @@ fn main() {
                 trace_every: 0,
                 lipschitz: None,
                 threads: 0,
+                direct_max_nnz: None,
             };
             let t_alg1 = Bench::new(format!("{} eps={eps} alg1+noisymax", p.name()))
                 .runs(3)

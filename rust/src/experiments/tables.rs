@@ -63,6 +63,7 @@ fn dp_job(
             trace_every: 0,
             lipschitz: None,
             threads: 0,
+            direct_max_nnz: None,
         },
         test_data: None,
     }
@@ -165,6 +166,7 @@ pub fn table4_utility(cfg: &ExpConfig) -> Result<CsvTable> {
                 trace_every: 0,
                 lipschitz: None,
                 threads: 0,
+                direct_max_nnz: None,
             },
             test_data: Some(test),
         });
@@ -218,6 +220,7 @@ pub fn lambda_path(cfg: &ExpConfig) -> Result<CsvTable> {
                 trace_every: 0,
                 lipschitz: None,
                 threads: 0,
+                direct_max_nnz: None,
             },
             lambdas: PATH_LAMBDAS.to_vec(),
             test_data: Some(Arc::new(test)),

@@ -1,6 +1,7 @@
 //! Run configuration shared by both solvers.
 
 use crate::dp::accounting::PrivacyParams;
+use crate::fw::scan::ScanKernel;
 
 /// Which coordinate-selection structure to use (Table 3's rows/columns).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -85,6 +86,15 @@ pub struct FwConfig {
     /// so this is purely a performance/oversubscription knob (e.g. the
     /// coordinator pins its workers' jobs to 1).
     pub threads: usize,
+    /// Dispatcher threshold for the direct-decode kernel tier (DESIGN.md
+    /// §6.7): compact segments with `nnz` at or below it take the fused
+    /// decode-gather arm, longer ones decode to scratch. `None` (the
+    /// default) resolves process-wide — `DPFW_DIRECT_MAX_NNZ` if set,
+    /// else [`crate::fw::scan::DIRECT_MAX_NNZ`]. Every arm is
+    /// bit-identical (property-tested), so this is purely a performance
+    /// knob; bench sweeps set `Some(0)` (all-scratch) / `Some(usize::MAX)`
+    /// (all-fused) to measure the tier.
+    pub direct_max_nnz: Option<usize>,
 }
 
 impl Default for FwConfig {
@@ -98,11 +108,27 @@ impl Default for FwConfig {
             trace_every: 0,
             lipschitz: None,
             threads: 0,
+            direct_max_nnz: None,
         }
     }
 }
 
 impl FwConfig {
+    /// The scan-kernel dispatcher this run uses: the explicit
+    /// [`FwConfig::direct_max_nnz`] threshold, or the process-wide
+    /// env/default resolution. Both solvers route every segment scan of
+    /// the run — iteration loops *and* the dense bootstrap — plus the
+    /// matching per-segment accounting through this one value, so the
+    /// recorded direct/scratch split always reflects what actually ran.
+    /// (Leaf accessors outside a run, like `CsrMatrix::row_dot`, resolve
+    /// process-wide instead — they never see a config.)
+    pub fn scan_kernel(&self) -> ScanKernel {
+        match self.direct_max_nnz {
+            Some(n) => ScanKernel::with_threshold(n),
+            None => ScanKernel::from_env(),
+        }
+    }
+
     /// Resolve [`FwConfig::threads`]: the explicit count, or available
     /// parallelism when 0.
     pub fn effective_threads(&self) -> usize {
@@ -184,5 +210,14 @@ mod tests {
         assert!(FwConfig::default().effective_threads() >= 1);
         let c = FwConfig { threads: 3, ..Default::default() };
         assert_eq!(c.effective_threads(), 3);
+    }
+
+    #[test]
+    fn scan_kernel_prefers_explicit_threshold() {
+        let c = FwConfig { direct_max_nnz: Some(7), ..Default::default() };
+        assert_eq!(c.scan_kernel(), ScanKernel::with_threshold(7));
+        // None resolves process-wide (env or the compile-time default) —
+        // just pin that it matches the shared resolution.
+        assert_eq!(FwConfig::default().scan_kernel(), ScanKernel::from_env());
     }
 }

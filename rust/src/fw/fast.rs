@@ -64,6 +64,7 @@ use crate::fw::sign;
 use crate::fw::trace::{FwOutput, PhaseTiming, TraceRecord, WeightVector};
 use crate::fw::workspace::{BootKey, Bootstrap, FwWorkspace};
 use crate::rng::Xoshiro256pp;
+use crate::sparse::compact::IndexSeg;
 use crate::sparse::Dataset;
 
 /// Renormalization threshold for the multiplicative scalar. With
@@ -189,6 +190,10 @@ impl<'a> FastFrankWolfe<'a> {
         let mut selector = ws.take_selector(self.cfg.selector, d, exp_scale, nm_scale);
         let mut rng = Xoshiro256pp::seeded(self.cfg.seed);
         let mut flops = FlopCounter::new();
+        // the segment-adaptive dispatcher (§6.7): one threshold for every
+        // scan of this run, so the recorded direct/scratch split always
+        // matches the kernel arms that actually executed
+        let kern = self.cfg.scan_kernel();
 
         // ---- lines 8-14: dense first iteration --------------------------
         // w = 0 ⇒ v̄ = 0, q̄_i = ∇L(0, y_i), α = Xᵀq̄, g̃ = ⟨α, 0⟩ = 0.
@@ -227,7 +232,7 @@ impl<'a> FastFrankWolfe<'a> {
             } else {
                 self.cfg.threads
             };
-            csc.matvec_t_par(&st.q, &mut st.alpha, boot_threads);
+            csc.matvec_t_par_scan(&st.q, &mut st.alpha, boot_threads, kern);
             flops.add_boot(2 * csr.nnz() as u64);
             // full CSC sweep: index + value streams, q̄ gathers, α writes
             flops.add_boot_bytes(
@@ -310,53 +315,78 @@ impl<'a> FastFrankWolfe<'a> {
                 col_seg.index_bytes()
                     + (2 * BYTES_F32_READ + BYTES_F64_RMW + BYTES_F64_READ) * col_nnz,
             );
-            let rows = scan::resolve(col_seg, &mut col_scratch);
-            for (r, (&i_u32, &xij)) in rows.iter().zip(xvals).enumerate() {
-                // hide the margin-state gather latency: the index stream
-                // tells us which v̂/q̄ slots the scan needs PF_DIST rows
-                // from now, so start their cache fills here
-                if let Some(&ip) = rows.get(r + scan::PF_DIST) {
-                    scan::prefetch_read(&st.hat_v, ip as usize);
-                    scan::prefetch_read(&st.q, ip as usize);
+            flops.count_seg(kern.arm(&col_seg), col_nnz);
+            {
+                // One row of the column scan, shared verbatim by both
+                // dispatcher arms below. `ahead` is the row index the
+                // decode/lookahead cursor just produced PF_DIST rows out:
+                // start its v̂/q̄ cache fills now to hide the gather
+                // latency.
+                let mut scan_row = |i: usize, xij: f32, ahead: Option<u32>| {
+                    if let Some(ip) = ahead {
+                        scan::prefetch_read(&st.hat_v, ip as usize);
+                        scan::prefetch_read(&st.q, ip as usize);
+                    }
+                    // v̂_i += η·s·X[i,j]/w_m   (so v_i = w_m·v̂_i is exact)
+                    st.hat_v[i] += vcoef * xij as f64;
+                    let v_new = st.w_m * st.hat_v[i];
+                    let gamma = self.loss.grad(v_new, y[i] as f64) - st.q[i];
+                    flops.add(6 + FLOPS_SIGMOID);
+                    if gamma == 0.0 {
+                        return;
+                    }
+                    st.q[i] += gamma;
+                    // α += γ · X[i,:]; the kernel stamps coordinates whose
+                    // α changes this iteration (rows with γ = 0 leave α —
+                    // and hence the queue — untouched, so skipping them
+                    // here is exactly the old second-pass behaviour:
+                    // notify was a no-op for unchanged values).
+                    let (row_seg, rvals) = csr.row_seg(i);
+                    let row_nnz = rvals.len() as u64;
+                    // q̄ write-back + row streams + per entry an α rmw and
+                    // a stamp rmw
+                    flops.add_bytes(
+                        BYTES_F64_READ
+                            + row_seg.index_bytes()
+                            + (BYTES_F32_READ + BYTES_F64_RMW + BYTES_U32_RMW) * row_nnz,
+                    );
+                    flops.count_seg(kern.arm(&row_seg), row_nnz);
+                    kern.update_touch(
+                        row_seg,
+                        rvals,
+                        gamma,
+                        &mut st.alpha,
+                        &mut stamp,
+                        epoch,
+                        &mut touched,
+                        &mut row_scratch,
+                    );
+                    flops.add(2 * row_nnz + 1);
+                    // g̃ += γ·⟨X[i,:], w⟩ = γ·v_i  (see module docs)
+                    st.g_base += gamma * v_new;
+                    flops.add(2);
+                };
+                match (kern.arm(&col_seg), col_seg) {
+                    // short compact column: fused direct decode — the
+                    // two-cursor pipeline feeds rows (and their prefetch
+                    // lookahead) straight off the u16 word stream
+                    (scan::SegArm::Direct, IndexSeg::U16 { words, nnz }) => {
+                        let mut sc = scan::DirectScan::new(words, nnz);
+                        let mut r = 0usize;
+                        while let Some((i, ahead)) = sc.next() {
+                            scan_row(i as usize, xvals[r], ahead);
+                            r += 1;
+                        }
+                    }
+                    // long compact column (decode to L1 scratch) or u32:
+                    // gather from the resolved slice with slice lookahead
+                    _ => {
+                        let rows = scan::resolve(col_seg, &mut col_scratch);
+                        for (r, (&i_u32, &xij)) in rows.iter().zip(xvals).enumerate() {
+                            scan_row(i_u32 as usize, xij, rows.get(r + scan::PF_DIST).copied());
+                        }
+                    }
                 }
-                let i = i_u32 as usize;
-                // v̂_i += η·s·X[i,j]/w_m   (so v_i = w_m·v̂_i is exact)
-                st.hat_v[i] += vcoef * xij as f64;
-                let v_new = st.w_m * st.hat_v[i];
-                let gamma = self.loss.grad(v_new, y[i] as f64) - st.q[i];
-                flops.add(6 + FLOPS_SIGMOID);
-                if gamma == 0.0 {
-                    continue;
-                }
-                st.q[i] += gamma;
-                // α += γ · X[i,:]; the kernel stamps coordinates whose α
-                // changes this iteration (rows with γ = 0 leave α — and
-                // hence the queue — untouched, so skipping them here is
-                // exactly the old second-pass behaviour: notify was a
-                // no-op for unchanged values).
-                let (row_seg, rvals) = csr.row_seg(i);
-                let row_nnz = rvals.len() as u64;
-                // q̄ write-back + row streams + per entry an α rmw and a
-                // stamp rmw
-                flops.add_bytes(
-                    BYTES_F64_READ
-                        + row_seg.index_bytes()
-                        + (BYTES_F32_READ + BYTES_F64_RMW + BYTES_U32_RMW) * row_nnz,
-                );
-                let cols = scan::resolve(row_seg, &mut row_scratch);
-                scan::update_touch(
-                    cols,
-                    rvals,
-                    gamma,
-                    &mut st.alpha,
-                    &mut stamp,
-                    epoch,
-                    &mut touched,
-                );
-                flops.add(2 * row_nnz + 1);
-                // g̃ += γ·⟨X[i,:], w⟩ = γ·v_i  (see module docs)
-                st.g_base += gamma * v_new;
-                flops.add(2);
             }
             if let Some(p) = p0 {
                 ns_update += p.elapsed().as_nanos();
@@ -429,6 +459,9 @@ impl<'a> FastFrankWolfe<'a> {
             bootstrap_flops: flops.bootstrap(),
             bytes_moved: flops.bytes(),
             bootstrap_bytes: flops.bootstrap_bytes(),
+            scratch_bytes: flops.scratch_bytes(),
+            direct_segments: flops.direct_segments(),
+            scratch_segments: flops.scratch_segments(),
             wall_ms,
             phase: timing.then(|| PhaseTiming {
                 select_ns: ns_select as u64,

@@ -26,6 +26,14 @@ pub const BYTES_F64_READ: u64 = 8;
 pub const BYTES_F64_RMW: u64 = 16; // read + write back
 pub const BYTES_F32_READ: u64 = 4;
 pub const BYTES_U32_RMW: u64 = 8; // stamp words: read + (amortized) write
+/// The scratch round-trip a decode-to-scratch segment pays per index: a
+/// `u32` store into the scratch plus the re-read the gather performs
+/// (DESIGN.md §6.7). This is **L1 traffic**, not DRAM — the scratch stays
+/// cache-resident by construction — so it is tracked in its own
+/// [`FlopCounter::scratch_bytes`] category rather than folded into the
+/// DRAM-model `bytes`; the fused direct-decode arm charges zero here,
+/// which is exactly the saving the §6.7 tier exists to harvest.
+pub const BYTES_U32_SCRATCH_RT: u64 = 8;
 
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct FlopCounter {
@@ -42,6 +50,18 @@ pub struct FlopCounter {
     /// The slice of `bytes` attributable to the dense bootstrap — the
     /// traffic analogue of `boot`, with the same warm-run contract.
     boot_bytes: u64,
+    /// Modeled L1 scratch round-trip bytes (DESIGN.md §6.7): the
+    /// store+load per index that decode-to-scratch segments pay and fused
+    /// direct-decode segments do not. Iteration-tier only — the one-off
+    /// bootstrap sweep is deliberately unmodeled here, keeping the
+    /// warm-path `run_path` contract untouched.
+    scratch: u64,
+    /// Compact segments scanned through the fused direct-decode arm
+    /// (iteration tier; empty segments are not counted).
+    direct_segs: u64,
+    /// Compact segments scanned through the decode-to-scratch arm
+    /// (iteration tier; empty segments are not counted).
+    scratch_segs: u64,
 }
 
 impl FlopCounter {
@@ -98,6 +118,52 @@ impl FlopCounter {
         self.boot_bytes
     }
 
+    /// Record a batch of scanned compact segments: `direct` fused
+    /// segments, `scratch` decode-to-scratch segments covering
+    /// `scratch_nnz` indices (each charged [`BYTES_U32_SCRATCH_RT`] of L1
+    /// round-trip traffic). `u32` segments are not recorded — they have
+    /// no decode arm to split.
+    #[inline]
+    pub fn add_segs(&mut self, direct: u64, scratch: u64, scratch_nnz: u64) {
+        self.direct_segs += direct;
+        self.scratch_segs += scratch;
+        self.scratch += BYTES_U32_SCRATCH_RT * scratch_nnz;
+    }
+
+    /// Record one scanned segment by the dispatcher arm that ran it
+    /// (empty segments move nothing and are skipped).
+    #[inline]
+    pub fn count_seg(&mut self, arm: crate::fw::scan::SegArm, nnz: u64) {
+        use crate::fw::scan::SegArm;
+        if nnz == 0 {
+            return;
+        }
+        match arm {
+            SegArm::Direct => self.add_segs(1, 0, 0),
+            SegArm::Scratch => self.add_segs(0, 1, nnz),
+            SegArm::U32 => {}
+        }
+    }
+
+    /// L1 scratch round-trip bytes recorded through
+    /// [`FlopCounter::add_segs`] / [`FlopCounter::count_seg`].
+    #[inline]
+    pub fn scratch_bytes(&self) -> u64 {
+        self.scratch
+    }
+
+    /// Compact segments that rode the fused direct-decode arm.
+    #[inline]
+    pub fn direct_segments(&self) -> u64 {
+        self.direct_segs
+    }
+
+    /// Compact segments that rode the decode-to-scratch arm.
+    #[inline]
+    pub fn scratch_segments(&self) -> u64 {
+        self.scratch_segs
+    }
+
     pub fn reset(&mut self) {
         *self = Self::default();
     }
@@ -139,5 +205,28 @@ mod tests {
         f.reset();
         assert_eq!(f.bytes(), 0);
         assert_eq!(f.bootstrap_bytes(), 0);
+    }
+
+    #[test]
+    fn segment_split_tracks_arms_and_scratch_round_trips() {
+        use crate::fw::scan::SegArm;
+        let mut f = FlopCounter::new();
+        f.count_seg(SegArm::Direct, 10);
+        f.count_seg(SegArm::Scratch, 100);
+        f.count_seg(SegArm::U32, 50); // no decode arm: not recorded
+        f.count_seg(SegArm::Direct, 0); // empty: skipped
+        f.count_seg(SegArm::Scratch, 0); // empty: skipped
+        assert_eq!(f.direct_segments(), 1);
+        assert_eq!(f.scratch_segments(), 1);
+        assert_eq!(f.scratch_bytes(), BYTES_U32_SCRATCH_RT * 100);
+        assert_eq!(f.bytes(), 0, "scratch L1 traffic must not leak into the DRAM model");
+        f.add_segs(3, 2, 7);
+        assert_eq!(f.direct_segments(), 4);
+        assert_eq!(f.scratch_segments(), 3);
+        assert_eq!(f.scratch_bytes(), BYTES_U32_SCRATCH_RT * 107);
+        f.reset();
+        assert_eq!(f.direct_segments(), 0);
+        assert_eq!(f.scratch_segments(), 0);
+        assert_eq!(f.scratch_bytes(), 0);
     }
 }

@@ -11,9 +11,13 @@
 //!   Fibonacci-heap queue, Alg 4's BSLS exponential sampler, the noisy-max
 //!   ablation, and the naive `O(D)` exponential mechanism.
 //! * [`scan`] — the shared decode-and-gather kernel layer (DESIGN.md
-//!   §6.6): every hot sparse loop routes through it, consuming either the
-//!   plain `u32` or the compact `u16-delta` index substrate with explicit
-//!   software prefetch and bit-identical accumulation order.
+//!   §6.6–§6.7): every hot sparse loop routes through it, consuming
+//!   either the plain `u32` or the compact `u16-delta` index substrate
+//!   with explicit software prefetch and bit-identical accumulation
+//!   order; a segment-adaptive dispatcher ([`scan::ScanKernel`]) sends
+//!   short compact segments down fused direct-decode kernels (two-cursor
+//!   pipeline, no scratch round-trip) and long ones down the
+//!   decode-to-scratch path.
 //! * [`workspace`] — reusable run-to-run buffer pools ([`workspace::FwWorkspace`]):
 //!   both solvers expose `run_in(&mut FwWorkspace)` so sweep drivers and
 //!   the coordinator's workers execute repeated runs without allocating

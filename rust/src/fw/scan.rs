@@ -1,9 +1,10 @@
-//! The shared scan-kernel layer (DESIGN.md §6.6): every hot sparse loop in
-//! the codebase — the fast solver's fused update+notify scan, Alg 1's
-//! `matvec`/`matvec_t_add`, the CSC-driven bootstrap, the coordinator's
-//! scorer — routes its decode-and-gather through this module.
+//! The shared scan-kernel layer (DESIGN.md §6.6–§6.7): every hot sparse
+//! loop in the codebase — the fast solver's fused update+notify scan,
+//! Alg 1's `matvec`/`matvec_t_add`, the CSC-driven bootstrap, the
+//! coordinator's scorer — routes its decode-and-gather through this
+//! module.
 //!
-//! Three ideas, one contract:
+//! Four ideas, one contract:
 //!
 //! * **Decode to scratch, gather from `u32`.** A compact
 //!   ([`crate::sparse::compact`]) segment is first decoded into a
@@ -13,6 +14,19 @@
 //!   traffic is the half-width `u16` stream while the gather code — and
 //!   therefore the accumulation order — is *identical* across substrates.
 //!   On the `u32` substrate [`resolve`] is a zero-cost borrow.
+//! * **Direct decode for short segments** (§6.7). The scratch round-trip
+//!   is a store+load per index — a large constant fraction of per-segment
+//!   work when the segment holds only `S_c ≈ 5–40` indices (the paper's
+//!   row scans). The fused kernels ([`dot_gather_u16`],
+//!   [`axpy_gather_u16`], [`update_touch_u16`]) instead consume the `u16`
+//!   word stream directly through a **two-cursor software pipeline**
+//!   ([`DirectScan`]): a decode cursor runs [`PF_DIST`] elements ahead of
+//!   the gather cursor, materializing decoded indices into a small
+//!   stack-resident ring while the just-decoded index drives the gather
+//!   prefetches; the gather cursor drains the ring in the exact serial
+//!   accumulation order of the scratch path. The [`ScanKernel`]
+//!   dispatcher picks fused vs. scratch-decode per segment from its nnz
+//!   against [`DIRECT_MAX_NNZ`].
 //! * **Software prefetch.** The gather targets (`w[j]`, `α[k]`,
 //!   `stamp[k]`, `v̂[i]`) are random-access into arrays far larger than
 //!   cache; the index stream tells us the next addresses [`PF_DIST`]
@@ -22,10 +36,12 @@
 //!   cannot change any computed value.
 //! * **Bit-identical by construction.** Every kernel accumulates in the
 //!   exact serial order of the pre-existing loops (single accumulator,
-//!   sequential adds — the manual 4× unrolls keep one dependency chain),
-//!   so routing a call site through this module never changes its output
-//!   bits (property-tested compact-vs-u32 and against the old loops'
-//!   golden outputs), per the DESIGN.md §2 convention.
+//!   sequential adds — the manual 4× unrolls keep one dependency chain,
+//!   and the fused pipeline gathers one element at a time in the same
+//!   stream order), so routing a call site through this module never
+//!   changes its output bits (property-tested compact-vs-u32, fused vs.
+//!   scratch vs. u32, and against the old loops' golden outputs), per the
+//!   DESIGN.md §2 convention.
 //!
 //! Layering note: this module lives in `fw/` (it is the solver family's
 //! kernel layer) but depends only on `sparse::compact` — never on the
@@ -33,7 +49,9 @@
 //! That one deliberate up-reference keeps a single copy of every gather
 //! loop; see DESIGN.md §6.6.
 
-use crate::sparse::compact::{decode_words, IndexSeg};
+use std::sync::OnceLock;
+
+use crate::sparse::compact::{decode_words, IndexSeg, ESCAPE};
 
 /// Prefetch lookahead distance, in stream elements. Far enough that a
 /// DRAM fetch (~100 ns) completes before the gather loop (~1–2 ns/element
@@ -66,10 +84,50 @@ pub fn prefetch_read<T>(slice: &[T], i: usize) {
     }
 }
 
+/// Default nnz ceiling for the fused direct-decode tier: segments at or
+/// below it skip the scratch round-trip ([`SegArm::Direct`]), longer ones
+/// amortize the decode over a scratch that stays L1-hot
+/// ([`SegArm::Scratch`]). 64 brackets the paper's row-scan lengths
+/// (S_c ≈ 5–40, where the store+load per index is the largest constant
+/// fraction of segment work) while leaving long column scans — whose
+/// decode cost is amortized and whose 4× unrolled gather is faster from
+/// scratch — on the scratch tier. The `benches/substrates.rs`
+/// per-segment-length series (nnz ∈ {4, 8, 16, 40, 200, 2000}) measures
+/// the crossover on CI hardware; override per run via
+/// `FwConfig::direct_max_nnz` or process-wide via `DPFW_DIRECT_MAX_NNZ`.
+pub const DIRECT_MAX_NNZ: usize = 64;
+
+/// Ring capacity of the two-cursor pipeline — a power of two strictly
+/// greater than [`PF_DIST`], so the decode cursor (at most `PF_DIST`
+/// slots ahead of the gather cursor) can never overwrite an undrained
+/// slot. 32 × 4 bytes lives comfortably in registers/L1 stack space.
+const RING: usize = 32;
+// The safety invariant above, enforced at compile time: retuning PF_DIST
+// past the ring capacity must be a build error, not a silent corruption
+// of undrained slots.
+const _: () = assert!(RING > PF_DIST, "DirectScan ring must outsize the prefetch distance");
+
+/// Which kernel arm a [`ScanKernel`] dispatches a segment to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SegArm {
+    /// Compact segment, fused direct decode (no scratch round-trip).
+    Direct,
+    /// Compact segment, decode-to-scratch then `u32` gather.
+    Scratch,
+    /// Plain `u32` segment — nothing to decode.
+    U32,
+}
+
 /// Materialize a segment's indices as `u32`: the borrowed stream itself
 /// on the plain substrate, or a decode into `scratch` on the compact one.
 /// `scratch` is only touched on the compact path, so passing a fresh
 /// `Vec::new()` on the `u32` substrate allocates nothing.
+///
+/// This is the **scratch arm** of the kernel tier: callers scanning whole
+/// matrices should route through a [`ScanKernel`] (or the matrix-level
+/// `*_scan` entry points built on it), which sends short compact segments
+/// down the fused direct-decode arm instead of pairing `resolve` with a
+/// gather by hand.
 #[inline]
 pub fn resolve<'a>(seg: IndexSeg<'a>, scratch: &'a mut Vec<u32>) -> &'a [u32] {
     match seg {
@@ -77,6 +135,330 @@ pub fn resolve<'a>(seg: IndexSeg<'a>, scratch: &'a mut Vec<u32>) -> &'a [u32] {
         IndexSeg::U16 { words, nnz } => {
             decode_words(words, nnz, scratch);
             &scratch[..]
+        }
+    }
+}
+
+/// Decode the next index from a delta word stream: one plain word, or a
+/// 3-word escape block (`ESCAPE, lo16, hi16` — see
+/// [`crate::sparse::compact`]). The accumulator `prev` carries the
+/// running index exactly as [`decode_words`] does.
+#[inline(always)]
+fn decode_step(words: &[u16], cur: &mut usize, prev: &mut u32) -> u32 {
+    let w0 = words[*cur];
+    let delta = if w0 != ESCAPE {
+        *cur += 1;
+        w0 as u32
+    } else {
+        debug_assert!(*cur + 2 < words.len(), "truncated escape block");
+        let lo = words[*cur + 1] as u32;
+        let hi = words[*cur + 2] as u32;
+        *cur += 3;
+        lo | (hi << 16)
+    };
+    *prev = prev.wrapping_add(delta);
+    *prev
+}
+
+/// The two-cursor software pipeline over one compact segment (§6.7): the
+/// decode cursor runs [`PF_DIST`] indices ahead of the gather cursor,
+/// parking decoded indices in a fixed stack ring ([`RING`] slots — never
+/// the heap scratch), and [`DirectScan::next`] hands the caller each
+/// index *in stream order* together with the index the decode cursor just
+/// produced (`PF_DIST` positions ahead) so the caller can start that
+/// element's gather-target cache fills now. Construction pre-decodes the
+/// first `min(PF_DIST, nnz)` indices; [`DirectScan::lead`] exposes them
+/// (valid until the first `next`) so kernels can prefetch the pipeline
+/// warm-up too.
+///
+/// The gather order is exactly the decoded stream order, so any loop
+/// drained through `next` is bit-identical to the same loop over a
+/// [`resolve`]d scratch slice.
+pub struct DirectScan<'a> {
+    words: &'a [u16],
+    nnz: usize,
+    ring: [u32; RING],
+    /// Word-stream position of the decode cursor.
+    cur: usize,
+    /// Running index accumulator of the decode cursor.
+    prev: u32,
+    /// Indices decoded so far (decode cursor, in elements).
+    decoded: usize,
+    /// Indices handed out so far (gather cursor).
+    k: usize,
+}
+
+impl<'a> DirectScan<'a> {
+    /// Start the pipeline over a segment's word stream holding `nnz`
+    /// indices, pre-decoding the [`PF_DIST`]-element lead.
+    #[inline]
+    pub fn new(words: &'a [u16], nnz: usize) -> Self {
+        let mut s = Self { words, nnz, ring: [0u32; RING], cur: 0, prev: 0, decoded: 0, k: 0 };
+        while s.decoded < PF_DIST.min(nnz) {
+            s.advance_decode();
+        }
+        s
+    }
+
+    #[inline(always)]
+    fn advance_decode(&mut self) -> u32 {
+        let j = decode_step(self.words, &mut self.cur, &mut self.prev);
+        self.ring[self.decoded % RING] = j;
+        self.decoded += 1;
+        j
+    }
+
+    /// The pre-decoded pipeline lead, in stream order — for issuing the
+    /// warm-up prefetches. Only meaningful before the first
+    /// [`DirectScan::next`] call (later the ring has wrapped).
+    #[inline]
+    pub fn lead(&self) -> &[u32] {
+        debug_assert!(self.k == 0, "lead() is a pre-drain accessor");
+        &self.ring[..self.decoded]
+    }
+
+    /// The next index in stream order, plus — when the stream extends
+    /// that far — the index just decoded [`PF_DIST`] positions ahead of
+    /// it (the caller's prefetch handle). Returns `None` once all `nnz`
+    /// indices have been handed out.
+    #[inline(always)]
+    pub fn next(&mut self) -> Option<(u32, Option<u32>)> {
+        if self.k == self.nnz {
+            debug_assert_eq!(self.cur, self.words.len(), "undrained escape words");
+            return None;
+        }
+        let ahead = if self.decoded < self.nnz { Some(self.advance_decode()) } else { None };
+        let j = self.ring[self.k % RING];
+        self.k += 1;
+        Some((j, ahead))
+    }
+}
+
+/// Fused direct-decode counterpart of [`dot_gather`]: consumes the `u16`
+/// word stream through a [`DirectScan`], prefetching `w` from the
+/// just-decoded lookahead index. Single sequential accumulator in stream
+/// order — bit-identical to `resolve` + [`dot_gather`] by construction.
+#[inline]
+pub fn dot_gather_u16(words: &[u16], nnz: usize, vals: &[f32], w: &[f64]) -> f64 {
+    debug_assert_eq!(nnz, vals.len());
+    let mut s = DirectScan::new(words, nnz);
+    for &jp in s.lead() {
+        prefetch_read(w, jp as usize);
+    }
+    let mut acc = 0.0f64;
+    let mut k = 0;
+    while let Some((j, ahead)) = s.next() {
+        if let Some(jp) = ahead {
+            prefetch_read(w, jp as usize);
+        }
+        acc += vals[k] as f64 * w[j as usize];
+        k += 1;
+    }
+    acc
+}
+
+/// Fused direct-decode counterpart of [`axpy_gather`]: scattered AXPY
+/// straight off the word stream, prefetching `out` from the lookahead
+/// index. Stream order, so repeated indices accumulate exactly as the
+/// scratch path does.
+#[inline]
+pub fn axpy_gather_u16(words: &[u16], nnz: usize, vals: &[f32], coef: f64, out: &mut [f64]) {
+    debug_assert_eq!(nnz, vals.len());
+    let mut s = DirectScan::new(words, nnz);
+    for &jp in s.lead() {
+        prefetch_read(out, jp as usize);
+    }
+    let mut k = 0;
+    while let Some((j, ahead)) = s.next() {
+        if let Some(jp) = ahead {
+            prefetch_read(out, jp as usize);
+        }
+        out[j as usize] += vals[k] as f64 * coef;
+        k += 1;
+    }
+}
+
+/// Fused direct-decode counterpart of [`update_touch`]: the fast solver's
+/// row kernel straight off the word stream, prefetching both `alpha` and
+/// `stamp` from the lookahead index. Per-element operations in stream
+/// order — α updates, stamp tests, and `touched` pushes are bit- and
+/// order-identical to the scratch path.
+#[inline]
+#[allow(clippy::too_many_arguments)] // mirrors update_touch's signature
+pub fn update_touch_u16(
+    words: &[u16],
+    nnz: usize,
+    vals: &[f32],
+    gamma: f64,
+    alpha: &mut [f64],
+    stamp: &mut [u32],
+    epoch: u32,
+    touched: &mut Vec<u32>,
+) {
+    debug_assert_eq!(nnz, vals.len());
+    let mut s = DirectScan::new(words, nnz);
+    for &jp in s.lead() {
+        prefetch_read(alpha, jp as usize);
+        prefetch_read(stamp, jp as usize);
+    }
+    let mut k = 0;
+    while let Some((j, ahead)) = s.next() {
+        if let Some(jp) = ahead {
+            prefetch_read(alpha, jp as usize);
+            prefetch_read(stamp, jp as usize);
+        }
+        let ju = j as usize;
+        alpha[ju] += gamma * vals[k] as f64;
+        if stamp[ju] != epoch {
+            stamp[ju] = epoch;
+            touched.push(j);
+        }
+        k += 1;
+    }
+}
+
+/// The segment-adaptive dispatcher (§6.7): one value per run (or per
+/// matrix sweep) deciding, segment by segment, whether a compact segment
+/// rides the fused direct-decode arm or the decode-to-scratch arm. Both
+/// arms — and the `u32` passthrough — are bit-identical, so the threshold
+/// is purely a performance knob; the accounting layer
+/// ([`crate::fw::flops::FlopCounter::count_seg`]) records which arm ran.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ScanKernel {
+    /// Segments with `nnz <= direct_max_nnz` take the fused arm.
+    pub direct_max_nnz: usize,
+}
+
+impl ScanKernel {
+    /// A dispatcher with an explicit threshold (bench sweeps, tests, and
+    /// `FwConfig::direct_max_nnz`). `0` pins every compact segment to the
+    /// scratch arm; `usize::MAX` pins every one to the fused arm.
+    #[inline]
+    pub const fn with_threshold(direct_max_nnz: usize) -> Self {
+        Self { direct_max_nnz }
+    }
+
+    /// The process-wide dispatcher: `DPFW_DIRECT_MAX_NNZ` if set and
+    /// parseable, else [`DIRECT_MAX_NNZ`]. The environment is read
+    /// **once per process** (leaf kernels like `row_dot` resolve this on
+    /// every call, so it must stay cheap); in-process sweeps use
+    /// [`ScanKernel::with_threshold`] / `FwConfig::direct_max_nnz`.
+    #[inline]
+    pub fn from_env() -> Self {
+        static ENV_THRESHOLD: OnceLock<usize> = OnceLock::new();
+        let t = *ENV_THRESHOLD.get_or_init(|| {
+            std::env::var("DPFW_DIRECT_MAX_NNZ")
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(DIRECT_MAX_NNZ)
+        });
+        Self { direct_max_nnz: t }
+    }
+
+    /// Which arm this dispatcher sends `seg` down.
+    #[inline]
+    pub fn arm(&self, seg: &IndexSeg<'_>) -> SegArm {
+        match seg {
+            IndexSeg::U32(_) => SegArm::U32,
+            IndexSeg::U16 { nnz, .. } => {
+                if *nnz <= self.direct_max_nnz {
+                    SegArm::Direct
+                } else {
+                    SegArm::Scratch
+                }
+            }
+        }
+    }
+
+    /// How a full sweep of compact segments described by `indptr` (the
+    /// standard CSR/CSC offset array) splits under this dispatcher:
+    /// `(direct_segments, scratch_segments, scratch_nnz)`, empty segments
+    /// uncounted — the analytic mirror of per-segment [`ScanKernel::arm`]
+    /// dispatch, kept here so the threshold rule lives in exactly one
+    /// type. Callers must only invoke this for matrices that actually
+    /// carry a compact mirror (`u32` matrices have no arms to split).
+    pub fn split_segments(&self, indptr: &[usize]) -> (u64, u64, u64) {
+        let (mut direct, mut scratch, mut scratch_nnz) = (0u64, 0u64, 0u64);
+        for w in indptr.windows(2) {
+            let nnz = w[1] - w[0];
+            if nnz == 0 {
+                continue;
+            }
+            if nnz <= self.direct_max_nnz {
+                direct += 1;
+            } else {
+                scratch += 1;
+                scratch_nnz += nnz as u64;
+            }
+        }
+        (direct, scratch, scratch_nnz)
+    }
+
+    /// Dispatched [`dot_gather`]: fused off the word stream for short
+    /// compact segments, decode-to-`scratch` for long ones, straight
+    /// gather on `u32`. Bit-identical across arms.
+    #[inline]
+    pub fn dot(&self, seg: IndexSeg<'_>, vals: &[f32], w: &[f64], scratch: &mut Vec<u32>) -> f64 {
+        match seg {
+            IndexSeg::U32(idx) => dot_gather(idx, vals, w),
+            IndexSeg::U16 { words, nnz } => {
+                if nnz <= self.direct_max_nnz {
+                    dot_gather_u16(words, nnz, vals, w)
+                } else {
+                    decode_words(words, nnz, scratch);
+                    dot_gather(&scratch[..], vals, w)
+                }
+            }
+        }
+    }
+
+    /// Dispatched [`axpy_gather`]. Bit-identical across arms.
+    #[inline]
+    pub fn axpy(
+        &self,
+        seg: IndexSeg<'_>,
+        vals: &[f32],
+        coef: f64,
+        out: &mut [f64],
+        scratch: &mut Vec<u32>,
+    ) {
+        match seg {
+            IndexSeg::U32(idx) => axpy_gather(idx, vals, coef, out),
+            IndexSeg::U16 { words, nnz } => {
+                if nnz <= self.direct_max_nnz {
+                    axpy_gather_u16(words, nnz, vals, coef, out);
+                } else {
+                    decode_words(words, nnz, scratch);
+                    axpy_gather(&scratch[..], vals, coef, out);
+                }
+            }
+        }
+    }
+
+    /// Dispatched [`update_touch`]. Bit-identical across arms.
+    #[inline]
+    #[allow(clippy::too_many_arguments)] // mirrors update_touch's signature
+    pub fn update_touch(
+        &self,
+        seg: IndexSeg<'_>,
+        vals: &[f32],
+        gamma: f64,
+        alpha: &mut [f64],
+        stamp: &mut [u32],
+        epoch: u32,
+        touched: &mut Vec<u32>,
+        scratch: &mut Vec<u32>,
+    ) {
+        match seg {
+            IndexSeg::U32(idx) => update_touch(idx, vals, gamma, alpha, stamp, epoch, touched),
+            IndexSeg::U16 { words, nnz } => {
+                if nnz <= self.direct_max_nnz {
+                    update_touch_u16(words, nnz, vals, gamma, alpha, stamp, epoch, touched);
+                } else {
+                    decode_words(words, nnz, scratch);
+                    update_touch(&scratch[..], vals, gamma, alpha, stamp, epoch, touched);
+                }
+            }
         }
     }
 }
@@ -268,6 +650,160 @@ mod tests {
         for (x, y) in a1.iter().zip(&a2) {
             assert_eq!(x.to_bits(), y.to_bits());
         }
+    }
+
+    /// Delta-encode one segment's indices by the compact rules (escape
+    /// blocks included) without the matrix-level qualifier, so kernel
+    /// tests can exercise escape-heavy and tiny segments the qualifier
+    /// would reject at matrix granularity.
+    fn encode_seg(indices: &[u32]) -> Vec<u16> {
+        let mut words = Vec::new();
+        let mut prev = 0u32;
+        for &j in indices {
+            let delta = j - prev;
+            if delta < ESCAPE as u32 {
+                words.push(delta as u16);
+            } else {
+                words.push(ESCAPE);
+                words.push(delta as u16);
+                words.push((delta >> 16) as u16);
+            }
+            prev = j;
+        }
+        words
+    }
+
+    /// Indices for a length-`n` segment whose deltas include escapes
+    /// (≥ 2¹⁶) at deterministic positions, so every `n mod 4` tail length
+    /// is crossed with escape blocks at the head, middle, and tail.
+    fn escape_stream(n: usize, seed: u64) -> (Vec<u32>, Vec<f32>, Vec<f64>) {
+        let mut state = seed;
+        let mut idx = Vec::new();
+        let mut vals = Vec::new();
+        let mut j = 0u32;
+        for k in 0..n {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+            // escapes at the first, a middle, and the last position;
+            // small deltas elsewhere
+            if k == 0 || k == n / 2 || k + 1 == n {
+                j += 70_000 + (state >> 50) as u32; // delta ≥ 2^16
+            } else {
+                j += 1 + (state >> 40) as u32 % 7;
+            }
+            idx.push(j);
+            vals.push(((state >> 20) as f32 / 2.0_f32.powi(30)) - 2.0);
+        }
+        // size the gather target to the stream (≤ ~300k slots here)
+        let dim = idx.last().map_or(1, |&m| m as usize + 1);
+        let w: Vec<f64> = (0..dim).map(|k| (k as f64 * 0.13).sin()).collect();
+        (idx, vals, w)
+    }
+
+    /// The §6.7 contract at kernel granularity: fused direct decode,
+    /// decode-to-scratch, and the raw u32 gather are bit-identical for
+    /// every tail length `n mod 4` (n = 0..13 and PF_DIST±1 sizes) on
+    /// segments containing escape blocks at head/middle/tail.
+    #[test]
+    fn fused_scratch_u32_bit_identical_with_escapes_all_tails() {
+        for n in [0usize, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 15, 16, 17, 40, 100] {
+            let (idx, vals, w) = escape_stream(n, 1000 + n as u64);
+            let words = encode_seg(&idx);
+            // u32 reference
+            let d_u32 = dot_gather(&idx, &vals, &w);
+            // scratch arm
+            let mut scratch = Vec::new();
+            decode_words(&words, n, &mut scratch);
+            assert_eq!(&scratch[..], &idx[..], "n={n}: decode disagreed");
+            let d_scr = dot_gather(&scratch, &vals, &w);
+            // fused arm
+            let d_fus = dot_gather_u16(&words, n, &vals, &w);
+            assert_eq!(d_u32.to_bits(), d_scr.to_bits(), "n={n}: scratch dot");
+            assert_eq!(d_u32.to_bits(), d_fus.to_bits(), "n={n}: fused dot");
+
+            let mut a_u32 = w.clone();
+            let mut a_fus = w.clone();
+            axpy_gather(&idx, &vals, -0.73, &mut a_u32);
+            axpy_gather_u16(&words, n, &vals, -0.73, &mut a_fus);
+            for (k, (x, y)) in a_u32.iter().zip(&a_fus).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "n={n}: axpy slot {k}");
+            }
+
+            let dim = w.len();
+            let (mut al1, mut s1, mut t1) = (vec![0.0f64; dim], vec![0u32; dim], Vec::new());
+            let (mut al2, mut s2, mut t2) = (vec![0.0f64; dim], vec![0u32; dim], Vec::new());
+            update_touch(&idx, &vals, 0.41, &mut al1, &mut s1, 9, &mut t1);
+            update_touch_u16(&words, n, &vals, 0.41, &mut al2, &mut s2, 9, &mut t2);
+            assert_eq!(t1, t2, "n={n}: touched order");
+            assert_eq!(s1, s2, "n={n}: stamps");
+            for (k, (x, y)) in al1.iter().zip(&al2).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "n={n}: alpha slot {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn direct_scan_pipeline_order_and_lookahead() {
+        let (idx, _, _) = stream(40, 77);
+        let words = encode_seg(&idx);
+        let mut s = DirectScan::new(&words, idx.len());
+        // the pre-decoded lead is the first PF_DIST indices in order
+        assert_eq!(s.lead(), &idx[..PF_DIST]);
+        let mut got = Vec::new();
+        let mut aheads = Vec::new();
+        while let Some((j, ahead)) = s.next() {
+            got.push(j);
+            aheads.push(ahead);
+        }
+        assert_eq!(got, idx, "drain order must be stream order");
+        // while k + PF_DIST < nnz the lookahead is exactly idx[k+PF_DIST]
+        for (k, a) in aheads.iter().enumerate() {
+            if k + PF_DIST < idx.len() {
+                assert_eq!(*a, Some(idx[k + PF_DIST]), "k={k}");
+            } else {
+                assert_eq!(*a, None, "k={k}: tail must stop decoding");
+            }
+        }
+        // segments shorter than the pipeline lead drain correctly too
+        let short = &idx[..3];
+        let words = encode_seg(short);
+        let mut s = DirectScan::new(&words, 3);
+        assert_eq!(s.lead(), short);
+        let mut got = Vec::new();
+        while let Some((j, ahead)) = s.next() {
+            assert_eq!(ahead, None);
+            got.push(j);
+        }
+        assert_eq!(got, short);
+        // empty segment
+        let mut s = DirectScan::new(&[], 0);
+        assert!(s.lead().is_empty());
+        assert!(s.next().is_none());
+    }
+
+    #[test]
+    fn kernel_dispatch_arms_and_equivalence() {
+        let (idx, vals, w) = stream(40, 5);
+        let indptr = [0usize, idx.len()];
+        let c = CompactIndices::build(&indptr, &idx).expect("qualifies");
+        let seg16 = IndexSeg::U16 { words: c.seg_words(0), nnz: idx.len() };
+        let seg32 = IndexSeg::U32(&idx);
+        let fused = ScanKernel::with_threshold(usize::MAX);
+        let scratchy = ScanKernel::with_threshold(0);
+        assert_eq!(fused.arm(&seg16), SegArm::Direct);
+        assert_eq!(scratchy.arm(&seg16), SegArm::Scratch);
+        assert_eq!(ScanKernel::with_threshold(40).arm(&seg16), SegArm::Direct, "boundary is <=");
+        assert_eq!(ScanKernel::with_threshold(39).arm(&seg16), SegArm::Scratch);
+        assert_eq!(fused.arm(&seg32), SegArm::U32);
+        let mut scratch = Vec::new();
+        let want = dot_gather(&idx, &vals, &w);
+        for k in [fused, scratchy, ScanKernel::from_env()] {
+            assert_eq!(k.dot(seg16, &vals, &w, &mut scratch).to_bits(), want.to_bits());
+            assert_eq!(k.dot(seg32, &vals, &w, &mut scratch).to_bits(), want.to_bits());
+        }
+        // the fused arm must never touch the scratch
+        let mut virgin = Vec::new();
+        fused.dot(seg16, &vals, &w, &mut virgin);
+        assert_eq!(virgin.capacity(), 0, "direct arm must not allocate scratch");
     }
 
     #[test]

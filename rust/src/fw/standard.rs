@@ -95,6 +95,13 @@ impl<'a> StandardFrankWolfe<'a> {
         let mut selector = ws.take_selector(self.cfg.selector, d, exp_scale, nm_scale);
         let mut rng = Xoshiro256pp::seeded(self.cfg.seed);
         let mut flops = FlopCounter::new();
+        // segment-adaptive dispatcher (§6.7), plus the analytic
+        // direct/scratch split of one full row sweep under it — the
+        // per-iteration dense recompute runs two such sweeps, and this
+        // precomputed triple is exactly what the dispatched kernels
+        // execute (full-sweep convention, like the byte model below)
+        let kern = self.cfg.scan_kernel();
+        let (seg_direct, seg_scratch, seg_scratch_nnz) = csr.scan_split(kern);
 
         let mut w = ws.take_f64(d, 0.0);
         let mut v = ws.take_f64(n, 0.0);
@@ -125,13 +132,13 @@ impl<'a> StandardFrankWolfe<'a> {
                     None => false,
                 };
             if !cached {
-                csr.matvec_in(&w, &mut v, &mut scratch); // v̄ = X w
+                csr.matvec_scan(&w, &mut v, &mut scratch, kern); // v̄ = X w
                 for i in 0..n {
                     q[i] = self.loss.grad(v[i], y[i] as f64); // q̄ = ∇L(v̄)
                 }
                 alpha.iter_mut().for_each(|a| *a = 0.0);
                 // α = Xᵀ q̄  (ȳ fused into q̄)
-                csr.matvec_t_add_in(&q, &mut alpha, &mut scratch);
+                csr.matvec_t_add_scan(&q, &mut alpha, &mut scratch, kern);
                 let cost = 4 * csr.nnz() as u64 + n as u64 * FLOPS_SIGMOID + d as u64;
                 // §6.6 traffic model: both matvec passes stream the index
                 // and value structures; per nonzero a w gather (first
@@ -153,6 +160,11 @@ impl<'a> StandardFrankWolfe<'a> {
                 } else {
                     flops.add(cost);
                     flops.add_bytes(bytes);
+                    // both matvec passes sweep every row segment through
+                    // the dispatcher (the t = 1 sweep is bootstrap work
+                    // and stays out of the iteration-tier split, mirroring
+                    // the §6.7 convention in the fast solver)
+                    flops.add_segs(2 * seg_direct, 2 * seg_scratch, 2 * seg_scratch_nnz);
                 }
             }
             if !initialized {
@@ -214,6 +226,9 @@ impl<'a> StandardFrankWolfe<'a> {
             bootstrap_flops: flops.bootstrap(),
             bytes_moved: flops.bytes(),
             bootstrap_bytes: flops.bootstrap_bytes(),
+            scratch_bytes: flops.scratch_bytes(),
+            direct_segments: flops.direct_segments(),
+            scratch_segments: flops.scratch_segments(),
             wall_ms,
             phase: None, // Alg 1 has no fused-scan phase breakdown
             selector_stats: selector.stats(),

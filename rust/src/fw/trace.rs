@@ -67,6 +67,20 @@ pub struct FwOutput {
     /// warm path run, with the same exact-offset contract as
     /// [`FwOutput::bootstrap_flops`].
     pub bootstrap_bytes: u64,
+    /// Modeled L1 scratch round-trip bytes (DESIGN.md §6.7): the per-index
+    /// store+load that decode-to-scratch compact segments pay and the
+    /// fused direct-decode tier eliminates. Iteration-tier only (the
+    /// one-off bootstrap sweep is excluded, so the warm-path contract is
+    /// untouched); zero on the `u32` substrate and on an all-fused run.
+    pub scratch_bytes: u64,
+    /// Compact segments the iteration loop scanned through the fused
+    /// direct-decode arm (DESIGN.md §6.7; empty segments uncounted, `u32`
+    /// substrate reports 0). With `scratch_segments`, the dispatcher
+    /// split the bench JSON tracks.
+    pub direct_segments: u64,
+    /// Compact segments the iteration loop scanned through the
+    /// decode-to-scratch arm.
+    pub scratch_segments: u64,
     /// Wall-clock milliseconds.
     pub wall_ms: f64,
     /// Per-phase wall-clock breakdown (fast solver, only when

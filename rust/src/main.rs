@@ -114,6 +114,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         trace_every: args.get_usize("trace-every", 0)?,
         lipschitz: None,
         threads: args.get_usize("threads", 0)?,
+        // CLI runs use the process-wide resolution (DPFW_DIRECT_MAX_NNZ
+        // env var or the §6.7 default)
+        direct_max_nnz: None,
     };
     let algo = Algo::from_name(&args.get_or("algo", "alg2")).context("bad --algo")?;
     println!(

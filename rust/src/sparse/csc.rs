@@ -7,7 +7,7 @@
 
 use super::compact::{CompactIndices, IndexSeg};
 use super::csr::CsrMatrix;
-use crate::fw::scan;
+use crate::fw::scan::ScanKernel;
 
 /// Raw-pointer wrapper that lets the scoped scatter threads share the
 /// output arrays. Safe to send because every write index is provably
@@ -290,6 +290,18 @@ impl CscMatrix {
         }
     }
 
+    /// How a full column sweep splits under `kern`'s dispatcher —
+    /// `(direct_segments, scratch_segments, scratch_nnz)`, the CSC mirror
+    /// of [`CsrMatrix::scan_split`] (DESIGN.md §6.7; the threshold rule
+    /// lives in [`ScanKernel::split_segments`]). `(0, 0, 0)` on the `u32`
+    /// substrate; O(n_cols).
+    pub fn scan_split(&self, kern: ScanKernel) -> (u64, u64, u64) {
+        if self.compact.is_none() {
+            return (0, 0, 0);
+        }
+        kern.split_segments(&self.indptr)
+    }
+
     /// `out[j] = Σ_i X[i,j] · q[i]` for every column — the `Xᵀq` product
     /// driven from the column side. Because each column's rows are stored
     /// ascending, the per-column addition sequence is exactly the one the
@@ -308,8 +320,8 @@ impl CscMatrix {
         self.matvec_t_range_in(q, cols, out, &mut Vec::new());
     }
 
-    /// Scratch-threaded body of [`CscMatrix::matvec_t_range`] (one decode
-    /// scratch reused across the whole column range; untouched on `u32`).
+    /// Scratch-threaded body of [`CscMatrix::matvec_t_range`], dispatching
+    /// through the process-wide [`ScanKernel::from_env`].
     pub fn matvec_t_range_in(
         &self,
         q: &[f64],
@@ -317,11 +329,24 @@ impl CscMatrix {
         out: &mut [f64],
         scratch: &mut Vec<u32>,
     ) {
+        self.matvec_t_range_scan(q, cols, out, scratch, ScanKernel::from_env());
+    }
+
+    /// Dispatcher-threaded body of [`CscMatrix::matvec_t_range`]: short
+    /// compact columns ride the fused direct-decode arm, long ones reuse
+    /// one decode scratch across the whole range (untouched on `u32`).
+    pub fn matvec_t_range_scan(
+        &self,
+        q: &[f64],
+        cols: std::ops::Range<usize>,
+        out: &mut [f64],
+        scratch: &mut Vec<u32>,
+        kern: ScanKernel,
+    ) {
         assert_eq!(out.len(), cols.len());
         for (slot, j) in out.iter_mut().zip(cols) {
             let (seg, vals) = self.col_seg(j);
-            let idx = scan::resolve(seg, scratch);
-            *slot = scan::dot_gather(idx, vals, q);
+            *slot = kern.dot(seg, vals, q, scratch);
         }
     }
 
@@ -334,11 +359,19 @@ impl CscMatrix {
     /// touches every nonzero. The [`super::PAR_MIN_NNZ`] serial-fallback
     /// gate lives here, not at call sites.
     pub fn matvec_t_par(&self, q: &[f64], out: &mut [f64], threads: usize) {
+        self.matvec_t_par_scan(q, out, threads, ScanKernel::from_env());
+    }
+
+    /// Dispatcher-threaded body of [`CscMatrix::matvec_t_par`] — the
+    /// solvers' bootstrap entry point, so an explicit
+    /// `FwConfig::direct_max_nnz` governs the bootstrap sweep too (each
+    /// worker allocates its own decode scratch, exactly as before).
+    pub fn matvec_t_par_scan(&self, q: &[f64], out: &mut [f64], threads: usize, kern: ScanKernel) {
         assert_eq!(q.len(), self.n_rows);
         assert_eq!(out.len(), self.n_cols);
         let threads = if self.nnz() < super::PAR_MIN_NNZ { 1 } else { threads };
         if threads <= 1 || self.n_cols < 2 {
-            return self.matvec_t(q, out);
+            return self.matvec_t_range_scan(q, 0..self.n_cols, out, &mut Vec::new(), kern);
         }
         let ranges = super::balanced_ranges(&self.indptr, threads);
         std::thread::scope(|s| {
@@ -346,7 +379,7 @@ impl CscMatrix {
             for r in ranges {
                 let (chunk, tail) = rest.split_at_mut(r.len());
                 rest = tail;
-                s.spawn(move || self.matvec_t_range(q, r, chunk));
+                s.spawn(move || self.matvec_t_range_scan(q, r, chunk, &mut Vec::new(), kern));
             }
         });
     }
@@ -537,6 +570,37 @@ mod tests {
         for (j, (x, y)) in a.iter().zip(&b).enumerate() {
             assert_eq!(x.to_bits(), y.to_bits(), "col {j} diverged");
         }
+    }
+
+    #[test]
+    fn scan_split_mirrors_arm_dispatch() {
+        use crate::fw::scan::SegArm;
+        let csr = zipfish_csr(31);
+        let plain = CscMatrix::from_csr(&csr);
+        let mut compact = plain.clone();
+        compact.build_compact();
+        assert_eq!(compact.index_kind(), "u16-delta");
+        let kern = ScanKernel::with_threshold(8);
+        assert_eq!(plain.scan_split(kern), (0, 0, 0), "u32 substrate has no arms");
+        // the analytic split must agree with per-segment arm dispatch
+        let (mut d, mut s, mut n) = (0u64, 0u64, 0u64);
+        for j in 0..compact.n_cols() {
+            let (seg, vals) = compact.col_seg(j);
+            if vals.is_empty() {
+                continue;
+            }
+            match kern.arm(&seg) {
+                SegArm::Direct => d += 1,
+                SegArm::Scratch => {
+                    s += 1;
+                    n += vals.len() as u64;
+                }
+                SegArm::U32 => unreachable!("compact matrix"),
+            }
+        }
+        assert_eq!(compact.scan_split(kern), (d, s, n));
+        // the zipf fixture has both tail columns (≤ 8 nnz) and dense ones
+        assert!(d > 0 && s > 0, "fixture must exercise both arms at thr=8");
     }
 
     #[test]

@@ -11,7 +11,7 @@
 //! [`crate::fw::scan`] with bit-identical results.
 
 use super::compact::{CompactIndices, IndexSeg};
-use crate::fw::scan;
+use crate::fw::scan::{self, ScanKernel, SegArm};
 
 #[derive(Clone, Debug)]
 pub struct CsrMatrix {
@@ -148,6 +148,21 @@ impl CsrMatrix {
         }
     }
 
+    /// How a full row sweep splits under `kern`'s dispatcher (DESIGN.md
+    /// §6.7): `(direct_segments, scratch_segments, scratch_nnz)` — the
+    /// non-empty compact rows taking the fused arm, those decoding to
+    /// scratch, and the indices the latter round-trip. `(0, 0, 0)` on the
+    /// `u32` substrate. This is the analytic mirror of what the `*_scan`
+    /// kernels actually execute (the threshold rule itself lives in
+    /// [`ScanKernel::split_segments`]), used by the solvers' per-sweep
+    /// accounting; O(n_rows).
+    pub fn scan_split(&self, kern: ScanKernel) -> (u64, u64, u64) {
+        if self.compact.is_none() {
+            return (0, 0, 0);
+        }
+        kern.split_segments(&self.indptr)
+    }
+
     /// The flat column-index stream (length `nnz`, row-major order) —
     /// used by the parallel CSC transpose build's counting phase.
     #[inline]
@@ -189,14 +204,23 @@ impl CsrMatrix {
     /// `out = X · w` with a caller-provided decode scratch (the solvers'
     /// pooled workspaces use this so repeated runs stay allocation-free
     /// on the compact substrate; the scratch is untouched on `u32`).
+    /// Dispatches through the process-wide [`ScanKernel::from_env`];
+    /// solvers with an explicit `FwConfig::direct_max_nnz` use
+    /// [`CsrMatrix::matvec_scan`].
     pub fn matvec_in(&self, w: &[f64], out: &mut [f64], scratch: &mut Vec<u32>) {
-        assert_eq!(w.len(), self.n_cols);
-        assert_eq!(out.len(), self.n_rows);
-        self.matvec_range_in(w, 0..self.n_rows, out, scratch);
+        self.matvec_scan(w, out, scratch, ScanKernel::from_env());
     }
 
-    /// Scratch-threaded body of [`CsrMatrix::matvec_range`]: the scratch
-    /// is reused across the whole range so it stays L1-hot.
+    /// `out = X · w` through an explicit segment-adaptive dispatcher —
+    /// the full-control entry point the solvers use so the kernel arm
+    /// that runs always matches their per-segment accounting.
+    pub fn matvec_scan(&self, w: &[f64], out: &mut [f64], scratch: &mut Vec<u32>, kern: ScanKernel) {
+        assert_eq!(w.len(), self.n_cols);
+        assert_eq!(out.len(), self.n_rows);
+        self.matvec_range_scan(w, 0..self.n_rows, out, scratch, kern);
+    }
+
+    /// Scratch-threaded body of [`CsrMatrix::matvec_range`].
     pub fn matvec_range_in(
         &self,
         w: &[f64],
@@ -204,11 +228,24 @@ impl CsrMatrix {
         out: &mut [f64],
         scratch: &mut Vec<u32>,
     ) {
+        self.matvec_range_scan(w, rows, out, scratch, ScanKernel::from_env());
+    }
+
+    /// Dispatcher-threaded body of [`CsrMatrix::matvec_range`]: short
+    /// compact rows ride the fused direct-decode arm, long ones reuse the
+    /// scratch across the whole range so it stays L1-hot.
+    pub fn matvec_range_scan(
+        &self,
+        w: &[f64],
+        rows: std::ops::Range<usize>,
+        out: &mut [f64],
+        scratch: &mut Vec<u32>,
+        kern: ScanKernel,
+    ) {
         assert_eq!(out.len(), rows.len());
         for (slot, i) in out.iter_mut().zip(rows) {
             let (seg, vals) = self.row_seg(i);
-            let idx = scan::resolve(seg, scratch);
-            *slot = scan::dot_gather(idx, vals, w);
+            *slot = kern.dot(seg, vals, w, scratch);
         }
     }
 
@@ -246,8 +283,21 @@ impl CsrMatrix {
         self.matvec_t_add_in(q, out, &mut Vec::new());
     }
 
-    /// Scratch-threaded body of [`CsrMatrix::matvec_t_add`].
+    /// Scratch-threaded body of [`CsrMatrix::matvec_t_add`], dispatching
+    /// through the process-wide [`ScanKernel::from_env`].
     pub fn matvec_t_add_in(&self, q: &[f64], out: &mut [f64], scratch: &mut Vec<u32>) {
+        self.matvec_t_add_scan(q, out, scratch, ScanKernel::from_env());
+    }
+
+    /// Dispatcher-threaded body of [`CsrMatrix::matvec_t_add`] — the
+    /// solvers' entry point (kernel arm matches their accounting).
+    pub fn matvec_t_add_scan(
+        &self,
+        q: &[f64],
+        out: &mut [f64],
+        scratch: &mut Vec<u32>,
+        kern: ScanKernel,
+    ) {
         assert_eq!(q.len(), self.n_rows);
         assert_eq!(out.len(), self.n_cols);
         for i in 0..self.n_rows {
@@ -256,20 +306,28 @@ impl CsrMatrix {
                 continue;
             }
             let (seg, vals) = self.row_seg(i);
-            let idx = scan::resolve(seg, scratch);
-            scan::axpy_gather(idx, vals, qi, out);
+            kern.axpy(seg, vals, qi, out, scratch);
         }
     }
 
-    /// Dot product of row `i` with dense `w`. Deliberately stays on the
-    /// canonical `u32` stream: a leaf accessor with no caller scratch
-    /// would pay an allocation per call to decode the compact mirror
-    /// (bit-identical either way — the matvec kernels carry the compact
-    /// win; this keeps the prefetched gather).
+    /// Dot product of row `i` with dense `w`. A leaf accessor with no
+    /// caller scratch, so it has no decode buffer to amortize: short
+    /// compact rows ride the fused direct-decode arm (§6.7 — no scratch
+    /// needed at all), while rows past the dispatcher threshold stay on
+    /// the canonical `u32` stream's prefetched gather rather than paying
+    /// an allocation per call. Bit-identical either way.
     #[inline]
     pub fn row_dot(&self, i: usize, w: &[f64]) -> f64 {
-        let (idx, val) = self.row_raw(i);
-        scan::dot_gather(idx, val, w)
+        let (seg, vals) = self.row_seg(i);
+        match (ScanKernel::from_env().arm(&seg), seg) {
+            (SegArm::Direct, IndexSeg::U16 { words, nnz }) => {
+                scan::dot_gather_u16(words, nnz, vals, w)
+            }
+            _ => {
+                let (idx, val) = self.row_raw(i);
+                scan::dot_gather(idx, val, w)
+            }
+        }
     }
 
     /// Densify (tests / the PJRT oracle path only — O(N·D) memory).

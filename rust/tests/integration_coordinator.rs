@@ -50,6 +50,7 @@ fn mini_table3_grid() {
                         trace_every: 25,
                         lipschitz: None,
                         threads: 0,
+                        direct_max_nnz: None,
                     },
                     test_data: Some(test.clone()),
                 });

@@ -65,6 +65,7 @@ fn dp_utility_degrades_gracefully() {
                 trace_every: 0,
                 lipschitz: None,
                 threads: 0,
+                direct_max_nnz: None,
             },
         )
         .run();
@@ -93,6 +94,7 @@ fn dp_fast_solver_is_faster() {
         trace_every: 0,
         lipschitz: None,
         threads: 0,
+        direct_max_nnz: None,
     };
     let slow = StandardFrankWolfe::new(&ds, base.clone()).run();
     let fast = FastFrankWolfe::new(
@@ -144,6 +146,7 @@ fn dp_large_t_stays_sparse() {
             trace_every: 0,
             lipschitz: None,
             threads: 0,
+            direct_max_nnz: None,
         },
     )
     .run();
@@ -218,6 +221,7 @@ fn compact_escape_blocks_dense_column_bit_identical_end_to_end() {
                 trace_every: 10,
                 lipschitz: None,
                 threads,
+                direct_max_nnz: None,
             };
             let a = FastFrankWolfe::new(&ds, cfg.clone()).run();
             let c = FastFrankWolfe::new(&plain, cfg.clone()).run();
@@ -242,6 +246,66 @@ fn compact_escape_blocks_dense_column_bit_identical_end_to_end() {
     }
 }
 
+/// §6.7 dispatcher end-to-end: a D = 200k dataset with a URL-style dense
+/// column whose planted signal guarantees selection at t = 1, plus short
+/// escape-block rows — so one solve provably drives BOTH dispatcher arms:
+/// the 80-nnz dense-column scan decodes to scratch (nnz > the 64
+/// threshold) while every 3-nnz row scan rides the fused direct tier.
+/// Bit-identical to the stripped-u32 run and across thresholds; the split
+/// counters prove which arms ran.
+#[test]
+fn direct_dispatcher_both_arms_in_one_solve() {
+    use dpfw::sparse::coo::CooBuilder;
+    let n_rows = 80usize;
+    let d = 200_000usize;
+    let mut b = CooBuilder::new(0, d);
+    let mut labels = Vec::new();
+    for r in 0..n_rows {
+        let row = b.add_row();
+        // dense column with uniform labels: |α₀[0]| = Σ|σ(0) − 1| = 40
+        // dominates every other column (≤ ~3), so t = 1 selects it
+        b.push(row, 0, 1.0);
+        b.push(row, 40 + r % 7, 0.5);
+        b.push(row, 70_000 + r * 997, 1.0); // escape-sized delta (≥ 2¹⁶)
+        labels.push(1.0);
+    }
+    b.set_shape(n_rows, d);
+    let ds = Dataset::new(b.to_csr(), labels, "direct-dispatch");
+    assert_eq!(ds.index_kind(), "u16-delta");
+    let mut plain = ds.clone();
+    plain.strip_compact();
+    let cfg = FwConfig {
+        iters: 40,
+        lambda: 5.0,
+        selector: SelectorKind::FibHeap,
+        direct_max_nnz: Some(64), // pin the default explicitly (env-proof)
+        ..Default::default()
+    };
+    let a = FastFrankWolfe::new(&ds, cfg.clone()).run();
+    assert!(a.scratch_segments > 0, "dense column must decode to scratch");
+    assert!(a.direct_segments > 0, "short rows must ride the fused tier");
+    assert!(a.scratch_bytes > 0);
+    let p = FastFrankWolfe::new(&plain, cfg.clone()).run();
+    assert_eq!(a.weights, p.weights, "substrate must be trajectory-invisible");
+    assert_eq!(a.final_gap.to_bits(), p.final_gap.to_bits());
+    assert_eq!(a.flops, p.flops);
+    assert!(a.bytes_moved < p.bytes_moved, "compact must move fewer bytes");
+    assert_eq!(p.direct_segments, 0, "u32 substrate has no decode arms");
+    assert_eq!(p.scratch_segments, 0);
+    assert_eq!(p.scratch_bytes, 0);
+    // threshold ∞: same trajectory, same scanned segments, all fused
+    let fused = FastFrankWolfe::new(
+        &ds,
+        FwConfig { direct_max_nnz: Some(usize::MAX), ..cfg },
+    )
+    .run();
+    assert_eq!(fused.weights, a.weights);
+    assert_eq!(fused.bytes_moved, a.bytes_moved, "DRAM model is threshold-invariant");
+    assert_eq!(fused.scratch_segments, 0);
+    assert_eq!(fused.scratch_bytes, 0);
+    assert_eq!(fused.direct_segments, a.direct_segments + a.scratch_segments);
+}
+
 /// Arc-shared datasets across threads: the solver is Sync-safe over
 /// read-only data (what the coordinator relies on).
 #[test]
@@ -262,6 +326,7 @@ fn concurrent_training_on_shared_data() {
                     trace_every: 0,
                     lipschitz: None,
                     threads: 0,
+                    direct_max_nnz: None,
                 },
             )
             .run()

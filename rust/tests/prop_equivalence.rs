@@ -251,6 +251,7 @@ fn prop_dp_seed_determinism() {
             trace_every: 0,
             lipschitz: None,
             threads: 0,
+            direct_max_nnz: None,
         };
         for sel in [SelectorKind::Bsls, SelectorKind::NoisyMax, SelectorKind::NaiveExp] {
             let a = FastFrankWolfe::new(&ds, mk(seed, sel)).run();
@@ -290,11 +291,15 @@ fn assert_outputs_bit_identical_modulo_traffic(a: &FwOutput, b: &FwOutput, what:
 }
 
 /// Full bit-level equality: the modulo-traffic check plus identical byte
-/// accounting (same substrate on both sides).
+/// accounting — DRAM model, L1 scratch round-trips, and the §6.7
+/// dispatcher split (same substrate and threshold on both sides).
 fn assert_outputs_bit_identical(a: &FwOutput, b: &FwOutput, what: &str) {
     assert_outputs_bit_identical_modulo_traffic(a, b, what);
     assert_eq!(a.bytes_moved, b.bytes_moved, "{what}: bytes moved");
     assert_eq!(a.bootstrap_bytes, b.bootstrap_bytes, "{what}: bootstrap bytes");
+    assert_eq!(a.scratch_bytes, b.scratch_bytes, "{what}: scratch bytes");
+    assert_eq!(a.direct_segments, b.direct_segments, "{what}: direct segments");
+    assert_eq!(a.scratch_segments, b.scratch_segments, "{what}: scratch segments");
     for (ta, tb) in a.trace.iter().zip(&b.trace) {
         assert_eq!(ta.bytes, tb.bytes, "{what}: trace bytes");
     }
@@ -319,6 +324,7 @@ fn random_selector_cfg(rng: &mut Xoshiro256pp, iters: usize, lam: f64) -> FwConf
         trace_every: 10,
         lipschitz: None,
         threads: 0,
+        direct_max_nnz: None,
     }
 }
 
@@ -377,6 +383,11 @@ fn assert_path_output_matches(fresh: &FwOutput, warm: &FwOutput, what: &str) {
     );
     let boffset = fresh.bootstrap_bytes - warm.bootstrap_bytes;
     assert_eq!(warm.bytes_moved + boffset, fresh.bytes_moved, "{what}: bytes modulo bootstrap");
+    // the §6.7 iteration-tier split excludes the bootstrap entirely, so a
+    // warm run must match a fresh one exactly — no offset
+    assert_eq!(fresh.scratch_bytes, warm.scratch_bytes, "{what}: scratch bytes");
+    assert_eq!(fresh.direct_segments, warm.direct_segments, "{what}: direct segments");
+    assert_eq!(fresh.scratch_segments, warm.scratch_segments, "{what}: scratch segments");
     assert_eq!(fresh.selector_stats, warm.selector_stats, "{what}: selector stats");
     assert_eq!(fresh.trace.len(), warm.trace.len(), "{what}: trace length");
     for (ta, tb) in fresh.trace.iter().zip(&warm.trace) {
@@ -537,6 +548,136 @@ fn prop_parallel_bootstrap_thread_invariant() {
     });
 }
 
+/// **Fused vs. scratch vs. u32 at kernel granularity** (§6.7): for random
+/// segments — every tail length `n mod 4`, deltas mostly small with
+/// escape-sized (≥ 2¹⁶) jumps mixed in — the direct-decode kernels, the
+/// decode-to-scratch pairing, and the raw `u32` gather produce
+/// bit-identical dots, AXPYs, and update+touch effects (values, stamps,
+/// and touched order).
+#[test]
+fn prop_fused_scratch_u32_kernels_bit_identical() {
+    use dpfw::fw::scan::{self, ScanKernel};
+    use dpfw::sparse::compact::{CompactIndices, IndexSeg};
+    forall(30, |rng| {
+        let n = rng.next_below(120) as usize;
+        let mut idx = Vec::with_capacity(n);
+        let mut j = 0u32;
+        for _ in 0..n {
+            j += if rng.next_below(8) == 0 {
+                65_536 + rng.next_below(5_000) as u32 // forces an escape block
+            } else {
+                1 + rng.next_below(9) as u32
+            };
+            idx.push(j);
+        }
+        let vals: Vec<f32> = (0..n).map(|_| (rng.next_f64() * 4.0 - 2.0) as f32).collect();
+        let dim = idx.last().map_or(1, |&m| m as usize + 1);
+        let w: Vec<f64> = (0..dim).map(|k| (k as f64 * 0.37).sin()).collect();
+        let indptr = [0usize, n];
+        let Some(c) = CompactIndices::build(&indptr, &idx) else {
+            return; // an escape-heavy draw failed the qualifier: skip
+        };
+        let seg16 = IndexSeg::U16 { words: c.seg_words(0), nnz: n };
+        let seg32 = IndexSeg::U32(&idx);
+        let fused = ScanKernel::with_threshold(usize::MAX);
+        let scratchy = ScanKernel::with_threshold(0);
+        let mut scratch = Vec::new();
+
+        let want = scan::dot_gather(&idx, &vals, &w);
+        for (k, what) in [(fused, "fused"), (scratchy, "scratch")] {
+            assert_eq!(k.dot(seg16, &vals, &w, &mut scratch).to_bits(), want.to_bits(), "{what} dot");
+            assert_eq!(k.dot(seg32, &vals, &w, &mut scratch).to_bits(), want.to_bits(), "u32 dot");
+        }
+
+        let mut out_ref = w.clone();
+        scan::axpy_gather(&idx, &vals, 1.3, &mut out_ref);
+        for (k, what) in [(fused, "fused"), (scratchy, "scratch")] {
+            let mut out = w.clone();
+            k.axpy(seg16, &vals, 1.3, &mut out, &mut scratch);
+            for (s, (x, y)) in out_ref.iter().zip(&out).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "{what} axpy slot {s}");
+            }
+        }
+
+        let (mut al_ref, mut st_ref, mut t_ref) = (vec![0.0f64; dim], vec![0u32; dim], Vec::new());
+        scan::update_touch(&idx, &vals, -0.57, &mut al_ref, &mut st_ref, 3, &mut t_ref);
+        for (k, what) in [(fused, "fused"), (scratchy, "scratch")] {
+            let (mut al, mut stp, mut tch) = (vec![0.0f64; dim], vec![0u32; dim], Vec::new());
+            k.update_touch(seg16, &vals, -0.57, &mut al, &mut stp, 3, &mut tch, &mut scratch);
+            assert_eq!(t_ref, tch, "{what} touched order");
+            assert_eq!(st_ref, stp, "{what} stamps");
+            for (s, (x, y)) in al_ref.iter().zip(&al).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "{what} alpha slot {s}");
+            }
+        }
+    });
+}
+
+/// **The §6.7 dispatcher threshold is trajectory-invisible**: sweeping
+/// `direct_max_nnz` over {0, 8, default, ∞} changes which kernel arm runs
+/// each compact segment — nothing else. Weights, gaps, FLOPs, selector
+/// telemetry, traces, and the DRAM byte model are bit-identical; only the
+/// L1 scratch category and the direct/scratch split move, with the total
+/// count of scanned compact segments invariant. Both solvers.
+#[test]
+fn prop_direct_dispatcher_threshold_invisible() {
+    forall(5, |rng| {
+        let ds = random_dataset(rng);
+        assert_eq!(ds.index_kind(), "u16-delta");
+        let iters = 20 + rng.next_below(60) as usize;
+        let base = random_selector_cfg(rng, iters, 1.0 + rng.next_f64() * 10.0);
+        let run_at = |thr: Option<usize>| {
+            FastFrankWolfe::new(&ds, FwConfig { direct_max_nnz: thr, ..base.clone() }).run()
+        };
+        let all_scratch = run_at(Some(0));
+        let all_fused = run_at(Some(usize::MAX));
+        let thr8 = run_at(Some(8));
+        let default = run_at(None);
+        for (out, what) in [(&all_fused, "fused"), (&thr8, "thr=8"), (&default, "default")] {
+            assert_outputs_bit_identical_modulo_traffic(&all_scratch, out, what);
+            assert_eq!(all_scratch.bytes_moved, out.bytes_moved, "{what}: DRAM model moved");
+            assert_eq!(
+                all_scratch.direct_segments + all_scratch.scratch_segments,
+                out.direct_segments + out.scratch_segments,
+                "{what}: total scanned compact segments must be threshold-invariant"
+            );
+        }
+        // the extremes pin the split: threshold 0 never fuses, ∞ never
+        // touches the scratch — and fused total modeled traffic can only
+        // be lower (the CI smoke invariant at property scale)
+        assert_eq!(all_scratch.direct_segments, 0, "thr=0 must not fuse");
+        assert_eq!(all_fused.scratch_segments, 0, "thr=∞ must not use scratch");
+        assert_eq!(all_fused.scratch_bytes, 0);
+        assert!(
+            all_fused.bytes_moved + all_fused.scratch_bytes
+                <= all_scratch.bytes_moved + all_scratch.scratch_bytes,
+            "fused modeled traffic must not exceed scratch's"
+        );
+        if !matches!(base.selector, SelectorKind::FibHeap | SelectorKind::BinHeap) {
+            let run_std = |thr: Option<usize>| {
+                StandardFrankWolfe::new(&ds, FwConfig { direct_max_nnz: thr, ..base.clone() })
+                    .run()
+            };
+            let s_scratch = run_std(Some(0));
+            let s_fused = run_std(Some(usize::MAX));
+            assert_outputs_bit_identical_modulo_traffic(&s_scratch, &s_fused, "std extremes");
+            assert_eq!(s_scratch.bytes_moved, s_fused.bytes_moved);
+            assert_eq!(s_scratch.direct_segments, 0);
+            // Alg 1 sweeps every row each iteration, so the thr=0 run
+            // provably pays scratch round-trips and the thr=∞ run none
+            assert!(s_scratch.scratch_segments > 0, "std thr=0 must hit the scratch arm");
+            assert!(s_scratch.scratch_bytes > 0);
+            assert_eq!(s_fused.scratch_segments, 0);
+            assert_eq!(s_fused.scratch_bytes, 0);
+            assert!(s_fused.direct_segments > 0);
+            assert_eq!(
+                s_fused.direct_segments,
+                s_scratch.direct_segments + s_scratch.scratch_segments
+            );
+        }
+    });
+}
+
 /// Solution sparsity: ≤ one new coordinate per iteration, always inside
 /// the L1 ball — for every selector, private or not.
 #[test]
@@ -563,6 +704,7 @@ fn prop_sparsity_and_feasibility_all_selectors() {
                 trace_every: 0,
                 lipschitz: None,
                 threads: 0,
+                direct_max_nnz: None,
             };
             let out = FastFrankWolfe::new(&ds, cfg).run();
             assert!(out.weights.l1_norm() <= lam + 1e-6, "{sel:?} left the ball");
