@@ -71,6 +71,7 @@ fn main() {
             lipschitz: None,
             threads: 0,
             direct_max_nnz: None,
+            shards: None,
         };
         let extra_owned = |sel: &str| -> Vec<(&'static str, String)> {
             vec![
@@ -127,6 +128,7 @@ fn main() {
         lipschitz: None,
         threads: 0,
         direct_max_nnz: None,
+        shards: None,
     };
     let n20_extra = |variant: &str| -> Vec<(&'static str, String)> {
         vec![
@@ -338,6 +340,7 @@ fn main() {
         lipschitz: None,
         threads: 0,
         direct_max_nnz: None,
+        shards: None,
     };
     let path_extra = |variant: &str, per_lambda_us: f64| -> Vec<(&'static str, String)> {
         vec![

@@ -1,0 +1,125 @@
+//! Bench: **row-shard sweep** (DESIGN.md §6.8) — both solvers on the
+//! News20-synth preset at P ∈ {1, 2, 4, 8} shards, cold (fresh workspace,
+//! shard build included) and warm (pooled workspace, cached `ShardedDataset`
+//! and bootstrap). Emits `BENCH_shard_sweep.json` with per-iteration wall
+//! time so CI tracks the scaling curve across PRs.
+//!
+//! The sweep doubles as a determinism check: before timing, every P's
+//! output is compared against the P=1 run — weights bit-for-bit, FLOPs and
+//! modeled bytes exactly equal (the §6.8 contract: sharding changes who
+//! computes, never what). A violation aborts the bench, so the CI smoke
+//! run enforces the invariant on every push.
+
+mod bench_harness;
+
+use bench_harness::{section, smoke_mode, Bench, JsonReport};
+use dpfw::fw::config::FwConfig;
+use dpfw::fw::fast::FastFrankWolfe;
+use dpfw::fw::standard::StandardFrankWolfe;
+use dpfw::fw::trace::FwOutput;
+use dpfw::fw::workspace::FwWorkspace;
+use dpfw::sparse::synth::{DatasetPreset, SynthConfig};
+use dpfw::sparse::Dataset;
+
+const SHARD_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+fn assert_matches_p1(p1: &FwOutput, out: &FwOutput, what: &str) {
+    for (i, (a, b)) in
+        p1.weights.as_slice().iter().zip(out.weights.as_slice()).enumerate()
+    {
+        assert_eq!(a.to_bits(), b.to_bits(), "{what}: weight {i} diverged: {a} vs {b}");
+    }
+    assert_eq!(p1.flops, out.flops, "{what}: FLOP model must be P-invariant");
+    assert_eq!(p1.bytes_moved, out.bytes_moved, "{what}: byte model must be P-invariant");
+    assert_eq!(
+        p1.final_gap.to_bits(),
+        out.final_gap.to_bits(),
+        "{what}: final gap diverged"
+    );
+}
+
+fn sweep_solver(
+    report: &mut JsonReport,
+    ds: &Dataset,
+    solver: &str,
+    iters: usize,
+    runs: usize,
+) {
+    section(&format!("{solver}: shard sweep (T={iters})"));
+    let run_once = |p: usize, ws: &mut FwWorkspace| -> FwOutput {
+        let cfg = FwConfig {
+            iters,
+            lambda: 30.0,
+            shards: Some(p),
+            ..Default::default()
+        };
+        match solver {
+            "standard" => StandardFrankWolfe::new(ds, cfg).run_in(ws),
+            _ => FastFrankWolfe::new(ds, cfg).run_in(ws),
+        }
+    };
+    // determinism gate first: every P must reproduce the P=1 bits/counts
+    let p1 = run_once(1, &mut FwWorkspace::new());
+    for &p in &SHARD_COUNTS[1..] {
+        let out = run_once(p, &mut FwWorkspace::new());
+        assert_matches_p1(&p1, &out, &format!("{solver} p={p}"));
+    }
+    println!("  P-invariance verified: flops={} bytes={}", p1.flops, p1.bytes_moved);
+
+    for &p in &SHARD_COUNTS {
+        // cold: fresh workspace per run — pays the shard build + bootstrap
+        let cold = Bench::new(format!("{solver}-cold-p{p}"))
+            .warmup(1)
+            .runs(runs)
+            .run_stats(|| run_once(p, &mut FwWorkspace::new()));
+        // warm: pooled workspace — cached ShardedDataset, pooled buffers
+        let mut ws = FwWorkspace::new();
+        run_once(p, &mut ws); // populate the caches outside the timer
+        let warm = Bench::new(format!("{solver}-warm-p{p}"))
+            .warmup(1)
+            .runs(runs)
+            .run_stats(|| run_once(p, &mut ws));
+        let probe = run_once(p, &mut ws);
+        for (stats, phase) in [(cold, "cold"), (warm, "warm")] {
+            report.record(
+                &format!("shard-sweep-{solver}-{phase}-p{p}"),
+                stats,
+                &[
+                    ("solver", solver.to_string()),
+                    ("phase", phase.to_string()),
+                    ("shards_requested", p.to_string()),
+                    ("shards_effective", probe.effective_shards.to_string()),
+                    ("threads_effective", probe.effective_threads.to_string()),
+                    ("iters", iters.to_string()),
+                    (
+                        "per_iter_ns",
+                        format!("{:.1}", stats.mean_s * 1e9 / iters.max(1) as f64),
+                    ),
+                    ("flops", probe.flops.to_string()),
+                    ("bytes_moved", probe.bytes_moved.to_string()),
+                ],
+            );
+        }
+    }
+}
+
+fn main() {
+    let smoke = smoke_mode();
+    // News20-synth: the paper's wide-and-sparse shape. Smoke shrinks the
+    // scale so CI exercises the sweep + JSON emitter in seconds.
+    let scale = if smoke { 0.02 } else { 0.3 };
+    let iters = if smoke { 8 } else { 60 };
+    let runs = if smoke { 2 } else { 5 };
+    let ds = SynthConfig::preset(DatasetPreset::News20).scale(scale).generate(42);
+    println!(
+        "shard sweep: News20-synth scale={scale} (N={}, D={}, nnz={}), P={SHARD_COUNTS:?}",
+        ds.n_rows(),
+        ds.n_cols(),
+        ds.nnz()
+    );
+
+    let mut report = JsonReport::with_env("BENCH_shard_sweep.json", "DPFW_BENCH_SHARD_JSON");
+    sweep_solver(&mut report, &ds, "standard", iters, runs);
+    sweep_solver(&mut report, &ds, "fast", iters, runs);
+    report.write().expect("failed to write shard-sweep JSON");
+}

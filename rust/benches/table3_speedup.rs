@@ -43,6 +43,7 @@ fn main() {
                 lipschitz: None,
                 threads: 0,
                 direct_max_nnz: None,
+                shards: None,
             };
             let t_alg1 = Bench::new(format!("{} eps={eps} alg1+noisymax", p.name()))
                 .runs(3)

@@ -1,0 +1,212 @@
+//! `autotune_thresholds` — turn the substrates bench's per-segment-length
+//! series into a measured `DIRECT_MAX_NNZ` recommendation.
+//!
+//! The §6.7 dispatcher routes compact segments with `nnz ≤ threshold`
+//! down the fused direct-decode arm and the rest through decode-to-scratch.
+//! The compile-time default (`scan::DIRECT_MAX_NNZ`) was picked analytically;
+//! `cargo bench --bench substrates` measures both arms at
+//! nnz ∈ {4, 8, 16, 40, 200, 2000} on the actual hardware and persists the
+//! series to `BENCH_substrates.json`. This tool reads that file, finds the
+//! fused-vs-scratch crossover per kernel (`dot`, `update_touch`), and
+//! reports the measured threshold next to the active one
+//! (`DPFW_DIRECT_MAX_NNZ` / default), closing the loop:
+//!
+//! ```text
+//! cargo bench --bench substrates
+//! cargo run --bin autotune_thresholds            # reads BENCH_substrates.json
+//! DPFW_DIRECT_MAX_NNZ=<rec> cargo bench ...      # apply without rebuilding
+//! ```
+//!
+//! JSON parsing is hand-rolled against the flat `dpfw-bench-v1` schema the
+//! bench harness emits (serde is not in the offline crate set); unknown
+//! fields are ignored, so the tool tolerates schema growth.
+
+use std::process::ExitCode;
+
+use dpfw::fw::scan::{ScanKernel, DIRECT_MAX_NNZ};
+
+/// One `results[]` row, reduced to the fields the crossover needs.
+#[derive(Debug)]
+struct Row {
+    kernel: String,
+    arm: String,
+    seg_nnz: usize,
+    mean_ns: f64,
+}
+
+/// Split the top-level `results` array into object bodies. The harness
+/// emits flat objects (no nesting), so scanning for brace pairs outside
+/// string literals is sufficient — and strings still need the scan to
+/// honor escapes, since `git describe` output lands in one.
+fn object_bodies(doc: &str) -> Vec<&str> {
+    let Some(results_at) = doc.find("\"results\"") else { return Vec::new() };
+    let body = &doc[results_at..];
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    let mut in_str = false;
+    let mut escaped = false;
+    for (i, c) in body.char_indices() {
+        if in_str {
+            match c {
+                _ if escaped => escaped = false,
+                '\\' => escaped = true,
+                '"' => in_str = false,
+                _ => {}
+            }
+            continue;
+        }
+        match c {
+            '"' => in_str = true,
+            '{' => {
+                if depth == 0 {
+                    start = i + 1;
+                }
+                depth += 1;
+            }
+            '}' => {
+                depth = depth.saturating_sub(1);
+                if depth == 0 {
+                    out.push(&body[start..i]);
+                }
+            }
+            ']' if depth == 0 => break, // end of the results array
+            _ => {}
+        }
+    }
+    out
+}
+
+/// Extract `"key": <value>` from a flat object body; returns the raw value
+/// text (quotes stripped for strings). Good enough for the harness's own
+/// output — keys never collide with value text because values containing
+/// `":` never occur in the fields we read.
+fn field<'a>(body: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\":");
+    let at = body.find(&pat)? + pat.len();
+    let rest = body[at..].trim_start();
+    if let Some(stripped) = rest.strip_prefix('"') {
+        stripped.split('"').next()
+    } else {
+        rest.split([',', '}']).next().map(str::trim)
+    }
+}
+
+fn parse_rows(doc: &str) -> Vec<Row> {
+    object_bodies(doc)
+        .into_iter()
+        .filter_map(|b| {
+            Some(Row {
+                kernel: field(b, "kernel")?.to_string(),
+                arm: field(b, "arm")?.to_string(),
+                seg_nnz: field(b, "seg_nnz")?.parse().ok()?,
+                mean_ns: field(b, "mean_ns")?.parse().ok()?,
+            })
+        })
+        .collect()
+}
+
+/// The measured crossover for one kernel: the largest bench point where
+/// the fused arm still beats scratch, and the first where it loses —
+/// the recommended threshold is their geometric midpoint, snapped to an
+/// integer (conservative when the fused arm wins everywhere: the largest
+/// measured point stands in, since beyond it there is no data).
+fn crossover(series: &mut [(usize, f64, f64)]) -> Option<(usize, String)> {
+    if series.is_empty() {
+        return None;
+    }
+    series.sort_by_key(|&(nnz, _, _)| nnz);
+    let mut last_fused_win: Option<usize> = None;
+    let mut first_scratch_win: Option<usize> = None;
+    for &(nnz, fused_ns, scratch_ns) in series.iter() {
+        if fused_ns <= scratch_ns {
+            if first_scratch_win.is_none() {
+                last_fused_win = Some(nnz);
+            }
+        } else if first_scratch_win.is_none() {
+            first_scratch_win = Some(nnz);
+        }
+    }
+    match (last_fused_win, first_scratch_win) {
+        (Some(lo), Some(hi)) => {
+            let rec = ((lo as f64) * (hi as f64)).sqrt().round() as usize;
+            Some((rec, format!("fused wins ≤ {lo}, loses ≥ {hi}")))
+        }
+        (Some(lo), None) => {
+            Some((lo, format!("fused wins at every measured point (≤ {lo})")))
+        }
+        (None, Some(hi)) => Some((0, format!("scratch wins from the start (≥ {hi})"))),
+        (None, None) => None,
+    }
+}
+
+fn main() -> ExitCode {
+    let path = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "BENCH_substrates.json".to_string());
+    let doc = match std::fs::read_to_string(&path) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!(
+                "autotune_thresholds: cannot read {path}: {e}\n\
+                 run `cargo bench --bench substrates` first, or pass the JSON path"
+            );
+            return ExitCode::from(2);
+        }
+    };
+    let rows = parse_rows(&doc);
+    let active = ScanKernel::from_env().threshold();
+    println!("active DIRECT_MAX_NNZ: {active} (compile-time default {DIRECT_MAX_NNZ})");
+
+    let mut recommendations = Vec::new();
+    for kernel in ["dot", "update_touch"] {
+        // pair fused vs scratch rows by segment length
+        let mut series: Vec<(usize, f64, f64)> = Vec::new();
+        for r in rows.iter().filter(|r| r.kernel == kernel && r.arm == "fused") {
+            let scratch = rows
+                .iter()
+                .find(|s| s.kernel == kernel && s.arm == "scratch" && s.seg_nnz == r.seg_nnz);
+            if let Some(s) = scratch {
+                series.push((r.seg_nnz, r.mean_ns, s.mean_ns));
+            }
+        }
+        match crossover(&mut series) {
+            Some((rec, why)) => {
+                println!("{kernel:>14}: recommend {rec:>5}  ({why})");
+                for &(nnz, f, s) in &series {
+                    let winner = if f <= s { "fused" } else { "scratch" };
+                    println!(
+                        "{:>14}  nnz={nnz:<5} fused {:>12.0} ns  scratch {:>12.0} ns  -> {winner}",
+                        "", f, s
+                    );
+                }
+                recommendations.push(rec);
+            }
+            None => println!(
+                "{kernel:>14}: no fused/scratch series in {path} — \
+                 was the bench run with this schema?"
+            ),
+        }
+    }
+
+    match recommendations.iter().min() {
+        Some(&rec) => {
+            // one threshold serves both kernels: take the conservative
+            // (smaller) crossover so neither arm regresses
+            println!("\nrecommended DIRECT_MAX_NNZ: {rec}");
+            if rec == active {
+                println!("matches the active threshold — nothing to change");
+            } else {
+                println!(
+                    "apply with DPFW_DIRECT_MAX_NNZ={rec}, per run via \
+                     FwConfig.direct_max_nnz, or update scan::DIRECT_MAX_NNZ"
+                );
+            }
+            ExitCode::SUCCESS
+        }
+        None => {
+            eprintln!("no usable series found in {path}");
+            ExitCode::from(2)
+        }
+    }
+}

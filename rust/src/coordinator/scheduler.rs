@@ -68,7 +68,12 @@ impl Coordinator {
                             // auto-threaded jobs from oversubscribing it
                             // during their parallel bootstrap (output is
                             // bit-identical at any thread count, so this is
-                            // safe).
+                            // safe — and that includes sharded jobs, which
+                            // are thread-invariant at any P). `cfg.shards`
+                            // is deliberately NOT touched here: forcing a
+                            // job on or off the sharded engine would change
+                            // its byte/segment model (DESIGN.md §6.8), which
+                            // only the submitter may choose.
                             if n_workers > 1 && job.cfg_mut().threads == 0 {
                                 job.cfg_mut().threads = 1;
                             }

@@ -64,6 +64,7 @@ fn dp_job(
             lipschitz: None,
             threads: 0,
             direct_max_nnz: None,
+            shards: None,
         },
         test_data: None,
     }
@@ -167,6 +168,7 @@ pub fn table4_utility(cfg: &ExpConfig) -> Result<CsvTable> {
                 lipschitz: None,
                 threads: 0,
                 direct_max_nnz: None,
+                shards: None,
             },
             test_data: Some(test),
         });
@@ -221,6 +223,7 @@ pub fn lambda_path(cfg: &ExpConfig) -> Result<CsvTable> {
                 lipschitz: None,
                 threads: 0,
                 direct_max_nnz: None,
+                shards: None,
             },
             lambdas: PATH_LAMBDAS.to_vec(),
             test_data: Some(Arc::new(test)),

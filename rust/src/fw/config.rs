@@ -95,6 +95,29 @@ pub struct FwConfig {
     /// knob; bench sweeps set `Some(0)` (all-scratch) / `Some(usize::MAX)`
     /// (all-fused) to measure the tier.
     pub direct_max_nnz: Option<usize>,
+    /// Row-shard count for the sharded solve path (DESIGN.md §6.8).
+    /// `None` (the default) resolves process-wide — `DPFW_SHARDS` if set,
+    /// else the legacy monolithic path. `Some(p)` partitions the dataset
+    /// into ≤ p contiguous nnz-balanced row shards and runs the hot loop
+    /// through the per-shard substrate. The trajectory, flops, and modeled
+    /// bytes are **bit-identical** at any shard count (property-tested;
+    /// the sharded byte model is anchored to the parent's canonical
+    /// streams), so like `threads` this is purely a performance/topology
+    /// knob. `Some(1)` exercises the sharded code path with one shard.
+    pub shards: Option<usize>,
+}
+
+/// Process-wide `DPFW_SHARDS` resolution (read once; same pattern as
+/// `DPFW_DIRECT_MAX_NNZ` in `fw::scan`). Unset, empty, `0`, or
+/// unparseable → `None` (the legacy monolithic path).
+fn shards_from_env() -> Option<usize> {
+    static SHARDS: std::sync::OnceLock<Option<usize>> = std::sync::OnceLock::new();
+    *SHARDS.get_or_init(|| {
+        std::env::var("DPFW_SHARDS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&p| p >= 1)
+    })
 }
 
 impl Default for FwConfig {
@@ -109,6 +132,7 @@ impl Default for FwConfig {
             lipschitz: None,
             threads: 0,
             direct_max_nnz: None,
+            shards: None,
         }
     }
 }
@@ -137,6 +161,13 @@ impl FwConfig {
         } else {
             self.threads
         }
+    }
+
+    /// Resolve [`FwConfig::shards`]: the explicit count, or the
+    /// process-wide `DPFW_SHARDS` resolution when `None`. A result of
+    /// `None` means the legacy monolithic path.
+    pub fn effective_shards(&self) -> Option<usize> {
+        self.shards.or_else(shards_from_env)
     }
 
     /// Panics on inconsistent combinations (DP selector without privacy
@@ -210,6 +241,23 @@ mod tests {
         assert!(FwConfig::default().effective_threads() >= 1);
         let c = FwConfig { threads: 3, ..Default::default() };
         assert_eq!(c.effective_threads(), 3);
+    }
+
+    #[test]
+    fn effective_shards_prefers_explicit_count() {
+        let c = FwConfig { shards: Some(4), ..Default::default() };
+        assert_eq!(c.effective_shards(), Some(4));
+        // None resolves process-wide; with DPFW_SHARDS unset in the test
+        // environment that is the legacy monolithic path. (The OnceLock
+        // makes the resolution read-once, so we only pin the explicit
+        // branch here rather than mutating the process environment.)
+        assert_eq!(
+            FwConfig::default().effective_shards(),
+            std::env::var("DPFW_SHARDS")
+                .ok()
+                .and_then(|s| s.trim().parse::<usize>().ok())
+                .filter(|&p| p >= 1)
+        );
     }
 
     #[test]

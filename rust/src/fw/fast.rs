@@ -55,16 +55,19 @@ use std::time::Instant;
 
 use crate::fw::config::FwConfig;
 use crate::fw::flops::{
-    FlopCounter, BYTES_F32_READ, BYTES_F64_READ, BYTES_F64_RMW, BYTES_U32_RMW,
-    FLOPS_SIGMOID,
+    FlopCounter, ShardCosts, BYTES_F32_READ, BYTES_F64_READ, BYTES_F64_RMW,
+    BYTES_U32_RMW, FLOPS_SIGMOID,
 };
 use crate::fw::loss::{Logistic, Loss};
 use crate::fw::scan;
 use crate::fw::sign;
 use crate::fw::trace::{FwOutput, PhaseTiming, TraceRecord, WeightVector};
-use crate::fw::workspace::{BootKey, Bootstrap, FwWorkspace};
+use crate::fw::workspace::{BootKey, Bootstrap, FwWorkspace, ShardScratch};
 use crate::rng::Xoshiro256pp;
 use crate::sparse::compact::IndexSeg;
+use crate::sparse::sharded::{
+    par_abs_argmax, GammaEntry, Shard, ShardedDataset, SELECT_PAR_MIN_D,
+};
 use crate::sparse::Dataset;
 
 /// Renormalization threshold for the multiplicative scalar. With
@@ -72,6 +75,78 @@ use crate::sparse::Dataset;
 /// this effectively never fires; it exists to make the invariant
 /// unconditional.
 const WM_RENORM_THRESHOLD: f64 = 1e-120;
+
+/// Minimum *column* nnz before the sharded Phase A fans out over threads.
+/// On Zipf-shaped text data most columns hold a handful of rows — thread
+/// spawn would dwarf the scan — but the hot head columns (the dense/bias
+/// columns Alg 2 keeps reselecting) carry thousands, and those are where
+/// the row-parallel scan pays. The gate changes scheduling only: the
+/// serial path runs the identical per-shard scans in shard order, and
+/// Phase A is row-local (no cross-row FP reduction), so values are
+/// bit-identical either way.
+const FAST_COL_PAR_MIN_NNZ: u64 = 1 << 12;
+
+/// Phase A of the sharded fast iteration (DESIGN.md §6.8): scan *this
+/// shard's own* CSC column `j`, updating the shard's slices of `v̂`/`q̄`
+/// (row-local — decomposition-invariant FP) and deferring each nonzero
+/// gradient move as a [`GammaEntry`] (ascending local row order). The
+/// order-sensitive work — the `α` scatter and `g̃` accumulation — happens
+/// later in sequential Phase B, which replays the entries in ascending
+/// shard order, i.e. exactly the legacy ascending-row op sequence.
+/// Accounting is deliberately absent here: workers cannot share the flop
+/// counter, and the per-iteration charges are analytic (they depend only
+/// on segment shapes), so the solver charges them afterwards from the
+/// parent's canonical streams — identical amounts to the legacy path.
+#[allow(clippy::too_many_arguments)]
+fn scan_shard_column(
+    shard: &Shard,
+    j: usize,
+    vcoef: f64,
+    w_m: f64,
+    loss: &dyn Loss,
+    kern: scan::ScanKernel,
+    hat_v: &mut [f64],
+    q: &mut [f64],
+    scratch: &mut ShardScratch,
+) {
+    let ShardScratch { gammas, decode } = scratch;
+    gammas.clear();
+    let (col_seg, xvals) = shard.csc.col_seg(j);
+    let base = shard.rows.start as u32;
+    let y = &shard.labels;
+    let mut scan_row = |i: usize, xij: f32, ahead: Option<u32>| {
+        if let Some(ip) = ahead {
+            scan::prefetch_read(hat_v, ip as usize);
+            scan::prefetch_read(q, ip as usize);
+        }
+        // identical arithmetic to the monolithic scan — same ops, same
+        // order, just indexed shard-locally
+        hat_v[i] += vcoef * xij as f64;
+        let v_new = w_m * hat_v[i];
+        let gamma = loss.grad(v_new, y[i] as f64) - q[i];
+        if gamma == 0.0 {
+            return;
+        }
+        q[i] += gamma;
+        gammas.push(GammaEntry { row: base + i as u32, gamma, v_new });
+    };
+    match (kern.arm(&col_seg), col_seg) {
+        (scan::SegArm::Direct, IndexSeg::U16 { words, nnz }) => {
+            let mut sc = scan::DirectScan::new(words, nnz);
+            let mut r = 0usize;
+            while let Some((i, ahead)) = sc.next() {
+                scan_row(i as usize, xvals[r], ahead);
+                r += 1;
+            }
+        }
+        _ => {
+            let rows = scan::resolve(col_seg, decode);
+            for (r, (&i_u32, &xij)) in rows.iter().zip(xvals).enumerate() {
+                scan_row(i_u32 as usize, xij, rows.get(r + scan::PF_DIST).copied());
+            }
+        }
+    }
+}
 
 pub struct FastFrankWolfe<'a> {
     data: &'a Dataset,
@@ -174,6 +249,13 @@ impl<'a> FastFrankWolfe<'a> {
         boot: Bootstrap,
         mut observe: impl FnMut(usize, &FastState),
     ) -> FwOutput {
+        // The sharded engine (DESIGN.md §6.8) is a separate body rather
+        // than a parameterized one: the legacy monolithic path below stays
+        // byte-for-byte what it was, and the property tests prove the two
+        // bodies produce bit-identical output at every shard count.
+        if let Some(requested) = self.cfg.effective_shards() {
+            return self.run_core_sharded(ws, lam, boot, observe, requested);
+        }
         let start = Instant::now();
         let csr = &self.data.csr;
         let csc = &self.data.csc;
@@ -471,6 +553,10 @@ impl<'a> FastFrankWolfe<'a> {
             selector_stats: selector.stats(),
             trace,
             iters_run: t_total - 1,
+            effective_threads: self.cfg.effective_threads(),
+            effective_shards: 0,
+            shard_flops: Vec::new(),
+            shard_bytes: Vec::new(),
         };
         // ---- return every buffer to the workspace for the next run -----
         ws.recycle_f64(st.hat_w);
@@ -481,6 +567,387 @@ impl<'a> FastFrankWolfe<'a> {
         ws.recycle_u32(touched);
         ws.recycle_u32(col_scratch);
         ws.recycle_u32(row_scratch);
+        ws.recycle_selector(selector, d, exp_scale, nm_scale);
+        out
+    }
+
+    /// The row-sharded engine (DESIGN.md §6.8). Each iteration splits
+    /// into:
+    ///
+    /// * **Phase A** (shard-parallel above [`FAST_COL_PAR_MIN_NNZ`]):
+    ///   every shard scans *its own* CSC column `j`, updating its
+    ///   disjoint `v̂`/`q̄` slices and deferring `(row, γ, v)` entries —
+    ///   all row-local arithmetic, so any schedule computes the same
+    ///   bits.
+    /// * **Phase B** (sequential): the deferred entries replay in
+    ///   ascending shard order — which, shards being contiguous ascending
+    ///   row ranges, *is* the legacy ascending-row order — through the
+    ///   same `update_touch` kernel, so the order-sensitive `α`/`g̃` sums
+    ///   keep the exact legacy FP op sequence.
+    /// * **Selection**: selectors that declare
+    ///   `supports_precomputed` (the pure argmax) go through the
+    ///   tree-reduced parallel argmax — exactly associative, hence
+    ///   bit-identical — and commit the choice with `select`'s own
+    ///   accounting; everything else (DP mechanisms, heaps) stays on the
+    ///   sequential `select` path with the global RNG stream.
+    ///
+    /// All global charges are made from the *parent's* canonical streams
+    /// in the legacy amounts, so trajectory, flops, and modeled bytes are
+    /// bit-identical to the monolithic path for any shard count and any
+    /// thread count (property-tested). Per-shard attribution goes to the
+    /// separate [`ShardCosts`] ledger.
+    fn run_core_sharded(
+        &self,
+        ws: &mut FwWorkspace,
+        lam: f64,
+        boot: Bootstrap,
+        mut observe: impl FnMut(usize, &FastState),
+        requested: usize,
+    ) -> FwOutput {
+        let start = Instant::now();
+        let csr = &self.data.csr;
+        let csc = &self.data.csc;
+        let y = &self.data.labels;
+        let n = csr.n_rows();
+        let d = csr.n_cols();
+        let t_total = self.cfg.iters;
+        let lip = self.cfg.lipschitz.unwrap_or_else(|| self.loss.lipschitz());
+        let eff_threads = self.cfg.effective_threads();
+
+        // the sharded substrate: cached in the workspace (building is
+        // O(nnz) — a path over K λs must not pay it K times)
+        let sharded = ws
+            .take_sharded(self.data, requested)
+            .unwrap_or_else(|| ShardedDataset::build(self.data, requested));
+        let p = sharded.n_shards();
+        let mut shard_scratch = ws.take_shard_scratch(p);
+        let mut shard_costs = ShardCosts::new(p);
+
+        let (exp_scale, nm_scale) = match self.cfg.privacy {
+            Some(pp) => {
+                (pp.exp_mech_scale(t_total, lip), pp.noisy_max_scale(t_total, lip))
+            }
+            None => (0.0, 0.0),
+        };
+        let mut selector = ws.take_selector(self.cfg.selector, d, exp_scale, nm_scale);
+        let mut rng = Xoshiro256pp::seeded(self.cfg.seed);
+        let mut flops = FlopCounter::new();
+        let kern = self.cfg.scan_kernel();
+
+        // ---- lines 8-14: dense first iteration --------------------------
+        let mut st = FastState {
+            hat_w: ws.take_f64(d, 0.0),
+            w_m: 1.0,
+            hat_v: ws.take_f64(n, 0.0),
+            q: ws.take_f64(n, 0.0),
+            alpha: ws.take_f64(d, 0.0),
+            g_base: 0.0,
+        };
+        let boot_key = BootKey::of(self.data, self.loss.name());
+        let cached = boot == Bootstrap::Shared
+            && match ws.bootstrap_get(&boot_key) {
+                Some(cache) => {
+                    st.q.copy_from_slice(cache.q0());
+                    st.alpha.copy_from_slice(cache.alpha0());
+                    true
+                }
+                None => false,
+            };
+        if !cached {
+            // q̄ at w = 0, computed per shard over disjoint q̄/label
+            // slices — row-local, hence bit-identical to the monolithic
+            // sweep on any schedule. Parallel only when the row count is
+            // worth the spawns.
+            if eff_threads > 1 && p > 1 && n >= crate::sparse::PAR_MIN_NNZ {
+                std::thread::scope(|scope| {
+                    let mut rest = st.q.as_mut_slice();
+                    let loss = &*self.loss;
+                    for s in sharded.shards() {
+                        let (q_s, tail) =
+                            std::mem::take(&mut rest).split_at_mut(s.n_rows());
+                        rest = tail;
+                        scope.spawn(move || {
+                            for (qi, &yi) in q_s.iter_mut().zip(s.labels.iter()) {
+                                *qi = loss.grad(0.0, yi as f64);
+                            }
+                        });
+                    }
+                });
+            } else {
+                for (qi, &yi) in st.q.iter_mut().zip(y.iter()) {
+                    *qi = self.loss.grad(0.0, yi as f64);
+                }
+            }
+            flops.add_boot(n as u64 * FLOPS_SIGMOID);
+            flops.add_boot_bytes((BYTES_F32_READ + BYTES_F64_READ) * n as u64);
+            for (si, s) in sharded.shards().iter().enumerate() {
+                shard_costs.add(si, s.n_rows() as u64 * FLOPS_SIGMOID);
+                shard_costs
+                    .add_bytes(si, (BYTES_F32_READ + BYTES_F64_READ) * s.n_rows() as u64);
+            }
+            // α = Xᵀq̄ through the parent's column-partitioned sweep —
+            // per-column sequential sums, so bit-identical to the legacy
+            // bootstrap at any thread count, and charged identically. (A
+            // row-sharded Σₛ Xₛᵀq̄ₛ would regroup each column's FP sum by
+            // shard boundary — the one reduction order sharding must NOT
+            // change.)
+            let boot_threads = if self.cfg.threads == 0 {
+                crate::sparse::auto_threads(csr.nnz())
+            } else {
+                self.cfg.threads
+            };
+            csc.matvec_t_par_scan(&st.q, &mut st.alpha, boot_threads, kern);
+            flops.add_boot(2 * csr.nnz() as u64);
+            flops.add_boot_bytes(
+                csc.index_bytes_total()
+                    + (BYTES_F32_READ + BYTES_F64_READ) * csr.nnz() as u64
+                    + BYTES_F64_READ * d as u64,
+            );
+            if boot == Bootstrap::Shared {
+                ws.bootstrap_put(boot_key, &st.q, &st.alpha);
+            }
+        }
+        selector.init(&st.alpha, &mut flops);
+
+        let mut trace = Vec::new();
+        let mut gap = f64::NAN;
+        let mut stamp = ws.take_u32(d, 0);
+        let mut epoch = 0u32;
+        let mut touched = ws.take_u32_scratch();
+        let mut row_scratch = ws.take_u32_scratch();
+        let use_tree_select = selector.supports_precomputed();
+
+        let timing = std::env::var_os("DPFW_PHASE_TIMING").is_some();
+        let (mut ns_select, mut ns_update, mut ns_notify) = (0u128, 0u128, 0u128);
+
+        for t in 1..t_total {
+            // ---- line 15: selection -------------------------------------
+            let p0 = timing.then(Instant::now);
+            let j = if use_tree_select && eff_threads > 1 && d >= SELECT_PAR_MIN_D {
+                // block partials + fixed-shape tree reduction: exactly
+                // associative, so bit-identical to the serial scan
+                let j = par_abs_argmax(&st.alpha, eff_threads, eff_threads);
+                selector.commit_precomputed(j, st.alpha.len(), &mut flops);
+                j
+            } else {
+                selector.select(&st.alpha, &mut rng, &mut flops)
+            };
+            if let Some(pt) = p0 {
+                ns_select += pt.elapsed().as_nanos();
+            }
+
+            // ---- lines 16-18: direction scalar and gap ------------------
+            let s = -lam * sign(st.alpha[j]);
+            gap = st.g_base - s * st.alpha[j];
+            let eta = 2.0 / (t as f64 + 2.0);
+            flops.add(6);
+
+            // ---- lines 19-21: O(1) weight & gap updates -----------------
+            let step = eta * s;
+            st.w_m *= 1.0 - eta;
+            let vcoef = step / st.w_m;
+            st.hat_w[j] += vcoef;
+            st.g_base = (1.0 - eta) * st.g_base + step * st.alpha[j];
+            flops.add(8);
+
+            // ---- Phase A: per-shard v̂/q̄ updates + γ collection ---------
+            let p0 = timing.then(Instant::now);
+            epoch = epoch.wrapping_add(1);
+            if epoch == 0 {
+                stamp.fill(0);
+                epoch = 1;
+            }
+            touched.clear();
+            let (col_seg, xvals) = csc.col_seg(j);
+            let col_nnz = xvals.len() as u64;
+            let w_m = st.w_m;
+            if eff_threads > 1 && p > 1 && col_nnz >= FAST_COL_PAR_MIN_NNZ {
+                std::thread::scope(|scope| {
+                    let mut hv = st.hat_v.as_mut_slice();
+                    let mut qq = st.q.as_mut_slice();
+                    let loss = &*self.loss;
+                    for (s, scr) in sharded.shards().iter().zip(shard_scratch.iter_mut())
+                    {
+                        let (hv_s, hv_rest) =
+                            std::mem::take(&mut hv).split_at_mut(s.n_rows());
+                        let (q_s, q_rest) =
+                            std::mem::take(&mut qq).split_at_mut(s.n_rows());
+                        hv = hv_rest;
+                        qq = q_rest;
+                        scope.spawn(move || {
+                            scan_shard_column(s, j, vcoef, w_m, loss, kern, hv_s, q_s, scr)
+                        });
+                    }
+                });
+            } else {
+                for (s, scr) in sharded.shards().iter().zip(shard_scratch.iter_mut()) {
+                    scan_shard_column(
+                        s,
+                        j,
+                        vcoef,
+                        w_m,
+                        &*self.loss,
+                        kern,
+                        &mut st.hat_v[s.rows.clone()],
+                        &mut st.q[s.rows.clone()],
+                        scr,
+                    );
+                }
+            }
+            // Phase A charges, from the *parent's* canonical column
+            // streams — the legacy amounts exactly (the per-row grad
+            // evals are bulk-charged: integer adds commute, so the
+            // iteration total is unchanged). Per-shard attribution mirrors
+            // the nnz-proportional part of the model.
+            flops.add_bytes(
+                col_seg.index_bytes()
+                    + (2 * BYTES_F32_READ + BYTES_F64_RMW + BYTES_F64_READ) * col_nnz,
+            );
+            flops.count_seg(kern.arm(&col_seg), col_nnz);
+            flops.add((6 + FLOPS_SIGMOID) * col_nnz);
+            for (si, s) in sharded.shards().iter().enumerate() {
+                let snnz = s.csc.col_nnz(j) as u64;
+                if snnz > 0 {
+                    shard_costs.add(si, (6 + FLOPS_SIGMOID) * snnz);
+                    shard_costs.add_bytes(
+                        si,
+                        (2 * BYTES_F32_READ + BYTES_F64_RMW + BYTES_F64_READ) * snnz,
+                    );
+                }
+            }
+
+            // ---- Phase B: sequential replay in ascending shard order —
+            // the legacy ascending-row α-scatter/g̃ op sequence ------------
+            for (si, scr) in shard_scratch.iter().enumerate() {
+                for e in scr.gammas.iter() {
+                    let i = e.row as usize;
+                    let (row_seg, rvals) = csr.row_seg(i);
+                    let row_nnz = rvals.len() as u64;
+                    flops.add_bytes(
+                        BYTES_F64_READ
+                            + row_seg.index_bytes()
+                            + (BYTES_F32_READ + BYTES_F64_RMW + BYTES_U32_RMW) * row_nnz,
+                    );
+                    flops.count_seg(kern.arm(&row_seg), row_nnz);
+                    kern.update_touch(
+                        row_seg,
+                        rvals,
+                        e.gamma,
+                        &mut st.alpha,
+                        &mut stamp,
+                        epoch,
+                        &mut touched,
+                        &mut row_scratch,
+                    );
+                    flops.add(2 * row_nnz + 1);
+                    st.g_base += e.gamma * e.v_new;
+                    flops.add(2);
+                    shard_costs.add(si, 2 * row_nnz + 3);
+                    shard_costs.add_bytes(
+                        si,
+                        BYTES_F64_READ
+                            + (BYTES_F32_READ + BYTES_F64_RMW + BYTES_U32_RMW) * row_nnz,
+                    );
+                }
+            }
+            if let Some(pt) = p0 {
+                ns_update += pt.elapsed().as_nanos();
+            }
+
+            // ---- line 29: drain the touched-list into the queue ---------
+            let p0 = timing.then(Instant::now);
+            for &k in touched.iter() {
+                selector.notify(k as usize, st.alpha[k as usize], &mut flops);
+            }
+            flops.add_bytes((4 + BYTES_F64_READ) * touched.len() as u64);
+            if let Some(pt) = p0 {
+                ns_notify += pt.elapsed().as_nanos();
+            }
+
+            // ---- guard: renormalize w_m (never fires at paper scales) ---
+            if st.w_m.abs() < WM_RENORM_THRESHOLD {
+                for h in st.hat_w.iter_mut() {
+                    *h *= st.w_m;
+                }
+                for v in st.hat_v.iter_mut() {
+                    *v *= st.w_m;
+                }
+                st.w_m = 1.0;
+            }
+
+            if self.cfg.trace_every > 0 && t % self.cfg.trace_every == 0 {
+                trace.push(TraceRecord {
+                    iter: t,
+                    gap,
+                    flops: flops.total(),
+                    bytes: flops.bytes(),
+                    pops: selector.stats().pops,
+                    selected: j,
+                    wall_ns: start.elapsed().as_nanos(),
+                });
+            }
+            observe(t, &st);
+        }
+
+        let wall_ms = start.elapsed().as_secs_f64() * 1e3;
+        if timing {
+            let tot = start.elapsed().as_nanos().max(1) as f64;
+            eprintln!(
+                "[phase-timing] select {:.1}% update+touch(fused) {:.1}% \
+                 notify-drain {:.1}% other {:.1}% (total {:.1} ms, {} iters, {} shards)",
+                100.0 * ns_select as f64 / tot,
+                100.0 * ns_update as f64 / tot,
+                100.0 * ns_notify as f64 / tot,
+                100.0 * (tot - (ns_select + ns_update + ns_notify) as f64) / tot,
+                tot / 1e6,
+                t_total - 1,
+                p
+            );
+        }
+        trace.push(TraceRecord {
+            iter: t_total - 1,
+            gap,
+            flops: flops.total(),
+            bytes: flops.bytes(),
+            pops: selector.stats().pops,
+            selected: usize::MAX,
+            wall_ns: start.elapsed().as_nanos(),
+        });
+        let (shard_flops, shard_bytes) = shard_costs.into_parts();
+        let out = FwOutput {
+            weights: WeightVector(st.weights()),
+            final_gap: gap,
+            flops: flops.total(),
+            bootstrap_flops: flops.bootstrap(),
+            bytes_moved: flops.bytes(),
+            bootstrap_bytes: flops.bootstrap_bytes(),
+            scratch_bytes: flops.scratch_bytes(),
+            direct_segments: flops.direct_segments(),
+            scratch_segments: flops.scratch_segments(),
+            wall_ms,
+            phase: timing.then(|| PhaseTiming {
+                select_ns: ns_select as u64,
+                update_ns: ns_update as u64,
+                notify_ns: ns_notify as u64,
+            }),
+            selector_stats: selector.stats(),
+            trace,
+            iters_run: t_total - 1,
+            effective_threads: eff_threads,
+            effective_shards: p,
+            shard_flops,
+            shard_bytes,
+        };
+        // ---- return every buffer (and the substrate) to the workspace --
+        ws.recycle_f64(st.hat_w);
+        ws.recycle_f64(st.hat_v);
+        ws.recycle_f64(st.q);
+        ws.recycle_f64(st.alpha);
+        ws.recycle_u32(stamp);
+        ws.recycle_u32(touched);
+        ws.recycle_u32(row_scratch);
+        ws.recycle_shard_scratch(shard_scratch);
+        ws.put_sharded(sharded);
         ws.recycle_selector(selector, d, exp_scale, nm_scale);
         out
     }

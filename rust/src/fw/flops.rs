@@ -169,6 +169,51 @@ impl FlopCounter {
     }
 }
 
+/// Per-shard attribution ledger for the sharded solve path (DESIGN.md
+/// §6.8). Deliberately a separate type: [`FlopCounter`] stays a small
+/// `Copy` value participating in the bit-identity property tests, while
+/// shard attribution is P-shaped telemetry — the same run at P=1 and P=16
+/// attributes identical global totals differently, so these vectors are
+/// excluded from output-equality comparisons. The solver charges the
+/// global counter at the legacy call sites and mirrors the shard-local
+/// slices here; by construction `flops_per_shard().sum() ≤ total` with
+/// the remainder being the global plane (selection, axis updates,
+/// bootstrap reduction).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ShardCosts {
+    flops: Vec<u64>,
+    bytes: Vec<u64>,
+}
+
+impl ShardCosts {
+    pub fn new(n_shards: usize) -> Self {
+        Self { flops: vec![0; n_shards], bytes: vec![0; n_shards] }
+    }
+
+    #[inline]
+    pub fn add(&mut self, shard: usize, n: u64) {
+        self.flops[shard] += n;
+    }
+
+    #[inline]
+    pub fn add_bytes(&mut self, shard: usize, n: u64) {
+        self.bytes[shard] += n;
+    }
+
+    pub fn flops_per_shard(&self) -> &[u64] {
+        &self.flops
+    }
+
+    pub fn bytes_per_shard(&self) -> &[u64] {
+        &self.bytes
+    }
+
+    /// Consume the ledger into `(flops, bytes)` vectors for `FwOutput`.
+    pub fn into_parts(self) -> (Vec<u64>, Vec<u64>) {
+        (self.flops, self.bytes)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -205,6 +250,19 @@ mod tests {
         f.reset();
         assert_eq!(f.bytes(), 0);
         assert_eq!(f.bootstrap_bytes(), 0);
+    }
+
+    #[test]
+    fn shard_costs_attribute_per_shard() {
+        let mut s = ShardCosts::new(3);
+        s.add(0, 10);
+        s.add(2, 5);
+        s.add_bytes(1, 64);
+        assert_eq!(s.flops_per_shard(), &[10, 0, 5]);
+        assert_eq!(s.bytes_per_shard(), &[0, 64, 0]);
+        let (f, b) = s.into_parts();
+        assert_eq!(f.iter().sum::<u64>(), 15);
+        assert_eq!(b.iter().sum::<u64>(), 64);
     }
 
     #[test]

@@ -59,6 +59,25 @@ pub trait CoordinateSelector {
     fn reset(&mut self);
     fn stats(&self) -> SelectorStats;
     fn kind(&self) -> SelectorKind;
+    /// Can the solver compute this selector's choice externally (e.g. the
+    /// shard-parallel tree-reduced argmax, DESIGN.md §6.8) and hand it in
+    /// via [`CoordinateSelector::commit_precomputed`]? Only selectors
+    /// whose `select` is a pure, stateless function of `alpha` — no RNG
+    /// draws, no internal queue mutation — may answer `true`; anything
+    /// else (DP mechanisms consume noise, heaps pop entries) must stay on
+    /// the `select` path so the mechanism and its RNG stream remain
+    /// global and sequential.
+    fn supports_precomputed(&self) -> bool {
+        false
+    }
+    /// Record an externally computed choice `j` exactly as `select`
+    /// would have: same stats increments, same flop charges. The solver
+    /// only calls this when [`CoordinateSelector::supports_precomputed`]
+    /// is `true` and `j` is bit-identical to what `select` would return.
+    fn commit_precomputed(&mut self, j: usize, n_items: usize, flops: &mut FlopCounter) {
+        let _ = (j, n_items, flops);
+        unreachable!("selector does not support precomputed selection");
+    }
 }
 
 // ------------------------------------------------------------------------
@@ -96,6 +115,18 @@ impl CoordinateSelector for ArgmaxSelector {
 
     fn kind(&self) -> SelectorKind {
         SelectorKind::Argmax
+    }
+
+    // The dense argmax is a pure function of `alpha` with no RNG draws,
+    // so the sharded solver may compute it via the tree reduction and
+    // commit the result here — mirroring `select`'s accounting exactly.
+    fn supports_precomputed(&self) -> bool {
+        true
+    }
+
+    fn commit_precomputed(&mut self, _j: usize, n_items: usize, flops: &mut FlopCounter) {
+        self.stats.selects += 1;
+        flops.add(2 * n_items as u64); // abs + compare per item
     }
 }
 

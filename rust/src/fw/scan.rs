@@ -355,6 +355,15 @@ impl ScanKernel {
         Self { direct_max_nnz: t }
     }
 
+    /// The active fused-vs-scratch crossover. Tooling that reports or
+    /// retunes the threshold (`autotune_thresholds`) reads it through
+    /// this accessor so the resolution order (explicit > env > default)
+    /// stays in one place.
+    #[inline]
+    pub fn threshold(&self) -> usize {
+        self.direct_max_nnz
+    }
+
     /// Which arm this dispatcher sends `seg` down.
     #[inline]
     pub fn arm(&self, seg: &IndexSeg<'_>) -> SegArm {

@@ -15,13 +15,15 @@ use std::time::Instant;
 
 use crate::fw::config::{FwConfig, SelectorKind};
 use crate::fw::flops::{
-    FlopCounter, BYTES_F32_READ, BYTES_F64_READ, BYTES_F64_RMW, FLOPS_SIGMOID,
+    FlopCounter, ShardCosts, BYTES_F32_READ, BYTES_F64_READ, BYTES_F64_RMW,
+    FLOPS_SIGMOID,
 };
 use crate::fw::loss::{Logistic, Loss};
 use crate::fw::sign;
 use crate::fw::trace::{FwOutput, TraceRecord, WeightVector};
 use crate::fw::workspace::{BootKey, Bootstrap, FwWorkspace};
 use crate::rng::Xoshiro256pp;
+use crate::sparse::sharded::{par_abs_argmax, ShardedDataset, SELECT_PAR_MIN_D};
 use crate::sparse::Dataset;
 
 pub struct StandardFrankWolfe<'a> {
@@ -79,6 +81,12 @@ impl<'a> StandardFrankWolfe<'a> {
     }
 
     fn run_core(&self, ws: &mut FwWorkspace, lam: f64, boot: Bootstrap) -> FwOutput {
+        // Sharded engine in a separate body (same structure as the fast
+        // solver, DESIGN.md §6.8): the legacy path below is untouched for
+        // `shards: None`.
+        if let Some(requested) = self.cfg.effective_shards() {
+            return self.run_core_sharded(ws, lam, boot, requested);
+        }
         let start = Instant::now();
         let csr = &self.data.csr;
         let y = &self.data.labels;
@@ -234,12 +242,273 @@ impl<'a> StandardFrankWolfe<'a> {
             selector_stats: selector.stats(),
             trace,
             iters_run: t_total - 1,
+            effective_threads: self.cfg.effective_threads(),
+            effective_shards: 0,
+            shard_flops: Vec::new(),
+            shard_bytes: Vec::new(),
         };
         ws.recycle_f64(w);
         ws.recycle_f64(v);
         ws.recycle_f64(q);
         ws.recycle_f64(alpha);
         ws.recycle_u32(scratch);
+        ws.recycle_selector(selector, d, exp_scale, nm_scale);
+        out
+    }
+
+    /// The row-sharded Algorithm 1 (DESIGN.md §6.8). Per iteration:
+    ///
+    /// * **Pass 1** `v̄ = Xw` + the gradient sweep `q̄ = ∇L(v̄, y)` run
+    ///   per shard into disjoint `v̄`/`q̄` slices — every `v̄_i` is one
+    ///   row dot (row-local FP), so any schedule computes the same bits.
+    /// * **Pass 2** `α = Xᵀq̄` runs through the *parent's*
+    ///   column-partitioned sweep: per-column sequential sums, hence
+    ///   bit-identical at any thread count, and the column-side FP
+    ///   reduction order never depends on the row partition.
+    /// * **Selection** uses the tree-reduced parallel argmax when the
+    ///   selector supports precomputation, the sequential `select`
+    ///   otherwise — exactly as in the fast solver.
+    ///
+    /// The FLOP model is the legacy formula unchanged. The byte model
+    /// differs from the legacy path in exactly one P-invariant term:
+    /// pass 2 streams the CSC index structure instead of a second CSR
+    /// sweep (and splits its segments on the column side), because that
+    /// is what the sharded engine executes. Trajectory, flops, and bytes
+    /// are therefore bit-identical across any `(P, threads)` — but the
+    /// byte/segment totals are compared sharded-vs-sharded, not against
+    /// the `shards: None` path (documented in DESIGN.md §6.8).
+    fn run_core_sharded(
+        &self,
+        ws: &mut FwWorkspace,
+        lam: f64,
+        boot: Bootstrap,
+        requested: usize,
+    ) -> FwOutput {
+        let start = Instant::now();
+        let csr = &self.data.csr;
+        let csc = &self.data.csc;
+        let n = csr.n_rows();
+        let d = csr.n_cols();
+        let t_total = self.cfg.iters;
+        let lip = self.cfg.lipschitz.unwrap_or_else(|| self.loss.lipschitz());
+        let boot_key = BootKey::of(self.data, self.loss.name());
+        let eff_threads = self.cfg.effective_threads();
+        let pass2_threads = if self.cfg.threads == 0 {
+            crate::sparse::auto_threads(csr.nnz())
+        } else {
+            self.cfg.threads
+        };
+
+        let sharded = ws
+            .take_sharded(self.data, requested)
+            .unwrap_or_else(|| ShardedDataset::build(self.data, requested));
+        let p = sharded.n_shards();
+        let mut shard_scratch = ws.take_shard_scratch(p);
+        let mut shard_costs = ShardCosts::new(p);
+
+        let (exp_scale, nm_scale) = match self.cfg.privacy {
+            Some(pp) => {
+                (pp.exp_mech_scale(t_total, lip), pp.noisy_max_scale(t_total, lip))
+            }
+            None => (0.0, 0.0),
+        };
+        let mut selector = ws.take_selector(self.cfg.selector, d, exp_scale, nm_scale);
+        let mut rng = Xoshiro256pp::seeded(self.cfg.seed);
+        let mut flops = FlopCounter::new();
+        let kern = self.cfg.scan_kernel();
+        // full-sweep dispatcher splits of what this engine executes:
+        // pass 1 sweeps the row segments, pass 2 the column segments —
+        // both computed on the parent's canonical streams (P-invariant)
+        let (r_direct, r_scratch, r_scratch_nnz) = csr.scan_split(kern);
+        let (c_direct, c_scratch, c_scratch_nnz) = csc.scan_split(kern);
+
+        let mut w = ws.take_f64(d, 0.0);
+        let mut v = ws.take_f64(n, 0.0);
+        let mut q = ws.take_f64(n, 0.0);
+        let mut alpha = ws.take_f64(d, 0.0);
+        let mut trace = Vec::new();
+        let mut gap = f64::NAN;
+        let mut initialized = false;
+        let use_tree_select = selector.supports_precomputed();
+
+        for t in 1..t_total {
+            let cached = t == 1
+                && boot == Bootstrap::Shared
+                && match ws.bootstrap_get(&boot_key) {
+                    Some(c) => {
+                        q.copy_from_slice(c.q0());
+                        alpha.copy_from_slice(c.alpha0());
+                        true
+                    }
+                    None => false,
+                };
+            if !cached {
+                // ---- pass 1 + gradient sweep, per shard ----------------
+                // each shard's rows are independent dots into its disjoint
+                // v̄/q̄ slices; the shard scans its OWN CSR slab (local
+                // rows, global columns) through the shared dispatcher
+                if eff_threads > 1 && p > 1 && csr.nnz() >= crate::sparse::PAR_MIN_NNZ {
+                    std::thread::scope(|scope| {
+                        let mut v_rest = v.as_mut_slice();
+                        let mut q_rest = q.as_mut_slice();
+                        let loss = &*self.loss;
+                        let w_ref = &w[..];
+                        for (s, scr) in
+                            sharded.shards().iter().zip(shard_scratch.iter_mut())
+                        {
+                            let (v_s, v_tail) =
+                                std::mem::take(&mut v_rest).split_at_mut(s.n_rows());
+                            let (q_s, q_tail) =
+                                std::mem::take(&mut q_rest).split_at_mut(s.n_rows());
+                            v_rest = v_tail;
+                            q_rest = q_tail;
+                            scope.spawn(move || {
+                                s.csr.matvec_scan(w_ref, v_s, &mut scr.decode, kern);
+                                for ((qi, &vi), &yi) in
+                                    q_s.iter_mut().zip(v_s.iter()).zip(s.labels.iter())
+                                {
+                                    *qi = loss.grad(vi, yi as f64);
+                                }
+                            });
+                        }
+                    });
+                } else {
+                    for (s, scr) in sharded.shards().iter().zip(shard_scratch.iter_mut())
+                    {
+                        let r = s.rows.clone();
+                        s.csr.matvec_scan(&w, &mut v[r.clone()], &mut scr.decode, kern);
+                        for i in r {
+                            q[i] = self.loss.grad(v[i], self.data.labels[i] as f64);
+                        }
+                    }
+                }
+                // ---- pass 2: α = Xᵀq̄ through the parent CSC ------------
+                // column-partitioned, per-column sequential sums: the FP
+                // reduction order is independent of both the row partition
+                // and the thread count (bit-identical to the CSR-driven
+                // `matvec_t_add` into a zeroed output — the counting sort
+                // stores each column's rows ascending)
+                csc.matvec_t_par_scan(&q, &mut alpha, pass2_threads, kern);
+                let cost = 4 * csr.nnz() as u64 + n as u64 * FLOPS_SIGMOID + d as u64;
+                // legacy §6.6 model with one substitution: pass 2 streams
+                // the CSC index structure (that is the sweep this engine
+                // runs), not a second CSR sweep — P- and thread-invariant
+                let nnz_u = csr.nnz() as u64;
+                let bytes = csr.index_bytes_total()
+                    + csc.index_bytes_total()
+                    + 2 * BYTES_F32_READ * nnz_u
+                    + (BYTES_F64_READ + BYTES_F64_RMW) * nnz_u
+                    + (4 * BYTES_F64_READ + BYTES_F32_READ) * n as u64
+                    + BYTES_F64_READ * d as u64;
+                if t == 1 {
+                    flops.add_boot(cost);
+                    flops.add_boot_bytes(bytes);
+                    if boot == Bootstrap::Shared {
+                        ws.bootstrap_put(boot_key, &q, &alpha);
+                    }
+                } else {
+                    flops.add(cost);
+                    flops.add_bytes(bytes);
+                    flops.add_segs(
+                        r_direct + c_direct,
+                        r_scratch + c_scratch,
+                        r_scratch_nnz + c_scratch_nnz,
+                    );
+                }
+                // per-shard attribution: the genuinely shard-local part —
+                // pass 1's dots and the gradient sweep (pass 2 and the
+                // dense plane stay in the global bucket)
+                for (si, s) in sharded.shards().iter().enumerate() {
+                    let snnz = s.nnz() as u64;
+                    let srows = s.n_rows() as u64;
+                    shard_costs.add(si, 2 * snnz + srows * FLOPS_SIGMOID);
+                    shard_costs.add_bytes(
+                        si,
+                        (BYTES_F32_READ + BYTES_F64_READ) * snnz
+                            + (4 * BYTES_F64_READ + BYTES_F32_READ) * srows,
+                    );
+                }
+            }
+            if !initialized {
+                selector.init(&alpha, &mut flops);
+                initialized = true;
+            }
+
+            // ---- line 8: selection --------------------------------------
+            let j = if use_tree_select && eff_threads > 1 && d >= SELECT_PAR_MIN_D {
+                let j = par_abs_argmax(&alpha, eff_threads, eff_threads);
+                selector.commit_precomputed(j, alpha.len(), &mut flops);
+                j
+            } else {
+                selector.select(&alpha, &mut rng, &mut flops)
+            };
+
+            // ---- lines 9-11: direction and gap --------------------------
+            let s = -lam * sign(alpha[j]);
+            let aw: f64 = alpha.iter().zip(&w).map(|(&a, &wk)| a * wk).sum();
+            flops.add(2 * d as u64);
+            gap = aw - s * alpha[j];
+            flops.add(2);
+
+            // ---- lines 12-13: dense step --------------------------------
+            let eta = 2.0 / (t as f64 + 2.0);
+            for wk in w.iter_mut() {
+                *wk *= 1.0 - eta;
+            }
+            w[j] += eta * s;
+            flops.add(d as u64 + 2);
+            flops.add_bytes((2 * BYTES_F64_READ + BYTES_F64_RMW) * d as u64);
+
+            if self.cfg.trace_every > 0 && t % self.cfg.trace_every == 0 {
+                trace.push(TraceRecord {
+                    iter: t,
+                    gap,
+                    flops: flops.total(),
+                    bytes: flops.bytes(),
+                    pops: selector.stats().pops,
+                    selected: j,
+                    wall_ns: start.elapsed().as_nanos(),
+                });
+            }
+        }
+
+        let wall_ms = start.elapsed().as_secs_f64() * 1e3;
+        trace.push(TraceRecord {
+            iter: t_total - 1,
+            gap,
+            flops: flops.total(),
+            bytes: flops.bytes(),
+            pops: selector.stats().pops,
+            selected: usize::MAX,
+            wall_ns: start.elapsed().as_nanos(),
+        });
+        let (shard_flops, shard_bytes) = shard_costs.into_parts();
+        let out = FwOutput {
+            weights: WeightVector(w.clone()),
+            final_gap: gap,
+            flops: flops.total(),
+            bootstrap_flops: flops.bootstrap(),
+            bytes_moved: flops.bytes(),
+            bootstrap_bytes: flops.bootstrap_bytes(),
+            scratch_bytes: flops.scratch_bytes(),
+            direct_segments: flops.direct_segments(),
+            scratch_segments: flops.scratch_segments(),
+            wall_ms,
+            phase: None,
+            selector_stats: selector.stats(),
+            trace,
+            iters_run: t_total - 1,
+            effective_threads: eff_threads,
+            effective_shards: p,
+            shard_flops,
+            shard_bytes,
+        };
+        ws.recycle_f64(w);
+        ws.recycle_f64(v);
+        ws.recycle_f64(q);
+        ws.recycle_f64(alpha);
+        ws.recycle_shard_scratch(shard_scratch);
+        ws.put_sharded(sharded);
         ws.recycle_selector(selector, d, exp_scale, nm_scale);
         out
     }

@@ -92,6 +92,25 @@ pub struct FwOutput {
     pub trace: Vec<TraceRecord>,
     /// Iterations actually executed (T−1).
     pub iters_run: usize,
+    /// Worker threads this run actually resolved to
+    /// (`FwConfig::effective_threads`) — surfaced so bench JSON rows are
+    /// attributable to the real count, not the requested one (`threads: 0`
+    /// means "auto", and the parallel kernels' internal gates may still
+    /// serialize small inputs without changing this number).
+    pub effective_threads: usize,
+    /// Row shards the run actually built (≤ the requested count — the
+    /// partition never splits below one row per shard); `0` on the legacy
+    /// monolithic path (`FwConfig::shards` resolved to `None`).
+    pub effective_shards: usize,
+    /// Per-shard FLOP attribution (index = shard id; empty on the legacy
+    /// path). Sums to ≤ [`FwOutput::flops`]; the remainder is the global
+    /// plane (selection, axis updates, bootstrap). Telemetry only —
+    /// excluded from the bit-identity contract, which compares the global
+    /// totals (P=1 and P=16 runs attribute the same totals differently).
+    pub shard_flops: Vec<u64>,
+    /// Per-shard modeled-byte attribution, same contract as
+    /// [`FwOutput::shard_flops`].
+    pub shard_bytes: Vec<u64>,
 }
 
 /// Dense weight vector with sparsity helpers.

@@ -42,6 +42,7 @@
 
 use crate::fw::config::SelectorKind;
 use crate::fw::queue::{build_selector, CoordinateSelector};
+use crate::sparse::sharded::{GammaEntry, ShardedDataset};
 use crate::sparse::Dataset;
 
 /// How a run sources its dense first iteration `α = Xᵀq̄` (DESIGN.md §6.5).
@@ -157,6 +158,28 @@ pub struct FwWorkspace {
     u32_pool: Vec<Vec<u32>>,
     selector: Option<CachedSelector>,
     boot: Option<BootstrapCache>,
+    /// Single-slot cache of the row-sharded substrate (DESIGN.md §6.8):
+    /// building it is `O(nnz)`, so `run_path` and repeated sharded runs
+    /// over the same dataset must not rebuild it per run. Keyed by the
+    /// parent token plus the *requested* shard count
+    /// ([`ShardedDataset::matches`]). Take/put move semantics — not a
+    /// borrowing getter — because the solver holds it across `&mut self`
+    /// pool calls.
+    sharded: Option<ShardedDataset>,
+    /// Pooled per-shard Phase A scratch (deferred γ entries + decode
+    /// buffers), recycled like the scalar pools.
+    shard_scratch: Vec<ShardScratch>,
+}
+
+/// Per-shard scratch for the fast solver's sharded Phase A: the deferred
+/// [`GammaEntry`] list the shard emits (replayed sequentially in Phase B)
+/// and a `u32` decode buffer for the shard's compact column segments.
+/// Pooled in the workspace so steady-state sharded iterations allocate
+/// nothing.
+#[derive(Default)]
+pub(crate) struct ShardScratch {
+    pub(crate) gammas: Vec<GammaEntry>,
+    pub(crate) decode: Vec<u32>,
 }
 
 impl FwWorkspace {
@@ -245,6 +268,41 @@ impl FwWorkspace {
             }
         }
         build_selector(kind, n_items, exp_scale, nm_scale)
+    }
+
+    /// The cached sharded substrate for `(data, requested)`, moved out of
+    /// the workspace (single-slot; a key mismatch drops the stale one).
+    /// `None` means the caller must [`ShardedDataset::build`] — and should
+    /// hand the result back via [`FwWorkspace::put_sharded`] when done.
+    pub(crate) fn take_sharded(
+        &mut self,
+        data: &Dataset,
+        requested: usize,
+    ) -> Option<ShardedDataset> {
+        self.sharded.take().filter(|s| s.matches(data, requested))
+    }
+
+    /// Return (or install) the sharded substrate for the next run.
+    pub(crate) fn put_sharded(&mut self, sharded: ShardedDataset) {
+        self.sharded = Some(sharded);
+    }
+
+    /// `n_shards` pooled Phase A scratch slots, cleared but with retained
+    /// capacity. Surplus pooled slots stay put; missing ones are fresh.
+    pub(crate) fn take_shard_scratch(&mut self, n_shards: usize) -> Vec<ShardScratch> {
+        let take = self.shard_scratch.len().min(n_shards);
+        let mut out: Vec<ShardScratch> = self.shard_scratch.drain(..take).collect();
+        for s in &mut out {
+            s.gammas.clear();
+            s.decode.clear();
+        }
+        out.resize_with(n_shards, ShardScratch::default);
+        out
+    }
+
+    /// Return Phase A scratch slots to the pool.
+    pub(crate) fn recycle_shard_scratch(&mut self, scratch: Vec<ShardScratch>) {
+        self.shard_scratch.extend(scratch);
     }
 
     /// Return a selector to the cache for the next run.
@@ -359,6 +417,40 @@ mod tests {
         let t2 = ws.take_u32_scratch();
         assert!(t2.is_empty());
         assert!(t2.capacity() >= cap);
+    }
+
+    #[test]
+    fn sharded_cache_and_scratch_pool_round_trip() {
+        use crate::sparse::synth::SynthConfig;
+        let ds = SynthConfig {
+            name: "shard-ws".into(),
+            n_rows: 60,
+            n_cols: 40,
+            avg_row_nnz: 4.0,
+            zipf_exponent: 1.2,
+            n_informative: 8,
+            n_dense: 0,
+            label_noise: 0.0,
+            bias_col: true,
+        }
+        .generate(2);
+        let mut ws = FwWorkspace::new();
+        assert!(ws.take_sharded(&ds, 3).is_none(), "cold workspace must miss");
+        ws.put_sharded(ShardedDataset::build(&ds, 3));
+        let sh = ws.take_sharded(&ds, 3).expect("same key must hit");
+        assert!(ws.take_sharded(&ds, 3).is_none(), "take moves the slot out");
+        ws.put_sharded(sh);
+        assert!(ws.take_sharded(&ds, 4).is_none(), "different P must miss (and drop)");
+        // scratch pool: capacity is retained, contents are cleared
+        let mut sc = ws.take_shard_scratch(2);
+        sc[0].gammas.push(GammaEntry { row: 7, gamma: 1.0, v_new: 0.5 });
+        sc[1].decode.extend(0..64u32);
+        let cap = sc[1].decode.capacity();
+        ws.recycle_shard_scratch(sc);
+        let sc2 = ws.take_shard_scratch(3);
+        assert_eq!(sc2.len(), 3);
+        assert!(sc2[0].gammas.is_empty() && sc2[1].decode.is_empty());
+        assert!(sc2.iter().map(|s| s.decode.capacity()).max().unwrap() >= cap);
     }
 
     #[test]

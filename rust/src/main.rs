@@ -117,6 +117,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         // CLI runs use the process-wide resolution (DPFW_DIRECT_MAX_NNZ
         // env var or the §6.7 default)
         direct_max_nnz: None,
+        shards: None,
     };
     let algo = Algo::from_name(&args.get_or("algo", "alg2")).context("bad --algo")?;
     println!(

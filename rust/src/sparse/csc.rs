@@ -46,6 +46,27 @@ impl PartialEq for CscMatrix {
     }
 }
 
+/// Effective worker count [`CscMatrix::from_csr_threaded`] uses for a
+/// matrix of the given shape: the requested count after the serial gates
+/// (tiny nnz, trivial shapes, `u32` overflow guard) and the cursor-table
+/// memory cap. Pure function of the arguments. Exposed — rather than left
+/// implicit in the scatter — so callers can *report* the worker count
+/// actually used instead of the one requested; the cap used to clamp
+/// silently, leaving bench rows attributed to phantom thread counts.
+pub fn scatter_workers(threads: usize, n_cols: usize, nnz: usize) -> usize {
+    if threads <= 1 || nnz < super::PAR_MIN_NNZ || n_cols < 2 || nnz > u32::MAX as usize {
+        return 1;
+    }
+    // ≤ 256 MB of transient u32 cursors: cap workers instead of
+    // rescanning. Sized so even the widest paper presets keep parallelism
+    // (KDDA D ≈ 20.2M → 3 workers, Web D ≈ 16.6M → 4) while D × many-core
+    // machines can't allocate unboundedly; the tables are freed before the
+    // scatter returns, and matrices this wide carry nnz buffers far larger
+    // than the cursors.
+    const COUNT_MEM_BUDGET: usize = 1 << 26;
+    threads.min((COUNT_MEM_BUDGET / n_cols).max(1)).min(nnz)
+}
+
 impl CscMatrix {
     /// Block-parallel transpose-convert with a **single-read scatter**
     /// (DESIGN.md §6.3). Counting: each thread counts a disjoint chunk of
@@ -67,23 +88,13 @@ impl CscMatrix {
         let n_rows = csr.n_rows();
         let n_cols = csr.n_cols();
         let nnz = csr.nnz();
-        // Serial fallback: inputs below the PAR_MIN_NNZ gate (which lives
-        // here, not at call sites — tiny matrices never pay thread-spawn
-        // overhead no matter what the caller asks for), trivial shapes,
-        // or an nnz so large that a single chunk's per-column count could
-        // overflow `u32` (unreachable at paper scale — row indices are
-        // `u32` — but it keeps the disjointness reasoning unconditional).
-        if threads <= 1 || nnz < super::PAR_MIN_NNZ || n_cols < 2 || nnz > u32::MAX as usize {
-            return Self::from_csr(csr);
-        }
-        // ≤ 256 MB of transient u32 cursors: cap workers instead of
-        // rescanning. Sized so even the widest paper presets keep
-        // parallelism (KDDA D ≈ 20.2M → 3 workers, Web D ≈ 16.6M → 4)
-        // while D × many-core machines can't allocate unboundedly; the
-        // tables are freed before the function returns, and matrices this
-        // wide carry nnz buffers far larger than the cursors.
-        const COUNT_MEM_BUDGET: usize = 1 << 26;
-        let t_eff = threads.min((COUNT_MEM_BUDGET / n_cols).max(1)).min(nnz);
+        // Serial fallback and worker cap both live in [`scatter_workers`]
+        // (not at call sites — tiny matrices never pay thread-spawn
+        // overhead no matter what the caller asks for, and the cursor
+        // -table memory budget caps wide matrices; see that function for
+        // the sizing rationale). Keeping the decision in one pure function
+        // lets `Dataset` record the count actually used.
+        let t_eff = scatter_workers(threads, n_cols, nnz);
         if t_eff <= 1 {
             return Self::from_csr(csr);
         }

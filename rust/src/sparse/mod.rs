@@ -13,6 +13,7 @@ pub mod coo;
 pub mod csc;
 pub mod csr;
 pub mod libsvm;
+pub mod sharded;
 pub mod synth;
 
 use csc::CscMatrix;
@@ -78,6 +79,11 @@ pub struct Dataset {
     /// `Dataset`'s fields in place after construction is outside that
     /// cache's contract.
     token: u64,
+    /// Worker count the parallel CSC scatter actually used at
+    /// construction (after [`csc::scatter_workers`]' gates and memory
+    /// cap) — recorded so downstream reporting can attribute layout cost
+    /// to the real worker count rather than the requested one.
+    scatter_workers: usize,
 }
 
 impl Dataset {
@@ -87,6 +93,8 @@ impl Dataset {
         // bit-identical to the serial counting sort at any thread count
         // (the PAR_MIN_NNZ gate inside the entry point serializes tiny
         // inputs).
+        let scatter_workers =
+            csc::scatter_workers(auto_threads(csr.nnz()), csr.n_cols(), csr.nnz());
         let mut csc = CscMatrix::from_csr_threaded(&csr, auto_threads(csr.nnz()));
         // Compact u16-delta index mirrors for both views (DESIGN.md §6.6):
         // built once here so every hot loop downstream reads half-width
@@ -95,7 +103,14 @@ impl Dataset {
         csc.build_compact();
         static NEXT_TOKEN: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
         let token = NEXT_TOKEN.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        Self { csr, csc, labels, name: name.into(), token }
+        Self { csr, csc, labels, name: name.into(), token, scatter_workers }
+    }
+
+    /// Worker count the parallel CSC scatter actually used when this
+    /// dataset was built (1 when the serial fallback or the memory cap
+    /// engaged). Clones share the value with the original.
+    pub fn scatter_workers(&self) -> usize {
+        self.scatter_workers
     }
 
     /// Drop the compact `u16-delta` index mirrors from both views,

@@ -1,0 +1,500 @@
+//! Row-sharded dataset substrate (DESIGN.md §6.8).
+//!
+//! [`ShardedDataset`] partitions a [`Dataset`] into `P` contiguous,
+//! nnz-balanced row ranges. Each [`Shard`] owns *its own* CSR and CSC
+//! views of its row slab — including their compact `u16-delta` index
+//! mirrors — so a shard's hot-loop scans touch only shard-local streams
+//! (the prerequisite for NUMA placement and multi-node operation: a shard
+//! is self-contained and never reaches into the parent's allocations).
+//!
+//! Determinism contract (the same discipline as `threads ∈ {1,4,16}`,
+//! DESIGN.md §2): sharding may change *who* computes, never *what*. Three
+//! structural facts carry the proof:
+//!
+//! 1. **Shard boundaries are a pure function of the matrix.** They come
+//!    from [`super::balanced_ranges`] on the CSR prefix sums — thread
+//!    count never moves a row between shards.
+//! 2. **Row-local state is decomposition-invariant.** Quantities indexed
+//!    by row (`v̂_i`, `q̄_i`, `γ_i`) involve no cross-row reduction, so
+//!    computing them per shard — in any order, on any thread — performs
+//!    the exact same FP ops per row as the monolithic scan.
+//! 3. **Order-sensitive reductions keep the legacy op order.** Sums that
+//!    cross rows (the `α += γ·X[i,:]` scatter, the gap term `g̃`) are
+//!    replayed sequentially in ascending shard order; because shards are
+//!    contiguous ascending row ranges, that concatenation *is* the legacy
+//!    ascending-row order, so the FP addition sequence is unchanged.
+//!    Selection scores reduce through [`tree_reduce_scores`], which is
+//!    exactly associative (comparisons don't round), so any partition
+//!    yields the serial argmax bit for bit.
+//!
+//! The byte-traffic *model* stays anchored to the parent's canonical
+//! streams (P-invariant by construction — see DESIGN.md §6.8); the
+//! per-shard *physical* stream sizes, which may differ from the model when
+//! a slab's qualifier decision diverges from the parent's, are exposed as
+//! telemetry ([`ShardedDataset::physical_index_bytes`]).
+
+use std::ops::Range;
+
+use super::csc::CscMatrix;
+use super::csr::CsrMatrix;
+use super::{auto_threads, balanced_ranges, Dataset};
+
+/// Coordinate vectors shorter than this are not worth a parallel argmax:
+/// the scan is a few µs and thread spawn would dominate. Values are
+/// identical either way (the tree reduction equals the serial scan), so
+/// this is purely a performance gate.
+pub const SELECT_PAR_MIN_D: usize = 1 << 16;
+
+/// One row-range deferral from the fast solver's Phase A scan: row `row`'s
+/// gradient moved by `gamma` at new margin `v_new`. Collected per shard in
+/// ascending row order, then replayed sequentially (ascending shard order)
+/// so the `α` scatter keeps the legacy FP op sequence.
+#[derive(Clone, Copy, Debug)]
+pub struct GammaEntry {
+    pub row: u32,
+    pub gamma: f64,
+    pub v_new: f64,
+}
+
+/// One contiguous row slab of the parent dataset, self-contained: both
+/// sparse views (with compact mirrors when the parent carries them) and
+/// the slab's labels. The CSC view indexes rows *locally* (`0..len`);
+/// `rows.start` maps them back to global row ids.
+#[derive(Clone, Debug)]
+pub struct Shard {
+    /// Global row range `[start, end)` this shard owns.
+    pub rows: Range<usize>,
+    /// Row-major view of the slab: `rows.len() × n_cols`, global column
+    /// ids (so its `α` scatters address the global gradient directly).
+    pub csr: CsrMatrix,
+    /// Column-major view of the slab with *local* row ids.
+    pub csc: CscMatrix,
+    /// Labels of the slab's rows.
+    pub labels: Vec<f32>,
+}
+
+impl Shard {
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.csr.nnz()
+    }
+
+    /// Physical bytes of one full sweep of this shard's index streams
+    /// (CSR + CSC) — telemetry, not the traffic model (see module docs).
+    pub fn physical_index_bytes(&self) -> u64 {
+        self.csr.index_bytes_total() + self.csc.index_bytes_total()
+    }
+}
+
+/// A dataset partitioned into `P` contiguous nnz-balanced row shards.
+/// Built once (O(nnz)) and cached in the solver workspace keyed by the
+/// parent's identity token plus the requested shard count.
+#[derive(Clone, Debug)]
+pub struct ShardedDataset {
+    shards: Vec<Shard>,
+    requested: usize,
+    n_rows: usize,
+    n_cols: usize,
+    nnz: usize,
+    token: u64,
+}
+
+impl ShardedDataset {
+    /// Partition `data` into at most `requested` shards. The effective
+    /// count can be lower (never more shards than rows; degenerate
+    /// matrices collapse to one) — [`ShardedDataset::n_shards`] reports
+    /// what was actually built, and empty ranges are kept so the layout is
+    /// exactly `balanced_ranges`' deterministic partition.
+    pub fn build(data: &Dataset, requested: usize) -> Self {
+        assert!(requested >= 1, "shard count must be >= 1");
+        let csr = &data.csr;
+        let row_ptr = csr.row_ptr();
+        let cols_flat = csr.col_indices();
+        let vals_flat = csr.values_flat();
+        let compact_csr = data.csr.index_kind() == "u16-delta";
+        let compact_csc = data.csc.index_kind() == "u16-delta";
+        let shards = balanced_ranges(row_ptr, requested)
+            .into_iter()
+            .map(|r| {
+                let base = row_ptr[r.start];
+                let end = row_ptr[r.end];
+                let indptr: Vec<usize> =
+                    row_ptr[r.start..=r.end].iter().map(|&p| p - base).collect();
+                let mut sub = CsrMatrix::from_parts(
+                    r.len(),
+                    csr.n_cols(),
+                    indptr,
+                    cols_flat[base..end].to_vec(),
+                    vals_flat[base..end].to_vec(),
+                );
+                // Local-row transpose: the slab's columns list local rows
+                // ascending, exactly the parent column's entries with
+                // global row ∈ r (the counting sort preserves row order).
+                let mut sub_t = CscMatrix::from_csr_threaded(&sub, auto_threads(sub.nnz()));
+                // Follow the parent's substrate per view so a stripped
+                // dataset stays u32 end to end. A slab the qualifier
+                // rejects simply stays u32 — values are representation
+                // -invariant (property-tested), and the traffic model is
+                // charged off the parent streams either way.
+                if compact_csr {
+                    sub.build_compact();
+                }
+                if compact_csc {
+                    sub_t.build_compact();
+                }
+                Shard {
+                    labels: data.labels[r.start..r.end].to_vec(),
+                    rows: r,
+                    csr: sub,
+                    csc: sub_t,
+                }
+            })
+            .collect();
+        Self {
+            shards,
+            requested,
+            n_rows: data.n_rows(),
+            n_cols: data.n_cols(),
+            nnz: data.nnz(),
+            token: data.token(),
+        }
+    }
+
+    pub fn shards(&self) -> &[Shard] {
+        &self.shards
+    }
+
+    /// Shards actually built (≤ requested; see [`ShardedDataset::build`]).
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard count the caller asked for (recorded so bench rows can
+    /// attribute results even when the partition clamped it).
+    pub fn requested_shards(&self) -> usize {
+        self.requested
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    pub fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// Does this partition describe `data` at `requested` shards? The
+    /// workspace's single-slot shard cache key (token identity plus shape
+    /// guards, mirroring `BootKey`).
+    pub fn matches(&self, data: &Dataset, requested: usize) -> bool {
+        self.token == data.token()
+            && self.requested == requested
+            && self.n_rows == data.n_rows()
+            && self.n_cols == data.n_cols()
+            && self.nnz == data.nnz()
+    }
+
+    /// Total physical index-stream bytes across all shards (telemetry;
+    /// the CSR side equals the parent's exactly — per-row segments encode
+    /// identically — while the CSC side may differ by boundary escapes).
+    pub fn physical_index_bytes(&self) -> u64 {
+        self.shards.iter().map(|s| s.physical_index_bytes()).sum()
+    }
+}
+
+// ------------------------------------------------------------------------
+// Selection plane: partial scores and the fixed-shape tree reduction
+// ------------------------------------------------------------------------
+
+/// The best selection score of one contiguous coordinate block:
+/// `index` is the *global* coordinate id, `score = |α_index|`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScorePartial {
+    pub index: usize,
+    pub score: f64,
+}
+
+/// First-max-wins `|·|` argmax of one coordinate block starting at global
+/// offset `offset` — the per-block leg of the parallel argmax. Replicates
+/// `sampler::noisy_max::arg_abs_max` exactly (strict `>`, so the earliest
+/// maximum wins; an all-NaN or empty block keeps the initial
+/// `(offset, -∞)`, matching the serial scan's behaviour on that block).
+pub fn block_abs_max(block: &[f64], offset: usize) -> ScorePartial {
+    let mut best = ScorePartial { index: offset, score: f64::NEG_INFINITY };
+    for (j, &a) in block.iter().enumerate() {
+        let s = a.abs();
+        if s > best.score {
+            best = ScorePartial { index: offset + j, score: s };
+        }
+    }
+    best
+}
+
+/// Deterministic fixed-shape pairwise tree reduction of block partials
+/// into the global selection choice. The combine step keeps the right
+/// partial only when its score *strictly* beats the left one; with
+/// partials listed in ascending coordinate order this reproduces the
+/// serial first-max-wins scan for **any** partition: max-with-earliest
+/// -tie-break is exactly associative (score comparison never rounds), so
+/// the reduction shape — and hence the shard count and thread count —
+/// cannot change the result.
+pub fn tree_reduce_scores(partials: &[ScorePartial]) -> ScorePartial {
+    assert!(!partials.is_empty(), "tree reduction needs at least one partial");
+    let mut level: Vec<ScorePartial> = partials.to_vec();
+    while level.len() > 1 {
+        let mut next = Vec::with_capacity(level.len().div_ceil(2));
+        for pair in level.chunks(2) {
+            next.push(if pair.len() == 2 && pair[1].score > pair[0].score {
+                pair[1]
+            } else {
+                pair[0]
+            });
+        }
+        level = next;
+    }
+    level[0]
+}
+
+/// Shard-parallel `argmax_j |α_j|`, bit-identical to
+/// `sampler::noisy_max::arg_abs_max` at any `blocks`/`threads` (see
+/// [`tree_reduce_scores`]). The serial fallback below [`SELECT_PAR_MIN_D`]
+/// (or at one block / one thread) runs the identical per-block scan over
+/// the whole vector, so the gate is purely a performance heuristic.
+pub fn par_abs_argmax(alpha: &[f64], blocks: usize, threads: usize) -> usize {
+    let n = alpha.len();
+    let blocks = blocks.clamp(1, n.max(1));
+    if threads <= 1 || blocks <= 1 || n < SELECT_PAR_MIN_D {
+        return block_abs_max(alpha, 0).index;
+    }
+    let chunk = n.div_ceil(blocks);
+    let partials: Vec<ScorePartial> = std::thread::scope(|s| {
+        let handles: Vec<_> = alpha
+            .chunks(chunk)
+            .enumerate()
+            .map(|(b, block)| s.spawn(move || block_abs_max(block, b * chunk)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("argmax block worker panicked"))
+            .collect()
+    });
+    tree_reduce_scores(&partials).index
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::noisy_max::arg_abs_max;
+    use crate::sparse::coo::CooBuilder;
+    use crate::sparse::synth::SynthConfig;
+
+    fn zipf_ds(seed: u64) -> Dataset {
+        SynthConfig {
+            name: "shard-unit".into(),
+            n_rows: 240,
+            n_cols: 300,
+            avg_row_nnz: 7.0,
+            zipf_exponent: 1.2,
+            n_informative: 10,
+            n_dense: 1,
+            label_noise: 0.0,
+            bias_col: true,
+        }
+        .generate(seed)
+    }
+
+    #[test]
+    fn shards_cover_rows_and_nnz_exactly() {
+        let ds = zipf_ds(3);
+        for p in [1usize, 2, 3, 7, 16] {
+            let sh = ShardedDataset::build(&ds, p);
+            assert!(sh.n_shards() <= p);
+            assert_eq!(sh.requested_shards(), p);
+            let mut next = 0usize;
+            let mut nnz = 0usize;
+            for s in sh.shards() {
+                assert_eq!(s.rows.start, next, "p={p}: shards must be contiguous");
+                next = s.rows.end;
+                nnz += s.nnz();
+                assert_eq!(s.labels.len(), s.n_rows());
+                assert_eq!(s.csr.n_cols(), ds.n_cols(), "columns stay global");
+                assert_eq!(s.csc.n_rows(), s.n_rows(), "CSC rows are local");
+            }
+            assert_eq!(next, ds.n_rows(), "p={p}: shards must cover all rows");
+            assert_eq!(nnz, ds.nnz(), "p={p}: shard nnz must sum to the parent");
+        }
+    }
+
+    #[test]
+    fn shard_rows_equal_parent_rows_verbatim() {
+        let ds = zipf_ds(5);
+        let sh = ShardedDataset::build(&ds, 5);
+        for s in sh.shards() {
+            for (local, global) in s.rows.clone().enumerate() {
+                let (pi, pv) = ds.csr.row_raw(global);
+                let (si, sv) = s.csr.row_raw(local);
+                assert_eq!(pi, si, "row {global}: indices must match the parent");
+                assert_eq!(pv, sv, "row {global}: values must match the parent");
+                assert_eq!(s.labels[local], ds.labels[global]);
+            }
+        }
+    }
+
+    #[test]
+    fn shard_columns_concatenate_to_parent_columns() {
+        // Scanning shard p's column j (local rows, ascending) and mapping
+        // back by rows.start, in ascending shard order, must visit exactly
+        // the parent column j's (row, value) sequence — the fact Phase A
+        // of the sharded fast solver rests on.
+        let ds = zipf_ds(7);
+        let sh = ShardedDataset::build(&ds, 4);
+        for j in 0..ds.n_cols() {
+            let parent: Vec<(usize, f32)> = ds.csc.col(j).collect();
+            let mut stitched = Vec::with_capacity(parent.len());
+            for s in sh.shards() {
+                for (i_local, v) in s.csc.col(j) {
+                    stitched.push((s.rows.start + i_local, v));
+                }
+            }
+            assert_eq!(parent, stitched, "column {j} diverged");
+        }
+    }
+
+    #[test]
+    fn shard_csr_compact_bytes_sum_to_parent() {
+        // The compact stream encodes each row segment independently
+        // (first delta from 0), so a shard's CSR rows encode to exactly
+        // the parent's words: physical CSR bytes are partition-invariant.
+        let ds = zipf_ds(9);
+        assert_eq!(ds.index_kind(), "u16-delta");
+        for p in [1usize, 3, 16] {
+            let sh = ShardedDataset::build(&ds, p);
+            let total: u64 = sh.shards().iter().map(|s| s.csr.index_bytes_total()).sum();
+            assert_eq!(total, ds.csr.index_bytes_total(), "p={p}");
+        }
+    }
+
+    #[test]
+    fn stripped_parent_yields_u32_shards() {
+        let mut ds = zipf_ds(11);
+        ds.strip_compact();
+        let sh = ShardedDataset::build(&ds, 3);
+        for s in sh.shards() {
+            assert_eq!(s.csr.index_kind(), "u32");
+            assert_eq!(s.csc.index_kind(), "u32");
+        }
+        let total: u64 = sh.shards().iter().map(|s| s.csr.index_bytes_total()).sum();
+        assert_eq!(total, 4 * ds.nnz() as u64);
+    }
+
+    #[test]
+    fn cache_key_matches_token_and_shape() {
+        let ds = zipf_ds(13);
+        let sh = ShardedDataset::build(&ds, 4);
+        assert!(sh.matches(&ds, 4));
+        assert!(!sh.matches(&ds, 5), "different requested count must miss");
+        let other = zipf_ds(13); // same content, fresh token
+        assert!(!sh.matches(&other, 4), "fresh construction must miss");
+        assert!(sh.matches(&ds.clone(), 4), "clones share the token");
+    }
+
+    #[test]
+    fn more_shards_than_rows_clamps_and_still_covers() {
+        let mut b = CooBuilder::new(0, 5);
+        for i in 0..3 {
+            let r = b.add_row();
+            b.push(r, i, 1.0 + i as f32);
+        }
+        let ds = Dataset::new(b.to_csr(), vec![1.0, 0.0, 1.0], "tiny");
+        let sh = ShardedDataset::build(&ds, 16);
+        assert!(sh.n_shards() <= 3, "cannot build more shards than rows");
+        assert_eq!(sh.requested_shards(), 16);
+        let covered: usize = sh.shards().iter().map(|s| s.n_rows()).sum();
+        assert_eq!(covered, 3);
+    }
+
+    #[test]
+    fn all_empty_row_slab_builds_empty_shard_views() {
+        // rows 2..6 are empty: a middle shard can be all-empty rows
+        let mut b = CooBuilder::new(0, 4);
+        let r = b.add_row();
+        b.push(r, 0, 1.0);
+        let r = b.add_row();
+        b.push(r, 1, 2.0);
+        for _ in 0..4 {
+            b.add_row(); // empty rows
+        }
+        let r = b.add_row();
+        b.push(r, 3, 3.0);
+        let ds = Dataset::new(b.to_csr(), vec![1.0; 7], "gaps");
+        let sh = ShardedDataset::build(&ds, 3);
+        let covered: usize = sh.shards().iter().map(|s| s.n_rows()).sum();
+        assert_eq!(covered, 7);
+        let nnz: usize = sh.shards().iter().map(|s| s.nnz()).sum();
+        assert_eq!(nnz, 3);
+    }
+
+    #[test]
+    fn tree_reduce_matches_serial_argmax_for_any_partition() {
+        // adversarial score vectors: exact ties (first must win), zeros,
+        // negatives, ±∞ magnitudes, NaN entries (never selected)
+        let vectors: Vec<Vec<f64>> = vec![
+            vec![0.0; 17],
+            vec![1.0, -1.0, 1.0, 1.0],
+            vec![-3.0, 2.0, 3.0, -3.0, 0.5],
+            (0..101).map(|i| ((i * 37) % 23) as f64 - 11.0).collect(),
+            vec![f64::NAN, 1.0, f64::NAN, 1.0],
+            vec![f64::NAN, f64::NAN],
+            vec![f64::INFINITY, f64::NEG_INFINITY, 5.0],
+            vec![2.5],
+        ];
+        for alpha in &vectors {
+            let want = arg_abs_max(alpha);
+            for blocks in 1..=alpha.len() + 2 {
+                let blocks = blocks.min(alpha.len().max(1));
+                let chunk = alpha.len().div_ceil(blocks).max(1);
+                let partials: Vec<ScorePartial> = alpha
+                    .chunks(chunk)
+                    .enumerate()
+                    .map(|(b, blk)| block_abs_max(blk, b * chunk))
+                    .collect();
+                assert_eq!(
+                    tree_reduce_scores(&partials).index,
+                    want,
+                    "alpha={alpha:?} blocks={blocks}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn par_abs_argmax_bit_identical_above_and_below_gate() {
+        // below the gate: serial fallback, trivially identical
+        let small: Vec<f64> = (0..1000).map(|i| ((i * 31) % 97) as f64 - 48.0).collect();
+        for (blocks, threads) in [(1usize, 1usize), (3, 4), (16, 2)] {
+            assert_eq!(par_abs_argmax(&small, blocks, threads), arg_abs_max(&small));
+        }
+        // above the gate: genuinely parallel blocks, including exact ties
+        // straddling block boundaries
+        let n = SELECT_PAR_MIN_D + 17;
+        let mut big: Vec<f64> = (0..n).map(|i| ((i * 131) % 1009) as f64 * 0.25).collect();
+        big[100] = 1e6;
+        big[n - 3] = 1e6; // exact tie: the earlier index must win
+        let want = arg_abs_max(&big);
+        assert_eq!(want, 100);
+        for (blocks, threads) in [(2usize, 2usize), (3, 4), (16, 16), (64, 4)] {
+            assert_eq!(
+                par_abs_argmax(&big, blocks, threads),
+                want,
+                "blocks={blocks} threads={threads}"
+            );
+        }
+    }
+}

@@ -51,6 +51,7 @@ fn mini_table3_grid() {
                         lipschitz: None,
                         threads: 0,
                         direct_max_nnz: None,
+                        shards: None,
                     },
                     test_data: Some(test.clone()),
                 });

@@ -66,6 +66,7 @@ fn dp_utility_degrades_gracefully() {
                 lipschitz: None,
                 threads: 0,
                 direct_max_nnz: None,
+                shards: None,
             },
         )
         .run();
@@ -95,6 +96,7 @@ fn dp_fast_solver_is_faster() {
         lipschitz: None,
         threads: 0,
         direct_max_nnz: None,
+        shards: None,
     };
     let slow = StandardFrankWolfe::new(&ds, base.clone()).run();
     let fast = FastFrankWolfe::new(
@@ -147,6 +149,7 @@ fn dp_large_t_stays_sparse() {
             lipschitz: None,
             threads: 0,
             direct_max_nnz: None,
+            shards: None,
         },
     )
     .run();
@@ -222,6 +225,7 @@ fn compact_escape_blocks_dense_column_bit_identical_end_to_end() {
                 lipschitz: None,
                 threads,
                 direct_max_nnz: None,
+                shards: None,
             };
             let a = FastFrankWolfe::new(&ds, cfg.clone()).run();
             let c = FastFrankWolfe::new(&plain, cfg.clone()).run();
@@ -327,6 +331,7 @@ fn concurrent_training_on_shared_data() {
                     lipschitz: None,
                     threads: 0,
                     direct_max_nnz: None,
+                    shards: None,
                 },
             )
             .run()

@@ -252,6 +252,7 @@ fn prop_dp_seed_determinism() {
             lipschitz: None,
             threads: 0,
             direct_max_nnz: None,
+            shards: None,
         };
         for sel in [SelectorKind::Bsls, SelectorKind::NoisyMax, SelectorKind::NaiveExp] {
             let a = FastFrankWolfe::new(&ds, mk(seed, sel)).run();
@@ -325,6 +326,7 @@ fn random_selector_cfg(rng: &mut Xoshiro256pp, iters: usize, lam: f64) -> FwConf
         lipschitz: None,
         threads: 0,
         direct_max_nnz: None,
+        shards: None,
     }
 }
 
@@ -678,6 +680,155 @@ fn prop_direct_dispatcher_threshold_invisible() {
     });
 }
 
+/// **Row sharding is trajectory-invisible** (DESIGN.md §6.8): for random
+/// datasets, selectors, and threads ∈ {1, 4}, a run partitioned into
+/// P ∈ {1, 3, 16} row shards is bit-identical to the monolithic
+/// `shards: None` run — weights, gaps, FLOPs, selector telemetry, traces,
+/// and (fast solver) the full byte model. The standard solver's sharded
+/// engine deviates from its legacy byte model by exactly the documented
+/// CSC-for-CSR index-stream substitution, so its legacy comparison is
+/// modulo traffic while its cross-P comparison is full bit identity.
+#[test]
+fn prop_sharded_bit_identical_any_partition() {
+    forall(3, |rng| {
+        // below-gate datasets exercise the serial fallbacks; the big
+        // fixture clears every parallel gate in the sharded engines —
+        // PAR_MIN_NNZ for the bootstrap/pass-1 phases AND the fast
+        // solver's per-column gate (dense columns of ~5k nnz ≥ 2¹²), so
+        // the genuinely threaded legs run and must still be bit-identical
+        for big in [false, true] {
+            let ds = if big {
+                SynthConfig {
+                    name: "prop-shard-big".into(),
+                    n_rows: 5000 + rng.next_below(400) as usize,
+                    n_cols: 300 + rng.next_below(200) as usize,
+                    avg_row_nnz: 10.0 + rng.next_f64() * 4.0,
+                    zipf_exponent: 1.05 + rng.next_f64() * 0.5,
+                    n_informative: 8 + rng.next_below(16) as usize,
+                    n_dense: 2,
+                    label_noise: rng.next_f64() * 0.1,
+                    bias_col: true,
+                }
+                .generate(rng.next_u64())
+            } else {
+                random_dataset(rng)
+            };
+            let iters = 20 + rng.next_below(40) as usize;
+            let base = random_selector_cfg(rng, iters, 1.0 + rng.next_f64() * 10.0);
+            for threads in [1usize, 4] {
+                let cfg = FwConfig { threads, ..base.clone() };
+                let legacy = FastFrankWolfe::new(&ds, cfg.clone()).run();
+                assert_eq!(legacy.effective_shards, 0, "legacy path must report 0 shards");
+                assert_eq!(legacy.effective_threads, threads);
+                for p in [1usize, 3, 16] {
+                    let what = format!("fast big={big} t={threads} p={p}");
+                    let out = FastFrankWolfe::new(
+                        &ds,
+                        FwConfig { shards: Some(p), ..cfg.clone() },
+                    )
+                    .run();
+                    assert!(
+                        out.effective_shards >= 1 && out.effective_shards <= p,
+                        "{what}: effective shards {} outside 1..={p}",
+                        out.effective_shards
+                    );
+                    assert_outputs_bit_identical(&legacy, &out, &what);
+                    // the per-shard ledger is attribution, not new work:
+                    // it must sum to within the global totals
+                    assert_eq!(out.shard_flops.len(), out.effective_shards, "{what}");
+                    assert!(
+                        out.shard_flops.iter().sum::<u64>() <= out.flops,
+                        "{what}: shard flops exceed the run total"
+                    );
+                    assert!(
+                        out.shard_bytes.iter().sum::<u64>() <= out.bytes_moved,
+                        "{what}: shard bytes exceed the run total"
+                    );
+                }
+                if !matches!(cfg.selector, SelectorKind::FibHeap | SelectorKind::BinHeap) {
+                    let legacy_s = StandardFrankWolfe::new(&ds, cfg.clone()).run();
+                    let run_p = |p: usize| {
+                        StandardFrankWolfe::new(
+                            &ds,
+                            FwConfig { shards: Some(p), ..cfg.clone() },
+                        )
+                        .run()
+                    };
+                    let p1 = run_p(1);
+                    // trajectory/FLOP identity against the legacy engine;
+                    // byte totals differ by the documented substitution
+                    assert_outputs_bit_identical_modulo_traffic(
+                        &legacy_s,
+                        &p1,
+                        &format!("std-vs-legacy big={big} t={threads}"),
+                    );
+                    for p in [3usize, 16] {
+                        let what = format!("std big={big} t={threads} p={p}");
+                        let out = run_p(p);
+                        assert_outputs_bit_identical(&p1, &out, &what);
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// **The sharded engines compose with the path cache**: `run_path` across
+/// P ∈ {1, 3, 16} shards performs exactly one cold bootstrap per
+/// workspace, serves every later λ (and the standard solver's whole path,
+/// through the same `BootKey`) from the cache, and the fast solver's
+/// outputs stay bit-identical to the legacy path engine's — cold and warm
+/// legs alike. The standard sharded path is bit-identical across P.
+#[test]
+fn prop_sharded_run_path_warm_cache_invariant() {
+    forall(4, |rng| {
+        let ds = random_dataset(rng);
+        let iters = 20 + rng.next_below(40) as usize;
+        let base = random_selector_cfg(rng, iters, 1.0 + rng.next_f64() * 10.0);
+        let lambdas: Vec<f64> = vec![2.0 + rng.next_f64(), 5.0, 9.0];
+        let mut ws_legacy = FwWorkspace::new();
+        let legacy =
+            FastFrankWolfe::new(&ds, base.clone()).run_path(&lambdas, &mut ws_legacy);
+        let mut std_ref: Option<Vec<FwOutput>> = None;
+        for p in [1usize, 3, 16] {
+            let mut ws = FwWorkspace::new();
+            let cfg = FwConfig { shards: Some(p), ..base.clone() };
+            let outs = FastFrankWolfe::new(&ds, cfg.clone()).run_path(&lambdas, &mut ws);
+            assert!(outs[0].bootstrap_flops > 0, "p={p}: first λ must bootstrap cold");
+            assert!(
+                outs[1..].iter().all(|o| o.bootstrap_flops == 0),
+                "p={p}: warm λ solves must hit the cache"
+            );
+            for (i, (a, b)) in legacy.iter().zip(&outs).enumerate() {
+                assert_outputs_bit_identical(a, b, &format!("fast path p={p} i={i}"));
+            }
+            if !matches!(base.selector, SelectorKind::FibHeap | SelectorKind::BinHeap) {
+                // same workspace: the standard sharded path draws the
+                // bootstrap the fast sharded path just cached (the BootKey
+                // is shard-agnostic by design)
+                let outs_s =
+                    StandardFrankWolfe::new(&ds, cfg).run_path(&lambdas, &mut ws);
+                assert!(
+                    outs_s.iter().all(|o| o.bootstrap_flops == 0),
+                    "p={p}: cache must cross solvers at any shard count"
+                );
+                match &std_ref {
+                    None => std_ref = Some(outs_s),
+                    Some(r) => {
+                        for (i, (a, b)) in r.iter().zip(&outs_s).enumerate() {
+                            assert_outputs_bit_identical(
+                                a,
+                                b,
+                                &format!("std path p={p} i={i}"),
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
 /// Solution sparsity: ≤ one new coordinate per iteration, always inside
 /// the L1 ball — for every selector, private or not.
 #[test]
@@ -705,6 +856,7 @@ fn prop_sparsity_and_feasibility_all_selectors() {
                 lipschitz: None,
                 threads: 0,
                 direct_max_nnz: None,
+                shards: None,
             };
             let out = FastFrankWolfe::new(&ds, cfg).run();
             assert!(out.weights.l1_norm() <= lam + 1e-6, "{sel:?} left the ball");

@@ -1,0 +1,164 @@
+//! Adversarial shard-boundary tests (DESIGN.md §6.8): the row partition
+//! must stay layout- and trajectory-identical on inputs engineered to
+//! stress `balanced_ranges` — nnz so skewed that shards come out empty,
+//! slabs of all-empty rows, one dense row swallowing a boundary, and more
+//! shards requested than rows exist. The synth-backed property tests
+//! cover the statistically typical shapes; these fixtures pin the corners
+//! a generator essentially never draws.
+
+use dpfw::fw::config::FwConfig;
+use dpfw::fw::fast::FastFrankWolfe;
+use dpfw::fw::standard::StandardFrankWolfe;
+use dpfw::fw::trace::FwOutput;
+use dpfw::sparse::coo::CooBuilder;
+use dpfw::sparse::sharded::ShardedDataset;
+use dpfw::sparse::Dataset;
+
+/// Bit-level trajectory identity: weights, gap, FLOPs, bytes, telemetry.
+fn assert_trajectory_identical(a: &FwOutput, b: &FwOutput, what: &str) {
+    for (i, (x, y)) in a.weights.as_slice().iter().zip(b.weights.as_slice()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: weight {i}: {x} vs {y}");
+    }
+    assert_eq!(a.final_gap.to_bits(), b.final_gap.to_bits(), "{what}: final gap");
+    assert_eq!(a.flops, b.flops, "{what}: flops");
+    assert_eq!(a.bytes_moved, b.bytes_moved, "{what}: bytes");
+    assert_eq!(a.selector_stats, b.selector_stats, "{what}: selector stats");
+}
+
+/// Every shard view must reproduce the parent's rows verbatim, and the
+/// union of row ranges must tile `0..n` in order.
+fn assert_layout_identical(ds: &Dataset, sharded: &ShardedDataset, what: &str) {
+    let mut next = 0usize;
+    for (si, s) in sharded.shards().iter().enumerate() {
+        assert_eq!(s.rows.start, next, "{what}: shard {si} range gap");
+        next = s.rows.end;
+        assert_eq!(s.csr.n_rows(), s.rows.len(), "{what}: shard {si} view height");
+        assert_eq!(s.csr.n_cols(), ds.n_cols(), "{what}: shard {si} must keep global cols");
+        for (local, global) in s.rows.clone().enumerate() {
+            assert_eq!(
+                s.csr.row(local).collect::<Vec<_>>(),
+                ds.csr.row(global).collect::<Vec<_>>(),
+                "{what}: shard {si} row {global} differs"
+            );
+            assert_eq!(s.labels[local], ds.labels[global], "{what}: label {global}");
+        }
+    }
+    assert_eq!(next, ds.n_rows(), "{what}: shards must cover every row");
+}
+
+/// Run the boundary fixture through both solvers at P ∈ {1, 3, 16} and
+/// demand bit-identity against the monolithic path (fast solver) and
+/// across partitions (standard solver — its byte model legitimately
+/// differs from the legacy engine's, see DESIGN.md §6.8).
+fn assert_solvers_partition_invariant(ds: &Dataset, what: &str) {
+    let cfg = FwConfig { iters: 40, lambda: 4.0, ..Default::default() };
+    let fast_legacy = FastFrankWolfe::new(ds, cfg.clone()).run();
+    let std_p1 = StandardFrankWolfe::new(
+        ds,
+        FwConfig { shards: Some(1), ..cfg.clone() },
+    )
+    .run();
+    for p in [1usize, 3, 16] {
+        let sharded_cfg = FwConfig { shards: Some(p), ..cfg.clone() };
+        let fast = FastFrankWolfe::new(ds, sharded_cfg.clone()).run();
+        assert!(fast.effective_shards >= 1 && fast.effective_shards <= p, "{what}: p={p}");
+        assert_trajectory_identical(&fast_legacy, &fast, &format!("{what}: fast p={p}"));
+        let std_p = StandardFrankWolfe::new(ds, sharded_cfg).run();
+        assert_trajectory_identical(&std_p1, &std_p, &format!("{what}: std p={p}"));
+    }
+}
+
+/// One 400-nnz row in an otherwise 1-nnz matrix: nnz-balanced partitioning
+/// wants to split *inside* that row, which the row-granular boundary may
+/// not do — the dense row must land whole in exactly one shard, starving
+/// its neighbors down to empty ranges, and nothing may change bits.
+#[test]
+fn dense_row_straddling_boundary() {
+    let mut b = CooBuilder::new(12, 401);
+    for i in 0..12usize {
+        b.push(i, (i * 7) % 11, 1.0 + i as f32 * 0.25);
+    }
+    for j in 0..400usize {
+        b.push(5, j, ((j as f32) * 0.01).sin() + 1.5);
+    }
+    let labels = (0..12).map(|i| (i % 2) as f32).collect();
+    let ds = Dataset::new(b.to_csr(), labels, "dense-straddle");
+    for p in [1usize, 3, 16] {
+        let sharded = ShardedDataset::build(&ds, p);
+        assert_layout_identical(&ds, &sharded, &format!("straddle p={p}"));
+        // the dense row is indivisible: exactly one shard holds row 5
+        let holders = sharded
+            .shards()
+            .iter()
+            .filter(|s| s.rows.contains(&5))
+            .count();
+        assert_eq!(holders, 1, "p={p}: dense row must live in exactly one shard");
+    }
+    assert_solvers_partition_invariant(&ds, "straddle");
+}
+
+/// A slab of all-empty rows mid-matrix: the partition may hand entire
+/// shards nothing but zero-nnz rows (or nothing at all). Their views must
+/// build, scan as no-ops, and leave the trajectory untouched.
+#[test]
+fn all_empty_row_slab_is_inert() {
+    let mut b = CooBuilder::new(0, 40);
+    for i in 0..6usize {
+        b.push(i, i * 5, 1.0 + i as f32);
+        b.push(i, i * 5 + 2, 0.5);
+    }
+    // rows 6..26 stay empty; a tail of populated rows follows
+    for i in 26..30usize {
+        b.push(i, (i * 3) % 40, 2.0 - i as f32 * 0.05);
+    }
+    b.set_shape(30, 40);
+    let labels = (0..30).map(|i| ((i / 3) % 2) as f32).collect();
+    let ds = Dataset::new(b.to_csr(), labels, "empty-slab");
+    for p in [1usize, 3, 16] {
+        let sharded = ShardedDataset::build(&ds, p);
+        assert_layout_identical(&ds, &sharded, &format!("slab p={p}"));
+        let covered: usize = sharded.shards().iter().map(|s| s.nnz()).sum();
+        assert_eq!(covered, ds.nnz(), "slab p={p}: nnz must be conserved");
+    }
+    assert_solvers_partition_invariant(&ds, "slab");
+}
+
+/// P far beyond N: the partition clamps to at most one row per shard and
+/// reports the clamped count; the solve is still bit-identical.
+#[test]
+fn more_shards_than_rows_clamps() {
+    let mut b = CooBuilder::new(5, 24);
+    for i in 0..5usize {
+        for k in 0..3usize {
+            b.push(i, (i * 5 + k * 7) % 24, 1.0 + (i + k) as f32 * 0.125);
+        }
+    }
+    let labels = vec![0.0, 1.0, 1.0, 0.0, 1.0];
+    let ds = Dataset::new(b.to_csr(), labels, "tiny");
+    let sharded = ShardedDataset::build(&ds, 64);
+    assert!(sharded.n_shards() <= 5, "cannot have more shards than rows");
+    assert_layout_identical(&ds, &sharded, "clamp");
+    let cfg = FwConfig { iters: 30, lambda: 2.0, shards: Some(64), ..Default::default() };
+    let out = FastFrankWolfe::new(&ds, cfg.clone()).run();
+    assert!(out.effective_shards <= 5);
+    let legacy =
+        FastFrankWolfe::new(&ds, FwConfig { shards: None, ..cfg }).run();
+    assert_trajectory_identical(&legacy, &out, "clamp fast");
+}
+
+/// An entirely empty matrix (every row zero-nnz) is the degenerate
+/// extreme: the gradient never moves, every α stays zero, and the sharded
+/// engines must agree with the monolithic one on doing nothing.
+#[test]
+fn fully_empty_matrix_degenerate() {
+    let mut b = CooBuilder::new(0, 8);
+    b.set_shape(9, 8);
+    let labels = (0..9).map(|i| (i % 2) as f32).collect();
+    let ds = Dataset::new(b.to_csr(), labels, "all-empty");
+    assert_eq!(ds.nnz(), 0);
+    for p in [1usize, 3, 16] {
+        let sharded = ShardedDataset::build(&ds, p);
+        assert_layout_identical(&ds, &sharded, &format!("degenerate p={p}"));
+    }
+    assert_solvers_partition_invariant(&ds, "degenerate");
+}
