@@ -48,10 +48,7 @@ fn main() {
                     privacy: Some(PrivacyParams { epsilon: eps, delta: 1e-6 }),
                     selector: sel,
                     seed: 11,
-                    trace_every: 0,
-                    lipschitz: None,
-                    threads: 0,
-                    direct_max_nnz: None,
+                    ..Default::default()
                 },
                 test_data: Some(test.clone()),
             });

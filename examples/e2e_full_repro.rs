@@ -106,10 +106,7 @@ fn main() -> anyhow::Result<()> {
                         privacy: Some(PrivacyParams { epsilon: eps, delta: 1e-6 }),
                         selector: sel,
                         seed: 5,
-                        trace_every: 0,
-                        lipschitz: None,
-                        threads: 0,
-                        direct_max_nnz: None,
+                        ..Default::default()
                     },
                     test_data: Some(test.clone()),
                 });
@@ -184,10 +181,7 @@ fn main() -> anyhow::Result<()> {
             privacy: Some(PrivacyParams { epsilon: 1.0, delta: 1e-6 }),
             selector: SelectorKind::Bsls,
             seed: 6,
-            trace_every: 0,
-            lipschitz: None,
-            threads: 0,
-            direct_max_nnz: None,
+            ..Default::default()
         },
     )
     .run();

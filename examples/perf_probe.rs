@@ -12,8 +12,8 @@ fn main() {
     let out = FastFrankWolfe::new(&ds, FwConfig {
         iters: 20_000, lambda: 50.0,
         privacy: Some(PrivacyParams { epsilon: 0.5, delta: 1e-6 }),
-        selector: SelectorKind::Bsls, seed: 1, trace_every: 0, lipschitz: None, threads: 0,
-        direct_max_nnz: None,
+        selector: SelectorKind::Bsls, seed: 1,
+        ..Default::default()
     }).run();
     println!(
         "gap {:.3e} wall {:.0} ms flops {:.2e} bytes {:.2e} ({})",

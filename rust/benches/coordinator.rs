@@ -1,0 +1,178 @@
+//! Bench: **serving coordinator under an overload burst** (DESIGN.md §6.9).
+//!
+//! Fires a burst of jobs at a small worker pool — a mix of clean cells,
+//! λ-paths, jobs with deadlines tight enough to shed or timeout, and
+//! panic-faulted jobs running under the seed-pinned retry policy — then
+//! drains and reports the resilience surface: queue-inclusive p50/p99
+//! latency per job class plus shed/retry/timeout/respawn counts. Emits
+//! `BENCH_coordinator.json` so CI tracks the serving story across PRs.
+//!
+//! Like the other benches, the run doubles as an invariant check: every
+//! submitted id must resolve (Ok or a structured error), the retried jobs
+//! must succeed with the shed/retry counters matching the injected load,
+//! and the drain must finish without a coordinator panic.
+
+mod bench_harness;
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use bench_harness::{section, smoke_mode, Bench, JsonReport};
+use dpfw::coordinator::scheduler::RetryPolicy;
+use dpfw::coordinator::{Algo, Coordinator, JobError, JobSpec, PathJob};
+use dpfw::dp::accounting::PrivacyParams;
+use dpfw::fw::cancel::CancelToken;
+use dpfw::fw::config::{FwConfig, SelectorKind};
+use dpfw::sparse::synth::{DatasetPreset, SynthConfig};
+use dpfw::sparse::Dataset;
+use dpfw::testkit::faults::{FaultKind, FaultPlan};
+
+struct BurstShape {
+    clean: usize,
+    paths: usize,
+    shed: usize,
+    faulted: usize,
+    iters: usize,
+}
+
+/// One overload burst: submit everything at once, drain, sanity-check the
+/// outcome ledger. Returns (results_drained, coordinator) so the caller
+/// can read the metrics surface after timing.
+fn run_burst(ds: &Arc<Dataset>, workers: usize, shape: &BurstShape) -> Coordinator {
+    let mut c = Coordinator::with_retry(
+        workers,
+        RetryPolicy { retry_limit: 2, backoff_base: Duration::from_millis(1) },
+    );
+    let cfg = |seed: u64| FwConfig {
+        iters: shape.iters,
+        lambda: 8.0,
+        privacy: Some(PrivacyParams::new(1.0, 1e-6)),
+        selector: SelectorKind::Bsls,
+        seed,
+        ..Default::default()
+    };
+    let mut id = 0usize;
+    for k in 0..shape.clean {
+        c.submit(JobSpec {
+            id,
+            label: format!("clean{k}"),
+            data: ds.clone(),
+            algo: Algo::Fast,
+            cfg: cfg(k as u64),
+            test_data: None,
+        });
+        id += 1;
+    }
+    for k in 0..shape.paths {
+        let lambdas = vec![4.0, 8.0, 16.0];
+        c.submit_path(PathJob {
+            base_id: id,
+            label: format!("path{k}"),
+            data: ds.clone(),
+            algo: Algo::Fast,
+            cfg: cfg(100 + k as u64),
+            lambdas: lambdas.clone(),
+            test_data: None,
+        });
+        id += lambdas.len();
+    }
+    for k in 0..shape.shed {
+        // already-expired deadline: the scheduler must shed these unrun
+        let mut doomed = cfg(200 + k as u64);
+        doomed.cancel = CancelToken::deadline_in(Duration::ZERO);
+        c.submit(JobSpec {
+            id,
+            label: format!("shed{k}"),
+            data: ds.clone(),
+            algo: Algo::Fast,
+            cfg: doomed,
+            test_data: None,
+        });
+        id += 1;
+    }
+    for k in 0..shape.faulted {
+        // one mid-run panic each; the seed-pinned retry succeeds
+        let mut faulted = cfg(300 + k as u64);
+        faulted.fault = FaultPlan::once(FaultKind::PanicAt { iter: 3 });
+        c.submit(JobSpec {
+            id,
+            label: format!("fault{k}"),
+            data: ds.clone(),
+            algo: Algo::Fast,
+            cfg: faulted,
+            test_data: None,
+        });
+        id += 1;
+    }
+
+    let results = c.drain();
+    assert_eq!(results.len(), id, "every owed id must resolve");
+    let shed = results.iter().filter(|r| matches!(r, Err(JobError::Expired))).count();
+    assert_eq!(shed, shape.shed, "expired-at-submit jobs must all shed");
+    let failed = results.iter().filter(|r| r.is_err()).count();
+    assert_eq!(failed, shape.shed, "faulted jobs must recover via retry");
+    c
+}
+
+fn main() {
+    let smoke = smoke_mode();
+    let scale = if smoke { 0.01 } else { 0.05 };
+    let runs = if smoke { 2 } else { 5 };
+    let shape = BurstShape {
+        clean: if smoke { 6 } else { 24 },
+        paths: if smoke { 2 } else { 6 },
+        shed: if smoke { 2 } else { 8 },
+        faulted: if smoke { 2 } else { 6 },
+        iters: if smoke { 40 } else { 150 },
+    };
+    let ds = Arc::new(
+        SynthConfig::preset(DatasetPreset::News20).scale(scale).generate(42),
+    );
+    println!(
+        "coordinator burst: News20-synth scale={scale} (N={}, D={}, nnz={})",
+        ds.n_rows(),
+        ds.n_cols(),
+        ds.nnz()
+    );
+
+    let mut report = JsonReport::with_env("BENCH_coordinator.json", "DPFW_BENCH_COORDINATOR_JSON");
+    for workers in [1usize, 4] {
+        section(&format!(
+            "overload burst: {} cells + {} paths + {} shed + {} faulted, {} workers",
+            shape.clean, shape.paths, shape.shed, shape.faulted, workers
+        ));
+        let stats = Bench::new(format!("burst-{workers}w"))
+            .warmup(1)
+            .runs(runs)
+            .run_stats(|| run_burst(&ds, workers, &shape));
+        // metrics from a fresh, untimed burst (the timed ones are dropped)
+        let c = run_burst(&ds, workers, &shape);
+        let m = &c.metrics;
+        println!(
+            "  {} | cell p50/p99 {}/{} µs, path p50/p99 {}/{} µs",
+            m.summary(),
+            m.cell_latency.p50_us(),
+            m.cell_latency.p99_us(),
+            m.path_latency.p50_us(),
+            m.path_latency.p99_us(),
+        );
+        report.record(
+            &format!("coordinator-burst-{workers}w"),
+            stats,
+            &[
+                ("workers", workers.to_string()),
+                ("jobs_submitted", m.jobs_submitted.load(Ordering::Relaxed).to_string()),
+                ("cell_p50_us", m.cell_latency.p50_us().to_string()),
+                ("cell_p99_us", m.cell_latency.p99_us().to_string()),
+                ("path_p50_us", m.path_latency.p50_us().to_string()),
+                ("path_p99_us", m.path_latency.p99_us().to_string()),
+                ("sheds", m.sheds.load(Ordering::Relaxed).to_string()),
+                ("retries", m.retries.load(Ordering::Relaxed).to_string()),
+                ("timeouts", m.timeouts.load(Ordering::Relaxed).to_string()),
+                ("respawns", m.workers_respawned.load(Ordering::Relaxed).to_string()),
+            ],
+        );
+    }
+    report.write().expect("failed to write coordinator JSON");
+}

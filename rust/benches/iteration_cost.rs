@@ -68,10 +68,7 @@ fn main() {
             selector: sel,
             seed: 3,
             trace_every: 0,
-            lipschitz: None,
-            threads: 0,
-            direct_max_nnz: None,
-            shards: None,
+            ..Default::default()
         };
         let extra_owned = |sel: &str| -> Vec<(&'static str, String)> {
             vec![
@@ -125,10 +122,7 @@ fn main() {
         selector: SelectorKind::Bsls,
         seed: 9,
         trace_every: 0,
-        lipschitz: None,
-        threads: 0,
-        direct_max_nnz: None,
-        shards: None,
+        ..Default::default()
     };
     let n20_extra = |variant: &str| -> Vec<(&'static str, String)> {
         vec![
@@ -337,10 +331,7 @@ fn main() {
         selector: SelectorKind::Bsls,
         seed: 9,
         trace_every: 0,
-        lipschitz: None,
-        threads: 0,
-        direct_max_nnz: None,
-        shards: None,
+        ..Default::default()
     };
     let path_extra = |variant: &str, per_lambda_us: f64| -> Vec<(&'static str, String)> {
         vec![

@@ -40,10 +40,7 @@ fn main() {
                 selector: sel,
                 seed: 9,
                 trace_every: 0,
-                lipschitz: None,
-                threads: 0,
-                direct_max_nnz: None,
-                shards: None,
+                ..Default::default()
             };
             let t_alg1 = Bench::new(format!("{} eps={eps} alg1+noisymax", p.name()))
                 .runs(3)

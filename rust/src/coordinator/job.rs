@@ -208,7 +208,53 @@ impl Job {
             Job::Path(p) => &mut p.cfg,
         }
     }
+
+    pub(crate) fn cfg(&self) -> &FwConfig {
+        match self {
+            Job::Cell(c) => &c.cfg,
+            Job::Path(p) => &p.cfg,
+        }
+    }
 }
+
+/// Why a job id resolved to `Err` (DESIGN.md §6.9). Replaces the old
+/// bare panic-message `String`: callers can now distinguish "this cell's
+/// solve panicked" from scheduler-level outcomes (shed, worker death,
+/// pool gone) that say nothing about the cell itself.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum JobError {
+    /// The solve panicked (no retries configured); carries the panic
+    /// message.
+    Panicked(String),
+    /// The solve panicked on every attempt up to the retry limit; carries
+    /// the attempt count and the *last* panic message.
+    RetriesExhausted { attempts: u32, last: String },
+    /// The job's cancel token had already fired while it was still
+    /// queued, so the scheduler shed it without doing any solver work.
+    Expired,
+    /// The worker thread executing the job died without reporting; the
+    /// supervisor failed the owed ids and respawned the worker.
+    WorkerDied,
+    /// The worker pool is gone (coordinator shut down), so the job was
+    /// never dispatched.
+    PoolDied,
+}
+
+impl std::fmt::Display for JobError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JobError::Panicked(msg) => write!(f, "job panicked: {msg}"),
+            JobError::RetriesExhausted { attempts, last } => {
+                write!(f, "job panicked on all {attempts} attempts; last: {last}")
+            }
+            JobError::Expired => write!(f, "job expired while queued (shed unrun)"),
+            JobError::WorkerDied => write!(f, "worker died while running the job"),
+            JobError::PoolDied => write!(f, "worker pool is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for JobError {}
 
 /// Sparse scorer `p_i = σ(x_i·w)` (training path: no Python, no XLA).
 /// Row-block parallel for paper-scale datasets; bit-identical to the

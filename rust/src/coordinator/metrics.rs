@@ -1,7 +1,81 @@
-//! Coordinator metrics: lock-free counters shared by workers.
+//! Coordinator metrics: lock-free counters shared by workers, plus the
+//! §6.9 serving surface — queue depth, retry/shed/timeout counters, and
+//! fixed-bucket latency histograms exposing p50/p99 per job class. All
+//! atomics; recording from N workers never takes a lock.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
+
+/// Log2 µs buckets: bucket 0 holds 0 µs, bucket k holds
+/// [2^(k−1), 2^k) µs. 40 buckets cover ~6.4 days — beyond any job.
+const HIST_BUCKETS: usize = 40;
+
+/// Fixed-bucket log2 latency histogram over microseconds. Recording is
+/// one `fetch_add`; quantiles walk the 40 buckets and return the bucket's
+/// inclusive upper bound, so a reported p99 is an overestimate by at most
+/// 2× (the bucket width) — plenty for the serving dashboards, and the
+/// fixed layout means zero allocation and no coordination between the
+/// recording workers and the reading supervisor.
+#[derive(Debug)]
+pub struct LatencyHisto {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+}
+
+impl Default for LatencyHisto {
+    fn default() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+        }
+    }
+}
+
+impl LatencyHisto {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn bucket_of(us: u64) -> usize {
+        // 0 → 0; [2^(k−1), 2^k) → k; everything past the last bucket clamps
+        ((u64::BITS - us.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+    }
+
+    pub fn record_us(&self, us: u64) {
+        self.buckets[Self::bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// The inclusive upper bound (µs) of the bucket containing the
+    /// `q`-quantile sample (0 < q ≤ 1); 0 when nothing was recorded.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let rank = ((q * n as f64).ceil() as u64).clamp(1, n);
+        let mut seen = 0u64;
+        for (k, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= rank {
+                return if k == 0 { 0 } else { (1u64 << k) - 1 };
+            }
+        }
+        (1u64 << (HIST_BUCKETS - 1)) - 1
+    }
+
+    pub fn p50_us(&self) -> u64 {
+        self.quantile_us(0.50)
+    }
+
+    pub fn p99_us(&self) -> u64 {
+        self.quantile_us(0.99)
+    }
+}
 
 #[derive(Debug)]
 pub struct Metrics {
@@ -13,6 +87,26 @@ pub struct Metrics {
     /// Worker-side wall time in microseconds (sums across workers, so it
     /// can exceed elapsed wall time — that ratio is pool utilization).
     pub busy_us: AtomicU64,
+    /// Jobs (queue entries — a path is one entry) accepted but not yet
+    /// picked up by a worker.
+    pub queue_depth: AtomicU64,
+    /// Seed-pinned in-place retries after a panicked attempt (§6.9); the
+    /// DP mechanism stream is bit-identical, so retries cost zero extra ε.
+    pub retries: AtomicU64,
+    /// Results shed because their cancel token had already fired while
+    /// the job was still queued (no solver work spent).
+    pub sheds: AtomicU64,
+    /// Results whose solve stopped on its wall-clock deadline mid-run
+    /// (`StopReason::Deadline` — anytime partial output, not a failure).
+    pub timeouts: AtomicU64,
+    /// Dead workers the supervisor replaced.
+    pub workers_respawned: AtomicU64,
+    /// Queue-inclusive latency (enqueue → results reported) of
+    /// single-cell jobs.
+    pub cell_latency: LatencyHisto,
+    /// Queue-inclusive latency of whole-path jobs (one sample per path,
+    /// not per λ — the path is the unit a client waits on).
+    pub path_latency: LatencyHisto,
     started: Instant,
 }
 
@@ -25,6 +119,13 @@ impl Default for Metrics {
             iters_total: AtomicU64::new(0),
             flops_total: AtomicU64::new(0),
             busy_us: AtomicU64::new(0),
+            queue_depth: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            sheds: AtomicU64::new(0),
+            timeouts: AtomicU64::new(0),
+            workers_respawned: AtomicU64::new(0),
+            cell_latency: LatencyHisto::new(),
+            path_latency: LatencyHisto::new(),
             started: Instant::now(),
         }
     }
@@ -53,7 +154,9 @@ impl Metrics {
 
     pub fn summary(&self) -> String {
         format!(
-            "jobs {}/{} ({} failed), {:.2e} iters, {:.2e} flops, {:.1} iters/s, pool busy {:.2}s",
+            "jobs {}/{} ({} failed), {:.2e} iters, {:.2e} flops, {:.1} iters/s, \
+             pool busy {:.2}s | depth {} retries {} sheds {} timeouts {} respawns {} | \
+             cell p50/p99 {}/{} µs, path p50/p99 {}/{} µs",
             self.jobs_completed.load(Ordering::Relaxed),
             self.jobs_submitted.load(Ordering::Relaxed),
             self.jobs_failed.load(Ordering::Relaxed),
@@ -61,6 +164,15 @@ impl Metrics {
             self.flops_total.load(Ordering::Relaxed) as f64,
             self.iters_per_sec(),
             self.busy_us.load(Ordering::Relaxed) as f64 / 1e6,
+            self.queue_depth.load(Ordering::Relaxed),
+            self.retries.load(Ordering::Relaxed),
+            self.sheds.load(Ordering::Relaxed),
+            self.timeouts.load(Ordering::Relaxed),
+            self.workers_respawned.load(Ordering::Relaxed),
+            self.cell_latency.p50_us(),
+            self.cell_latency.p99_us(),
+            self.path_latency.p50_us(),
+            self.path_latency.p99_us(),
         )
     }
 }
@@ -80,5 +192,53 @@ mod tests {
         assert_eq!(m.flops_total.load(Ordering::Relaxed), 6000);
         let s = m.summary();
         assert!(s.contains("jobs 2/2"), "{s}");
+        assert!(s.contains("retries 0"), "{s}");
+    }
+
+    #[test]
+    fn histo_buckets_are_log2_us() {
+        assert_eq!(LatencyHisto::bucket_of(0), 0);
+        assert_eq!(LatencyHisto::bucket_of(1), 1);
+        assert_eq!(LatencyHisto::bucket_of(2), 2);
+        assert_eq!(LatencyHisto::bucket_of(3), 2);
+        assert_eq!(LatencyHisto::bucket_of(4), 3);
+        assert_eq!(LatencyHisto::bucket_of(1023), 10);
+        assert_eq!(LatencyHisto::bucket_of(1024), 11);
+        assert_eq!(LatencyHisto::bucket_of(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn histo_quantiles_walk_the_buckets() {
+        let h = LatencyHisto::new();
+        assert_eq!(h.p50_us(), 0, "empty histogram reports 0");
+        // 98 fast samples (~100 µs) + 2 slow (~100 ms)
+        for _ in 0..98 {
+            h.record_us(100);
+        }
+        h.record_us(100_000);
+        h.record_us(100_000);
+        assert_eq!(h.count(), 100);
+        // p50 lands in the [64,128) bucket → upper bound 127
+        assert_eq!(h.p50_us(), 127);
+        // p99 lands in the slow bucket [65536,131072) → upper bound 131071
+        assert_eq!(h.p99_us(), 131_071);
+        // extreme quantiles stay in range
+        assert_eq!(h.quantile_us(0.01), 127);
+        assert_eq!(h.quantile_us(1.0), 131_071);
+    }
+
+    #[test]
+    fn histo_p99_overestimates_by_at_most_bucket_width() {
+        let h = LatencyHisto::new();
+        for us in [5u64, 9, 17, 33, 1000, 5000] {
+            h.record_us(us);
+            assert!(h.quantile_us(1.0) >= us);
+            assert!(h.quantile_us(1.0) < us * 2);
+            // fresh histogram per sample: drain by rebuilding
+            for b in &h.buckets {
+                b.store(0, Ordering::Relaxed);
+            }
+            h.count.store(0, Ordering::Relaxed);
+        }
     }
 }

@@ -14,12 +14,19 @@
 //! pins to one worker so every λ shares the workspace's cached bootstrap
 //! (DESIGN.md §6.5) instead of paying the `O(N·S_c)` dense first
 //! iteration per cell.
+//!
+//! The serving tier (DESIGN.md §6.9) makes the pool resilient: each job
+//! id resolves to `Ok` or a structured [`job::JobError`] — never a pool
+//! panic — with deadline shedding, supervised worker respawn, and
+//! seed-pinned retries ([`scheduler::RetryPolicy`]) whose DP mechanism
+//! stream is bit-identical to the first attempt.
 
 pub mod job;
 pub mod metrics;
 pub mod registry;
 pub mod scheduler;
 
-pub use job::{Algo, Job, JobResult, JobSpec, PathJob};
+pub use job::{Algo, Job, JobError, JobResult, JobSpec, PathJob};
+pub use metrics::{LatencyHisto, Metrics};
 pub use registry::Registry;
-pub use scheduler::Coordinator;
+pub use scheduler::{Coordinator, JobOutcome, RetryPolicy};

@@ -1,4 +1,5 @@
-//! The worker-pool scheduler: a bounded job queue over std threads.
+//! The worker-pool scheduler: a supervised job queue over std threads
+//! (DESIGN.md §6.9).
 //!
 //! Design: one `mpsc` job channel (shared by workers behind a mutex — the
 //! jobs are seconds-long solver runs, so receiver contention is
@@ -13,125 +14,167 @@
 //! path counts as `lambdas.len()` submissions: its per-λ results come back
 //! through the same channel with consecutive ids, so [`Coordinator::drain`]
 //! and the registry treat path cells and independent cells uniformly.
+//!
+//! The resilience layer on top (§6.9):
+//!
+//! * **Supervision.** `drain` ticks on `recv_timeout`; on each tick it
+//!   scans the worker threads, fails a dead worker's in-flight ids as
+//!   [`JobError::WorkerDied`], and respawns a replacement on the same
+//!   channels — a dead worker costs its current job, never the pool. The
+//!   coordinator keeps its own `result_tx`/`job_rx` clones, so channel
+//!   disconnects cannot race the supervisor.
+//! * **Shedding.** A job whose cancel token has already fired when a
+//!   worker picks it up is failed as [`JobError::Expired`] without any
+//!   solver work — the deadline-aware admission half of the serving story
+//!   (a deadline that fires *mid-run* instead degrades to the solver's
+//!   anytime partial output, which is an `Ok`).
+//! * **Seed-pinned retries.** With a retry policy configured, a panicked
+//!   job is re-run *in place* (same worker, same workspace) with bounded
+//!   exponential backoff. The config — including `FwConfig::seed` — is
+//!   untouched between attempts, so the DP mechanism stream of the retry
+//!   is bit-identical to the first attempt and the privacy spend does not
+//!   grow (property-tested in `tests/coordinator_faults.rs`).
+//! * **Every owed id resolves.** Each submission ends as exactly one
+//!   `Ok(JobResult)` or `Err(JobError)` from `drain`, whatever combination
+//!   of panics, deadlines, sheds, or worker deaths occurred.
 
 use std::panic::AssertUnwindSafe;
-use std::sync::mpsc;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{self, RecvTimeoutError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use super::job::{Job, JobResult, JobSpec, PathJob};
+use super::job::{Job, JobError, JobResult, JobSpec, PathJob};
 use super::metrics::Metrics;
+use crate::fw::cancel::StopReason;
 use crate::fw::workspace::FwWorkspace;
 
-/// Outcome of one job: the result, or the panic message.
-pub type JobOutcome = Result<JobResult, String>;
+/// Outcome of one job id: the result, or a structured [`JobError`].
+pub type JobOutcome = Result<JobResult, JobError>;
+
+/// Supervisor tick: how long `drain` waits on the result channel before
+/// scanning for dead workers. Small enough that a worker death stalls a
+/// drain by tens of milliseconds, large enough to be invisible next to
+/// seconds-long solves.
+const SUPERVISE_TICK: Duration = Duration::from_millis(20);
+
+/// Ceiling on the per-retry backoff sleep (the policy doubles from
+/// [`RetryPolicy::backoff_base`] per attempt).
+const RETRY_BACKOFF_CAP: Duration = Duration::from_millis(250);
+
+/// How panicked jobs are retried (§6.9). Retries happen in place on the
+/// worker with the job's config untouched, so the DP mechanism stream —
+/// and hence the ε spend — is bit-identical across attempts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Additional attempts after the first (0 = fail on first panic,
+    /// reporting [`JobError::Panicked`] exactly as the pre-§6.9 pool did).
+    pub retry_limit: u32,
+    /// First backoff sleep; doubles per attempt, capped at
+    /// [`RETRY_BACKOFF_CAP`].
+    pub backoff_base: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self { retry_limit: 0, backoff_base: Duration::from_millis(5) }
+    }
+}
+
+impl RetryPolicy {
+    pub fn retries(retry_limit: u32) -> Self {
+        Self { retry_limit, ..Default::default() }
+    }
+
+    fn backoff(&self, attempt: u32) -> Duration {
+        let mult = 1u32 << attempt.min(16);
+        (self.backoff_base * mult).min(RETRY_BACKOFF_CAP)
+    }
+}
+
+/// What travels down the job channel: the job plus its enqueue time, so
+/// the latency histograms measure queue wait + solve, not solve alone.
+struct Dispatch {
+    job: Job,
+    enqueued_at: Instant,
+}
+
+/// One worker thread plus the in-flight slot the supervisor reads when
+/// the thread dies: the result ids of the job it was running, `None`
+/// between jobs. The slot is set *before* the job starts and cleared
+/// only after every result was sent, so a death at any point in between
+/// leaves exactly the owed ids behind.
+struct WorkerSlot {
+    handle: JoinHandle<()>,
+    inflight: Arc<Mutex<Option<std::ops::Range<usize>>>>,
+}
 
 pub struct Coordinator {
-    job_tx: Option<mpsc::Sender<Job>>,
+    job_tx: Option<mpsc::Sender<Dispatch>>,
+    /// Kept so worker deaths can never disconnect the result channel out
+    /// from under `drain` (the supervisor, not channel state, decides
+    /// what a missing result means).
+    job_rx: Arc<Mutex<mpsc::Receiver<Dispatch>>>,
+    result_tx: mpsc::Sender<(usize, JobOutcome)>,
     result_rx: mpsc::Receiver<(usize, JobOutcome)>,
-    workers: Vec<JoinHandle<()>>,
+    workers: Vec<WorkerSlot>,
     pub metrics: Arc<Metrics>,
+    n_workers: usize,
+    retry: RetryPolicy,
     submitted: usize,
+    /// Outcomes produced without a worker (e.g. submissions after
+    /// shutdown → [`JobError::PoolDied`]), merged into the next `drain`.
+    local: Vec<(usize, JobOutcome)>,
 }
 
 impl Coordinator {
-    /// Spawn `n_workers` worker threads (min 1).
+    /// Spawn `n_workers` worker threads (min 1) with no retry policy.
     pub fn new(n_workers: usize) -> Self {
+        Self::with_retry(n_workers, RetryPolicy::default())
+    }
+
+    /// Spawn `n_workers` worker threads (min 1) with the given retry
+    /// policy for panicked jobs.
+    pub fn with_retry(n_workers: usize, retry: RetryPolicy) -> Self {
         let n_workers = n_workers.max(1);
-        let (job_tx, job_rx) = mpsc::channel::<Job>();
+        let (job_tx, job_rx) = mpsc::channel::<Dispatch>();
         let job_rx = Arc::new(Mutex::new(job_rx));
         let (result_tx, result_rx) = mpsc::channel();
         let metrics = Arc::new(Metrics::new());
-        let mut workers = Vec::with_capacity(n_workers);
+        let mut this = Self {
+            job_tx: Some(job_tx),
+            job_rx,
+            result_tx,
+            result_rx,
+            workers: Vec::with_capacity(n_workers),
+            metrics,
+            n_workers,
+            retry,
+            submitted: 0,
+            local: Vec::new(),
+        };
         for worker_id in 0..n_workers {
-            let rx = Arc::clone(&job_rx);
-            let tx = result_tx.clone();
-            let metrics = Arc::clone(&metrics);
-            workers.push(
-                std::thread::Builder::new()
-                    .name(format!("dpfw-worker-{worker_id}"))
-                    .spawn(move || {
-                        // One workspace per worker: every job this thread
-                        // executes reuses the same solver buffers and
-                        // selector storage (bit-exact; a panicking job
-                        // merely drops its taken buffers, so the pool
-                        // self-heals on the next run).
-                        let mut ws = FwWorkspace::new();
-                        loop {
-                            let job = {
-                                let guard = rx.lock().expect("job queue poisoned");
-                                guard.recv()
-                            };
-                            let Ok(mut job) = job else { break }; // channel closed
-                            // The pool already saturates the machine; stop
-                            // auto-threaded jobs from oversubscribing it
-                            // during their parallel bootstrap (output is
-                            // bit-identical at any thread count, so this is
-                            // safe — and that includes sharded jobs, which
-                            // are thread-invariant at any P). `cfg.shards`
-                            // is deliberately NOT touched here: forcing a
-                            // job on or off the sharded engine would change
-                            // its byte/segment model (DESIGN.md §6.8), which
-                            // only the submitter may choose.
-                            if n_workers > 1 && job.cfg_mut().threads == 0 {
-                                job.cfg_mut().threads = 1;
-                            }
-                            let ids = job.result_ids();
-                            let start = Instant::now();
-                            let outcome = std::panic::catch_unwind(AssertUnwindSafe(|| {
-                                job.run_in(&mut ws)
-                            }));
-                            // Per-result busy time: a path's wall time is
-                            // attributed evenly across its λ cells.
-                            let busy_us = start.elapsed().as_micros() as u64
-                                / ids.len().max(1) as u64;
-                            let mut hung_up = false;
-                            match outcome {
-                                Ok(results) => {
-                                    for res in results {
-                                        metrics.record_completion(
-                                            res.output.iters_run as u64,
-                                            res.output.flops,
-                                            busy_us,
-                                        );
-                                        let id = res.id;
-                                        if tx.send((id, Ok(res))).is_err() {
-                                            hung_up = true; // coordinator dropped
-                                            break;
-                                        }
-                                    }
-                                }
-                                Err(p) => {
-                                    let msg = p
-                                        .downcast_ref::<String>()
-                                        .cloned()
-                                        .or_else(|| {
-                                            p.downcast_ref::<&str>().map(|s| s.to_string())
-                                        })
-                                        .unwrap_or_else(|| "<non-string panic>".into());
-                                    // every result this job owed becomes a
-                                    // failure (a path panic fails all its λs)
-                                    for id in ids {
-                                        metrics
-                                            .jobs_failed
-                                            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                                        if tx.send((id, Err(msg.clone()))).is_err() {
-                                            hung_up = true;
-                                            break;
-                                        }
-                                    }
-                                }
-                            }
-                            if hung_up {
-                                break;
-                            }
-                        }
-                    })
-                    .expect("spawn worker"),
-            );
+            let slot = this.spawn_worker(worker_id);
+            this.workers.push(slot);
         }
-        Self { job_tx: Some(job_tx), result_rx, workers, metrics, submitted: 0 }
+        this
+    }
+
+    fn spawn_worker(&self, worker_id: usize) -> WorkerSlot {
+        let rx = Arc::clone(&self.job_rx);
+        let tx = self.result_tx.clone();
+        let metrics = Arc::clone(&self.metrics);
+        let inflight: Arc<Mutex<Option<std::ops::Range<usize>>>> =
+            Arc::new(Mutex::new(None));
+        let slot = Arc::clone(&inflight);
+        let n_workers = self.n_workers;
+        let retry = self.retry;
+        let handle = std::thread::Builder::new()
+            .name(format!("dpfw-worker-{worker_id}"))
+            .spawn(move || worker_loop(rx, tx, metrics, slot, n_workers, retry))
+            .expect("spawn worker");
+        WorkerSlot { handle, inflight }
     }
 
     /// Enqueue a single-cell job (non-blocking).
@@ -150,28 +193,89 @@ impl Coordinator {
 
     fn submit_job(&mut self, job: Job) {
         let n = job.n_results();
-        self.metrics
-            .jobs_submitted
-            .fetch_add(n as u64, std::sync::atomic::Ordering::Relaxed);
+        self.metrics.jobs_submitted.fetch_add(n as u64, Ordering::Relaxed);
         self.submitted += n;
-        self.job_tx
-            .as_ref()
-            .expect("coordinator already shut down")
-            .send(job)
-            .expect("worker pool hung up");
+        let dispatch = Dispatch { job, enqueued_at: Instant::now() };
+        let undelivered = match &self.job_tx {
+            Some(tx) => tx.send(dispatch).err().map(|e| e.0),
+            None => Some(dispatch),
+        };
+        match undelivered {
+            None => {
+                self.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
+            }
+            Some(d) => {
+                // pool gone (shutdown): the job degrades to per-id
+                // PoolDied outcomes instead of panicking the caller
+                for id in d.job.result_ids() {
+                    self.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                    self.local.push((id, Err(JobError::PoolDied)));
+                }
+            }
+        }
     }
 
-    /// Block until every submitted job has finished; results are returned
-    /// sorted by job id.
+    /// Close the job queue and join every worker (queued jobs still run
+    /// to completion first; their results remain drainable). Later
+    /// submissions resolve as [`JobError::PoolDied`]. Idempotent; `Drop`
+    /// calls it.
+    pub fn shutdown(&mut self) {
+        self.job_tx.take();
+        for w in self.workers.drain(..) {
+            let _ = w.handle.join();
+        }
+    }
+
+    /// Block until every submitted id has an outcome; results are
+    /// returned sorted by job id. Never panics on worker death: the
+    /// supervisor fails the dead worker's owed ids as
+    /// [`JobError::WorkerDied`] and respawns a replacement.
     pub fn drain(&mut self) -> Vec<JobOutcome> {
-        let mut out: Vec<(usize, JobOutcome)> = Vec::with_capacity(self.submitted);
-        for _ in 0..self.submitted {
-            let item = self.result_rx.recv().expect("workers all died");
-            out.push(item);
+        let mut out: Vec<(usize, JobOutcome)> = std::mem::take(&mut self.local);
+        while out.len() < self.submitted {
+            match self.result_rx.recv_timeout(SUPERVISE_TICK) {
+                Ok(item) => out.push(item),
+                Err(RecvTimeoutError::Timeout) => self.supervise(&mut out),
+                // we hold a result_tx clone, so Disconnected is
+                // unreachable; treat it like a tick for robustness
+                Err(RecvTimeoutError::Disconnected) => self.supervise(&mut out),
+            }
         }
         self.submitted = 0;
         out.sort_by_key(|(id, _)| *id);
         out.into_iter().map(|(_, o)| o).collect()
+    }
+
+    /// One supervisor pass: replace dead workers, failing their in-flight
+    /// ids. (A worker that finished its job and is blocked on the queue is
+    /// alive, not finished — `is_finished` only fires for threads whose
+    /// run function returned, i.e. fault-injected abrupt death or a bug.)
+    fn supervise(&mut self, out: &mut Vec<(usize, JobOutcome)>) {
+        if self.workers.iter().all(|w| !w.handle.is_finished()) {
+            return;
+        }
+        let slots = std::mem::take(&mut self.workers);
+        for (worker_id, w) in slots.into_iter().enumerate() {
+            if !w.handle.is_finished() {
+                self.workers.push(w);
+                continue;
+            }
+            let _ = w.handle.join();
+            let owed = w
+                .inflight
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .take();
+            if let Some(ids) = owed {
+                for id in ids {
+                    self.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                    out.push((id, Err(JobError::WorkerDied)));
+                }
+            }
+            self.metrics.workers_respawned.fetch_add(1, Ordering::Relaxed);
+            let replacement = self.spawn_worker(worker_id);
+            self.workers.push(replacement);
+        }
     }
 
     /// Convenience: submit everything, drain, unwrap failures into `Err`.
@@ -185,9 +289,163 @@ impl Coordinator {
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        self.job_tx.take(); // close the queue → workers exit
-        for w in self.workers.drain(..) {
-            let _ = w.join();
+        self.shutdown();
+    }
+}
+
+fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
+    p.downcast_ref::<String>()
+        .cloned()
+        .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_else(|| "<non-string panic>".into())
+}
+
+/// The worker body. One workspace per worker: every job this thread
+/// executes reuses the same solver buffers and selector storage
+/// (bit-exact; a panicking job merely drops its taken buffers, so the
+/// pool self-heals on the next run).
+fn worker_loop(
+    rx: Arc<Mutex<mpsc::Receiver<Dispatch>>>,
+    tx: mpsc::Sender<(usize, JobOutcome)>,
+    metrics: Arc<Metrics>,
+    inflight: Arc<Mutex<Option<std::ops::Range<usize>>>>,
+    n_workers: usize,
+    retry: RetryPolicy,
+) {
+    let mut ws = FwWorkspace::new();
+    loop {
+        let dispatch = {
+            // a poisoned queue mutex only means some worker died while
+            // holding it; the receiver state is still coherent — recover
+            // instead of cascading the panic across the pool
+            let guard = rx.lock().unwrap_or_else(|e| e.into_inner());
+            guard.recv()
+        };
+        let Ok(mut d) = dispatch else { break }; // channel closed
+        metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+        let ids = d.job.result_ids();
+
+        // ---- §6.9 shed: expired while queued → no solver work ----------
+        if d.job.cfg().cancel.expired() {
+            let mut hung_up = false;
+            for id in ids {
+                metrics.sheds.fetch_add(1, Ordering::Relaxed);
+                metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                if tx.send((id, Err(JobError::Expired))).is_err() {
+                    hung_up = true;
+                    break;
+                }
+            }
+            if hung_up {
+                break;
+            }
+            continue;
+        }
+
+        // The in-flight slot is set before any fallible work and cleared
+        // only after every result was sent: whatever kills this thread in
+        // between, the supervisor finds exactly the owed ids.
+        *inflight.lock().unwrap_or_else(|e| e.into_inner()) = Some(ids.clone());
+
+        // ---- fault injection (tests/benches only) ----------------------
+        if d.job.cfg().fault.take_worker_death() {
+            // die without unwinding and without reporting — the shape
+            // supervision exists for
+            return;
+        }
+        if d.job.cfg().fault.take_poison() {
+            ws.poison_buffers();
+        }
+
+        // The pool already saturates the machine; stop auto-threaded jobs
+        // from oversubscribing it during their parallel bootstrap (output
+        // is bit-identical at any thread count, so this is safe — and
+        // that includes sharded jobs, which are thread-invariant at any
+        // P). `cfg.shards` is deliberately NOT touched here: forcing a
+        // job on or off the sharded engine would change its byte/segment
+        // model (DESIGN.md §6.8), which only the submitter may choose.
+        if n_workers > 1 && d.job.cfg_mut().threads == 0 {
+            d.job.cfg_mut().threads = 1;
+        }
+
+        let start = Instant::now();
+        // ---- run, with seed-pinned in-place retries --------------------
+        // Nothing in the job is mutated between attempts — same config,
+        // same seed, same workspace pool — so a retry's mechanism stream
+        // (and ε spend) is bit-identical to the first attempt's.
+        let mut attempt = 0u32;
+        let outcome = loop {
+            match std::panic::catch_unwind(AssertUnwindSafe(|| d.job.run_in(&mut ws))) {
+                Ok(results) => break Ok(results),
+                Err(p) => {
+                    let msg = panic_message(p);
+                    if attempt >= retry.retry_limit {
+                        break Err(if retry.retry_limit == 0 {
+                            JobError::Panicked(msg)
+                        } else {
+                            JobError::RetriesExhausted { attempts: attempt + 1, last: msg }
+                        });
+                    }
+                    metrics.retries.fetch_add(1, Ordering::Relaxed);
+                    std::thread::sleep(retry.backoff(attempt));
+                    attempt += 1;
+                }
+            }
+        };
+
+        // Per-result busy time: a path's wall time is attributed evenly
+        // across its λ cells, with the integer-division remainder going
+        // to the last cell so Σ busy_us is exact (utilization totals must
+        // not drift low on long paths).
+        let ids = d.job.result_ids();
+        let n_ids = ids.len().max(1) as u64;
+        let elapsed_us = start.elapsed().as_micros() as u64;
+        let busy_each = elapsed_us / n_ids;
+        let busy_rem = elapsed_us % n_ids;
+        let latency_us = d.enqueued_at.elapsed().as_micros() as u64;
+        let histo = match &d.job {
+            Job::Cell(_) => &metrics.cell_latency,
+            Job::Path(_) => &metrics.path_latency,
+        };
+
+        let mut hung_up = false;
+        match outcome {
+            Ok(results) => {
+                let last = results.len().saturating_sub(1);
+                for (k, res) in results.into_iter().enumerate() {
+                    if res.output.stopped == StopReason::Deadline {
+                        metrics.timeouts.fetch_add(1, Ordering::Relaxed);
+                    }
+                    metrics.record_completion(
+                        res.output.iters_run as u64,
+                        res.output.flops,
+                        busy_each + if k == last { busy_rem } else { 0 },
+                    );
+                    let id = res.id;
+                    if tx.send((id, Ok(res))).is_err() {
+                        hung_up = true; // coordinator dropped
+                        break;
+                    }
+                }
+            }
+            Err(err) => {
+                // every result this job owed becomes a failure (a path
+                // panic fails all its λs)
+                for id in ids {
+                    metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                    if tx.send((id, Err(err.clone()))).is_err() {
+                        hung_up = true;
+                        break;
+                    }
+                }
+            }
+        }
+        if !hung_up {
+            histo.record_us(latency_us);
+        }
+        *inflight.lock().unwrap_or_else(|e| e.into_inner()) = None;
+        if hung_up {
+            break;
         }
     }
 }
@@ -211,7 +469,7 @@ mod tests {
                 n_informative: 8,
                 n_dense: 0,
                 label_noise: 0.02,
-            bias_col: true,
+                bias_col: true,
             }
             .generate(seed),
         )
@@ -240,10 +498,9 @@ mod tests {
             assert_eq!(r.id, i);
             assert!(r.output.flops > 0);
         }
-        assert_eq!(
-            c.metrics.jobs_completed.load(std::sync::atomic::Ordering::Relaxed),
-            12
-        );
+        assert_eq!(c.metrics.jobs_completed.load(Ordering::Relaxed), 12);
+        assert_eq!(c.metrics.queue_depth.load(Ordering::Relaxed), 0);
+        assert_eq!(c.metrics.cell_latency.count(), 12);
     }
 
     #[test]
@@ -268,13 +525,10 @@ mod tests {
         c.submit(job(1, d.clone()));
         c.submit(job(2, d));
         let results = c.drain();
-        assert!(results[0].is_err());
+        assert!(matches!(results[0], Err(JobError::Panicked(_))), "{:?}", results[0]);
         assert!(results[1].is_ok());
         assert!(results[2].is_ok());
-        assert_eq!(
-            c.metrics.jobs_failed.load(std::sync::atomic::Ordering::Relaxed),
-            1
-        );
+        assert_eq!(c.metrics.jobs_failed.load(Ordering::Relaxed), 1);
     }
 
     #[test]
@@ -302,9 +556,11 @@ mod tests {
         assert!(results[1].as_ref().unwrap().output.bootstrap_flops > 0);
         assert_eq!(results[2].as_ref().unwrap().output.bootstrap_flops, 0);
         assert_eq!(results[3].as_ref().unwrap().output.bootstrap_flops, 0);
-        let ord = std::sync::atomic::Ordering::Relaxed;
-        assert_eq!(c.metrics.jobs_submitted.load(ord), 5);
-        assert_eq!(c.metrics.jobs_completed.load(ord), 5);
+        assert_eq!(c.metrics.jobs_submitted.load(Ordering::Relaxed), 5);
+        assert_eq!(c.metrics.jobs_completed.load(Ordering::Relaxed), 5);
+        // one latency sample per queue entry, split by class
+        assert_eq!(c.metrics.cell_latency.count(), 2);
+        assert_eq!(c.metrics.path_latency.count(), 1);
     }
 
     #[test]
@@ -327,10 +583,7 @@ mod tests {
             assert!(r.is_err(), "a path panic must fail all its λ cells");
         }
         assert!(results[3].is_ok(), "pool must survive a failed path");
-        assert_eq!(
-            c.metrics.jobs_failed.load(std::sync::atomic::Ordering::Relaxed),
-            3
-        );
+        assert_eq!(c.metrics.jobs_failed.load(Ordering::Relaxed), 3);
     }
 
     #[test]
@@ -339,5 +592,41 @@ mod tests {
         let d = ds(4);
         let results = c.run_all(vec![job(0, d)]);
         assert!(results[0].is_ok());
+    }
+
+    #[test]
+    fn submit_after_shutdown_degrades_to_pool_died() {
+        let mut c = Coordinator::new(2);
+        let d = ds(7);
+        c.submit(job(0, d.clone()));
+        let first = c.drain();
+        assert!(first[0].is_ok());
+        c.shutdown();
+        c.submit(job(1, d.clone()));
+        c.submit_path(PathJob {
+            base_id: 2,
+            label: "late".into(),
+            data: d,
+            algo: Algo::Fast,
+            cfg: FwConfig { iters: 60, lambda: 1.0, ..Default::default() },
+            lambdas: vec![2.0, 4.0],
+            test_data: None,
+        });
+        let results = c.drain();
+        assert_eq!(results.len(), 3);
+        for r in &results {
+            assert_eq!(r.as_ref().unwrap_err(), &JobError::PoolDied);
+        }
+        assert_eq!(c.metrics.jobs_failed.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn retry_policy_backoff_is_bounded() {
+        let p = RetryPolicy { retry_limit: 10, backoff_base: Duration::from_millis(5) };
+        assert_eq!(p.backoff(0), Duration::from_millis(5));
+        assert_eq!(p.backoff(1), Duration::from_millis(10));
+        assert_eq!(p.backoff(5), Duration::from_millis(160));
+        assert_eq!(p.backoff(6), RETRY_BACKOFF_CAP);
+        assert_eq!(p.backoff(60), RETRY_BACKOFF_CAP, "shift must not overflow");
     }
 }

@@ -62,6 +62,30 @@ impl PrivacyParams {
     pub fn exp_mech_scale(&self, t_iters: usize, lipschitz: f64) -> f64 {
         self.per_step_epsilon(t_iters) / (2.0 * lipschitz)
     }
+
+    /// Privacy actually spent by a run that *planned* `t_planned`
+    /// iterations but *released* only `iters_run` mechanism outputs
+    /// (anytime stop, DESIGN.md §6.9). The per-step budget
+    /// `ε' = per_step_epsilon(t_planned)` is fixed at calibration time,
+    /// so composing `k = iters_run` of those steps under the same
+    /// advanced-composition form costs
+    /// `2 ε' √(2 k log(1/δ)) = ε √(k / T)`.
+    ///
+    /// Consequences the resilience layer relies on (property-tested):
+    /// * `spent_epsilon(T, T) == ε` — a full run spends the target;
+    /// * monotone in `iters_run` — stopping earlier never spends more;
+    /// * a **seed-pinned retry spends nothing extra**: it replays the
+    ///   identical mechanism stream (same seed → same noise → same
+    ///   releases), so by post-processing the total release set is that
+    ///   of one run and this function already accounts it.
+    pub fn spent_epsilon(&self, t_planned: usize, iters_run: usize) -> f64 {
+        assert!(t_planned > 0);
+        assert!(
+            iters_run <= t_planned,
+            "ran {iters_run} iterations of a {t_planned}-iteration plan"
+        );
+        self.epsilon * (iters_run as f64 / t_planned as f64).sqrt()
+    }
 }
 
 /// Inverse direction: maximum iterations affordable at a per-step budget.
@@ -108,6 +132,40 @@ mod tests {
         let step = p.per_step_epsilon(t);
         let t_back = max_iters_for_step_budget(1.0, 1e-6, step);
         assert!((t_back as i64 - t as i64).abs() <= 1);
+    }
+
+    #[test]
+    fn spent_epsilon_full_run_hits_target() {
+        let p = PrivacyParams::new(0.7, 1e-6);
+        assert!((p.spent_epsilon(4000, 4000) - 0.7).abs() < 1e-15);
+        assert_eq!(p.spent_epsilon(4000, 0), 0.0);
+    }
+
+    #[test]
+    fn spent_epsilon_is_monotone_and_sqrt_shaped() {
+        let p = PrivacyParams::new(1.0, 1e-6);
+        let t = 1000;
+        let mut prev = 0.0;
+        for k in [1, 10, 250, 500, 999, 1000] {
+            let s = p.spent_epsilon(t, k);
+            assert!(s > prev, "spend must grow with iterations run");
+            prev = s;
+        }
+        // quarter of the steps -> half the spend (√ composition)
+        let ratio = p.spent_epsilon(t, 250) / p.spent_epsilon(t, 1000);
+        assert!((ratio - 0.5).abs() < 1e-12);
+        // consistency with the per-step calibration: k steps at
+        // ε' = per_step_epsilon(T) compose to 2ε'√(2k log(1/δ))
+        let k = 123;
+        let composed =
+            2.0 * p.per_step_epsilon(t) * (2.0 * k as f64 * (1e6f64).ln()).sqrt();
+        assert!((p.spent_epsilon(t, k) - composed).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "ran 11 iterations")]
+    fn spent_epsilon_rejects_overrun() {
+        PrivacyParams::new(1.0, 1e-6).spent_epsilon(10, 11);
     }
 
     #[test]

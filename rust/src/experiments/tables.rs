@@ -61,10 +61,7 @@ fn dp_job(
             selector,
             seed,
             trace_every: 0,
-            lipschitz: None,
-            threads: 0,
-            direct_max_nnz: None,
-            shards: None,
+            ..Default::default()
         },
         test_data: None,
     }
@@ -165,10 +162,7 @@ pub fn table4_utility(cfg: &ExpConfig) -> Result<CsvTable> {
                 selector: SelectorKind::Bsls,
                 seed: cfg.seed,
                 trace_every: 0,
-                lipschitz: None,
-                threads: 0,
-                direct_max_nnz: None,
-                shards: None,
+                ..Default::default()
             },
             test_data: Some(test),
         });
@@ -220,10 +214,7 @@ pub fn lambda_path(cfg: &ExpConfig) -> Result<CsvTable> {
                 selector: SelectorKind::Bsls,
                 seed: cfg.seed,
                 trace_every: 0,
-                lipschitz: None,
-                threads: 0,
-                direct_max_nnz: None,
-                shards: None,
+                ..Default::default()
             },
             lambdas: PATH_LAMBDAS.to_vec(),
             test_data: Some(Arc::new(test)),

@@ -1,0 +1,193 @@
+//! Cooperative cancellation and deadlines for anytime solves (DESIGN.md §6.9).
+//!
+//! Frank-Wolfe is an *anytime* algorithm: after any number of update steps
+//! the iterate is a valid point in the λ-ball whose suboptimality bound
+//! only improves with more steps. Stopping early therefore degrades
+//! gracefully — the solver returns its best-so-far weights instead of
+//! failing — which is exactly the behaviour a deadline-bound serving tier
+//! needs. A [`CancelToken`] carries the two stop signals (an explicit
+//! cancel flag and an optional wall-clock deadline); both solvers poll it
+//! once per iteration via [`crate::fw::config::FwConfig::stop_check`].
+//!
+//! Privacy note: stopping at iteration k means only k noisy-max /
+//! exponential-mechanism selections were *released*, so the ε actually
+//! spent is the k-step composition — see
+//! [`crate::dp::accounting::PrivacyParams::spent_epsilon`]. The per-step
+//! noise scale is still calibrated for the *planned* T, so a truncated
+//! run spends strictly less than the configured ε.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Why a solve returned (`FwOutput::stopped`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StopReason {
+    /// Ran the full iteration budget `T` (the default outcome — every
+    /// pre-§6.9 run reported this implicitly).
+    IterBudget,
+    /// The duality-gap estimate dropped to `FwConfig::gap_tol` before the
+    /// budget ran out.
+    Converged,
+    /// The token's wall-clock deadline passed mid-run.
+    Deadline,
+    /// [`CancelToken::cancel`] was called from another thread.
+    Cancelled,
+}
+
+impl StopReason {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StopReason::IterBudget => "iter-budget",
+            StopReason::Converged => "converged",
+            StopReason::Deadline => "deadline",
+            StopReason::Cancelled => "cancelled",
+        }
+    }
+
+    /// Did the run stop before its natural end (budget or convergence)?
+    pub fn is_early(&self) -> bool {
+        matches!(self, StopReason::Deadline | StopReason::Cancelled)
+    }
+}
+
+#[derive(Debug)]
+struct CancelInner {
+    cancelled: AtomicBool,
+    deadline: Option<Instant>,
+}
+
+/// Shared stop signal: an atomic cancel flag plus an optional deadline.
+///
+/// Cloning is cheap (an `Arc` bump) and every clone observes the same
+/// flag, so the coordinator can hold one half while the worker's solver
+/// polls the other. The default token is **disarmed** (`None` inner):
+/// [`CancelToken::check`] is then a single `Option` discriminant test, so
+/// configs that never cancel pay one predictable branch per iteration —
+/// noise next to the O(S_r·S_c) iteration body.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken {
+    inner: Option<Arc<CancelInner>>,
+}
+
+impl CancelToken {
+    /// The disarmed token: never cancels, never expires.
+    pub fn none() -> Self {
+        Self { inner: None }
+    }
+
+    /// An armed token with no deadline — stops only via [`Self::cancel`].
+    pub fn new() -> Self {
+        Self {
+            inner: Some(Arc::new(CancelInner {
+                cancelled: AtomicBool::new(false),
+                deadline: None,
+            })),
+        }
+    }
+
+    /// An armed token that expires at `deadline`.
+    pub fn with_deadline(deadline: Instant) -> Self {
+        Self {
+            inner: Some(Arc::new(CancelInner {
+                cancelled: AtomicBool::new(false),
+                deadline: Some(deadline),
+            })),
+        }
+    }
+
+    /// An armed token that expires `budget` from now.
+    pub fn deadline_in(budget: Duration) -> Self {
+        Self::with_deadline(Instant::now() + budget)
+    }
+
+    /// Request cancellation. Every clone of this token observes it on its
+    /// next [`Self::check`]. No-op on a disarmed token.
+    pub fn cancel(&self) {
+        if let Some(inner) = &self.inner {
+            inner.cancelled.store(true, Ordering::Release);
+        }
+    }
+
+    /// Is this token capable of stopping a run at all?
+    pub fn is_armed(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Poll the stop signal. `Some(reason)` means the caller should stop
+    /// now; explicit cancellation wins over a simultaneous deadline (it is
+    /// the more specific signal).
+    #[inline]
+    pub fn check(&self) -> Option<StopReason> {
+        let inner = self.inner.as_deref()?;
+        if inner.cancelled.load(Ordering::Acquire) {
+            return Some(StopReason::Cancelled);
+        }
+        match inner.deadline {
+            Some(d) if Instant::now() >= d => Some(StopReason::Deadline),
+            _ => None,
+        }
+    }
+
+    /// Has the signal already fired? Used by the scheduler to shed
+    /// expired-while-queued jobs without spending any solver work.
+    pub fn expired(&self) -> bool {
+        self.check().is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_token_never_stops() {
+        let t = CancelToken::none();
+        assert!(!t.is_armed());
+        assert_eq!(t.check(), None);
+        t.cancel(); // no-op
+        assert_eq!(t.check(), None);
+        assert!(!t.expired());
+    }
+
+    #[test]
+    fn cancel_is_visible_to_clones() {
+        let t = CancelToken::new();
+        let c = t.clone();
+        assert_eq!(c.check(), None);
+        t.cancel();
+        assert_eq!(c.check(), Some(StopReason::Cancelled));
+        assert!(c.expired());
+    }
+
+    #[test]
+    fn deadline_fires_after_expiry() {
+        let t = CancelToken::with_deadline(Instant::now() - Duration::from_millis(1));
+        assert_eq!(t.check(), Some(StopReason::Deadline));
+        let far = CancelToken::deadline_in(Duration::from_secs(3600));
+        assert_eq!(far.check(), None);
+    }
+
+    #[test]
+    fn cancel_wins_over_expired_deadline() {
+        let t = CancelToken::with_deadline(Instant::now() - Duration::from_millis(1));
+        t.cancel();
+        assert_eq!(t.check(), Some(StopReason::Cancelled));
+    }
+
+    #[test]
+    fn stop_reason_names() {
+        for (r, n) in [
+            (StopReason::IterBudget, "iter-budget"),
+            (StopReason::Converged, "converged"),
+            (StopReason::Deadline, "deadline"),
+            (StopReason::Cancelled, "cancelled"),
+        ] {
+            assert_eq!(r.name(), n);
+        }
+        assert!(StopReason::Deadline.is_early());
+        assert!(StopReason::Cancelled.is_early());
+        assert!(!StopReason::IterBudget.is_early());
+        assert!(!StopReason::Converged.is_early());
+    }
+}

@@ -1,7 +1,9 @@
 //! Run configuration shared by both solvers.
 
 use crate::dp::accounting::PrivacyParams;
+use crate::fw::cancel::{CancelToken, StopReason};
 use crate::fw::scan::ScanKernel;
+use crate::testkit::faults::FaultPlan;
 
 /// Which coordinate-selection structure to use (Table 3's rows/columns).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -105,6 +107,22 @@ pub struct FwConfig {
     /// streams), so like `threads` this is purely a performance/topology
     /// knob. `Some(1)` exercises the sharded code path with one shard.
     pub shards: Option<usize>,
+    /// Cooperative stop signal (DESIGN.md §6.9): cancel flag + optional
+    /// wall-clock deadline, polled once per iteration. The default token
+    /// is disarmed — a single `Option` discriminant test per iteration.
+    /// When it fires, the solver returns best-so-far weights with
+    /// `iters_run < iters` and `FwOutput::stopped` naming the reason;
+    /// the ε ledger charges only the iterations actually run.
+    pub cancel: CancelToken,
+    /// Early-exit tolerance on the per-iteration duality-gap estimate:
+    /// stop with `StopReason::Converged` once `gap <= gap_tol`. `None`
+    /// (the default) never converge-stops, preserving the historical
+    /// fixed-T trajectories bit-for-bit.
+    pub gap_tol: Option<f64>,
+    /// Deterministic fault injection for tests/benches only
+    /// (`testkit::faults`). Disarmed by default; production configs never
+    /// arm it.
+    pub fault: FaultPlan,
 }
 
 /// Process-wide `DPFW_SHARDS` resolution (read once; same pattern as
@@ -133,6 +151,9 @@ impl Default for FwConfig {
             threads: 0,
             direct_max_nnz: None,
             shards: None,
+            cancel: CancelToken::none(),
+            gap_tol: None,
+            fault: FaultPlan::none(),
         }
     }
 }
@@ -168,6 +189,26 @@ impl FwConfig {
     /// `None` means the legacy monolithic path.
     pub fn effective_shards(&self) -> Option<usize> {
         self.shards.or_else(shards_from_env)
+    }
+
+    /// Per-iteration stop poll, shared by both solvers (all four loop
+    /// bodies call this at the top of iteration `t`, *before* the t-th
+    /// selection — so a stop at `t` means exactly `t - 1` mechanism
+    /// releases happened and the ε charge is exact). Fires any armed
+    /// iteration fault first (tests/benches), then checks the cancel
+    /// token. Cost when both are disarmed: two `Option` discriminant
+    /// tests — negligible next to the O(S_r·S_c) iteration body; an armed
+    /// deadline adds one `Instant::now()` per iteration.
+    #[inline]
+    pub fn stop_check(&self, t: usize) -> Option<StopReason> {
+        self.fault.on_iteration(t);
+        self.cancel.check()
+    }
+
+    /// Has the configured gap tolerance been met?
+    #[inline]
+    pub fn gap_converged(&self, gap: f64) -> bool {
+        self.gap_tol.is_some_and(|tol| gap <= tol)
     }
 
     /// Panics on inconsistent combinations (DP selector without privacy
@@ -258,6 +299,30 @@ mod tests {
                 .and_then(|s| s.trim().parse::<usize>().ok())
                 .filter(|&p| p >= 1)
         );
+    }
+
+    #[test]
+    fn stop_check_reports_cancel_and_deadline() {
+        let cfg = FwConfig::default();
+        assert_eq!(cfg.stop_check(1), None, "disarmed default must never stop");
+        let armed = FwConfig { cancel: CancelToken::new(), ..Default::default() };
+        assert_eq!(armed.stop_check(1), None);
+        armed.cancel.cancel();
+        assert_eq!(armed.stop_check(2), Some(StopReason::Cancelled));
+        let expired = FwConfig {
+            cancel: CancelToken::with_deadline(std::time::Instant::now()),
+            ..Default::default()
+        };
+        assert_eq!(expired.stop_check(1), Some(StopReason::Deadline));
+    }
+
+    #[test]
+    fn gap_converged_requires_explicit_tolerance() {
+        assert!(!FwConfig::default().gap_converged(0.0));
+        let cfg = FwConfig { gap_tol: Some(1e-3), ..Default::default() };
+        assert!(cfg.gap_converged(1e-4));
+        assert!(cfg.gap_converged(1e-3));
+        assert!(!cfg.gap_converged(2e-3));
     }
 
     #[test]

@@ -53,6 +53,7 @@
 
 use std::time::Instant;
 
+use crate::fw::cancel::StopReason;
 use crate::fw::config::FwConfig;
 use crate::fw::flops::{
     FlopCounter, ShardCosts, BYTES_F32_READ, BYTES_F64_READ, BYTES_F64_RMW,
@@ -357,7 +358,17 @@ impl<'a> FastFrankWolfe<'a> {
         let timing = std::env::var_os("DPFW_PHASE_TIMING").is_some();
         let (mut ns_select, mut ns_update, mut ns_notify) = (0u128, 0u128, 0u128);
 
+        // §6.9 anytime contract: the stop poll sits *before* the t-th
+        // selection, so a stop at t means exactly t−1 mechanism releases
+        // happened — `iters_done` (and the ε charge) stays exact.
+        let mut stopped = StopReason::IterBudget;
+        let mut iters_done = t_total.saturating_sub(1);
         for t in 1..t_total {
+            if let Some(reason) = self.cfg.stop_check(t) {
+                stopped = reason;
+                iters_done = t - 1;
+                break;
+            }
             // ---- line 15: selection -------------------------------------
             let p0 = timing.then(Instant::now);
             let j = selector.select(&st.alpha, &mut rng, &mut flops);
@@ -509,6 +520,11 @@ impl<'a> FastFrankWolfe<'a> {
                 });
             }
             observe(t, &st);
+            if self.cfg.gap_converged(gap) {
+                stopped = StopReason::Converged;
+                iters_done = t;
+                break;
+            }
         }
 
         let wall_ms = start.elapsed().as_secs_f64() * 1e3;
@@ -522,11 +538,11 @@ impl<'a> FastFrankWolfe<'a> {
                 100.0 * ns_notify as f64 / tot,
                 100.0 * (tot - (ns_select + ns_update + ns_notify) as f64) / tot,
                 tot / 1e6,
-                t_total - 1
+                iters_done
             );
         }
         trace.push(TraceRecord {
-            iter: t_total - 1,
+            iter: iters_done,
             gap,
             flops: flops.total(),
             bytes: flops.bytes(),
@@ -552,7 +568,12 @@ impl<'a> FastFrankWolfe<'a> {
             }),
             selector_stats: selector.stats(),
             trace,
-            iters_run: t_total - 1,
+            iters_run: iters_done,
+            stopped,
+            eps_spent: self
+                .cfg
+                .privacy
+                .map(|pp| pp.spent_epsilon(t_total, iters_done)),
             effective_threads: self.cfg.effective_threads(),
             effective_shards: 0,
             shard_flops: Vec::new(),
@@ -720,7 +741,16 @@ impl<'a> FastFrankWolfe<'a> {
         let timing = std::env::var_os("DPFW_PHASE_TIMING").is_some();
         let (mut ns_select, mut ns_update, mut ns_notify) = (0u128, 0u128, 0u128);
 
+        // §6.9: same stop-poll placement as the legacy body — before the
+        // t-th selection, so the release count (and ε charge) is exact.
+        let mut stopped = StopReason::IterBudget;
+        let mut iters_done = t_total.saturating_sub(1);
         for t in 1..t_total {
+            if let Some(reason) = self.cfg.stop_check(t) {
+                stopped = reason;
+                iters_done = t - 1;
+                break;
+            }
             // ---- line 15: selection -------------------------------------
             let p0 = timing.then(Instant::now);
             let j = if use_tree_select && eff_threads > 1 && d >= SELECT_PAR_MIN_D {
@@ -887,6 +917,11 @@ impl<'a> FastFrankWolfe<'a> {
                 });
             }
             observe(t, &st);
+            if self.cfg.gap_converged(gap) {
+                stopped = StopReason::Converged;
+                iters_done = t;
+                break;
+            }
         }
 
         let wall_ms = start.elapsed().as_secs_f64() * 1e3;
@@ -900,12 +935,12 @@ impl<'a> FastFrankWolfe<'a> {
                 100.0 * ns_notify as f64 / tot,
                 100.0 * (tot - (ns_select + ns_update + ns_notify) as f64) / tot,
                 tot / 1e6,
-                t_total - 1,
+                iters_done,
                 p
             );
         }
         trace.push(TraceRecord {
-            iter: t_total - 1,
+            iter: iters_done,
             gap,
             flops: flops.total(),
             bytes: flops.bytes(),
@@ -932,7 +967,12 @@ impl<'a> FastFrankWolfe<'a> {
             }),
             selector_stats: selector.stats(),
             trace,
-            iters_run: t_total - 1,
+            iters_run: iters_done,
+            stopped,
+            eps_spent: self
+                .cfg
+                .privacy
+                .map(|pp| pp.spent_epsilon(t_total, iters_done)),
             effective_threads: eff_threads,
             effective_shards: p,
             shard_flops,

@@ -29,7 +29,13 @@
 //!   Lipschitz constants, FLOP accounting (Figures 2 & 4), per-iteration
 //!   traces (Figures 1 & 3), and run configuration (including the
 //!   `threads` knob for the block-parallel bootstrap).
+//! * [`cancel`] — cooperative cancellation/deadlines (DESIGN.md §6.9):
+//!   both solvers poll a [`cancel::CancelToken`] once per iteration and,
+//!   because Frank-Wolfe is anytime, a fired token degrades the run to a
+//!   best-so-far result tagged with a [`cancel::StopReason`] instead of
+//!   failing it; the ε ledger charges only the iterations actually run.
 
+pub mod cancel;
 pub mod config;
 pub mod fast;
 pub mod flops;

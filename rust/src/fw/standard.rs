@@ -13,6 +13,7 @@
 
 use std::time::Instant;
 
+use crate::fw::cancel::StopReason;
 use crate::fw::config::{FwConfig, SelectorKind};
 use crate::fw::flops::{
     FlopCounter, ShardCosts, BYTES_F32_READ, BYTES_F64_READ, BYTES_F64_RMW,
@@ -122,7 +123,16 @@ impl<'a> StandardFrankWolfe<'a> {
         let mut gap = f64::NAN;
         let mut initialized = false;
 
+        // §6.9 anytime contract: poll before the t-th iteration's work, so
+        // a stop at t means exactly t−1 selections were released.
+        let mut stopped = StopReason::IterBudget;
+        let mut iters_done = t_total.saturating_sub(1);
         for t in 1..t_total {
+            if let Some(reason) = self.cfg.stop_check(t) {
+                stopped = reason;
+                iters_done = t - 1;
+                break;
+            }
             // ---- lines 4-7: dense recompute of the gradient -------------
             // At t = 1 (w = 0) this *is* the bootstrap — v̄ = 0,
             // q̄ = ∇L(0, y), α = Xᵀq̄ — identical for every λ, so path mode
@@ -213,11 +223,16 @@ impl<'a> StandardFrankWolfe<'a> {
                     wall_ns: start.elapsed().as_nanos(),
                 });
             }
+            if self.cfg.gap_converged(gap) {
+                stopped = StopReason::Converged;
+                iters_done = t;
+                break;
+            }
         }
 
         let wall_ms = start.elapsed().as_secs_f64() * 1e3;
         trace.push(TraceRecord {
-            iter: t_total - 1,
+            iter: iters_done,
             gap,
             flops: flops.total(),
             bytes: flops.bytes(),
@@ -241,7 +256,12 @@ impl<'a> StandardFrankWolfe<'a> {
             phase: None, // Alg 1 has no fused-scan phase breakdown
             selector_stats: selector.stats(),
             trace,
-            iters_run: t_total - 1,
+            iters_run: iters_done,
+            stopped,
+            eps_spent: self
+                .cfg
+                .privacy
+                .map(|pp| pp.spent_epsilon(t_total, iters_done)),
             effective_threads: self.cfg.effective_threads(),
             effective_shards: 0,
             shard_flops: Vec::new(),
@@ -331,7 +351,15 @@ impl<'a> StandardFrankWolfe<'a> {
         let mut initialized = false;
         let use_tree_select = selector.supports_precomputed();
 
+        // §6.9: same stop-poll placement as the legacy body.
+        let mut stopped = StopReason::IterBudget;
+        let mut iters_done = t_total.saturating_sub(1);
         for t in 1..t_total {
+            if let Some(reason) = self.cfg.stop_check(t) {
+                stopped = reason;
+                iters_done = t - 1;
+                break;
+            }
             let cached = t == 1
                 && boot == Bootstrap::Shared
                 && match ws.bootstrap_get(&boot_key) {
@@ -470,11 +498,16 @@ impl<'a> StandardFrankWolfe<'a> {
                     wall_ns: start.elapsed().as_nanos(),
                 });
             }
+            if self.cfg.gap_converged(gap) {
+                stopped = StopReason::Converged;
+                iters_done = t;
+                break;
+            }
         }
 
         let wall_ms = start.elapsed().as_secs_f64() * 1e3;
         trace.push(TraceRecord {
-            iter: t_total - 1,
+            iter: iters_done,
             gap,
             flops: flops.total(),
             bytes: flops.bytes(),
@@ -497,7 +530,12 @@ impl<'a> StandardFrankWolfe<'a> {
             phase: None,
             selector_stats: selector.stats(),
             trace,
-            iters_run: t_total - 1,
+            iters_run: iters_done,
+            stopped,
+            eps_spent: self
+                .cfg
+                .privacy
+                .map(|pp| pp.spent_epsilon(t_total, iters_done)),
             effective_threads: eff_threads,
             effective_shards: p,
             shard_flops,

@@ -2,6 +2,7 @@
 //! figure in the paper (gap curves for Fig 1, FLOP ratios for Figs 2 & 4,
 //! heap-pop ratios for Fig 3).
 
+use crate::fw::cancel::StopReason;
 use crate::fw::queue::SelectorStats;
 
 /// One trace point.
@@ -90,8 +91,24 @@ pub struct FwOutput {
     pub selector_stats: SelectorStats,
     /// Trace points (at `trace_every` cadence plus the final iteration).
     pub trace: Vec<TraceRecord>,
-    /// Iterations actually executed (T−1).
+    /// Iterations actually executed. Equals `iters − 1` (the paper runs
+    /// T−1 update steps) unless the run stopped early — see
+    /// [`FwOutput::stopped`].
     pub iters_run: usize,
+    /// Why the run returned (DESIGN.md §6.9). `IterBudget` for every
+    /// full-budget run; `Deadline`/`Cancelled` mark anytime partial
+    /// results (best-so-far weights, `iters_run < iters − 1`);
+    /// `Converged` means `FwConfig::gap_tol` was met early.
+    pub stopped: StopReason,
+    /// Privacy actually spent: the ε of composing only the `iters_run`
+    /// mechanism releases that happened, at the per-step budget calibrated
+    /// for the *planned* T
+    /// ([`crate::dp::accounting::PrivacyParams::spent_epsilon`]), i.e.
+    /// `ε·√(iters_run / T)`. `None` for non-private runs. A full-budget
+    /// run reports `ε·√((T−1)/T)` (the calibration budgets T steps but
+    /// the paper's loop releases T−1 selections — conservative by
+    /// construction); an early stop spends strictly less.
+    pub eps_spent: Option<f64>,
     /// Worker threads this run actually resolved to
     /// (`FwConfig::effective_threads`) — surfaced so bench JSON rows are
     /// attributable to the real count, not the requested one (`threads: 0`

@@ -305,6 +305,40 @@ impl FwWorkspace {
         self.shard_scratch.extend(scratch);
     }
 
+    /// Scribble garbage over every pooled buffer and drop the caches —
+    /// the fault-injection plane's `PoisonWorkspace` hook (DESIGN.md
+    /// §6.9, `testkit::faults`). The bit-exact reuse contract says a
+    /// dirty workspace is indistinguishable from a fresh one *because
+    /// every taken buffer is fully reinitialized*; this makes "dirty" as
+    /// hostile as possible (NaNs and saturated stamps rather than
+    /// whatever the last run left), so the fault matrix catches any
+    /// solver path that starts trusting pooled contents. Caches that are
+    /// semantically meaningful across runs (bootstrap, selector, sharded
+    /// substrate) are *dropped* rather than corrupted — poisoning them
+    /// would violate their documented validity contract instead of
+    /// testing it.
+    pub fn poison_buffers(&mut self) {
+        for v in &mut self.f64_pool {
+            let cap = v.capacity();
+            v.clear();
+            v.resize(cap, f64::NAN);
+        }
+        for v in &mut self.u32_pool {
+            let cap = v.capacity();
+            v.clear();
+            v.resize(cap, u32::MAX);
+        }
+        for s in &mut self.shard_scratch {
+            s.gammas.clear();
+            let cap = s.decode.capacity();
+            s.decode.clear();
+            s.decode.resize(cap, u32::MAX);
+        }
+        self.selector = None;
+        self.boot = None;
+        self.sharded = None;
+    }
+
     /// Return a selector to the cache for the next run.
     pub(crate) fn recycle_selector(
         &mut self,
@@ -451,6 +485,36 @@ mod tests {
         assert_eq!(sc2.len(), 3);
         assert!(sc2[0].gammas.is_empty() && sc2[1].decode.is_empty());
         assert!(sc2.iter().map(|s| s.decode.capacity()).max().unwrap() >= cap);
+    }
+
+    #[test]
+    fn poison_fills_pools_and_drops_caches() {
+        let mut ws = FwWorkspace::new();
+        let v = ws.take_f64(64, 1.0);
+        ws.recycle_f64(v);
+        let u = ws.take_u32(64, 1);
+        ws.recycle_u32(u);
+        ws.bootstrap_put(
+            BootKey { token: 1, n_rows: 2, n_cols: 2, nnz: 2, loss: "logistic" },
+            &[0.0, 0.0],
+            &[0.0, 0.0],
+        );
+        ws.poison_buffers();
+        assert!(ws
+            .bootstrap_get(&BootKey {
+                token: 1,
+                n_rows: 2,
+                n_cols: 2,
+                nnz: 2,
+                loss: "logistic"
+            })
+            .is_none());
+        // the pooled block survives (same allocation) but a fresh take
+        // fully reinitializes it — the reuse contract the poison targets
+        let v2 = ws.take_f64(64, 0.5);
+        assert!(v2.iter().all(|&x| x == 0.5));
+        let u2 = ws.take_u32(64, 0);
+        assert!(u2.iter().all(|&x| x == 0));
     }
 
     #[test]

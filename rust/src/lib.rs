@@ -69,6 +69,7 @@ pub mod textio;
 pub mod prelude {
     pub use crate::dp::accounting::PrivacyParams;
     pub use crate::eval::{accuracy, auc, sparsity_pct};
+    pub use crate::fw::cancel::{CancelToken, StopReason};
     pub use crate::fw::config::{FwConfig, SelectorKind};
     pub use crate::fw::fast::FastFrankWolfe;
     pub use crate::fw::standard::StandardFrankWolfe;

@@ -112,12 +112,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         selector,
         seed: args.get_u64("seed", 0)?,
         trace_every: args.get_usize("trace-every", 0)?,
-        lipschitz: None,
         threads: args.get_usize("threads", 0)?,
-        // CLI runs use the process-wide resolution (DPFW_DIRECT_MAX_NNZ
-        // env var or the §6.7 default)
-        direct_max_nnz: None,
-        shards: None,
+        // everything else (lipschitz, direct_max_nnz, shards, cancel, …)
+        // keeps its default / process-wide resolution
+        ..Default::default()
     };
     let algo = Algo::from_name(&args.get_or("algo", "alg2")).context("bad --algo")?;
     println!(

@@ -1,0 +1,200 @@
+//! Deterministic fault injection for the coordinator/solver resilience
+//! tests and benches (DESIGN.md §6.9).
+//!
+//! A [`FaultPlan`] rides inside `FwConfig` (default: disarmed, a single
+//! `Option` discriminant test per iteration — same zero-cost shape as
+//! `CancelToken`). Tests arm it with one [`FaultKind`] and a firing
+//! budget; once the budget is spent the plan disarms itself, so a
+//! seed-pinned retry of the same job deterministically succeeds. The
+//! firing counter is shared across clones (`Arc`), which is what makes
+//! that work: the retried job carries a *clone* of the config, so its
+//! plan sees the already-spent budget.
+//!
+//! The four kinds cover the failure shapes the serving tier must survive:
+//!
+//! * [`FaultKind::PanicAt`] — unwind out of the solver mid-iteration
+//!   (caught by the worker's `catch_unwind`; exercises retries).
+//! * [`FaultKind::StallAt`] — sleep inside an iteration (exercises
+//!   deadlines firing *while running*, and drain timeouts).
+//! * [`FaultKind::PoisonWorkspace`] — scribble the pooled buffers before
+//!   the job runs (exercises the workspace bit-exact-reuse contract: a
+//!   correct solver must fully reinitialize what it takes).
+//! * [`FaultKind::DieAbruptly`] — the worker thread returns without
+//!   unwinding and without sending results (exercises supervision:
+//!   respawn + owed-id failure).
+
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// What to inject, and where.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Panic at the start of solver iteration `iter` (1-based, like the
+    /// paper's t index).
+    PanicAt { iter: usize },
+    /// Sleep `ms` milliseconds at the start of solver iteration `iter`.
+    StallAt { iter: usize, ms: u64 },
+    /// Fill the worker's pooled workspace buffers with garbage before
+    /// running the job.
+    PoisonWorkspace,
+    /// The worker thread dies without unwinding (no results sent, no
+    /// panic to catch) before running the job.
+    DieAbruptly,
+}
+
+#[derive(Debug)]
+struct FaultInner {
+    kind: FaultKind,
+    /// How many times the fault fires before disarming.
+    times: u32,
+    /// Firings so far — shared across clones so retries observe the
+    /// spent budget.
+    fired: AtomicU32,
+}
+
+impl FaultInner {
+    /// Try to consume one firing; `false` once the budget is spent.
+    fn fire(&self) -> bool {
+        self.fired
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| {
+                (n < self.times).then_some(n + 1)
+            })
+            .is_ok()
+    }
+}
+
+/// A deterministic fault plan; the default plan is disarmed and injects
+/// nothing.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    inner: Option<Arc<FaultInner>>,
+}
+
+impl FaultPlan {
+    /// The disarmed plan (what every production config carries).
+    pub fn none() -> Self {
+        Self { inner: None }
+    }
+
+    /// Arm `kind` to fire exactly once.
+    pub fn once(kind: FaultKind) -> Self {
+        Self::times(kind, 1)
+    }
+
+    /// Arm `kind` to fire on the first `times` opportunities, then disarm.
+    pub fn times(kind: FaultKind, times: u32) -> Self {
+        Self {
+            inner: Some(Arc::new(FaultInner { kind, times, fired: AtomicU32::new(0) })),
+        }
+    }
+
+    pub fn is_armed(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// How many times this plan has fired (across all clones).
+    pub fn firings(&self) -> u32 {
+        self.inner.as_deref().map_or(0, |i| i.fired.load(Ordering::SeqCst))
+    }
+
+    /// Solver hook, polled at the top of each iteration `t` (1-based).
+    /// Panics (PanicAt) or sleeps (StallAt) when armed for this iteration
+    /// and the firing budget allows.
+    #[inline]
+    pub fn on_iteration(&self, t: usize) {
+        let Some(inner) = self.inner.as_deref() else { return };
+        match inner.kind {
+            FaultKind::PanicAt { iter } if iter == t => {
+                if inner.fire() {
+                    panic!("fault injection: panic at iteration {t}");
+                }
+            }
+            FaultKind::StallAt { iter, ms } if iter == t => {
+                if inner.fire() {
+                    std::thread::sleep(Duration::from_millis(ms));
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// Worker hook: should the pooled workspace be poisoned before this
+    /// job runs? Consumes one firing.
+    pub fn take_poison(&self) -> bool {
+        match self.inner.as_deref() {
+            Some(inner) if inner.kind == FaultKind::PoisonWorkspace => inner.fire(),
+            _ => false,
+        }
+    }
+
+    /// Worker hook: should the worker thread die (return without sending
+    /// results) instead of running this job? Consumes one firing.
+    pub fn take_worker_death(&self) -> bool {
+        match self.inner.as_deref() {
+            Some(inner) if inner.kind == FaultKind::DieAbruptly => inner.fire(),
+            _ => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_plan_is_inert() {
+        let p = FaultPlan::none();
+        assert!(!p.is_armed());
+        p.on_iteration(1);
+        assert!(!p.take_poison());
+        assert!(!p.take_worker_death());
+        assert_eq!(p.firings(), 0);
+    }
+
+    #[test]
+    fn panic_at_fires_once_then_disarms() {
+        let p = FaultPlan::once(FaultKind::PanicAt { iter: 3 });
+        p.on_iteration(1);
+        p.on_iteration(2); // wrong iteration: no firing
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            p.on_iteration(3);
+        }))
+        .expect_err("must panic at iter 3");
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("iteration 3"), "{msg}");
+        assert_eq!(p.firings(), 1);
+        p.on_iteration(3); // budget spent: the retry sails through
+        assert_eq!(p.firings(), 1);
+    }
+
+    #[test]
+    fn budget_is_shared_across_clones() {
+        let p = FaultPlan::times(FaultKind::DieAbruptly, 2);
+        let clone = p.clone();
+        assert!(p.take_worker_death());
+        assert!(clone.take_worker_death());
+        assert!(!p.take_worker_death(), "budget of 2 spent across clones");
+        assert_eq!(clone.firings(), 2);
+    }
+
+    #[test]
+    fn kinds_do_not_cross_trigger() {
+        let p = FaultPlan::once(FaultKind::PoisonWorkspace);
+        p.on_iteration(1); // not an iteration fault: no-op
+        assert!(!p.take_worker_death());
+        assert!(p.take_poison());
+        assert!(!p.take_poison(), "single firing");
+    }
+
+    #[test]
+    fn stall_at_sleeps_without_panicking() {
+        let p = FaultPlan::once(FaultKind::StallAt { iter: 1, ms: 1 });
+        let start = std::time::Instant::now();
+        p.on_iteration(1);
+        assert!(start.elapsed() >= Duration::from_millis(1));
+        let start = std::time::Instant::now();
+        p.on_iteration(1); // disarmed now
+        assert!(start.elapsed() < Duration::from_millis(1));
+    }
+}

@@ -14,6 +14,8 @@
 //! });
 //! ```
 
+pub mod faults;
+
 use crate::rng::Xoshiro256pp;
 
 /// Run `prop` on `cases` independently-seeded generators. Panics from the

@@ -1,0 +1,422 @@
+//! §6.9 resilience suite: the fault-injection matrix, deadline semantics
+//! (queued → shed, running → anytime partial), supervised worker respawn,
+//! and the two privacy-critical properties — a seed-pinned retry is
+//! bit-identical to its first attempt (zero extra ε), and a
+//! deadline-cancelled trajectory is a prefix of the uncancelled one —
+//! at any (shards P, threads) combination.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use dpfw::coordinator::scheduler::RetryPolicy;
+use dpfw::coordinator::{Algo, Coordinator, JobError, JobSpec, PathJob};
+use dpfw::dp::accounting::PrivacyParams;
+use dpfw::fw::cancel::{CancelToken, StopReason};
+use dpfw::fw::config::{FwConfig, SelectorKind};
+use dpfw::fw::trace::TraceRecord;
+use dpfw::sparse::synth::SynthConfig;
+use dpfw::sparse::Dataset;
+use dpfw::testkit::faults::{FaultKind, FaultPlan};
+
+fn dataset(seed: u64) -> Arc<Dataset> {
+    Arc::new(
+        SynthConfig {
+            name: format!("faults{seed}"),
+            n_rows: 120,
+            n_cols: 60,
+            avg_row_nnz: 7.0,
+            zipf_exponent: 1.2,
+            n_informative: 10,
+            n_dense: 0,
+            label_noise: 0.02,
+            bias_col: true,
+        }
+        .generate(seed),
+    )
+}
+
+/// A DP job (Bsls selector) so the mechanism stream — the thing retries
+/// must not double-spend — is actually exercised.
+fn dp_cfg(seed: u64) -> FwConfig {
+    FwConfig {
+        iters: 80,
+        lambda: 6.0,
+        privacy: Some(PrivacyParams::new(1.0, 1e-6)),
+        selector: SelectorKind::Bsls,
+        seed,
+        ..Default::default()
+    }
+}
+
+fn job(id: usize, data: Arc<Dataset>, cfg: FwConfig) -> JobSpec {
+    JobSpec { id, label: format!("f{id}"), data, algo: Algo::Fast, cfg, test_data: None }
+}
+
+/// Deterministic trace fields — everything but the wall clock.
+fn trace_key(r: &TraceRecord) -> (usize, f64, u64, u64, u64, usize) {
+    (r.iter, r.gap, r.flops, r.bytes, r.pops, r.selected)
+}
+
+// ---------------------------------------------------------------------------
+// The fault matrix: every FaultKind × {1, 4} workers must complete drain()
+// without a coordinator panic, with every owed id resolved Ok or Err.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fault_matrix_drains_every_owed_id() {
+    let d = dataset(1);
+    for n_workers in [1usize, 4] {
+        for kind in [
+            FaultKind::PanicAt { iter: 5 },
+            FaultKind::StallAt { iter: 5, ms: 10 },
+            FaultKind::PoisonWorkspace,
+            FaultKind::DieAbruptly,
+        ] {
+            let mut c = Coordinator::new(n_workers);
+            let n_jobs = 6usize;
+            for id in 0..n_jobs {
+                let mut cfg = dp_cfg(7);
+                if id == 0 {
+                    cfg.fault = FaultPlan::once(kind);
+                }
+                c.submit(job(id, d.clone(), cfg));
+            }
+            let results = c.drain();
+            assert_eq!(
+                results.len(),
+                n_jobs,
+                "{kind:?} x {n_workers} workers: every owed id must resolve"
+            );
+            // id 0 carried the fault; its outcome shape depends on the kind
+            match kind {
+                FaultKind::PanicAt { .. } => {
+                    assert!(
+                        matches!(results[0], Err(JobError::Panicked(_))),
+                        "{kind:?}: {:?}",
+                        results[0].as_ref().err()
+                    );
+                }
+                FaultKind::StallAt { .. } | FaultKind::PoisonWorkspace => {
+                    assert!(results[0].is_ok(), "{kind:?} must not fail the job");
+                }
+                FaultKind::DieAbruptly => {
+                    assert_eq!(results[0].as_ref().unwrap_err(), &JobError::WorkerDied);
+                    assert!(
+                        c.metrics.workers_respawned.load(Ordering::Relaxed) >= 1,
+                        "supervisor must have respawned the dead worker"
+                    );
+                }
+            }
+            // every other job survives whatever happened to id 0
+            for (id, r) in results.iter().enumerate().skip(1) {
+                assert!(r.is_ok(), "{kind:?} x {n_workers}: job {id} lost: {r:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn poisoned_workspace_output_is_bit_identical_to_clean() {
+    // The workspace-reuse contract: a correct solver fully reinitializes
+    // every buffer it takes, so pre-scribbled pools must not change a bit.
+    let d = dataset(2);
+    let clean = job(0, d.clone(), dp_cfg(3)).run();
+    let mut cfg = dp_cfg(3);
+    cfg.fault = FaultPlan::once(FaultKind::PoisonWorkspace);
+    let mut c = Coordinator::new(1);
+    c.submit(job(0, d, cfg));
+    let poisoned = c.drain().remove(0).expect("poisoned-workspace job must succeed");
+    assert_eq!(poisoned.output.weights, clean.output.weights);
+    assert_eq!(poisoned.output.flops, clean.output.flops);
+}
+
+// ---------------------------------------------------------------------------
+// Worker death mid-queue: owed ids fail, the rest of the queue completes.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn worker_death_mid_queue_fails_owed_ids_and_respawns() {
+    let d = dataset(4);
+    let mut c = Coordinator::new(1); // one worker: the queue is strictly ordered
+    let mut doomed = dp_cfg(5);
+    doomed.fault = FaultPlan::once(FaultKind::DieAbruptly);
+    c.submit(job(0, d.clone(), doomed));
+    for id in 1..5 {
+        c.submit(job(id, d.clone(), dp_cfg(5)));
+    }
+    let results = c.drain();
+    assert_eq!(results.len(), 5);
+    assert_eq!(results[0].as_ref().unwrap_err(), &JobError::WorkerDied);
+    for r in &results[1..] {
+        assert!(r.is_ok(), "respawned worker must finish the remaining queue");
+    }
+    assert_eq!(c.metrics.workers_respawned.load(Ordering::Relaxed), 1);
+    assert_eq!(c.metrics.jobs_failed.load(Ordering::Relaxed), 1);
+
+    // a whole path owed by the dead worker fails every λ, then the pool heals
+    let mut doomed_path = dp_cfg(5);
+    doomed_path.fault = FaultPlan::once(FaultKind::DieAbruptly);
+    c.submit_path(PathJob {
+        base_id: 0,
+        label: "p".into(),
+        data: d.clone(),
+        algo: Algo::Fast,
+        cfg: doomed_path,
+        lambdas: vec![3.0, 6.0],
+        test_data: None,
+    });
+    c.submit(job(2, d, dp_cfg(5)));
+    let results = c.drain();
+    assert_eq!(results.len(), 3);
+    assert_eq!(results[0].as_ref().unwrap_err(), &JobError::WorkerDied);
+    assert_eq!(results[1].as_ref().unwrap_err(), &JobError::WorkerDied);
+    assert!(results[2].is_ok());
+}
+
+// ---------------------------------------------------------------------------
+// Deadlines: queued → shed without solver work; running → anytime partial.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn deadline_expired_while_queued_is_shed_without_solver_work() {
+    let d = dataset(6);
+    let mut c = Coordinator::new(1);
+    // occupy the single worker long enough for the second job's deadline
+    // to lapse in the queue
+    let mut slow = dp_cfg(8);
+    slow.fault = FaultPlan::once(FaultKind::StallAt { iter: 1, ms: 120 });
+    c.submit(job(0, d.clone(), slow));
+    let mut doomed = dp_cfg(8);
+    doomed.cancel = CancelToken::deadline_in(Duration::from_millis(20));
+    c.submit(job(1, d, doomed));
+    let results = c.drain();
+    assert!(results[0].is_ok(), "the stalled job itself had no deadline");
+    assert_eq!(results[1].as_ref().unwrap_err(), &JobError::Expired);
+    assert_eq!(c.metrics.sheds.load(Ordering::Relaxed), 1);
+    assert_eq!(c.metrics.jobs_failed.load(Ordering::Relaxed), 1);
+    // shed ≠ timeout: no solver ran, so nothing stopped on a deadline
+    assert_eq!(c.metrics.timeouts.load(Ordering::Relaxed), 0);
+}
+
+#[test]
+fn cancelled_while_queued_is_shed() {
+    let d = dataset(6);
+    let mut c = Coordinator::new(1);
+    let mut slow = dp_cfg(8);
+    slow.fault = FaultPlan::once(FaultKind::StallAt { iter: 1, ms: 80 });
+    c.submit(job(0, d.clone(), slow));
+    let token = CancelToken::new();
+    let mut doomed = dp_cfg(8);
+    doomed.cancel = token.clone();
+    c.submit(job(1, d, doomed));
+    token.cancel(); // client hangs up while the job is still queued
+    let results = c.drain();
+    assert_eq!(results[1].as_ref().unwrap_err(), &JobError::Expired);
+    assert_eq!(c.metrics.sheds.load(Ordering::Relaxed), 1);
+}
+
+#[test]
+fn deadline_while_running_returns_anytime_partial_output() {
+    let d = dataset(7);
+    let mut cfg = dp_cfg(9);
+    // stall inside iteration 5 past the deadline, so the t=6 poll fires
+    cfg.fault = FaultPlan::once(FaultKind::StallAt { iter: 5, ms: 60 });
+    cfg.cancel = CancelToken::deadline_in(Duration::from_millis(25));
+    let mut c = Coordinator::new(1);
+    c.submit(job(0, d, cfg.clone()));
+    let results = c.drain();
+    let r = results[0].as_ref().expect("a mid-run deadline is a partial Ok, not an Err");
+    assert_eq!(r.output.stopped, StopReason::Deadline);
+    assert!(
+        r.output.iters_run < cfg.iters - 1,
+        "must have stopped early: ran {} of {}",
+        r.output.iters_run,
+        cfg.iters - 1
+    );
+    assert!(r.output.weights.nnz() > 0, "best-so-far weights, not a blank");
+    let spent = r.output.eps_spent.expect("DP run reports spend");
+    let full = PrivacyParams::new(1.0, 1e-6).spent_epsilon(cfg.iters, cfg.iters - 1);
+    assert!(spent < full, "truncated run must spend less: {spent} vs {full}");
+    assert_eq!(c.metrics.timeouts.load(Ordering::Relaxed), 1);
+    assert_eq!(c.metrics.sheds.load(Ordering::Relaxed), 0);
+}
+
+// ---------------------------------------------------------------------------
+// Retries: exhaustion surfaces the last panic; success is bit-identical.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn retry_exhaustion_surfaces_last_panic_message() {
+    let d = dataset(10);
+    let mut cfg = dp_cfg(11);
+    // fires on every attempt: 1 original + 2 retries, all panic
+    cfg.fault = FaultPlan::times(FaultKind::PanicAt { iter: 2 }, 10);
+    let mut c = Coordinator::with_retry(
+        1,
+        RetryPolicy { retry_limit: 2, backoff_base: Duration::from_millis(1) },
+    );
+    c.submit(job(0, d, cfg));
+    let results = c.drain();
+    match results[0].as_ref().unwrap_err() {
+        JobError::RetriesExhausted { attempts, last } => {
+            assert_eq!(*attempts, 3);
+            assert!(last.contains("iteration 2"), "last panic message lost: {last}");
+        }
+        other => panic!("expected RetriesExhausted, got {other:?}"),
+    }
+    assert_eq!(c.metrics.retries.load(Ordering::Relaxed), 2);
+    assert_eq!(c.metrics.jobs_failed.load(Ordering::Relaxed), 1);
+}
+
+/// The privacy-critical property (§6.9): a retried job reuses its original
+/// seed, so the successful attempt's mechanism stream — weights, trace,
+/// and ε spend — is bit-identical to a run that never failed. Swept over
+/// shard counts P and thread counts, both solvers' engines.
+#[test]
+fn seed_pinned_retry_is_bit_identical_to_unfaulted_run() {
+    let d = dataset(12);
+    for shards in [None, Some(1), Some(3)] {
+        for threads in [1usize, 4] {
+            for algo in [Algo::Fast, Algo::Standard] {
+                let mut base = dp_cfg(13);
+                base.shards = shards;
+                base.threads = threads;
+                base.trace_every = 1;
+                let clean = JobSpec {
+                    id: 0,
+                    label: "clean".into(),
+                    data: d.clone(),
+                    algo,
+                    cfg: base.clone(),
+                    test_data: None,
+                }
+                .run();
+
+                let mut faulted = base.clone();
+                // one panic mid-run; the shared firing budget is spent, so
+                // the in-place retry (same seed, same worker) runs clean
+                faulted.fault = FaultPlan::once(FaultKind::PanicAt { iter: 7 });
+                let mut c = Coordinator::with_retry(
+                    1,
+                    RetryPolicy { retry_limit: 1, backoff_base: Duration::from_millis(1) },
+                );
+                c.submit(JobSpec {
+                    id: 0,
+                    label: "retried".into(),
+                    data: d.clone(),
+                    algo,
+                    cfg: faulted,
+                    test_data: None,
+                });
+                let results = c.drain();
+                let retried = results[0]
+                    .as_ref()
+                    .unwrap_or_else(|e| panic!("P={shards:?} threads={threads}: {e}"));
+                assert_eq!(c.metrics.retries.load(Ordering::Relaxed), 1);
+
+                let ctx = format!("P={shards:?} threads={threads} algo={algo:?}");
+                assert_eq!(
+                    retried.output.weights, clean.output.weights,
+                    "{ctx}: retry diverged from first-attempt stream"
+                );
+                assert_eq!(
+                    retried.output.trace.len(),
+                    clean.output.trace.len(),
+                    "{ctx}: trace length"
+                );
+                for (a, b) in retried.output.trace.iter().zip(&clean.output.trace) {
+                    assert_eq!(trace_key(a), trace_key(b), "{ctx}: trace diverged");
+                }
+                assert_eq!(
+                    retried.output.eps_spent, clean.output.eps_spent,
+                    "{ctx}: a retry must not change the privacy spend"
+                );
+            }
+        }
+    }
+}
+
+/// The anytime property (§6.9): stopping on a deadline yields a trajectory
+/// that is a *prefix* of the uncancelled run's — same selections, same
+/// gaps, same FLOP counts, just fewer of them. Swept over (P, threads).
+#[test]
+fn deadline_cancelled_trajectory_is_prefix_of_uncancelled() {
+    let d = dataset(14);
+    for shards in [None, Some(2)] {
+        for threads in [1usize, 2] {
+            let mut base = dp_cfg(15);
+            base.shards = shards;
+            base.threads = threads;
+            base.trace_every = 1;
+            let full = JobSpec {
+                id: 0,
+                label: "full".into(),
+                data: d.clone(),
+                algo: Algo::Fast,
+                cfg: base.clone(),
+                test_data: None,
+            }
+            .run();
+
+            let mut cut = base.clone();
+            // stall through the deadline mid-run so the stop fires at
+            // whatever iteration the clock says — the property must hold
+            // for any k, so the test doesn't pin one
+            cut.fault = FaultPlan::once(FaultKind::StallAt { iter: 6, ms: 40 });
+            cut.cancel = CancelToken::deadline_in(Duration::from_millis(15));
+            let partial = JobSpec {
+                id: 0,
+                label: "cut".into(),
+                data: d.clone(),
+                algo: Algo::Fast,
+                cfg: cut,
+                test_data: None,
+            }
+            .run();
+
+            let ctx = format!("P={shards:?} threads={threads}");
+            assert_eq!(partial.output.stopped, StopReason::Deadline, "{ctx}");
+            assert!(
+                partial.output.iters_run < full.output.iters_run,
+                "{ctx}: expected a truncated run"
+            );
+            // drop each run's post-loop summary record (a duplicate of its
+            // last in-loop point): everything before it must match the
+            // uncancelled run point-for-point
+            let n = partial.output.trace.len().saturating_sub(1);
+            assert!(n > 0, "{ctx}: expected some completed iterations before the stop");
+            for i in 0..n {
+                assert_eq!(
+                    trace_key(&partial.output.trace[i]),
+                    trace_key(&full.output.trace[i]),
+                    "{ctx}: trajectory diverged at trace index {i}"
+                );
+            }
+            // ε monotonicity: the prefix spends strictly less
+            assert!(partial.output.eps_spent.unwrap() < full.output.eps_spent.unwrap(), "{ctx}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Explicit cancellation from another thread while the solve is running.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cross_thread_cancel_stops_a_running_solve() {
+    let d = dataset(16);
+    let token = CancelToken::new();
+    let mut cfg = dp_cfg(17);
+    cfg.iters = 100_000; // far more than fits in the stall window
+    cfg.fault = FaultPlan::once(FaultKind::StallAt { iter: 3, ms: 50 });
+    cfg.cancel = token.clone();
+    let mut c = Coordinator::new(1);
+    c.submit(job(0, d, cfg));
+    std::thread::sleep(Duration::from_millis(10)); // let the stall start
+    token.cancel();
+    let results = c.drain();
+    let r = results[0].as_ref().expect("cancel is a partial Ok");
+    assert_eq!(r.output.stopped, StopReason::Cancelled);
+    assert!(r.output.iters_run < 99_999);
+}

@@ -48,10 +48,7 @@ fn mini_table3_grid() {
                         selector: sel,
                         seed: 17,
                         trace_every: 25,
-                        lipschitz: None,
-                        threads: 0,
-                        direct_max_nnz: None,
-                        shards: None,
+                        ..Default::default()
                     },
                     test_data: Some(test.clone()),
                 });

@@ -63,10 +63,7 @@ fn dp_utility_degrades_gracefully() {
                 selector: SelectorKind::Bsls,
                 seed: 3,
                 trace_every: 0,
-                lipschitz: None,
-                threads: 0,
-                direct_max_nnz: None,
-                shards: None,
+                ..Default::default()
             },
         )
         .run();
@@ -93,10 +90,7 @@ fn dp_fast_solver_is_faster() {
         selector: SelectorKind::NoisyMax,
         seed: 1,
         trace_every: 0,
-        lipschitz: None,
-        threads: 0,
-        direct_max_nnz: None,
-        shards: None,
+        ..Default::default()
     };
     let slow = StandardFrankWolfe::new(&ds, base.clone()).run();
     let fast = FastFrankWolfe::new(
@@ -146,10 +140,7 @@ fn dp_large_t_stays_sparse() {
             selector: SelectorKind::Bsls,
             seed: 8,
             trace_every: 0,
-            lipschitz: None,
-            threads: 0,
-            direct_max_nnz: None,
-            shards: None,
+            ..Default::default()
         },
     )
     .run();
@@ -222,10 +213,8 @@ fn compact_escape_blocks_dense_column_bit_identical_end_to_end() {
                 selector: sel,
                 seed: 11,
                 trace_every: 10,
-                lipschitz: None,
                 threads,
-                direct_max_nnz: None,
-                shards: None,
+                ..Default::default()
             };
             let a = FastFrankWolfe::new(&ds, cfg.clone()).run();
             let c = FastFrankWolfe::new(&plain, cfg.clone()).run();
@@ -328,10 +317,7 @@ fn concurrent_training_on_shared_data() {
                     selector: SelectorKind::Bsls,
                     seed,
                     trace_every: 0,
-                    lipschitz: None,
-                    threads: 0,
-                    direct_max_nnz: None,
-                    shards: None,
+                    ..Default::default()
                 },
             )
             .run()

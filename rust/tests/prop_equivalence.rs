@@ -249,10 +249,7 @@ fn prop_dp_seed_determinism() {
             selector: sel,
             seed: s,
             trace_every: 0,
-            lipschitz: None,
-            threads: 0,
-            direct_max_nnz: None,
-            shards: None,
+            ..Default::default()
         };
         for sel in [SelectorKind::Bsls, SelectorKind::NoisyMax, SelectorKind::NaiveExp] {
             let a = FastFrankWolfe::new(&ds, mk(seed, sel)).run();
@@ -323,10 +320,7 @@ fn random_selector_cfg(rng: &mut Xoshiro256pp, iters: usize, lam: f64) -> FwConf
         selector: sel,
         seed: rng.next_u64(),
         trace_every: 10,
-        lipschitz: None,
-        threads: 0,
-        direct_max_nnz: None,
-        shards: None,
+        ..Default::default()
     }
 }
 
@@ -853,10 +847,7 @@ fn prop_sparsity_and_feasibility_all_selectors() {
                 selector: sel,
                 seed: rng.next_u64(),
                 trace_every: 0,
-                lipschitz: None,
-                threads: 0,
-                direct_max_nnz: None,
-                shards: None,
+                ..Default::default()
             };
             let out = FastFrankWolfe::new(&ds, cfg).run();
             assert!(out.weights.l1_norm() <= lam + 1e-6, "{sel:?} left the ball");
