@@ -1,0 +1,178 @@
+//! Bench: **ingress service under a coalescing overload burst** (DESIGN.md
+//! §6.10).
+//!
+//! Fires a same-dataset burst through the long-lived [`Ingress`] — clean
+//! DP solves that coalesce their dense bootstrap through the shared
+//! [`BootHub`], batch predictions on the open predict class, and an
+//! overflow tail past the solve class's hard watermark — with the soft
+//! watermark tuned so the brownout controller arms mid-burst. Reports the
+//! serving surface: admit/shed/brownout counts, hub lead/attach telemetry
+//! (the coalesce rate), per-class queue-inclusive p50/p99 latency, and
+//! bytes-per-request. Emits `BENCH_ingress.json` so CI tracks the §6.10
+//! story across PRs.
+//!
+//! Like the other benches, the run doubles as an invariant check: every
+//! accepted id must resolve Ok (a browned-out run is a degraded *answer*,
+//! not an error), the overflow tail must shed exactly, and the hub must
+//! have led the shared bootstrap exactly once per burst.
+
+mod bench_harness;
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use bench_harness::{section, smoke_mode, Bench, JsonReport};
+use dpfw::coordinator::{
+    Admit, Algo, ClassPolicy, Ingress, IngressConfig, JobSpec, PredictJob, Request,
+};
+use dpfw::dp::accounting::PrivacyParams;
+use dpfw::fw::cancel::CancelToken;
+use dpfw::fw::config::{FwConfig, SelectorKind};
+use dpfw::sparse::synth::{DatasetPreset, SynthConfig};
+use dpfw::sparse::Dataset;
+use dpfw::testkit::faults::FaultPlan;
+
+struct BurstShape {
+    /// Same-dataset DP solves (the coalescing population).
+    solves: usize,
+    /// Batch predictions on the open predict class.
+    predicts: usize,
+    /// Solves submitted past the hard watermark — must all shed.
+    overflow: usize,
+    iters: usize,
+}
+
+/// One ingress burst: admit everything, drain, reconcile the admission
+/// ledger. Returns the ingress so the caller can read the metrics and hub
+/// surface after timing.
+fn run_burst(ds: &Arc<Dataset>, workers: usize, shape: &BurstShape) -> Ingress {
+    let mut ing = Ingress::new(IngressConfig {
+        workers,
+        solve: ClassPolicy {
+            queue_hard: shape.solves,
+            // arm brownout once the queue is half full: the back half of
+            // the burst runs degraded — still answered, cheaper
+            queue_soft: shape.solves / 2,
+            ..Default::default()
+        },
+        brownout_after: 2,
+        ..Default::default()
+    });
+    let cfg = |seed: u64| FwConfig {
+        iters: shape.iters,
+        lambda: 8.0,
+        privacy: Some(PrivacyParams::new(1.0, 1e-6)),
+        selector: SelectorKind::Bsls,
+        seed,
+        ..Default::default()
+    };
+    let mut owed = 0usize;
+    let mut browned = 0usize;
+    for k in 0..shape.solves + shape.overflow {
+        let admit = ing.submit(Request::Solve(JobSpec {
+            id: 0,
+            label: format!("s{k}"),
+            data: ds.clone(),
+            algo: Algo::Fast,
+            cfg: cfg(k as u64),
+            test_data: None,
+        }));
+        match admit {
+            Admit::Accepted { ids, browned_out } => {
+                owed += ids.len();
+                browned += browned_out as usize;
+            }
+            Admit::Shed(_) => assert!(k >= shape.solves, "shed inside the watermark"),
+            Admit::Redirected { .. } => panic!("no rate limit configured"),
+        }
+    }
+    assert_eq!(owed, shape.solves, "overflow tail must shed exactly");
+    assert!(browned > 0, "the soft watermark must arm brownout mid-burst");
+    let w = Arc::new(vec![0.01; ds.csr.n_cols()]);
+    for k in 0..shape.predicts {
+        let admit = ing.submit(Request::Predict(PredictJob {
+            id: 0,
+            label: format!("p{k}"),
+            data: ds.clone(),
+            weights: w.clone(),
+            threads: 0,
+            cancel: CancelToken::none(),
+            fault: FaultPlan::none(),
+        }));
+        assert!(admit.is_accepted(), "predict class is open");
+        owed += 1;
+    }
+
+    let out = ing.drain();
+    assert_eq!(out.len(), owed, "every accepted id must resolve");
+    assert!(out.iter().all(|(_, o)| o.is_ok()), "burst has no failing jobs");
+    assert_eq!(ing.hub().leads(), 1, "one shared bootstrap per burst");
+    ing
+}
+
+fn main() {
+    let smoke = smoke_mode();
+    let scale = if smoke { 0.01 } else { 0.05 };
+    let runs = if smoke { 2 } else { 5 };
+    let shape = BurstShape {
+        solves: if smoke { 8 } else { 24 },
+        predicts: if smoke { 4 } else { 12 },
+        overflow: if smoke { 3 } else { 8 },
+        iters: if smoke { 40 } else { 150 },
+    };
+    let ds = Arc::new(
+        SynthConfig::preset(DatasetPreset::News20).scale(scale).generate(42),
+    );
+    println!(
+        "ingress burst: News20-synth scale={scale} (N={}, D={}, nnz={})",
+        ds.n_rows(),
+        ds.n_cols(),
+        ds.nnz()
+    );
+
+    let mut report = JsonReport::with_env("BENCH_ingress.json", "DPFW_BENCH_INGRESS_JSON");
+    for workers in [1usize, 4] {
+        section(&format!(
+            "ingress burst: {} solves (+{} overflow) + {} predicts, {} workers",
+            shape.solves, shape.overflow, shape.predicts, workers
+        ));
+        let stats = Bench::new(format!("ingress-{workers}w"))
+            .warmup(1)
+            .runs(runs)
+            .run_stats(|| run_burst(&ds, workers, &shape));
+        // metrics from a fresh, untimed burst (the timed ones are dropped)
+        let ing = run_burst(&ds, workers, &shape);
+        let m = ing.metrics();
+        let hub = ing.hub();
+        println!(
+            "  {} | solve p50/p99 {}/{} µs, predict p50/p99 {}/{} µs, \
+             hub leads/attaches {}/{}",
+            m.summary(),
+            m.cell_latency.p50_us(),
+            m.cell_latency.p99_us(),
+            m.predict_latency.p50_us(),
+            m.predict_latency.p99_us(),
+            hub.leads(),
+            hub.attaches(),
+        );
+        report.record(
+            &format!("ingress-burst-{workers}w"),
+            stats,
+            &[
+                ("workers", workers.to_string()),
+                ("admits", m.admits.load(Ordering::Relaxed).to_string()),
+                ("sheds", m.admission_sheds.load(Ordering::Relaxed).to_string()),
+                ("redirects", m.redirects.load(Ordering::Relaxed).to_string()),
+                ("brownout_jobs", m.brownout_jobs.load(Ordering::Relaxed).to_string()),
+                ("hub_leads", hub.leads().to_string()),
+                ("hub_attaches", hub.attaches().to_string()),
+                ("solve_p50_us", m.cell_latency.p50_us().to_string()),
+                ("solve_p99_us", m.cell_latency.p99_us().to_string()),
+                ("predict_p50_us", m.predict_latency.p50_us().to_string()),
+                ("predict_p99_us", m.predict_latency.p99_us().to_string()),
+                ("bytes_per_request", m.bytes_per_request().to_string()),
+            ],
+        );
+    }
+    report.write().expect("failed to write ingress JSON");
+}

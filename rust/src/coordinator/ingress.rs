@@ -1,0 +1,687 @@
+//! Long-lived ingress service in front of the coordinator (DESIGN.md
+//! §6.10).
+//!
+//! The worker pool (§6.9) already guarantees that every *dispatched* job
+//! id resolves to a structured outcome. This layer adds the missing
+//! serving half: what happens *before* dispatch, when request volume
+//! exceeds what the pool can absorb. Every [`Ingress::submit`] returns an
+//! explicit [`Admit`] — the caller is never silently dropped:
+//!
+//! * **Bounded admission.** Each job class ([`JobClass`]: solve / path /
+//!   predict) carries its own [`ClassPolicy`]: a hard queue watermark
+//!   past which new requests are shed with a reason
+//!   ([`Admit::Shed`]), and an optional token-bucket rate limit that
+//!   bounces bursts with a computed retry-after ([`Admit::Redirected`]).
+//! * **Request coalescing.** The pool's workers share one
+//!   [`BootHub`]: concurrent solves over the same [`Dataset`] token fold
+//!   their dense bootstrap `α = Xᵀq̄` into a single leader compute that
+//!   followers attach to — bit-identical to independent solves (the
+//!   bootstrap is deterministic and thread-invariant), with each
+//!   follower still charged only its own ε (coalescing shares *compute*,
+//!   never mechanism releases).
+//! * **Brownout.** Under sustained soft-watermark breach the controller
+//!   degrades new solve/path admissions instead of shedding them:
+//!   `FwConfig::iter_cap` truncates the run, the result honestly reports
+//!   [`StopReason::Brownout`](crate::fw::cancel::StopReason) with
+//!   best-so-far weights, and `eps_spent` charges exactly the released
+//!   iterations at the noise scale calibrated for the *planned* budget
+//!   (`ε·√(cap/T)` — the §6.9 anytime contract).
+//! * **Circuit breaker.** [`IngressConfig::breaker_k`] forwards to the
+//!   pool's per-worker breaker ([`super::scheduler::PoolOptions`]).
+//!
+//! Everything is observable on the shared [`Metrics`]: admit / shed /
+//! redirect / brownout counters, per-class queue-inclusive latency, and
+//! bytes-per-request.
+
+use std::ops::Range;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::job::{JobSpec, PathJob, PredictJob};
+use super::metrics::Metrics;
+use super::scheduler::{Coordinator, JobOutcome, PoolOptions, RetryPolicy};
+use crate::fw::config::FwConfig;
+use crate::fw::workspace::BootHub;
+use crate::sparse::Dataset;
+
+/// Admission class of a request: each class has its own policy, queue
+/// accounting, and latency histogram.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobClass {
+    /// Single-cell training solve.
+    Solve,
+    /// Whole λ-path (one queue entry, many results).
+    Path,
+    /// Batch prediction over frozen weights.
+    Predict,
+}
+
+impl JobClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobClass::Solve => "solve",
+            JobClass::Path => "path",
+            JobClass::Predict => "predict",
+        }
+    }
+
+    fn idx(&self) -> usize {
+        match self {
+            JobClass::Solve => 0,
+            JobClass::Path => 1,
+            JobClass::Predict => 2,
+        }
+    }
+}
+
+/// Why a request was refused outright.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The class's queue depth reached its hard watermark.
+    QueueFull { class: JobClass, depth: usize, watermark: usize },
+    /// The ingress was shut down; nothing is dispatched anymore.
+    PoolDown,
+}
+
+/// The admission decision for one request — every call to
+/// [`Ingress::submit`] resolves to exactly one of these, so callers
+/// always learn what happened (no silent drops).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Admit {
+    /// Enqueued; the ids will each resolve to `Ok`/`Err` in
+    /// [`Ingress::drain`] (the §6.9 contract). `browned_out` reports
+    /// whether the brownout controller reduced this run's iteration
+    /// budget — the result will carry `StopReason::Brownout` and a
+    /// correspondingly smaller `eps_spent`.
+    Accepted { ids: Range<usize>, browned_out: bool },
+    /// Refused with a reason; nothing was enqueued and no id exists.
+    Shed(ShedReason),
+    /// Rate-limited: nothing was enqueued; retry no sooner than
+    /// `retry_after`.
+    Redirected { retry_after: Duration },
+}
+
+impl Admit {
+    /// The admitted ids, if any.
+    pub fn ids(&self) -> Option<Range<usize>> {
+        match self {
+            Admit::Accepted { ids, .. } => Some(ids.clone()),
+            _ => None,
+        }
+    }
+
+    pub fn is_accepted(&self) -> bool {
+        matches!(self, Admit::Accepted { .. })
+    }
+}
+
+/// One request, before the ingress assigns ids. The `id` / `base_id`
+/// fields of the payload are overwritten at admission — the ingress owns
+/// the id space so outcomes route back unambiguously.
+pub enum Request {
+    Solve(JobSpec),
+    Path(PathJob),
+    Predict(PredictJob),
+}
+
+impl Request {
+    pub fn class(&self) -> JobClass {
+        match self {
+            Request::Solve(_) => JobClass::Solve,
+            Request::Path(_) => JobClass::Path,
+            Request::Predict(_) => JobClass::Predict,
+        }
+    }
+
+    fn n_results(&self) -> usize {
+        match self {
+            Request::Solve(_) | Request::Predict(_) => 1,
+            Request::Path(p) => p.lambdas.len(),
+        }
+    }
+
+    /// The dataset this request reads (coalescing key material).
+    pub fn dataset(&self) -> &Arc<Dataset> {
+        match self {
+            Request::Solve(s) => &s.data,
+            Request::Path(p) => &p.data,
+            Request::Predict(p) => &p.data,
+        }
+    }
+}
+
+/// Classic token bucket: `rate` tokens/s refill up to `burst`; one token
+/// per admitted request. Deterministic given the wall clock — no RNG.
+struct TokenBucket {
+    rate: f64,
+    burst: f64,
+    tokens: f64,
+    last: Instant,
+}
+
+impl TokenBucket {
+    fn new(rate: f64, burst: f64) -> Self {
+        // start full so the first burst up to `burst` passes
+        Self { rate, burst: burst.max(1.0), tokens: burst.max(1.0), last: Instant::now() }
+    }
+
+    /// Take one token, or report how long until one accrues.
+    fn try_take(&mut self) -> Result<(), Duration> {
+        let now = Instant::now();
+        let dt = now.duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.tokens = (self.tokens + dt * self.rate).min(self.burst);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            Ok(())
+        } else {
+            Err(Duration::from_secs_f64((1.0 - self.tokens) / self.rate.max(1e-9)))
+        }
+    }
+}
+
+/// Per-class admission policy. The default is fully open: no rate limit,
+/// no watermarks.
+#[derive(Clone, Copy, Debug)]
+pub struct ClassPolicy {
+    /// Token-bucket refill rate (requests/s); `None` = unlimited.
+    pub rate_per_sec: Option<f64>,
+    /// Token-bucket capacity (instantaneous burst allowance, min 1).
+    pub burst: f64,
+    /// Queue depth at and past which new requests of this class are shed
+    /// ([`Admit::Shed`] / [`ShedReason::QueueFull`]).
+    pub queue_hard: usize,
+    /// Queue depth at and past which admissions count as watermark
+    /// breaches toward brownout (must be ≤ `queue_hard` to matter).
+    pub queue_soft: usize,
+}
+
+impl Default for ClassPolicy {
+    fn default() -> Self {
+        Self {
+            rate_per_sec: None,
+            burst: 8.0,
+            queue_hard: usize::MAX,
+            queue_soft: usize::MAX,
+        }
+    }
+}
+
+/// Ingress construction knobs.
+#[derive(Clone, Debug)]
+pub struct IngressConfig {
+    pub solve: ClassPolicy,
+    pub path: ClassPolicy,
+    pub predict: ClassPolicy,
+    /// Consecutive soft-watermark breaches before brownout activates.
+    pub brownout_after: u32,
+    /// Fraction of the planned update steps (`iters − 1`) a browned-out
+    /// run keeps (floored, then clamped up to `brownout_min_iters`).
+    pub brownout_frac: f64,
+    /// Floor on the browned-out iteration cap — degraded answers must
+    /// still be answers.
+    pub brownout_min_iters: usize,
+    /// Per-worker circuit breaker threshold (0 = disabled); forwarded to
+    /// [`PoolOptions::breaker_k`].
+    pub breaker_k: u32,
+    /// Worker pool size (min 1).
+    pub workers: usize,
+    /// Seed-pinned retry policy for panicked jobs.
+    pub retry: RetryPolicy,
+}
+
+impl Default for IngressConfig {
+    fn default() -> Self {
+        Self {
+            solve: ClassPolicy::default(),
+            path: ClassPolicy::default(),
+            predict: ClassPolicy::default(),
+            brownout_after: 3,
+            brownout_frac: 0.5,
+            brownout_min_iters: 8,
+            breaker_k: 0,
+            workers: 2,
+            retry: RetryPolicy::default(),
+        }
+    }
+}
+
+/// The long-lived ingress: owns the coordinator, the id space, the
+/// per-class admission state, and the bootstrap-coalescing hub its
+/// workers share.
+pub struct Ingress {
+    coord: Coordinator,
+    cfg: IngressConfig,
+    hub: Arc<BootHub>,
+    /// Per-class token buckets (index = [`JobClass::idx`]).
+    buckets: [Option<TokenBucket>; 3],
+    /// Requests admitted this drain cycle, per class (the queue-depth
+    /// figure the watermarks compare against; reset by [`Self::drain`]).
+    pending: [usize; 3],
+    next_id: usize,
+    /// Consecutive soft-watermark breaches (brownout arms at
+    /// `cfg.brownout_after`).
+    breaches: u32,
+    brownout_active: bool,
+    down: bool,
+}
+
+impl Ingress {
+    pub fn new(cfg: IngressConfig) -> Self {
+        let hub = Arc::new(BootHub::new());
+        let coord = Coordinator::with_options(
+            cfg.workers,
+            PoolOptions {
+                retry: cfg.retry,
+                breaker_k: cfg.breaker_k,
+                boot_hub: Some(Arc::clone(&hub)),
+            },
+        );
+        let mk = |p: &ClassPolicy| p.rate_per_sec.map(|r| TokenBucket::new(r, p.burst));
+        let buckets = [mk(&cfg.solve), mk(&cfg.path), mk(&cfg.predict)];
+        Self {
+            coord,
+            cfg,
+            hub,
+            buckets,
+            pending: [0; 3],
+            next_id: 0,
+            breaches: 0,
+            brownout_active: false,
+            down: false,
+        }
+    }
+
+    fn policy(&self, class: JobClass) -> &ClassPolicy {
+        match class {
+            JobClass::Solve => &self.cfg.solve,
+            JobClass::Path => &self.cfg.path,
+            JobClass::Predict => &self.cfg.predict,
+        }
+    }
+
+    /// Admit or refuse one request. Every accepted id is owed exactly one
+    /// outcome from [`Self::drain`]; a shed or redirect enqueues nothing.
+    pub fn submit(&mut self, req: Request) -> Admit {
+        let m = Arc::clone(&self.coord.metrics);
+        let class = req.class();
+        if self.down {
+            m.admission_sheds.fetch_add(1, Ordering::Relaxed);
+            return Admit::Shed(ShedReason::PoolDown);
+        }
+        let pol = *self.policy(class);
+        let depth = self.pending[class.idx()];
+        if depth >= pol.queue_hard {
+            m.admission_sheds.fetch_add(1, Ordering::Relaxed);
+            return Admit::Shed(ShedReason::QueueFull {
+                class,
+                depth,
+                watermark: pol.queue_hard,
+            });
+        }
+        if let Some(bucket) = &mut self.buckets[class.idx()] {
+            if let Err(retry_after) = bucket.try_take() {
+                m.redirects.fetch_add(1, Ordering::Relaxed);
+                return Admit::Redirected { retry_after };
+            }
+        }
+
+        // ---- brownout controller (soft watermark) ----------------------
+        if depth >= pol.queue_soft {
+            self.breaches += 1;
+            if self.breaches >= self.cfg.brownout_after && !self.brownout_active {
+                self.brownout_active = true;
+                m.brownout_entries.fetch_add(1, Ordering::Relaxed);
+            }
+        } else {
+            self.breaches = 0;
+            self.brownout_active = false;
+        }
+
+        let n = req.n_results();
+        let ids = self.next_id..self.next_id + n;
+        self.next_id += n;
+        let mut browned = false;
+        match req {
+            Request::Solve(mut s) => {
+                s.id = ids.start;
+                if self.brownout_active {
+                    browned = apply_brownout(&mut s.cfg, &self.cfg);
+                }
+                self.coord.submit(s);
+            }
+            Request::Path(mut p) => {
+                p.base_id = ids.start;
+                if self.brownout_active {
+                    browned = apply_brownout(&mut p.cfg, &self.cfg);
+                }
+                self.coord.submit_path(p);
+            }
+            Request::Predict(mut p) => {
+                // predictions have no iteration budget to degrade
+                p.id = ids.start;
+                self.coord.submit_predict(p);
+            }
+        }
+        if browned {
+            m.brownout_jobs.fetch_add(1, Ordering::Relaxed);
+        }
+        self.pending[class.idx()] += 1;
+        m.admits.fetch_add(1, Ordering::Relaxed);
+        Admit::Accepted { ids, browned_out: browned }
+    }
+
+    /// Block until every admitted id has an outcome; `(id, outcome)`
+    /// pairs sorted by id. Resets the per-class queue accounting — a
+    /// drained ingress is back below every watermark.
+    pub fn drain(&mut self) -> Vec<(usize, JobOutcome)> {
+        let out = self.coord.drain_with_ids();
+        self.pending = [0; 3];
+        out
+    }
+
+    /// Stop admitting and tear the pool down; later submissions shed as
+    /// [`ShedReason::PoolDown`]. Idempotent.
+    pub fn shutdown(&mut self) {
+        self.down = true;
+        self.coord.shutdown();
+    }
+
+    /// Requests of `class` admitted and not yet drained.
+    pub fn queue_depth(&self, class: JobClass) -> usize {
+        self.pending[class.idx()]
+    }
+
+    /// Is the brownout controller currently degrading new admissions?
+    pub fn brownout_active(&self) -> bool {
+        self.brownout_active
+    }
+
+    /// The shared serving metrics (same object the pool records into).
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.coord.metrics
+    }
+
+    /// The bootstrap-coalescing hub (lead/attach/detach telemetry).
+    pub fn hub(&self) -> &Arc<BootHub> {
+        &self.hub
+    }
+
+    /// Workers currently in rotation (shrinks under quarantine).
+    pub fn live_workers(&self) -> usize {
+        self.coord.live_workers()
+    }
+
+    pub fn summary(&self) -> String {
+        self.coord.metrics.summary()
+    }
+}
+
+impl Drop for Ingress {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Tighten `cfg.iter_cap` to the brownout budget: a fraction of the
+/// planned update steps (`iters − 1`), floored at `brownout_min_iters`.
+/// Returns whether the cap actually reduced this run (a submitter cap
+/// that is already tighter is left alone — never raise a cap).
+fn apply_brownout(cfg: &mut FwConfig, icfg: &IngressConfig) -> bool {
+    let planned = cfg.iters.saturating_sub(1);
+    let cap = ((planned as f64) * icfg.brownout_frac).floor() as usize;
+    let cap = cap.max(icfg.brownout_min_iters);
+    if cap >= planned {
+        return false; // tiny runs are cheaper to finish than to degrade
+    }
+    match cfg.iter_cap {
+        Some(existing) if existing <= cap => false,
+        _ => {
+            cfg.iter_cap = Some(cap);
+            true
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::Algo;
+    use crate::dp::accounting::PrivacyParams;
+    use crate::fw::cancel::{CancelToken, StopReason};
+    use crate::sparse::synth::SynthConfig;
+    use crate::testkit::faults::FaultPlan;
+
+    fn ds(seed: u64) -> Arc<Dataset> {
+        Arc::new(
+            SynthConfig {
+                name: format!("ing{seed}"),
+                n_rows: 80,
+                n_cols: 40,
+                avg_row_nnz: 6.0,
+                zipf_exponent: 1.2,
+                n_informative: 8,
+                n_dense: 0,
+                label_noise: 0.02,
+                bias_col: true,
+            }
+            .generate(seed),
+        )
+    }
+
+    fn solve_req(data: Arc<Dataset>, iters: usize) -> Request {
+        Request::Solve(JobSpec {
+            id: 0, // ingress overwrites
+            label: "s".into(),
+            data,
+            algo: Algo::Fast,
+            cfg: FwConfig { iters, lambda: 4.0, ..Default::default() },
+            test_data: None,
+        })
+    }
+
+    #[test]
+    fn accepts_and_resolves_every_admitted_id() {
+        let mut ing = Ingress::new(IngressConfig { workers: 2, ..Default::default() });
+        let d = ds(1);
+        let mut owed = Vec::new();
+        for _ in 0..4 {
+            match ing.submit(solve_req(d.clone(), 40)) {
+                Admit::Accepted { ids, browned_out } => {
+                    assert!(!browned_out);
+                    owed.extend(ids);
+                }
+                other => panic!("open policy must accept: {other:?}"),
+            }
+        }
+        let w = Arc::new(vec![0.0; d.csr.n_cols()]);
+        let Admit::Accepted { ids, .. } = ing.submit(Request::Predict(PredictJob {
+            id: 0,
+            label: "p".into(),
+            data: d.clone(),
+            weights: w,
+            threads: 0,
+            cancel: CancelToken::none(),
+            fault: FaultPlan::none(),
+        })) else {
+            panic!("predict must be accepted")
+        };
+        owed.extend(ids);
+        let out = ing.drain();
+        assert_eq!(out.len(), owed.len());
+        for ((id, outcome), want) in out.iter().zip(&owed) {
+            assert_eq!(id, want);
+            assert!(outcome.is_ok(), "{outcome:?}");
+        }
+        let m = ing.metrics();
+        assert_eq!(m.admits.load(Ordering::Relaxed), 5);
+        assert_eq!(m.admission_sheds.load(Ordering::Relaxed), 0);
+        assert_eq!(m.queue_depth.load(Ordering::Relaxed), 0);
+        assert!(m.bytes_per_request() > 0);
+    }
+
+    #[test]
+    fn hard_watermark_sheds_with_reason() {
+        let mut ing = Ingress::new(IngressConfig {
+            workers: 1,
+            solve: ClassPolicy { queue_hard: 2, ..Default::default() },
+            ..Default::default()
+        });
+        let d = ds(2);
+        assert!(ing.submit(solve_req(d.clone(), 40)).is_accepted());
+        assert!(ing.submit(solve_req(d.clone(), 40)).is_accepted());
+        match ing.submit(solve_req(d.clone(), 40)) {
+            Admit::Shed(ShedReason::QueueFull { class, depth, watermark }) => {
+                assert_eq!(class, JobClass::Solve);
+                assert_eq!((depth, watermark), (2, 2));
+            }
+            other => panic!("expected queue-full shed, got {other:?}"),
+        }
+        assert_eq!(ing.metrics().admission_sheds.load(Ordering::Relaxed), 1);
+        // both accepted ids still resolve; the shed enqueued nothing
+        let out = ing.drain();
+        assert_eq!(out.len(), 2);
+        assert!(out.iter().all(|(_, o)| o.is_ok()));
+        // drain resets the class queue: admissions flow again
+        assert!(ing.submit(solve_req(d, 40)).is_accepted());
+    }
+
+    #[test]
+    fn token_bucket_redirects_with_retry_after() {
+        let mut ing = Ingress::new(IngressConfig {
+            workers: 1,
+            predict: ClassPolicy {
+                rate_per_sec: Some(0.001),
+                burst: 1.0,
+                ..Default::default()
+            },
+            ..Default::default()
+        });
+        let d = ds(3);
+        let w = Arc::new(vec![0.0; d.csr.n_cols()]);
+        let req = |d: &Arc<Dataset>, w: &Arc<Vec<f64>>| {
+            Request::Predict(PredictJob {
+                id: 0,
+                label: "p".into(),
+                data: d.clone(),
+                weights: w.clone(),
+                threads: 0,
+                cancel: CancelToken::none(),
+                fault: FaultPlan::none(),
+            })
+        };
+        assert!(ing.submit(req(&d, &w)).is_accepted(), "burst of 1 admits the first");
+        match ing.submit(req(&d, &w)) {
+            Admit::Redirected { retry_after } => {
+                assert!(retry_after > Duration::ZERO);
+            }
+            other => panic!("expected redirect, got {other:?}"),
+        }
+        assert_eq!(ing.metrics().redirects.load(Ordering::Relaxed), 1);
+        // solves use a different bucket: unaffected
+        assert!(ing.submit(solve_req(d, 40)).is_accepted());
+        let out = ing.drain();
+        assert_eq!(out.len(), 2);
+    }
+
+    #[test]
+    fn brownout_degrades_honestly_with_exact_eps_accounting() {
+        let mut ing = Ingress::new(IngressConfig {
+            workers: 1,
+            // soft watermark 0: every admission breaches; brownout arms on
+            // the third consecutive breach
+            solve: ClassPolicy { queue_soft: 0, ..Default::default() },
+            brownout_after: 3,
+            brownout_frac: 0.5,
+            brownout_min_iters: 8,
+            ..Default::default()
+        });
+        let d = ds(4);
+        let iters = 80;
+        let pp = PrivacyParams::new(1.0, 1e-6);
+        let req = || {
+            Request::Solve(JobSpec {
+                id: 0,
+                label: "b".into(),
+                data: d.clone(),
+                algo: Algo::Fast,
+                cfg: FwConfig {
+                    iters,
+                    lambda: 4.0,
+                    privacy: Some(pp),
+                    ..Default::default()
+                },
+                test_data: None,
+            })
+        };
+        let mut browned_ids = Vec::new();
+        for k in 0..5 {
+            match ing.submit(req()) {
+                Admit::Accepted { ids, browned_out } => {
+                    // breaches arm the controller at the 3rd admission
+                    assert_eq!(browned_out, k >= 2, "admission {k}");
+                    if browned_out {
+                        browned_ids.extend(ids);
+                    }
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+        assert!(ing.brownout_active());
+        let cap = (((iters - 1) as f64) * 0.5).floor() as usize; // 39
+        let out = ing.drain();
+        assert_eq!(out.len(), 5);
+        for (id, o) in &out {
+            let r = o.as_ref().expect("browned-out runs still succeed");
+            if browned_ids.contains(id) {
+                assert_eq!(r.output.stopped, StopReason::Brownout);
+                assert_eq!(r.output.iters_run, cap);
+                // exact accounting: the ε of `cap` releases at the noise
+                // scale calibrated for the planned T — bitwise
+                assert_eq!(r.output.eps_spent, Some(pp.spent_epsilon(iters, cap)));
+            } else {
+                assert_eq!(r.output.stopped, StopReason::IterBudget);
+                assert_eq!(r.output.iters_run, iters - 1);
+            }
+        }
+        assert_eq!(ing.metrics().brownout_jobs.load(Ordering::Relaxed), 3);
+        assert_eq!(ing.metrics().brownout_entries.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn brownout_never_raises_an_existing_cap() {
+        let icfg = IngressConfig {
+            brownout_frac: 0.5,
+            brownout_min_iters: 8,
+            ..Default::default()
+        };
+        let mut cfg = FwConfig { iters: 100, ..Default::default() };
+        assert!(apply_brownout(&mut cfg, &icfg));
+        assert_eq!(cfg.iter_cap, Some(49));
+        // a tighter submitter cap survives
+        let mut tight = FwConfig { iters: 100, iter_cap: Some(10), ..Default::default() };
+        assert!(!apply_brownout(&mut tight, &icfg));
+        assert_eq!(tight.iter_cap, Some(10));
+        // a looser cap is tightened
+        let mut loose = FwConfig { iters: 100, iter_cap: Some(90), ..Default::default() };
+        assert!(apply_brownout(&mut loose, &icfg));
+        assert_eq!(loose.iter_cap, Some(49));
+        // tiny runs are not degraded below the floor
+        let mut tiny = FwConfig { iters: 9, ..Default::default() };
+        assert!(!apply_brownout(&mut tiny, &icfg));
+        assert_eq!(tiny.iter_cap, None);
+    }
+
+    #[test]
+    fn shutdown_sheds_as_pool_down() {
+        let mut ing = Ingress::new(IngressConfig { workers: 1, ..Default::default() });
+        let d = ds(5);
+        ing.shutdown();
+        match ing.submit(solve_req(d, 40)) {
+            Admit::Shed(ShedReason::PoolDown) => {}
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(ing.metrics().admission_sheds.load(Ordering::Relaxed), 1);
+    }
+}

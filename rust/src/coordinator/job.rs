@@ -3,12 +3,15 @@
 use std::sync::Arc;
 
 use crate::eval;
+use crate::fw::cancel::CancelToken;
 use crate::fw::config::FwConfig;
 use crate::fw::fast::FastFrankWolfe;
+use crate::fw::flops::{BYTES_F32_READ, BYTES_F64_READ, FLOPS_SIGMOID};
 use crate::fw::standard::StandardFrankWolfe;
 use crate::fw::trace::FwOutput;
 use crate::fw::workspace::FwWorkspace;
 use crate::sparse::Dataset;
+use crate::testkit::faults::FaultPlan;
 
 /// Which solver implementation to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -17,6 +20,10 @@ pub enum Algo {
     Standard,
     /// Algorithm 2 — fast sparse-aware FW.
     Fast,
+    /// Not a solver: batch inference over frozen weights (a
+    /// [`PredictJob`]). Lives in `Algo` so [`JobResult::algo`] can label
+    /// all three serving classes uniformly.
+    Predict,
 }
 
 impl Algo {
@@ -24,6 +31,7 @@ impl Algo {
         match self {
             Algo::Standard => "alg1",
             Algo::Fast => "alg2",
+            Algo::Predict => "predict",
         }
     }
 
@@ -31,6 +39,7 @@ impl Algo {
         match s {
             "alg1" | "standard" => Some(Algo::Standard),
             "alg2" | "fast" => Some(Algo::Fast),
+            "predict" => Some(Algo::Predict),
             _ => None,
         }
     }
@@ -62,11 +71,22 @@ impl JobSpec {
     /// buffers and selector storage instead of reallocating per job.
     /// Bit-exactly equivalent to [`JobSpec::run`].
     pub fn run_in(&self, ws: &mut FwWorkspace) -> JobResult {
+        // On a hub-connected workspace (ingress pool, DESIGN.md §6.10) the
+        // bootstrap runs in Shared mode so concurrent same-dataset solves
+        // coalesce into one leader compute; output stays bit-identical.
+        let shared = ws.has_boot_hub();
         let out = match self.algo {
             Algo::Standard => {
-                StandardFrankWolfe::new(&self.data, self.cfg.clone()).run_in(ws)
+                let s = StandardFrankWolfe::new(&self.data, self.cfg.clone());
+                if shared { s.run_in_shared(ws) } else { s.run_in(ws) }
             }
-            Algo::Fast => FastFrankWolfe::new(&self.data, self.cfg.clone()).run_in(ws),
+            Algo::Fast => {
+                let s = FastFrankWolfe::new(&self.data, self.cfg.clone());
+                if shared { s.run_in_shared(ws) } else { s.run_in(ws) }
+            }
+            Algo::Predict => {
+                panic!("Algo::Predict is not a solver; submit a PredictJob")
+            }
         };
         finish_result(
             self.id,
@@ -110,6 +130,7 @@ fn finish_result(
         accuracy,
         auc,
         sparsity_pct: eval::sparsity_pct(out.weights.as_slice()),
+        predictions: None,
         output: out,
     }
 }
@@ -150,6 +171,9 @@ impl PathJob {
             Algo::Fast => {
                 FastFrankWolfe::new(&self.data, self.cfg.clone()).run_path(&self.lambdas, ws)
             }
+            Algo::Predict => {
+                panic!("Algo::Predict is not a solver; submit a PredictJob")
+            }
         };
         outs.into_iter()
             .zip(&self.lambdas)
@@ -168,19 +192,82 @@ impl PathJob {
     }
 }
 
-/// What the scheduler dispatches: one grid cell, or a whole λ-path that
-/// must stay on one worker to share its workspace's bootstrap cache.
+/// One batch-inference job: score a frozen weight vector over a dataset
+/// (`p_i = σ(x_i·w)`) with no solver work and no privacy spend — the
+/// third ingress job class (DESIGN.md §6.10), cheap and latency-bound,
+/// scheduled on the same worker pool as solves.
+#[derive(Clone)]
+pub struct PredictJob {
+    pub id: usize,
+    pub label: String,
+    pub data: Arc<Dataset>,
+    /// Frozen model; length must equal the dataset's column count.
+    pub weights: Arc<Vec<f64>>,
+    /// Scoring thread budget; `0` = auto (the pool pins pooled jobs to 1).
+    pub threads: usize,
+    pub cancel: CancelToken,
+    pub fault: FaultPlan,
+}
+
+impl PredictJob {
+    /// Score synchronously. The result's `output` carries the §6.6 flop /
+    /// byte model of the single CSR sweep (index stream + per-nonzero
+    /// value read and `w` gather + per-row sigmoid) so ingress
+    /// bytes-per-request accounting covers predictions too.
+    pub fn run(&self) -> JobResult {
+        let start = std::time::Instant::now();
+        assert_eq!(
+            self.weights.len(),
+            self.data.csr.n_cols(),
+            "weight/feature dimension mismatch"
+        );
+        let threads = match self.threads {
+            0 => crate::sparse::auto_threads(self.data.nnz()),
+            t => t,
+        };
+        let p = score_with_threads(&self.data, &self.weights, threads);
+        let n = self.data.csr.n_rows() as u64;
+        let nnz = self.data.nnz() as u64;
+        let flops = 2 * nnz + n * FLOPS_SIGMOID;
+        let bytes = self.data.csr.index_bytes_total()
+            + (BYTES_F32_READ + BYTES_F64_READ) * nnz
+            + BYTES_F64_READ * n;
+        let out = FwOutput::scored(
+            self.weights.as_ref().clone(),
+            flops,
+            bytes,
+            start.elapsed().as_secs_f64() * 1e3,
+            threads,
+        );
+        JobResult {
+            id: self.id,
+            label: self.label.clone(),
+            algo: Algo::Predict,
+            selector: "none".into(),
+            accuracy: Some(eval::accuracy(&p, &self.data.labels)),
+            auc: Some(eval::auc(&p, &self.data.labels)),
+            sparsity_pct: eval::sparsity_pct(&self.weights),
+            predictions: Some(p),
+            output: out,
+        }
+    }
+}
+
+/// What the scheduler dispatches: one grid cell, a whole λ-path that
+/// must stay on one worker to share its workspace's bootstrap cache, or
+/// a batch prediction.
 #[derive(Clone)]
 pub enum Job {
     Cell(JobSpec),
     Path(PathJob),
+    Predict(PredictJob),
 }
 
 impl Job {
     /// How many [`JobResult`]s this job produces.
     pub fn n_results(&self) -> usize {
         match self {
-            Job::Cell(_) => 1,
+            Job::Cell(_) | Job::Predict(_) => 1,
             Job::Path(p) => p.lambdas.len(),
         }
     }
@@ -191,6 +278,7 @@ impl Job {
         match self {
             Job::Cell(c) => c.id..c.id + 1,
             Job::Path(p) => p.base_id..p.base_id + p.lambdas.len(),
+            Job::Predict(p) => p.id..p.id + 1,
         }
     }
 
@@ -199,20 +287,39 @@ impl Job {
         match self {
             Job::Cell(c) => vec![c.run_in(ws)],
             Job::Path(p) => p.run_in(ws),
+            Job::Predict(p) => vec![p.run()],
         }
     }
 
-    pub(crate) fn cfg_mut(&mut self) -> &mut FwConfig {
+    /// The job's stop signal (shed-while-queued, deadline supervision).
+    pub(crate) fn cancel(&self) -> &CancelToken {
         match self {
-            Job::Cell(c) => &mut c.cfg,
-            Job::Path(p) => &mut p.cfg,
+            Job::Cell(c) => &c.cfg.cancel,
+            Job::Path(p) => &p.cfg.cancel,
+            Job::Predict(p) => &p.cancel,
         }
     }
 
-    pub(crate) fn cfg(&self) -> &FwConfig {
+    /// The job's fault-injection plan (tests/benches only; defaults
+    /// disarmed).
+    pub(crate) fn fault(&self) -> &FaultPlan {
         match self {
-            Job::Cell(c) => &c.cfg,
-            Job::Path(p) => &p.cfg,
+            Job::Cell(c) => &c.cfg.fault,
+            Job::Path(p) => &p.cfg.fault,
+            Job::Predict(p) => &p.fault,
+        }
+    }
+
+    /// Pin auto-threaded jobs to one thread so a multi-worker pool doesn't
+    /// oversubscribe the machine (explicit budgets are respected).
+    pub(crate) fn pin_threads(&mut self) {
+        let t = match self {
+            Job::Cell(c) => &mut c.cfg.threads,
+            Job::Path(p) => &mut p.cfg.threads,
+            Job::Predict(p) => &mut p.threads,
+        };
+        if *t == 0 {
+            *t = 1;
         }
     }
 }
@@ -281,6 +388,10 @@ pub struct JobResult {
     pub accuracy: Option<f64>,
     pub auc: Option<f64>,
     pub sparsity_pct: f64,
+    /// Per-row scores `σ(x_i·w)` — populated only by [`PredictJob`]
+    /// (solve/path results never carry them; predictions for a trained
+    /// model are a separate predict request).
+    pub predictions: Option<Vec<f64>>,
     pub output: FwOutput,
 }
 

@@ -84,6 +84,10 @@ pub struct Metrics {
     pub jobs_failed: AtomicU64,
     pub iters_total: AtomicU64,
     pub flops_total: AtomicU64,
+    /// Modeled bytes moved by completed jobs (§6.6 traffic model, summed
+    /// over solve/path/predict outputs) — the numerator of the ingress
+    /// bytes-per-request figure.
+    pub bytes_total: AtomicU64,
     /// Worker-side wall time in microseconds (sums across workers, so it
     /// can exceed elapsed wall time — that ratio is pool utilization).
     pub busy_us: AtomicU64,
@@ -101,12 +105,32 @@ pub struct Metrics {
     pub timeouts: AtomicU64,
     /// Dead workers the supervisor replaced.
     pub workers_respawned: AtomicU64,
+    /// Workers taken out of rotation by the circuit breaker after K
+    /// consecutive panicking/dying jobs (DESIGN.md §6.10) — not respawned.
+    pub workers_quarantined: AtomicU64,
+    /// Requests the ingress accepted (every one resolves to a structured
+    /// outcome; `Admit::Accepted`).
+    pub admits: AtomicU64,
+    /// Requests the ingress refused outright (`Admit::Shed` — hard queue
+    /// watermark or pool down). Distinct from `sheds`, which counts jobs
+    /// accepted earlier whose cancel token fired while still queued.
+    pub admission_sheds: AtomicU64,
+    /// Requests bounced with a retry-after (`Admit::Redirected` — class
+    /// token bucket empty).
+    pub redirects: AtomicU64,
+    /// Jobs admitted with a brownout-reduced iteration cap.
+    pub brownout_jobs: AtomicU64,
+    /// Times the brownout controller switched from normal to degraded
+    /// mode (sustained soft-watermark breach).
+    pub brownout_entries: AtomicU64,
     /// Queue-inclusive latency (enqueue → results reported) of
     /// single-cell jobs.
     pub cell_latency: LatencyHisto,
     /// Queue-inclusive latency of whole-path jobs (one sample per path,
     /// not per λ — the path is the unit a client waits on).
     pub path_latency: LatencyHisto,
+    /// Queue-inclusive latency of predict jobs.
+    pub predict_latency: LatencyHisto,
     started: Instant,
 }
 
@@ -118,14 +142,22 @@ impl Default for Metrics {
             jobs_failed: AtomicU64::new(0),
             iters_total: AtomicU64::new(0),
             flops_total: AtomicU64::new(0),
+            bytes_total: AtomicU64::new(0),
             busy_us: AtomicU64::new(0),
             queue_depth: AtomicU64::new(0),
             retries: AtomicU64::new(0),
             sheds: AtomicU64::new(0),
             timeouts: AtomicU64::new(0),
             workers_respawned: AtomicU64::new(0),
+            workers_quarantined: AtomicU64::new(0),
+            admits: AtomicU64::new(0),
+            admission_sheds: AtomicU64::new(0),
+            redirects: AtomicU64::new(0),
+            brownout_jobs: AtomicU64::new(0),
+            brownout_entries: AtomicU64::new(0),
             cell_latency: LatencyHisto::new(),
             path_latency: LatencyHisto::new(),
+            predict_latency: LatencyHisto::new(),
             started: Instant::now(),
         }
     }
@@ -136,11 +168,19 @@ impl Metrics {
         Self::default()
     }
 
-    pub fn record_completion(&self, iters: u64, flops: u64, busy_us: u64) {
+    pub fn record_completion(&self, iters: u64, flops: u64, bytes: u64, busy_us: u64) {
         self.jobs_completed.fetch_add(1, Ordering::Relaxed);
         self.iters_total.fetch_add(iters, Ordering::Relaxed);
         self.flops_total.fetch_add(flops, Ordering::Relaxed);
+        self.bytes_total.fetch_add(bytes, Ordering::Relaxed);
         self.busy_us.fetch_add(busy_us, Ordering::Relaxed);
+    }
+
+    /// Modeled bytes moved per completed request — the ingress cost
+    /// figure the roadmap asks for (`0` before anything completes).
+    pub fn bytes_per_request(&self) -> u64 {
+        let done = self.jobs_completed.load(Ordering::Relaxed);
+        self.bytes_total.load(Ordering::Relaxed) / done.max(1)
     }
 
     pub fn elapsed_secs(&self) -> f64 {
@@ -155,8 +195,10 @@ impl Metrics {
     pub fn summary(&self) -> String {
         format!(
             "jobs {}/{} ({} failed), {:.2e} iters, {:.2e} flops, {:.1} iters/s, \
-             pool busy {:.2}s | depth {} retries {} sheds {} timeouts {} respawns {} | \
-             cell p50/p99 {}/{} µs, path p50/p99 {}/{} µs",
+             pool busy {:.2}s, {} B/req | depth {} retries {} sheds {} timeouts {} \
+             respawns {} quarantined {} | \
+             admit {} shed {} redirect {} brownout {} (entries {}) | \
+             cell p50/p99 {}/{} µs, path p50/p99 {}/{} µs, predict p50/p99 {}/{} µs",
             self.jobs_completed.load(Ordering::Relaxed),
             self.jobs_submitted.load(Ordering::Relaxed),
             self.jobs_failed.load(Ordering::Relaxed),
@@ -164,15 +206,24 @@ impl Metrics {
             self.flops_total.load(Ordering::Relaxed) as f64,
             self.iters_per_sec(),
             self.busy_us.load(Ordering::Relaxed) as f64 / 1e6,
+            self.bytes_per_request(),
             self.queue_depth.load(Ordering::Relaxed),
             self.retries.load(Ordering::Relaxed),
             self.sheds.load(Ordering::Relaxed),
             self.timeouts.load(Ordering::Relaxed),
             self.workers_respawned.load(Ordering::Relaxed),
+            self.workers_quarantined.load(Ordering::Relaxed),
+            self.admits.load(Ordering::Relaxed),
+            self.admission_sheds.load(Ordering::Relaxed),
+            self.redirects.load(Ordering::Relaxed),
+            self.brownout_jobs.load(Ordering::Relaxed),
+            self.brownout_entries.load(Ordering::Relaxed),
             self.cell_latency.p50_us(),
             self.cell_latency.p99_us(),
             self.path_latency.p50_us(),
             self.path_latency.p99_us(),
+            self.predict_latency.p50_us(),
+            self.predict_latency.p99_us(),
         )
     }
 }
@@ -185,14 +236,23 @@ mod tests {
     fn records_and_summarizes() {
         let m = Metrics::new();
         m.jobs_submitted.fetch_add(2, Ordering::Relaxed);
-        m.record_completion(100, 5000, 1234);
-        m.record_completion(50, 1000, 100);
+        m.record_completion(100, 5000, 800, 1234);
+        m.record_completion(50, 1000, 200, 100);
         assert_eq!(m.jobs_completed.load(Ordering::Relaxed), 2);
         assert_eq!(m.iters_total.load(Ordering::Relaxed), 150);
         assert_eq!(m.flops_total.load(Ordering::Relaxed), 6000);
+        assert_eq!(m.bytes_total.load(Ordering::Relaxed), 1000);
+        assert_eq!(m.bytes_per_request(), 500);
         let s = m.summary();
         assert!(s.contains("jobs 2/2"), "{s}");
         assert!(s.contains("retries 0"), "{s}");
+        assert!(s.contains("500 B/req"), "{s}");
+    }
+
+    #[test]
+    fn bytes_per_request_is_zero_before_any_completion() {
+        let m = Metrics::new();
+        assert_eq!(m.bytes_per_request(), 0);
     }
 
     #[test]

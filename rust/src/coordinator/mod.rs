@@ -20,13 +20,26 @@
 //! panic — with deadline shedding, supervised worker respawn, and
 //! seed-pinned retries ([`scheduler::RetryPolicy`]) whose DP mechanism
 //! stream is bit-identical to the first attempt.
+//!
+//! The long-lived ingress service ([`ingress::Ingress`], DESIGN.md §6.10)
+//! fronts the pool with bounded admission (explicit
+//! [`ingress::Admit`] accept/shed/redirect — callers are never silently
+//! dropped), per-class rate limits and queue watermarks, cross-request
+//! bootstrap coalescing through the workspace
+//! [`crate::fw::workspace::BootHub`], a brownout controller that degrades
+//! iteration budgets honestly under sustained overload, and a per-worker
+//! circuit breaker.
 
+pub mod ingress;
 pub mod job;
 pub mod metrics;
 pub mod registry;
 pub mod scheduler;
 
-pub use job::{Algo, Job, JobError, JobResult, JobSpec, PathJob};
+pub use ingress::{
+    Admit, ClassPolicy, Ingress, IngressConfig, JobClass, Request, ShedReason,
+};
+pub use job::{Algo, Job, JobError, JobResult, JobSpec, PathJob, PredictJob};
 pub use metrics::{LatencyHisto, Metrics};
 pub use registry::Registry;
-pub use scheduler::{Coordinator, JobOutcome, RetryPolicy};
+pub use scheduler::{Coordinator, JobOutcome, PoolOptions, RetryPolicy};

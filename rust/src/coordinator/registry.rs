@@ -1,6 +1,7 @@
 //! Results registry: collects [`JobResult`]s and exports CSV/JSON reports
 //! (the persistence layer behind every experiment table).
 
+use std::collections::HashMap;
 use std::path::Path;
 
 use anyhow::Result;
@@ -11,6 +12,10 @@ use crate::textio::{CsvTable, Json};
 #[derive(Default)]
 pub struct Registry {
     results: Vec<JobResult>,
+    /// Path-label index: `"{base}|lam{λ}"` results grouped by `base` at
+    /// insert time, so [`Registry::find_path`] is a hash lookup instead of
+    /// a full scan (values are indices into `results`).
+    path_index: HashMap<String, Vec<usize>>,
 }
 
 impl Registry {
@@ -19,11 +24,19 @@ impl Registry {
     }
 
     pub fn add(&mut self, r: JobResult) {
+        if let Some(cut) = r.label.rfind("|lam") {
+            self.path_index
+                .entry(r.label[..cut].to_string())
+                .or_default()
+                .push(self.results.len());
+        }
         self.results.push(r);
     }
 
     pub fn extend(&mut self, rs: impl IntoIterator<Item = JobResult>) {
-        self.results.extend(rs);
+        for r in rs {
+            self.add(r);
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -43,12 +56,12 @@ impl Registry {
     }
 
     /// All cells of a λ-path, in submission (id) order: path results carry
-    /// labels `"{base}|lam{λ}"` (see [`super::job::PathJob`]), so this
-    /// collects every result whose label extends `base` that way.
+    /// labels `"{base}|lam{λ}"` (see [`super::job::PathJob`]), indexed by
+    /// `base` at insert time — a hash lookup plus the per-path sort, not a
+    /// scan of every result the registry holds.
     pub fn find_path(&self, base: &str) -> Vec<&JobResult> {
-        let prefix = format!("{base}|lam");
-        let mut out: Vec<&JobResult> =
-            self.results.iter().filter(|r| r.label.starts_with(&prefix)).collect();
+        let Some(ix) = self.path_index.get(base) else { return Vec::new() };
+        let mut out: Vec<&JobResult> = ix.iter().map(|&i| &self.results[i]).collect();
         out.sort_by_key(|r| r.id);
         out
     }
@@ -210,5 +223,10 @@ mod tests {
         assert_eq!((path[0].id, path[1].id), (3, 4));
         assert!(path[0].label.ends_with("|lam2"));
         assert!(reg.find_path("nope").is_empty());
+        // non-path results interleave without polluting the index, and
+        // plain `add` (not just `extend`) keeps it current
+        reg.add(one_result());
+        assert_eq!(reg.find_path("news").len(), 2);
+        assert!(reg.find_path("cell-a").is_empty());
     }
 }

@@ -1,28 +1,35 @@
 //! The worker-pool scheduler: a supervised job queue over std threads
-//! (DESIGN.md §6.9).
+//! (DESIGN.md §6.9, §6.10).
 //!
 //! Design: one `mpsc` job channel (shared by workers behind a mutex — the
 //! jobs are seconds-long solver runs, so receiver contention is
-//! irrelevant), one result channel back. Panics in a job are caught and
+//! irrelevant), one event channel back. Panics in a job are caught and
 //! reported as failures rather than poisoning the pool — a failed grid
 //! cell must not take down a week-long experiment sweep.
 //!
-//! Jobs come in two shapes ([`Job`]): single grid cells, and whole
+//! Jobs come in three shapes ([`Job`]): single grid cells, whole
 //! regularization paths ([`super::job::PathJob`]) that the scheduler
 //! deliberately keeps on **one** worker so every λ shares that worker's
-//! workspace — and therefore its cached bootstrap (DESIGN.md §6.5). A
-//! path counts as `lambdas.len()` submissions: its per-λ results come back
-//! through the same channel with consecutive ids, so [`Coordinator::drain`]
-//! and the registry treat path cells and independent cells uniformly.
+//! workspace — and therefore its cached bootstrap (DESIGN.md §6.5) — and
+//! batch predictions ([`super::job::PredictJob`]). A path counts as
+//! `lambdas.len()` submissions: its per-λ results come back through the
+//! same channel with consecutive ids, so [`Coordinator::drain`] and the
+//! registry treat path cells and independent cells uniformly.
 //!
-//! The resilience layer on top (§6.9):
+//! The resilience layer on top (§6.9, §6.10):
 //!
-//! * **Supervision.** `drain` ticks on `recv_timeout`; on each tick it
-//!   scans the worker threads, fails a dead worker's in-flight ids as
-//!   [`JobError::WorkerDied`], and respawns a replacement on the same
-//!   channels — a dead worker costs its current job, never the pool. The
-//!   coordinator keeps its own `result_tx`/`job_rx` clones, so channel
-//!   disconnects cannot race the supervisor.
+//! * **Event-driven supervision.** Worker threads send
+//!   [`WorkerEvent::Exited`] from a drop guard the moment they unwind or
+//!   return, so `drain` reacts to a death immediately instead of polling
+//!   on a tick: it fails the dead worker's in-flight ids as
+//!   [`JobError::WorkerDied`] and respawns a replacement on the same
+//!   channels — a dead worker costs its current job, never the pool.
+//!   Events carry a per-spawn epoch so a stale exit from a replaced
+//!   worker can never double-fail a live one; a coarse fallback tick
+//!   (1 s) keeps a belt-and-braces `is_finished` scan for the
+//!   cannot-happen case of a lost event. The coordinator keeps its own
+//!   `result_tx`/`job_rx` clones, so channel disconnects cannot race the
+//!   supervisor.
 //! * **Shedding.** A job whose cancel token has already fired when a
 //!   worker picks it up is failed as [`JobError::Expired`] without any
 //!   solver work — the deadline-aware admission half of the serving story
@@ -34,30 +41,40 @@
 //!   untouched between attempts, so the DP mechanism stream of the retry
 //!   is bit-identical to the first attempt and the privacy spend does not
 //!   grow (property-tested in `tests/coordinator_faults.rs`).
+//! * **Circuit breaker.** With [`PoolOptions::breaker_k`] set, a worker
+//!   whose jobs panic or die K times *consecutively* (strikes reset on
+//!   any success) is quarantined — removed from rotation instead of
+//!   respawned — so a persistently poisoned worker stops eating jobs.
+//!   The last live worker is never quarantined: the pool degrades, it
+//!   does not die.
+//! * **Bootstrap coalescing.** With [`PoolOptions::boot_hub`] set, every
+//!   worker workspace attaches to the shared [`BootHub`], so concurrent
+//!   same-dataset solves fold into one leader bootstrap (§6.10).
 //! * **Every owed id resolves.** Each submission ends as exactly one
 //!   `Ok(JobResult)` or `Err(JobError)` from `drain`, whatever combination
-//!   of panics, deadlines, sheds, or worker deaths occurred.
+//!   of panics, deadlines, sheds, quarantines, or worker deaths occurred.
 
 use std::panic::AssertUnwindSafe;
-use std::sync::atomic::Ordering;
-use std::sync::mpsc::{self, RecvTimeoutError};
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use super::job::{Job, JobError, JobResult, JobSpec, PathJob};
+use super::job::{Job, JobError, JobResult, JobSpec, PathJob, PredictJob};
 use super::metrics::Metrics;
 use crate::fw::cancel::StopReason;
-use crate::fw::workspace::FwWorkspace;
+use crate::fw::workspace::{BootHub, FwWorkspace};
 
 /// Outcome of one job id: the result, or a structured [`JobError`].
 pub type JobOutcome = Result<JobResult, JobError>;
 
-/// Supervisor tick: how long `drain` waits on the result channel before
-/// scanning for dead workers. Small enough that a worker death stalls a
-/// drain by tens of milliseconds, large enough to be invisible next to
-/// seconds-long solves.
-const SUPERVISE_TICK: Duration = Duration::from_millis(20);
+/// Fallback supervisor tick: how long `drain` waits on the event channel
+/// before running the belt-and-braces `is_finished` scan. Worker exits
+/// are event-driven (the drop guard wakes `drain` immediately), so this
+/// only bounds recovery from a lost exit event — which requires the
+/// event channel itself to fail — and can afford to be coarse.
+const FALLBACK_TICK: Duration = Duration::from_secs(1);
 
 /// Ceiling on the per-retry backoff sleep (the policy doubles from
 /// [`RetryPolicy::backoff_base`] per attempt).
@@ -93,6 +110,21 @@ impl RetryPolicy {
     }
 }
 
+/// Pool construction knobs beyond the worker count (§6.10).
+#[derive(Clone, Default)]
+pub struct PoolOptions {
+    /// Seed-pinned in-place retry policy for panicked jobs.
+    pub retry: RetryPolicy,
+    /// Circuit breaker: quarantine a worker after this many *consecutive*
+    /// failed (panicked or died) jobs; `0` disables. Strikes reset on any
+    /// successful job, and the last live worker is never quarantined.
+    pub breaker_k: u32,
+    /// Ingress-scoped bootstrap coalescing hub, installed into every
+    /// worker's workspace so concurrent same-dataset solves share one
+    /// leader bootstrap.
+    pub boot_hub: Option<Arc<BootHub>>,
+}
+
 /// What travels down the job channel: the job plus its enqueue time, so
 /// the latency histograms measure queue wait + solve, not solve alone.
 struct Dispatch {
@@ -100,28 +132,93 @@ struct Dispatch {
     enqueued_at: Instant,
 }
 
+/// What travels back up from the workers.
+enum WorkerEvent {
+    /// One job id resolved.
+    Result(usize, JobOutcome),
+    /// A worker thread is exiting (sent from a drop guard, so it fires on
+    /// clean return, self-quarantine, and abrupt death alike). `epoch`
+    /// pins the event to one spawn: a stale exit from an already-replaced
+    /// worker is ignored instead of double-failing its successor.
+    Exited { worker_id: usize, epoch: u64, cause: ExitCause },
+}
+
+/// Why a worker thread exited.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ExitCause {
+    /// Job channel closed (coordinator shutdown) — expected, no respawn.
+    Shutdown,
+    /// The thread died without finishing its job (fault-injected abrupt
+    /// death, or a bug): fail the owed ids, strike, respawn or quarantine.
+    Died,
+    /// The worker tripped its own circuit breaker after reporting K
+    /// consecutive failures (all ids already resolved — nothing owed).
+    Quarantine,
+}
+
+/// Sends [`WorkerEvent::Exited`] however the worker body ends — clean
+/// return sets `cause` first; an unwind leaves the `Died` default.
+struct ExitGuard {
+    tx: mpsc::Sender<WorkerEvent>,
+    worker_id: usize,
+    epoch: u64,
+    cause: ExitCause,
+}
+
+impl Drop for ExitGuard {
+    fn drop(&mut self) {
+        let _ = self.tx.send(WorkerEvent::Exited {
+            worker_id: self.worker_id,
+            epoch: self.epoch,
+            cause: self.cause,
+        });
+    }
+}
+
 /// One worker thread plus the in-flight slot the supervisor reads when
 /// the thread dies: the result ids of the job it was running, `None`
 /// between jobs. The slot is set *before* the job starts and cleared
 /// only after every result was sent, so a death at any point in between
-/// leaves exactly the owed ids behind.
+/// leaves exactly the owed ids behind. `strikes` (consecutive failures,
+/// shared with the thread) survives respawn so a worker that keeps dying
+/// still walks toward the breaker.
 struct WorkerSlot {
     handle: JoinHandle<()>,
     inflight: Arc<Mutex<Option<std::ops::Range<usize>>>>,
+    worker_id: usize,
+    epoch: u64,
+    strikes: Arc<AtomicU32>,
+}
+
+/// Everything one worker thread needs (bundled so the spawn site stays
+/// readable).
+struct WorkerCtx {
+    rx: Arc<Mutex<mpsc::Receiver<Dispatch>>>,
+    tx: mpsc::Sender<WorkerEvent>,
+    metrics: Arc<Metrics>,
+    inflight: Arc<Mutex<Option<std::ops::Range<usize>>>>,
+    n_workers: usize,
+    retry: RetryPolicy,
+    breaker_k: u32,
+    strikes: Arc<AtomicU32>,
+    boot_hub: Option<Arc<BootHub>>,
 }
 
 pub struct Coordinator {
     job_tx: Option<mpsc::Sender<Dispatch>>,
-    /// Kept so worker deaths can never disconnect the result channel out
+    /// Kept so worker deaths can never disconnect the job channel out
     /// from under `drain` (the supervisor, not channel state, decides
     /// what a missing result means).
     job_rx: Arc<Mutex<mpsc::Receiver<Dispatch>>>,
-    result_tx: mpsc::Sender<(usize, JobOutcome)>,
-    result_rx: mpsc::Receiver<(usize, JobOutcome)>,
+    result_tx: mpsc::Sender<WorkerEvent>,
+    result_rx: mpsc::Receiver<WorkerEvent>,
     workers: Vec<WorkerSlot>,
     pub metrics: Arc<Metrics>,
     n_workers: usize,
-    retry: RetryPolicy,
+    opts: PoolOptions,
+    /// Monotone spawn counter: each (re)spawn gets a fresh epoch so exit
+    /// events can be matched to exactly one thread generation.
+    epochs: u64,
     submitted: usize,
     /// Outcomes produced without a worker (e.g. submissions after
     /// shutdown → [`JobError::PoolDied`]), merged into the next `drain`.
@@ -129,14 +226,20 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Spawn `n_workers` worker threads (min 1) with no retry policy.
+    /// Spawn `n_workers` worker threads (min 1) with default options.
     pub fn new(n_workers: usize) -> Self {
-        Self::with_retry(n_workers, RetryPolicy::default())
+        Self::with_options(n_workers, PoolOptions::default())
     }
 
     /// Spawn `n_workers` worker threads (min 1) with the given retry
     /// policy for panicked jobs.
     pub fn with_retry(n_workers: usize, retry: RetryPolicy) -> Self {
+        Self::with_options(n_workers, PoolOptions { retry, ..Default::default() })
+    }
+
+    /// Spawn `n_workers` worker threads (min 1) with full pool options
+    /// (retry policy, circuit breaker, bootstrap coalescing hub).
+    pub fn with_options(n_workers: usize, opts: PoolOptions) -> Self {
         let n_workers = n_workers.max(1);
         let (job_tx, job_rx) = mpsc::channel::<Dispatch>();
         let job_rx = Arc::new(Mutex::new(job_rx));
@@ -150,31 +253,50 @@ impl Coordinator {
             workers: Vec::with_capacity(n_workers),
             metrics,
             n_workers,
-            retry,
+            opts,
+            epochs: 0,
             submitted: 0,
             local: Vec::new(),
         };
         for worker_id in 0..n_workers {
-            let slot = this.spawn_worker(worker_id);
+            let slot = this.spawn_worker(worker_id, Arc::new(AtomicU32::new(0)));
             this.workers.push(slot);
         }
         this
     }
 
-    fn spawn_worker(&self, worker_id: usize) -> WorkerSlot {
-        let rx = Arc::clone(&self.job_rx);
-        let tx = self.result_tx.clone();
-        let metrics = Arc::clone(&self.metrics);
+    /// How many workers are currently in rotation (shrinks under
+    /// quarantine, never below one).
+    pub fn live_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn spawn_worker(&mut self, worker_id: usize, strikes: Arc<AtomicU32>) -> WorkerSlot {
+        self.epochs += 1;
+        let epoch = self.epochs;
         let inflight: Arc<Mutex<Option<std::ops::Range<usize>>>> =
             Arc::new(Mutex::new(None));
-        let slot = Arc::clone(&inflight);
-        let n_workers = self.n_workers;
-        let retry = self.retry;
+        let ctx = WorkerCtx {
+            rx: Arc::clone(&self.job_rx),
+            tx: self.result_tx.clone(),
+            metrics: Arc::clone(&self.metrics),
+            inflight: Arc::clone(&inflight),
+            n_workers: self.n_workers,
+            retry: self.opts.retry,
+            breaker_k: self.opts.breaker_k,
+            strikes: Arc::clone(&strikes),
+            boot_hub: self.opts.boot_hub.clone(),
+        };
+        let guard_tx = self.result_tx.clone();
         let handle = std::thread::Builder::new()
             .name(format!("dpfw-worker-{worker_id}"))
-            .spawn(move || worker_loop(rx, tx, metrics, slot, n_workers, retry))
+            .spawn(move || {
+                let mut guard =
+                    ExitGuard { tx: guard_tx, worker_id, epoch, cause: ExitCause::Died };
+                guard.cause = worker_loop(ctx);
+            })
             .expect("spawn worker");
-        WorkerSlot { handle, inflight }
+        WorkerSlot { handle, inflight, worker_id, epoch, strikes }
     }
 
     /// Enqueue a single-cell job (non-blocking).
@@ -191,26 +313,31 @@ impl Coordinator {
         self.submit_job(Job::Path(path));
     }
 
-    fn submit_job(&mut self, job: Job) {
+    /// Enqueue a batch prediction (§6.10 job class three).
+    pub fn submit_predict(&mut self, job: PredictJob) {
+        self.submit_job(Job::Predict(job));
+    }
+
+    pub(crate) fn submit_job(&mut self, job: Job) {
         let n = job.n_results();
         self.metrics.jobs_submitted.fetch_add(n as u64, Ordering::Relaxed);
         self.submitted += n;
+        // Gauge up BEFORE the send: the instant the job hits the channel a
+        // worker may pick it up and gauge down, and a decrement racing
+        // ahead of its increment would wrap the unsigned gauge upward.
+        self.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
         let dispatch = Dispatch { job, enqueued_at: Instant::now() };
         let undelivered = match &self.job_tx {
             Some(tx) => tx.send(dispatch).err().map(|e| e.0),
             None => Some(dispatch),
         };
-        match undelivered {
-            None => {
-                self.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
-            }
-            Some(d) => {
-                // pool gone (shutdown): the job degrades to per-id
-                // PoolDied outcomes instead of panicking the caller
-                for id in d.job.result_ids() {
-                    self.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
-                    self.local.push((id, Err(JobError::PoolDied)));
-                }
+        if let Some(d) = undelivered {
+            // pool gone (shutdown): the job degrades to per-id PoolDied
+            // outcomes instead of panicking the caller
+            self.metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+            for id in d.job.result_ids() {
+                self.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                self.local.push((id, Err(JobError::PoolDied)));
             }
         }
     }
@@ -228,53 +355,107 @@ impl Coordinator {
 
     /// Block until every submitted id has an outcome; results are
     /// returned sorted by job id. Never panics on worker death: the
-    /// supervisor fails the dead worker's owed ids as
-    /// [`JobError::WorkerDied`] and respawns a replacement.
+    /// exit event fails the dead worker's owed ids as
+    /// [`JobError::WorkerDied`] and respawns (or quarantines) it.
     pub fn drain(&mut self) -> Vec<JobOutcome> {
+        self.drain_with_ids().into_iter().map(|(_, o)| o).collect()
+    }
+
+    /// [`Self::drain`], keeping each outcome's job id (the ingress needs
+    /// the pairing to route outcomes back to admissions). Sorted by id.
+    pub fn drain_with_ids(&mut self) -> Vec<(usize, JobOutcome)> {
         let mut out: Vec<(usize, JobOutcome)> = std::mem::take(&mut self.local);
         while out.len() < self.submitted {
-            match self.result_rx.recv_timeout(SUPERVISE_TICK) {
-                Ok(item) => out.push(item),
-                Err(RecvTimeoutError::Timeout) => self.supervise(&mut out),
+            match self.result_rx.recv_timeout(FALLBACK_TICK) {
+                Ok(WorkerEvent::Result(id, outcome)) => out.push((id, outcome)),
+                Ok(WorkerEvent::Exited { worker_id, epoch, cause }) => {
+                    self.on_worker_exit(worker_id, epoch, cause, &mut out);
+                }
                 // we hold a result_tx clone, so Disconnected is
-                // unreachable; treat it like a tick for robustness
-                Err(RecvTimeoutError::Disconnected) => self.supervise(&mut out),
+                // unreachable; either way fall back to the liveness scan
+                Err(_) => self.supervise(&mut out),
             }
         }
         self.submitted = 0;
         out.sort_by_key(|(id, _)| *id);
-        out.into_iter().map(|(_, o)| o).collect()
+        out
     }
 
-    /// One supervisor pass: replace dead workers, failing their in-flight
-    /// ids. (A worker that finished its job and is blocked on the queue is
-    /// alive, not finished — `is_finished` only fires for threads whose
-    /// run function returned, i.e. fault-injected abrupt death or a bug.)
-    fn supervise(&mut self, out: &mut Vec<(usize, JobOutcome)>) {
-        if self.workers.iter().all(|w| !w.handle.is_finished()) {
+    /// Handle one worker-exit event. Stale epochs (a replaced worker's
+    /// event arriving late) match no slot and are ignored.
+    fn on_worker_exit(
+        &mut self,
+        worker_id: usize,
+        epoch: u64,
+        cause: ExitCause,
+        out: &mut Vec<(usize, JobOutcome)>,
+    ) {
+        let Some(pos) = self
+            .workers
+            .iter()
+            .position(|w| w.worker_id == worker_id && w.epoch == epoch)
+        else {
             return;
-        }
-        let slots = std::mem::take(&mut self.workers);
-        for (worker_id, w) in slots.into_iter().enumerate() {
-            if !w.handle.is_finished() {
-                self.workers.push(w);
-                continue;
-            }
-            let _ = w.handle.join();
-            let owed = w
-                .inflight
-                .lock()
-                .unwrap_or_else(|e| e.into_inner())
-                .take();
-            if let Some(ids) = owed {
-                for id in ids {
-                    self.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
-                    out.push((id, Err(JobError::WorkerDied)));
+        };
+        let slot = self.workers.swap_remove(pos);
+        let _ = slot.handle.join();
+        match cause {
+            // expected teardown: nothing owed, nothing to replace
+            ExitCause::Shutdown => {}
+            ExitCause::Died => {
+                let owed =
+                    slot.inflight.lock().unwrap_or_else(|e| e.into_inner()).take();
+                if let Some(ids) = owed {
+                    for id in ids {
+                        self.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                        out.push((id, Err(JobError::WorkerDied)));
+                    }
+                }
+                let strikes = slot.strikes;
+                strikes.fetch_add(1, Ordering::Relaxed);
+                let tripped = self.opts.breaker_k > 0
+                    && strikes.load(Ordering::Relaxed) >= self.opts.breaker_k;
+                if tripped && !self.workers.is_empty() {
+                    self.metrics.workers_quarantined.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    if tripped {
+                        // forced respawn (last live worker): clean slate so
+                        // the replacement isn't pre-tripped
+                        strikes.store(0, Ordering::Relaxed);
+                    }
+                    self.metrics.workers_respawned.fetch_add(1, Ordering::Relaxed);
+                    let replacement = self.spawn_worker(worker_id, strikes);
+                    self.workers.push(replacement);
                 }
             }
-            self.metrics.workers_respawned.fetch_add(1, Ordering::Relaxed);
-            let replacement = self.spawn_worker(worker_id);
-            self.workers.push(replacement);
+            ExitCause::Quarantine => {
+                // the worker resolved all its ids before exiting
+                if !self.workers.is_empty() {
+                    self.metrics.workers_quarantined.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    slot.strikes.store(0, Ordering::Relaxed);
+                    self.metrics.workers_respawned.fetch_add(1, Ordering::Relaxed);
+                    let replacement = self.spawn_worker(worker_id, slot.strikes);
+                    self.workers.push(replacement);
+                }
+            }
+        }
+    }
+
+    /// Belt-and-braces liveness scan, run only on the fallback tick: a
+    /// finished thread whose exit event was somehow lost is treated as
+    /// died. (Normally the event arrives first and removes the slot, so
+    /// this scan finds nothing; a later duplicate event then matches no
+    /// slot and is ignored — the two paths cannot double-handle a worker.)
+    fn supervise(&mut self, out: &mut Vec<(usize, JobOutcome)>) {
+        let finished: Vec<(usize, u64)> = self
+            .workers
+            .iter()
+            .filter(|w| w.handle.is_finished())
+            .map(|w| (w.worker_id, w.epoch))
+            .collect();
+        for (worker_id, epoch) in finished {
+            self.on_worker_exit(worker_id, epoch, ExitCause::Died, out);
         }
     }
 
@@ -303,16 +484,24 @@ fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
 /// The worker body. One workspace per worker: every job this thread
 /// executes reuses the same solver buffers and selector storage
 /// (bit-exact; a panicking job merely drops its taken buffers, so the
-/// pool self-heals on the next run).
-fn worker_loop(
-    rx: Arc<Mutex<mpsc::Receiver<Dispatch>>>,
-    tx: mpsc::Sender<(usize, JobOutcome)>,
-    metrics: Arc<Metrics>,
-    inflight: Arc<Mutex<Option<std::ops::Range<usize>>>>,
-    n_workers: usize,
-    retry: RetryPolicy,
-) {
+/// pool self-heals on the next run). Returns why the thread is exiting;
+/// the spawn-site drop guard forwards that to the supervisor.
+fn worker_loop(ctx: WorkerCtx) -> ExitCause {
+    let WorkerCtx {
+        rx,
+        tx,
+        metrics,
+        inflight,
+        n_workers,
+        retry,
+        breaker_k,
+        strikes,
+        boot_hub,
+    } = ctx;
     let mut ws = FwWorkspace::new();
+    if let Some(hub) = &boot_hub {
+        ws.set_boot_hub(Arc::clone(hub));
+    }
     loop {
         let dispatch = {
             // a poisoned queue mutex only means some worker died while
@@ -321,23 +510,23 @@ fn worker_loop(
             let guard = rx.lock().unwrap_or_else(|e| e.into_inner());
             guard.recv()
         };
-        let Ok(mut d) = dispatch else { break }; // channel closed
+        let Ok(mut d) = dispatch else { return ExitCause::Shutdown };
         metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
         let ids = d.job.result_ids();
 
         // ---- §6.9 shed: expired while queued → no solver work ----------
-        if d.job.cfg().cancel.expired() {
+        if d.job.cancel().expired() {
             let mut hung_up = false;
             for id in ids {
                 metrics.sheds.fetch_add(1, Ordering::Relaxed);
                 metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
-                if tx.send((id, Err(JobError::Expired))).is_err() {
+                if tx.send(WorkerEvent::Result(id, Err(JobError::Expired))).is_err() {
                     hung_up = true;
                     break;
                 }
             }
             if hung_up {
-                break;
+                return ExitCause::Shutdown;
             }
             continue;
         }
@@ -348,12 +537,12 @@ fn worker_loop(
         *inflight.lock().unwrap_or_else(|e| e.into_inner()) = Some(ids.clone());
 
         // ---- fault injection (tests/benches only) ----------------------
-        if d.job.cfg().fault.take_worker_death() {
+        if d.job.fault().take_worker_death() {
             // die without unwinding and without reporting — the shape
             // supervision exists for
-            return;
+            return ExitCause::Died;
         }
-        if d.job.cfg().fault.take_poison() {
+        if d.job.fault().take_poison() {
             ws.poison_buffers();
         }
 
@@ -364,8 +553,8 @@ fn worker_loop(
         // P). `cfg.shards` is deliberately NOT touched here: forcing a
         // job on or off the sharded engine would change its byte/segment
         // model (DESIGN.md §6.8), which only the submitter may choose.
-        if n_workers > 1 && d.job.cfg_mut().threads == 0 {
-            d.job.cfg_mut().threads = 1;
+        if n_workers > 1 {
+            d.job.pin_threads();
         }
 
         let start = Instant::now();
@@ -378,6 +567,9 @@ fn worker_loop(
             match std::panic::catch_unwind(AssertUnwindSafe(|| d.job.run_in(&mut ws))) {
                 Ok(results) => break Ok(results),
                 Err(p) => {
+                    // a leader that panicked mid-bootstrap still holds the
+                    // hub lease; release it so followers detach and re-lead
+                    ws.boot_lease_abort();
                     let msg = panic_message(p);
                     if attempt >= retry.retry_limit {
                         break Err(if retry.retry_limit == 0 {
@@ -406,11 +598,14 @@ fn worker_loop(
         let histo = match &d.job {
             Job::Cell(_) => &metrics.cell_latency,
             Job::Path(_) => &metrics.path_latency,
+            Job::Predict(_) => &metrics.predict_latency,
         };
 
         let mut hung_up = false;
+        let mut tripped = false;
         match outcome {
             Ok(results) => {
+                strikes.store(0, Ordering::Relaxed);
                 let last = results.len().saturating_sub(1);
                 for (k, res) in results.into_iter().enumerate() {
                     if res.output.stopped == StopReason::Deadline {
@@ -419,10 +614,11 @@ fn worker_loop(
                     metrics.record_completion(
                         res.output.iters_run as u64,
                         res.output.flops,
+                        res.output.bytes_moved,
                         busy_each + if k == last { busy_rem } else { 0 },
                     );
                     let id = res.id;
-                    if tx.send((id, Ok(res))).is_err() {
+                    if tx.send(WorkerEvent::Result(id, Ok(res))).is_err() {
                         hung_up = true; // coordinator dropped
                         break;
                     }
@@ -430,10 +626,13 @@ fn worker_loop(
             }
             Err(err) => {
                 // every result this job owed becomes a failure (a path
-                // panic fails all its λs)
+                // panic fails all its λs) — and it counts one strike
+                // toward the circuit breaker
+                let s = strikes.fetch_add(1, Ordering::Relaxed) + 1;
+                tripped = breaker_k > 0 && s >= breaker_k && n_workers > 1;
                 for id in ids {
                     metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
-                    if tx.send((id, Err(err.clone()))).is_err() {
+                    if tx.send(WorkerEvent::Result(id, Err(err.clone()))).is_err() {
                         hung_up = true;
                         break;
                     }
@@ -445,7 +644,13 @@ fn worker_loop(
         }
         *inflight.lock().unwrap_or_else(|e| e.into_inner()) = None;
         if hung_up {
-            break;
+            return ExitCause::Shutdown;
+        }
+        if tripped {
+            // self-quarantine: all ids resolved, strikes stay ≥ K as the
+            // record of why; the supervisor decides whether a replacement
+            // is needed (only when this was the last live worker)
+            return ExitCause::Quarantine;
         }
     }
 }
@@ -457,6 +662,7 @@ mod tests {
     use crate::fw::config::FwConfig;
     use crate::sparse::synth::SynthConfig;
     use crate::sparse::Dataset;
+    use crate::testkit::faults::{FaultKind, FaultPlan};
 
     fn ds(seed: u64) -> Arc<Dataset> {
         Arc::new(
@@ -501,6 +707,7 @@ mod tests {
         assert_eq!(c.metrics.jobs_completed.load(Ordering::Relaxed), 12);
         assert_eq!(c.metrics.queue_depth.load(Ordering::Relaxed), 0);
         assert_eq!(c.metrics.cell_latency.count(), 12);
+        assert!(c.metrics.bytes_total.load(Ordering::Relaxed) > 0);
     }
 
     #[test]
@@ -618,6 +825,84 @@ mod tests {
             assert_eq!(r.as_ref().unwrap_err(), &JobError::PoolDied);
         }
         assert_eq!(c.metrics.jobs_failed.load(Ordering::Relaxed), 3);
+        assert_eq!(c.metrics.queue_depth.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn predict_jobs_run_on_the_pool() {
+        let mut c = Coordinator::new(2);
+        let d = ds(8);
+        // train once to get a plausible weight vector
+        let trained = job(0, d.clone()).run();
+        let w = Arc::new(trained.output.weights.as_slice().to_vec());
+        c.submit(job(0, d.clone()));
+        c.submit_predict(PredictJob {
+            id: 1,
+            label: "score".into(),
+            data: d.clone(),
+            weights: w.clone(),
+            threads: 0,
+            cancel: Default::default(),
+            fault: FaultPlan::none(),
+        });
+        let results = c.drain_with_ids();
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[1].0, 1);
+        let pred = results[1].1.as_ref().expect("predict failed");
+        assert_eq!(pred.algo, Algo::Predict);
+        let p = pred.predictions.as_ref().expect("predictions missing");
+        assert_eq!(p.len(), d.csr.n_rows());
+        assert!(pred.output.flops > 0 && pred.output.bytes_moved > 0);
+        assert_eq!(pred.output.iters_run, 0, "no solver work, no ε spend");
+        assert_eq!(pred.output.eps_spent, None);
+        assert_eq!(c.metrics.predict_latency.count(), 1);
+        assert_eq!(c.metrics.timeouts.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn circuit_breaker_quarantines_repeat_offender_worker() {
+        let mut c = Coordinator::with_options(
+            2,
+            PoolOptions { breaker_k: 2, ..Default::default() },
+        );
+        let d = ds(9);
+        // 6 poison jobs: each panics (validate: negative λ); with K = 2
+        // some worker must hit two consecutive failures and self-quarantine
+        for i in 0..6 {
+            let mut bad = job(i, d.clone());
+            bad.cfg.lambda = -1.0;
+            c.submit(bad);
+        }
+        let results = c.drain();
+        assert!(results.iter().all(|r| r.is_err()));
+        assert!(
+            c.metrics.workers_quarantined.load(Ordering::Relaxed) >= 1,
+            "quarantined {}",
+            c.metrics.workers_quarantined.load(Ordering::Relaxed)
+        );
+        assert!(c.live_workers() >= 1, "pool must never quarantine to empty");
+        // the surviving pool still serves clean work
+        let after = c.run_all(vec![job(10, d)]);
+        assert!(after[0].is_ok());
+    }
+
+    #[test]
+    fn worker_death_strikes_toward_the_breaker() {
+        let mut c = Coordinator::with_options(
+            1,
+            PoolOptions { breaker_k: 2, ..Default::default() },
+        );
+        let d = ds(10);
+        let mut doomed = job(0, d.clone());
+        doomed.cfg.fault = FaultPlan::once(FaultKind::DieAbruptly);
+        c.submit(doomed);
+        let results = c.drain();
+        assert_eq!(results[0].as_ref().unwrap_err(), &JobError::WorkerDied);
+        // single-worker pool: death respawns (never quarantines to empty)
+        assert_eq!(c.metrics.workers_respawned.load(Ordering::Relaxed), 1);
+        assert_eq!(c.metrics.workers_quarantined.load(Ordering::Relaxed), 0);
+        let after = c.run_all(vec![job(1, d)]);
+        assert!(after[0].is_ok());
     }
 
     #[test]

@@ -33,6 +33,13 @@ pub enum StopReason {
     Deadline,
     /// [`CancelToken::cancel`] was called from another thread.
     Cancelled,
+    /// The ingress brownout controller capped this run's iteration count
+    /// below the planned budget (`FwConfig::iter_cap`, DESIGN.md §6.10).
+    /// Like `Deadline`/`Cancelled` this is an anytime partial result —
+    /// best-so-far weights, and `eps_spent` charging exactly the capped
+    /// number of mechanism releases at the noise scale calibrated for the
+    /// *planned* T.
+    Brownout,
 }
 
 impl StopReason {
@@ -42,12 +49,16 @@ impl StopReason {
             StopReason::Converged => "converged",
             StopReason::Deadline => "deadline",
             StopReason::Cancelled => "cancelled",
+            StopReason::Brownout => "brownout",
         }
     }
 
     /// Did the run stop before its natural end (budget or convergence)?
     pub fn is_early(&self) -> bool {
-        matches!(self, StopReason::Deadline | StopReason::Cancelled)
+        matches!(
+            self,
+            StopReason::Deadline | StopReason::Cancelled | StopReason::Brownout
+        )
     }
 }
 
@@ -182,11 +193,13 @@ mod tests {
             (StopReason::Converged, "converged"),
             (StopReason::Deadline, "deadline"),
             (StopReason::Cancelled, "cancelled"),
+            (StopReason::Brownout, "brownout"),
         ] {
             assert_eq!(r.name(), n);
         }
         assert!(StopReason::Deadline.is_early());
         assert!(StopReason::Cancelled.is_early());
+        assert!(StopReason::Brownout.is_early());
         assert!(!StopReason::IterBudget.is_early());
         assert!(!StopReason::Converged.is_early());
     }

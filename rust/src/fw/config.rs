@@ -123,6 +123,17 @@ pub struct FwConfig {
     /// (`testkit::faults`). Disarmed by default; production configs never
     /// arm it.
     pub fault: FaultPlan,
+    /// Brownout cap on the number of update steps actually run (DESIGN.md
+    /// §6.10). `None` (the default) runs the full planned budget. `Some(c)`
+    /// stops the loop with [`StopReason::Brownout`] before the `(c+1)`-th
+    /// selection, so exactly `c` update steps — and `c` mechanism releases
+    /// — happen. Crucially this does **not** touch [`FwConfig::iters`]:
+    /// the per-step noise scale stays calibrated for the planned T, the
+    /// first `c` steps are bit-identical to an uncapped run's prefix, and
+    /// `FwOutput::eps_spent` reports exactly `ε·√(c/T)` (the anytime
+    /// accounting of `dp/accounting.rs`). A cap of `iters − 1` or more
+    /// never fires (the paper's loop runs T−1 update steps).
+    pub iter_cap: Option<usize>,
 }
 
 /// Process-wide `DPFW_SHARDS` resolution (read once; same pattern as
@@ -154,6 +165,7 @@ impl Default for FwConfig {
             cancel: CancelToken::none(),
             gap_tol: None,
             fault: FaultPlan::none(),
+            iter_cap: None,
         }
     }
 }
@@ -198,11 +210,17 @@ impl FwConfig {
     /// iteration fault first (tests/benches), then checks the cancel
     /// token. Cost when both are disarmed: two `Option` discriminant
     /// tests — negligible next to the O(S_r·S_c) iteration body; an armed
-    /// deadline adds one `Instant::now()` per iteration.
+    /// deadline adds one `Instant::now()` per iteration. The brownout cap
+    /// is checked last: a cancel/deadline is the more specific signal, and
+    /// the cap firing at `t = cap + 1` means exactly `cap` update steps
+    /// ran (poll-before-selection, like every other stop).
     #[inline]
     pub fn stop_check(&self, t: usize) -> Option<StopReason> {
         self.fault.on_iteration(t);
-        self.cancel.check()
+        self.cancel.check().or_else(|| {
+            matches!(self.iter_cap, Some(cap) if t > cap)
+                .then_some(StopReason::Brownout)
+        })
     }
 
     /// Has the configured gap tolerance been met?
@@ -314,6 +332,26 @@ mod tests {
             ..Default::default()
         };
         assert_eq!(expired.stop_check(1), Some(StopReason::Deadline));
+    }
+
+    #[test]
+    fn iter_cap_stops_with_brownout_after_exactly_cap_steps() {
+        let cfg = FwConfig { iter_cap: Some(3), ..Default::default() };
+        // poll happens at the top of iteration t, before the t-th
+        // selection: t = 1..=cap proceeds, t = cap + 1 stops
+        assert_eq!(cfg.stop_check(1), None);
+        assert_eq!(cfg.stop_check(3), None);
+        assert_eq!(cfg.stop_check(4), Some(StopReason::Brownout));
+        // a cancel signal wins over the cap (more specific)
+        let both = FwConfig {
+            iter_cap: Some(3),
+            cancel: CancelToken::new(),
+            ..Default::default()
+        };
+        both.cancel.cancel();
+        assert_eq!(both.stop_check(4), Some(StopReason::Cancelled));
+        // no cap → never brownout
+        assert_eq!(FwConfig::default().stop_check(usize::MAX), None);
     }
 
     #[test]

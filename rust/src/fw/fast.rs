@@ -204,6 +204,16 @@ impl<'a> FastFrankWolfe<'a> {
         self.run_in_with_observer(ws, |_, _| {})
     }
 
+    /// Like [`Self::run_in`], but with the dense bootstrap in `Shared`
+    /// mode: eligible for the workspace cache and, when the workspace is
+    /// connected to an ingress [`crate::fw::workspace::BootHub`], for
+    /// cross-worker coalescing (DESIGN.md §6.10). Output is bit-identical
+    /// to `run_in` except that a cache/hub hit moves the bootstrap cost
+    /// out of `flops`/`bootstrap_flops` (the §6.5 invariant).
+    pub(crate) fn run_in_shared(&self, ws: &mut FwWorkspace) -> FwOutput {
+        self.run_core(ws, self.cfg.lambda, Bootstrap::Shared, |_, _| {})
+    }
+
     /// Train an entire regularization path — one run per λ in `lambdas`,
     /// everything else taken from the solver's config (whose own `lambda`
     /// is ignored) — sharing the dense bootstrap `α = Xᵀq̄` across the
@@ -290,15 +300,11 @@ impl<'a> FastFrankWolfe<'a> {
         };
         let boot_key = BootKey::of(self.data, self.loss.name());
         let cached = boot == Bootstrap::Shared
-            && match ws.bootstrap_get(&boot_key) {
-                Some(cache) => {
-                    st.q.copy_from_slice(cache.q0());
-                    st.alpha.copy_from_slice(cache.alpha0());
-                    true
-                }
-                None => false,
-            };
+            && ws.bootstrap_attach(&boot_key, &mut st.q, &mut st.alpha, &self.cfg.cancel);
         if !cached {
+            // in-bootstrap fault hook (tests): fires while this run holds
+            // any coalescing-hub leadership lease it just claimed
+            self.cfg.fault.on_bootstrap();
             for (qi, &yi) in st.q.iter_mut().zip(y.iter()) {
                 *qi = self.loss.grad(0.0, yi as f64);
             }
@@ -666,15 +672,9 @@ impl<'a> FastFrankWolfe<'a> {
         };
         let boot_key = BootKey::of(self.data, self.loss.name());
         let cached = boot == Bootstrap::Shared
-            && match ws.bootstrap_get(&boot_key) {
-                Some(cache) => {
-                    st.q.copy_from_slice(cache.q0());
-                    st.alpha.copy_from_slice(cache.alpha0());
-                    true
-                }
-                None => false,
-            };
+            && ws.bootstrap_attach(&boot_key, &mut st.q, &mut st.alpha, &self.cfg.cancel);
         if !cached {
+            self.cfg.fault.on_bootstrap();
             // q̄ at w = 0, computed per shard over disjoint q̄/label
             // slices — row-local, hence bit-identical to the monolithic
             // sweep on any schedule. Parallel only when the row count is

@@ -62,6 +62,16 @@ impl<'a> StandardFrankWolfe<'a> {
         self.run_core(ws, self.cfg.lambda, Bootstrap::PerRun)
     }
 
+    /// Like [`Self::run_in`], but with the dense bootstrap in `Shared`
+    /// mode: eligible for the workspace cache and, when the workspace is
+    /// connected to an ingress [`crate::fw::workspace::BootHub`], for
+    /// cross-worker coalescing (DESIGN.md §6.10). Output is bit-identical
+    /// to `run_in` except that a cache/hub hit moves the bootstrap cost
+    /// out of `flops`/`bootstrap_flops` (the §6.5 invariant).
+    pub(crate) fn run_in_shared(&self, ws: &mut FwWorkspace) -> FwOutput {
+        self.run_core(ws, self.cfg.lambda, Bootstrap::Shared)
+    }
+
     /// Train a regularization path — one run per λ in `lambdas` (the
     /// config's own `lambda` is ignored) — sharing the t = 1 dense
     /// recompute across the grid: at `w = 0` it is exactly the bootstrap
@@ -141,15 +151,13 @@ impl<'a> StandardFrankWolfe<'a> {
             // write +0.0 into every slot anyway).
             let cached = t == 1
                 && boot == Bootstrap::Shared
-                && match ws.bootstrap_get(&boot_key) {
-                    Some(c) => {
-                        q.copy_from_slice(c.q0());
-                        alpha.copy_from_slice(c.alpha0());
-                        true
-                    }
-                    None => false,
-                };
+                && ws.bootstrap_attach(&boot_key, &mut q, &mut alpha, &self.cfg.cancel);
             if !cached {
+                if t == 1 {
+                    // in-bootstrap fault hook (tests): fires while this run
+                    // holds any coalescing-hub leadership lease it claimed
+                    self.cfg.fault.on_bootstrap();
+                }
                 csr.matvec_scan(&w, &mut v, &mut scratch, kern); // v̄ = X w
                 for i in 0..n {
                     q[i] = self.loss.grad(v[i], y[i] as f64); // q̄ = ∇L(v̄)
@@ -362,15 +370,11 @@ impl<'a> StandardFrankWolfe<'a> {
             }
             let cached = t == 1
                 && boot == Bootstrap::Shared
-                && match ws.bootstrap_get(&boot_key) {
-                    Some(c) => {
-                        q.copy_from_slice(c.q0());
-                        alpha.copy_from_slice(c.alpha0());
-                        true
-                    }
-                    None => false,
-                };
+                && ws.bootstrap_attach(&boot_key, &mut q, &mut alpha, &self.cfg.cancel);
             if !cached {
+                if t == 1 {
+                    self.cfg.fault.on_bootstrap();
+                }
                 // ---- pass 1 + gradient sweep, per shard ----------------
                 // each shard's rows are independent dots into its disjoint
                 // v̄/q̄ slices; the shard scans its OWN CSR slab (local

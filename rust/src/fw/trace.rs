@@ -130,6 +130,43 @@ pub struct FwOutput {
     pub shard_bytes: Vec<u64>,
 }
 
+impl FwOutput {
+    /// Package a scoring-only run (a [`crate::coordinator::PredictJob`]):
+    /// no iterations, no selections, no privacy spend — just the frozen
+    /// weights plus the §6.6 cost model of the single matvec sweep, so
+    /// ingress bytes-per-request accounting covers predictions uniformly.
+    pub fn scored(
+        weights: Vec<f64>,
+        flops: u64,
+        bytes: u64,
+        wall_ms: f64,
+        threads: usize,
+    ) -> Self {
+        FwOutput {
+            weights: WeightVector(weights),
+            final_gap: 0.0,
+            flops,
+            bootstrap_flops: 0,
+            bytes_moved: bytes,
+            bootstrap_bytes: 0,
+            scratch_bytes: 0,
+            direct_segments: 0,
+            scratch_segments: 0,
+            wall_ms,
+            phase: None,
+            selector_stats: SelectorStats::default(),
+            trace: Vec::new(),
+            iters_run: 0,
+            stopped: StopReason::IterBudget,
+            eps_spent: None,
+            effective_threads: threads,
+            effective_shards: 0,
+            shard_flops: Vec::new(),
+            shard_bytes: Vec::new(),
+        }
+    }
+}
+
 /// Dense weight vector with sparsity helpers.
 #[derive(Clone, Debug, PartialEq)]
 pub struct WeightVector(pub Vec<f64>);

@@ -40,6 +40,12 @@
 //! `coordinator/scheduler.rs`); the type is deliberately `!Sync` — cheap
 //! single-owner mutation, no locking.
 
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::fw::cancel::CancelToken;
 use crate::fw::config::SelectorKind;
 use crate::fw::queue::{build_selector, CoordinateSelector};
 use crate::sparse::sharded::{GammaEntry, ShardedDataset};
@@ -62,7 +68,7 @@ pub(crate) enum Bootstrap {
 /// gradient-at-zero the cached `q̄₀`/`α₀` were computed from. Any mismatch
 /// evicts the (single-slot) cache; a match guarantees bit-identical
 /// bootstrap values because `α₀ = Xᵀq̄₀` is itself thread-invariant.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub(crate) struct BootKey {
     token: u64,
     n_rows: usize,
@@ -99,6 +105,184 @@ impl BootstrapCache {
 
     pub(crate) fn alpha0(&self) -> &[f64] {
         &self.alpha0
+    }
+}
+
+/// A published bootstrap payload on the [`BootHub`]: the gradient at
+/// `w = 0` and `α₀ = Xᵀq̄₀`, shared by `Arc` so followers copy out of one
+/// allocation instead of cloning per attach.
+struct BootData {
+    q0: Vec<f64>,
+    alpha0: Vec<f64>,
+}
+
+/// One hub slot: claimed-but-unpublished, or ready to attach to.
+enum HubSlot {
+    /// A leader claimed this key and is computing the bootstrap. Followers
+    /// wait on the hub condvar; if the slot *disappears* instead of
+    /// turning `Ready`, the leader failed and a waiter must detach and
+    /// re-lead (re-running the bootstrap itself, seed-free determinism —
+    /// `α₀ = Xᵀq̄₀` depends only on the dataset and loss).
+    Pending,
+    Ready(Arc<BootData>),
+}
+
+/// Hub state behind one mutex: the slot map plus Ready-eviction order.
+#[derive(Default)]
+struct HubState {
+    slots: HashMap<BootKey, HubSlot>,
+    /// Insertion order of `Ready` entries, oldest first, for the capacity
+    /// cap. `Pending` entries are never tracked here (and never evicted —
+    /// a leader must always find its own slot when publishing).
+    ready_order: Vec<BootKey>,
+}
+
+/// Ready-entry capacity: one entry is O(N + D) f64s, so a resident
+/// ingress serving many datasets needs a bound. 32 comfortably covers a
+/// bursty working set while capping hub memory.
+const HUB_READY_CAP: usize = 32;
+
+/// How long a follower sleeps per wait slice while its leader computes.
+/// Each wake re-polls the follower's own cancel token, so a cancelled or
+/// deadline-expired follower abandons the wait within one slice.
+const HUB_WAIT_SLICE: Duration = Duration::from_millis(5);
+
+/// What [`BootHub::attach_or_lead`] resolved to.
+enum HubAttach {
+    /// The bootstrap for this key is published: copy and go.
+    Ready(Arc<BootData>),
+    /// The caller claimed leadership: compute the bootstrap and publish
+    /// via `FwWorkspace::bootstrap_put` (or abort the lease on failure).
+    Lead,
+    /// The caller's cancel token fired while waiting on a pending leader:
+    /// compute locally without publishing (the run's own stop poll will
+    /// end it almost immediately anyway).
+    GiveUp,
+}
+
+/// Ingress-scoped bootstrap coalescing hub (DESIGN.md §6.10): the
+/// cross-worker extension of the per-workspace [`BootstrapCache`].
+/// Concurrent jobs whose [`BootKey`] matches fold into **one** dense
+/// bootstrap `α = Xᵀq̄`: the first arrival claims the key (leader), every
+/// other arrival either waits for the published payload (follower) or
+/// copies it instantly if already published. Attach is bit-identical to
+/// computing independently — the bootstrap is deterministic and
+/// thread-invariant — and purely a FLOP/byte saving: each follower still
+/// runs its own iterations, spends its own ε, and reports
+/// `bootstrap_flops = 0` exactly like a warm path cell.
+///
+/// Failure protocol: a leader that dies mid-bootstrap has its pending
+/// slot removed (by the worker's failure path or the workspace `Drop`
+/// guard); woken followers find the key absent, **detach** (counted), and
+/// the first of them re-leads. Followers never inherit a leader's
+/// failure.
+#[derive(Default)]
+pub struct BootHub {
+    state: Mutex<HubState>,
+    cv: Condvar,
+    leads: AtomicU64,
+    attaches: AtomicU64,
+    detaches: AtomicU64,
+}
+
+impl BootHub {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bootstraps computed through the hub (one per distinct cold key,
+    /// plus one per leader failure).
+    pub fn leads(&self) -> u64 {
+        self.leads.load(Ordering::Relaxed)
+    }
+
+    /// Bootstraps *skipped* by copying a published payload — the
+    /// coalescing win.
+    pub fn attaches(&self) -> u64 {
+        self.attaches.load(Ordering::Relaxed)
+    }
+
+    /// Followers that woke to a vanished leader and re-led or re-waited.
+    pub fn detaches(&self) -> u64 {
+        self.detaches.load(Ordering::Relaxed)
+    }
+
+    /// Published entries currently resident.
+    pub fn ready_len(&self) -> usize {
+        self.state.lock().unwrap_or_else(|e| e.into_inner()).ready_order.len()
+    }
+
+    fn attach_or_lead(&self, key: BootKey, cancel: &CancelToken) -> HubAttach {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        let mut waited = false;
+        loop {
+            match st.slots.get(&key) {
+                Some(HubSlot::Ready(d)) => {
+                    self.attaches.fetch_add(1, Ordering::Relaxed);
+                    return HubAttach::Ready(Arc::clone(d));
+                }
+                Some(HubSlot::Pending) => {
+                    if cancel.check().is_some() {
+                        if waited {
+                            self.detaches.fetch_add(1, Ordering::Relaxed);
+                        }
+                        return HubAttach::GiveUp;
+                    }
+                    waited = true;
+                    let (guard, _timeout) = self
+                        .cv
+                        .wait_timeout(st, HUB_WAIT_SLICE)
+                        .unwrap_or_else(|e| e.into_inner());
+                    st = guard;
+                }
+                None => {
+                    if waited {
+                        // our leader vanished without publishing: detach
+                        // and become the new leader ourselves
+                        self.detaches.fetch_add(1, Ordering::Relaxed);
+                    }
+                    st.slots.insert(key, HubSlot::Pending);
+                    self.leads.fetch_add(1, Ordering::Relaxed);
+                    return HubAttach::Lead;
+                }
+            }
+        }
+    }
+
+    /// Publish a computed bootstrap under `key` and wake every waiting
+    /// follower. Called by the leader via `FwWorkspace::bootstrap_put`.
+    fn publish(&self, key: BootKey, q0: &[f64], alpha0: &[f64]) {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.slots.insert(
+            key,
+            HubSlot::Ready(Arc::new(BootData {
+                q0: q0.to_vec(),
+                alpha0: alpha0.to_vec(),
+            })),
+        );
+        st.ready_order.retain(|k| k != &key);
+        st.ready_order.push(key);
+        while st.ready_order.len() > HUB_READY_CAP {
+            let old = st.ready_order.remove(0);
+            if matches!(st.slots.get(&old), Some(HubSlot::Ready(_))) {
+                st.slots.remove(&old);
+            }
+        }
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Release a claimed-but-unpublished lease (leader failed before
+    /// publishing). Waiting followers wake, find the key absent, and one
+    /// of them re-leads. Removing only a `Pending` slot makes this safe to
+    /// call defensively — a published entry is never torn down.
+    fn abort(&self, key: BootKey) {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        if matches!(st.slots.get(&key), Some(HubSlot::Pending)) {
+            st.slots.remove(&key);
+        }
+        drop(st);
+        self.cv.notify_all();
     }
 }
 
@@ -169,6 +353,15 @@ pub struct FwWorkspace {
     /// Pooled per-shard Phase A scratch (deferred γ entries + decode
     /// buffers), recycled like the scalar pools.
     shard_scratch: Vec<ShardScratch>,
+    /// The ingress-scoped coalescing hub (DESIGN.md §6.10), installed by
+    /// the scheduler when the pool runs behind an ingress. `None` (the
+    /// default) keeps every behaviour byte-identical to the pre-hub
+    /// workspace.
+    hub: Option<Arc<BootHub>>,
+    /// The hub key this workspace currently leads (claimed in
+    /// [`FwWorkspace::bootstrap_attach`], released by `bootstrap_put` on
+    /// success or [`FwWorkspace::boot_lease_abort`] / `Drop` on failure).
+    lease: Option<BootKey>,
 }
 
 /// Per-shard scratch for the fast solver's sharded Phase A: the deferred
@@ -217,14 +410,87 @@ impl FwWorkspace {
         v
     }
 
+    /// Install the ingress-scoped coalescing hub. The scheduler calls this
+    /// once per worker workspace when the pool runs behind an ingress;
+    /// shared-bootstrap runs then consult the hub after the local cache.
+    pub fn set_boot_hub(&mut self, hub: Arc<BootHub>) {
+        self.hub = Some(hub);
+    }
+
+    /// Is a coalescing hub installed? (The scheduler uses this to decide
+    /// whether single-cell jobs run in shared-bootstrap mode.)
+    pub fn has_boot_hub(&self) -> bool {
+        self.hub.is_some()
+    }
+
     /// The cached bootstrap for `key`, if the workspace holds one.
     pub(crate) fn bootstrap_get(&self, key: &BootKey) -> Option<&BootstrapCache> {
         self.boot.as_ref().filter(|b| b.key == *key)
     }
 
+    /// Shared-mode bootstrap resolution (DESIGN.md §6.5 / §6.10): fill
+    /// `q`/`alpha` from the local single-slot cache, else from the
+    /// coalescing hub when one is installed. Returns `true` when the
+    /// buffers were filled (the caller skips the bootstrap compute and
+    /// records zero bootstrap FLOPs). Returns `false` when the caller must
+    /// compute — either because nothing cached (without a hub), because it
+    /// just claimed hub **leadership** for `key` (its `bootstrap_put` will
+    /// publish and wake followers), or because its cancel token fired
+    /// while waiting on a pending leader (compute locally, no lease, no
+    /// publish — the run's own stop poll ends it right after).
+    pub(crate) fn bootstrap_attach(
+        &mut self,
+        key: &BootKey,
+        q: &mut [f64],
+        alpha: &mut [f64],
+        cancel: &CancelToken,
+    ) -> bool {
+        // A leftover lease means a previous run aborted between attach and
+        // put without its failure hooks running; release it so followers
+        // of that key never wait on a ghost leader.
+        if self.lease.is_some() {
+            self.boot_lease_abort();
+        }
+        if let Some(b) = self.boot.as_ref().filter(|b| b.key == *key) {
+            q.copy_from_slice(&b.q0);
+            alpha.copy_from_slice(&b.alpha0);
+            return true;
+        }
+        let Some(hub) = self.hub.clone() else { return false };
+        match hub.attach_or_lead(*key, cancel) {
+            HubAttach::Ready(d) => {
+                q.copy_from_slice(&d.q0);
+                alpha.copy_from_slice(&d.alpha0);
+                // warm the local slot too: later runs on this worker skip
+                // even the hub lock
+                self.bootstrap_put(*key, &d.q0, &d.alpha0);
+                true
+            }
+            HubAttach::Lead => {
+                self.lease = Some(*key);
+                false
+            }
+            HubAttach::GiveUp => false,
+        }
+    }
+
+    /// Release a held hub leadership lease without publishing (the
+    /// bootstrap failed). Called from the worker's job-failure path and
+    /// the workspace `Drop` guard; no-op without a lease.
+    pub(crate) fn boot_lease_abort(&mut self) {
+        if let Some(key) = self.lease.take() {
+            if let Some(hub) = &self.hub {
+                hub.abort(key);
+            }
+        }
+    }
+
     /// Store (or overwrite — the cache is single-slot, matching the
     /// one-dataset-per-path access pattern) the bootstrap for `key`,
-    /// reusing the previous cache's allocations.
+    /// reusing the previous cache's allocations. When this workspace holds
+    /// the hub leadership lease for `key` (see
+    /// [`FwWorkspace::bootstrap_attach`]), the payload is also published
+    /// to the hub, waking every waiting follower.
     pub(crate) fn bootstrap_put(&mut self, key: BootKey, q0: &[f64], alpha0: &[f64]) {
         let b = self.boot.get_or_insert_with(|| BootstrapCache {
             key,
@@ -236,6 +502,12 @@ impl FwWorkspace {
         b.q0.extend_from_slice(q0);
         b.alpha0.clear();
         b.alpha0.extend_from_slice(alpha0);
+        if self.lease == Some(key) {
+            self.lease = None;
+            if let Some(hub) = &self.hub {
+                hub.publish(key, q0, alpha0);
+            }
+        }
     }
 
     pub(crate) fn recycle_f64(&mut self, v: Vec<f64>) {
@@ -337,6 +609,9 @@ impl FwWorkspace {
         self.selector = None;
         self.boot = None;
         self.sharded = None;
+        // defensive: poisoning between jobs must never leave a ghost
+        // leader behind (the hub installation itself survives)
+        self.boot_lease_abort();
     }
 
     /// Return a selector to the cache for the next run.
@@ -354,6 +629,15 @@ impl FwWorkspace {
             nm_scale: nm_scale.to_bits(),
             sel,
         });
+    }
+}
+
+impl Drop for FwWorkspace {
+    /// Backstop for abrupt worker death (`DieAbruptly`, thread teardown):
+    /// whatever kills a leader mid-bootstrap, its pending hub slot must
+    /// not outlive the workspace, or followers would wait on a ghost.
+    fn drop(&mut self) {
+        self.boot_lease_abort();
     }
 }
 
@@ -515,6 +799,125 @@ mod tests {
         assert!(v2.iter().all(|&x| x == 0.5));
         let u2 = ws.take_u32(64, 0);
         assert!(u2.iter().all(|&x| x == 0));
+    }
+
+    fn hub_key(token: u64) -> BootKey {
+        BootKey { token, n_rows: 3, n_cols: 2, nnz: 4, loss: "logistic" }
+    }
+
+    #[test]
+    fn boot_hub_leader_publishes_and_followers_attach() {
+        let hub = Arc::new(BootHub::new());
+        let key = hub_key(9);
+        let cancel = CancelToken::none();
+        let mut leader = FwWorkspace::new();
+        leader.set_boot_hub(Arc::clone(&hub));
+        assert!(leader.has_boot_hub());
+        let (mut q, mut a) = (vec![0.0; 3], vec![0.0; 2]);
+        assert!(
+            !leader.bootstrap_attach(&key, &mut q, &mut a, &cancel),
+            "cold hub: the first arrival must lead"
+        );
+        assert_eq!(hub.leads(), 1);
+        leader.bootstrap_put(key, &[1.0, 2.0, 3.0], &[4.0, 5.0]);
+        assert_eq!(hub.ready_len(), 1);
+        // a different workspace (another worker) attaches without computing
+        let mut follower = FwWorkspace::new();
+        follower.set_boot_hub(Arc::clone(&hub));
+        let (mut q2, mut a2) = (vec![0.0; 3], vec![0.0; 2]);
+        assert!(follower.bootstrap_attach(&key, &mut q2, &mut a2, &cancel));
+        assert_eq!(q2, vec![1.0, 2.0, 3.0]);
+        assert_eq!(a2, vec![4.0, 5.0]);
+        assert_eq!(hub.attaches(), 1);
+        // the attach warmed the follower's local slot: round two skips the hub
+        assert!(follower.bootstrap_attach(&key, &mut q2, &mut a2, &cancel));
+        assert_eq!(hub.attaches(), 1, "local cache hit must not touch the hub");
+        // a hub-less workspace is byte-identical to the pre-hub behaviour
+        let mut plain = FwWorkspace::new();
+        assert!(!plain.bootstrap_attach(&key, &mut q, &mut a, &cancel));
+    }
+
+    #[test]
+    fn boot_hub_aborted_lease_lets_next_arrival_re_lead() {
+        let hub = Arc::new(BootHub::new());
+        let key = hub_key(11);
+        let cancel = CancelToken::none();
+        let (mut q, mut a) = (vec![0.0; 3], vec![0.0; 2]);
+        let mut leader = FwWorkspace::new();
+        leader.set_boot_hub(Arc::clone(&hub));
+        assert!(!leader.bootstrap_attach(&key, &mut q, &mut a, &cancel));
+        // leader dies without publishing: the Drop guard aborts the lease
+        drop(leader);
+        let mut next = FwWorkspace::new();
+        next.set_boot_hub(Arc::clone(&hub));
+        assert!(
+            !next.bootstrap_attach(&key, &mut q, &mut a, &cancel),
+            "slot must be vacant again: the next arrival re-leads"
+        );
+        assert_eq!(hub.leads(), 2);
+        // a cancelled follower gives up instead of waiting on the leader
+        let expired = CancelToken::with_deadline(std::time::Instant::now());
+        let mut hurried = FwWorkspace::new();
+        hurried.set_boot_hub(Arc::clone(&hub));
+        assert!(!hurried.bootstrap_attach(&key, &mut q, &mut a, &expired));
+        assert_eq!(hub.leads(), 2, "a give-up must not claim leadership");
+        // the give-up holds no lease, so publishing from it stays local
+        hurried.bootstrap_put(key, &[9.0; 3], &[9.0; 2]);
+        assert_eq!(hub.ready_len(), 0);
+    }
+
+    #[test]
+    fn boot_hub_coalesces_across_threads_to_one_bootstrap() {
+        use std::sync::Barrier;
+        let hub = Arc::new(BootHub::new());
+        let key = hub_key(13);
+        let barrier = Arc::new(Barrier::new(4));
+        let computes = Arc::new(AtomicU64::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let hub = Arc::clone(&hub);
+            let barrier = Arc::clone(&barrier);
+            let computes = Arc::clone(&computes);
+            handles.push(std::thread::spawn(move || {
+                let mut ws = FwWorkspace::new();
+                ws.set_boot_hub(hub);
+                let cancel = CancelToken::none();
+                let (mut q, mut a) = (vec![0.0; 3], vec![0.0; 2]);
+                barrier.wait();
+                if !ws.bootstrap_attach(&key, &mut q, &mut a, &cancel) {
+                    // leader: "compute" slowly so followers really wait
+                    computes.fetch_add(1, Ordering::Relaxed);
+                    std::thread::sleep(Duration::from_millis(20));
+                    q.copy_from_slice(&[1.0, 2.0, 3.0]);
+                    a.copy_from_slice(&[4.0, 5.0]);
+                    ws.bootstrap_put(key, &q, &a);
+                }
+                (q, a)
+            }));
+        }
+        for h in handles {
+            let (q, a) = h.join().expect("hub worker panicked");
+            assert_eq!(q, vec![1.0, 2.0, 3.0]);
+            assert_eq!(a, vec![4.0, 5.0]);
+        }
+        assert_eq!(computes.load(Ordering::Relaxed), 1, "exactly one bootstrap");
+        assert_eq!(hub.leads(), 1);
+        assert_eq!(hub.attaches(), 3);
+    }
+
+    #[test]
+    fn boot_hub_caps_ready_entries() {
+        let hub = BootHub::new();
+        for t in 0..(HUB_READY_CAP as u64 + 3) {
+            hub.publish(hub_key(t), &[t as f64], &[t as f64]);
+        }
+        assert_eq!(hub.ready_len(), HUB_READY_CAP);
+        // oldest entries were evicted; the newest survives
+        let cancel = CancelToken::none();
+        let (mut q, mut a) = (vec![0.0; 1], vec![0.0; 1]);
+        let mut ws = FwWorkspace::new();
+        ws.set_boot_hub(Arc::new(hub));
+        assert!(!ws.bootstrap_attach(&hub_key(0), &mut q, &mut a, &cancel));
     }
 
     #[test]

@@ -22,6 +22,12 @@
 //! * [`FaultKind::DieAbruptly`] — the worker thread returns without
 //!   unwinding and without sending results (exercises supervision:
 //!   respawn + owed-id failure).
+//! * [`FaultKind::PanicInBootstrap`] / [`FaultKind::StallInBootstrap`] —
+//!   fire inside the dense bootstrap `α = Xᵀq̄` itself (the
+//!   [`FaultPlan::on_bootstrap`] hook), while the run may hold the
+//!   ingress-scoped bootstrap-hub leadership lease (DESIGN.md §6.10).
+//!   The stall holds the lease long enough for followers to attach
+//!   deterministically; the panic exercises follower detach-and-re-lead.
 
 use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::Arc;
@@ -41,6 +47,15 @@ pub enum FaultKind {
     /// The worker thread dies without unwinding (no results sent, no
     /// panic to catch) before running the job.
     DieAbruptly,
+    /// Sleep `after_ms`, then panic, *inside* the dense bootstrap — after
+    /// the run claimed bootstrap-hub leadership but before it published.
+    /// The sleep gives concurrently-submitted followers a deterministic
+    /// window to attach to the doomed leader.
+    PanicInBootstrap { after_ms: u64 },
+    /// Sleep `ms` inside the dense bootstrap, then continue normally —
+    /// holds hub leadership long enough for followers to observe the
+    /// pending slot and take the wait path.
+    StallInBootstrap { ms: u64 },
 }
 
 #[derive(Debug)]
@@ -119,6 +134,31 @@ impl FaultPlan {
         }
     }
 
+    /// Solver hook, called once from inside each dense-bootstrap compute
+    /// block (all four solver bodies), after the run has claimed hub
+    /// leadership for the bootstrap but before it publishes. Panics
+    /// (PanicInBootstrap, after its stall window) or sleeps
+    /// (StallInBootstrap) when armed and the firing budget allows.
+    pub fn on_bootstrap(&self) {
+        let Some(inner) = self.inner.as_deref() else { return };
+        match inner.kind {
+            FaultKind::PanicInBootstrap { after_ms } => {
+                if inner.fire() {
+                    if after_ms > 0 {
+                        std::thread::sleep(Duration::from_millis(after_ms));
+                    }
+                    panic!("fault injection: panic in bootstrap");
+                }
+            }
+            FaultKind::StallInBootstrap { ms } => {
+                if inner.fire() {
+                    std::thread::sleep(Duration::from_millis(ms));
+                }
+            }
+            _ => {}
+        }
+    }
+
     /// Worker hook: should the pooled workspace be poisoned before this
     /// job runs? Consumes one firing.
     pub fn take_poison(&self) -> bool {
@@ -185,6 +225,33 @@ mod tests {
         assert!(!p.take_worker_death());
         assert!(p.take_poison());
         assert!(!p.take_poison(), "single firing");
+    }
+
+    #[test]
+    fn bootstrap_hooks_fire_only_in_bootstrap() {
+        let p = FaultPlan::once(FaultKind::PanicInBootstrap { after_ms: 0 });
+        p.on_iteration(1); // iteration hook must not cross-trigger
+        assert_eq!(p.firings(), 0);
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            p.on_bootstrap();
+        }))
+        .expect_err("must panic in bootstrap");
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("bootstrap"), "{msg}");
+        assert_eq!(p.firings(), 1);
+        p.on_bootstrap(); // budget spent: the retry's bootstrap succeeds
+        assert_eq!(p.firings(), 1);
+
+        let s = FaultPlan::once(FaultKind::StallInBootstrap { ms: 1 });
+        let start = std::time::Instant::now();
+        s.on_bootstrap();
+        assert!(start.elapsed() >= Duration::from_millis(1));
+        s.on_bootstrap(); // disarmed now
+        assert_eq!(s.firings(), 1);
+        // the plain-iteration kinds are inert on the bootstrap hook
+        let q = FaultPlan::once(FaultKind::PanicAt { iter: 1 });
+        q.on_bootstrap();
+        assert_eq!(q.firings(), 0);
     }
 
     #[test]

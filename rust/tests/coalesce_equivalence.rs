@@ -1,0 +1,174 @@
+//! §6.10 coalescing equivalence suite: solves whose dense bootstrap was
+//! folded into one ingress-hub leader compute are *bit-identical* —
+//! weights, trace, and `eps_spent` — to independent solves, at every
+//! (shards P, threads) combination; each follower is charged only its
+//! own ε; and a leader that panics mid-bootstrap never strands its
+//! followers (they detach and re-lead, seed-pinned).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use dpfw::coordinator::{Admit, Algo, Ingress, IngressConfig, JobSpec, Request};
+use dpfw::dp::accounting::PrivacyParams;
+use dpfw::fw::config::{FwConfig, SelectorKind};
+use dpfw::fw::trace::TraceRecord;
+use dpfw::sparse::synth::SynthConfig;
+use dpfw::sparse::Dataset;
+use dpfw::testkit::faults::{FaultKind, FaultPlan};
+
+fn dataset(seed: u64) -> Arc<Dataset> {
+    Arc::new(
+        SynthConfig {
+            name: format!("coal{seed}"),
+            n_rows: 120,
+            n_cols: 60,
+            avg_row_nnz: 7.0,
+            zipf_exponent: 1.2,
+            n_informative: 10,
+            n_dense: 0,
+            label_noise: 0.02,
+            bias_col: true,
+        }
+        .generate(seed),
+    )
+}
+
+/// A DP config (Bsls selector) so the mechanism stream — the thing
+/// coalescing must not share — is actually exercised.
+fn dp_cfg(seed: u64, shards: Option<usize>, threads: usize) -> FwConfig {
+    FwConfig {
+        iters: 80,
+        lambda: 6.0,
+        privacy: Some(PrivacyParams::new(1.0, 1e-6)),
+        selector: SelectorKind::Bsls,
+        seed,
+        shards,
+        threads,
+        ..Default::default()
+    }
+}
+
+fn spec(data: Arc<Dataset>, cfg: FwConfig) -> JobSpec {
+    JobSpec { id: 0, label: "c".into(), data, algo: Algo::Fast, cfg, test_data: None }
+}
+
+/// Deterministic trace fields — everything but the wall clock.
+fn trace_key(r: &TraceRecord) -> (usize, f64, u64, u64, u64, usize) {
+    (r.iter, r.gap, r.flops, r.bytes, r.pops, r.selected)
+}
+
+/// Six concurrent same-dataset solves (distinct seeds → distinct
+/// mechanism streams) through the ingress coalesce into exactly one
+/// bootstrap compute, and every output is bit-identical to the same job
+/// run independently — weights, trace, ε — with each follower's `flops`
+/// lower than its independent run's by exactly the skipped bootstrap.
+#[test]
+fn coalesced_solves_are_bit_identical_to_independent_runs() {
+    for shards in [None, Some(3)] {
+        for threads in [1usize, 4] {
+            let d = dataset(11);
+            let mut ing =
+                Ingress::new(IngressConfig { workers: 4, ..Default::default() });
+            let seeds: Vec<u64> = (100..106).collect();
+            for &seed in &seeds {
+                let admit =
+                    ing.submit(Request::Solve(spec(d.clone(), dp_cfg(seed, shards, threads))));
+                assert!(admit.is_accepted(), "{admit:?}");
+            }
+            let out = ing.drain();
+            assert_eq!(out.len(), seeds.len());
+
+            let mut cold = 0usize;
+            for ((_, outcome), &seed) in out.iter().zip(&seeds) {
+                let got = outcome.as_ref().expect("coalesced solve failed");
+                let fresh = spec(d.clone(), dp_cfg(seed, shards, threads)).run();
+                assert_eq!(
+                    got.output.weights, fresh.output.weights,
+                    "weights differ (P={shards:?}, threads={threads}, seed={seed})"
+                );
+                assert_eq!(
+                    got.output.trace.iter().map(trace_key).collect::<Vec<_>>(),
+                    fresh.output.trace.iter().map(trace_key).collect::<Vec<_>>(),
+                    "trace differs (P={shards:?}, threads={threads}, seed={seed})"
+                );
+                // follower ε is its own full spend — coalescing shares the
+                // bootstrap compute, never the mechanism releases
+                assert_eq!(got.output.eps_spent, fresh.output.eps_spent);
+                assert!(fresh.output.bootstrap_flops > 0);
+                // honest accounting: a warm run's flops omit exactly the
+                // bootstrap it skipped
+                assert_eq!(
+                    got.output.flops + (fresh.output.bootstrap_flops
+                        - got.output.bootstrap_flops),
+                    fresh.output.flops
+                );
+                if got.output.bootstrap_flops > 0 {
+                    cold += 1;
+                    assert_eq!(got.output.bootstrap_flops, fresh.output.bootstrap_flops);
+                }
+            }
+            assert_eq!(
+                cold, 1,
+                "exactly one bootstrap compute per hub key (P={shards:?}, threads={threads})"
+            );
+            // one hub lead, one published slot; the five warm runs got
+            // their bootstrap from the hub or their worker's local cache
+            // (which scheduling decides — both are coalesced paths)
+            assert_eq!(ing.hub().leads(), 1);
+            assert_eq!(ing.hub().ready_len(), 1);
+        }
+    }
+}
+
+/// A leader that panics inside the bootstrap (while holding the hub
+/// lease) fails only its own job: waiting followers observe the aborted
+/// lease, detach, re-lead seed-pinned, and still produce bit-identical
+/// output.
+#[test]
+fn followers_survive_a_leader_panic_mid_bootstrap() {
+    let d = dataset(12);
+    let mut ing = Ingress::new(IngressConfig { workers: 4, ..Default::default() });
+
+    // the doomed leader: claims hub leadership, stalls 150 ms (the
+    // followers' window to attach), then panics; no retries configured
+    let mut doomed = spec(d.clone(), dp_cfg(7, None, 1));
+    doomed.cfg.fault = FaultPlan::once(FaultKind::PanicInBootstrap { after_ms: 150 });
+    let Admit::Accepted { ids: doomed_ids, .. } =
+        ing.submit(Request::Solve(doomed))
+    else {
+        panic!("leader must be accepted")
+    };
+    // let a worker pick it up and claim the lease before the followers
+    std::thread::sleep(Duration::from_millis(30));
+
+    let seeds = [200u64, 201, 202];
+    for &seed in &seeds {
+        assert!(ing
+            .submit(Request::Solve(spec(d.clone(), dp_cfg(seed, None, 1))))
+            .is_accepted());
+    }
+    let out = ing.drain();
+    assert_eq!(out.len(), 4);
+    let doomed_id = doomed_ids.start;
+    for (id, outcome) in &out {
+        if *id == doomed_id {
+            let err = outcome.as_ref().unwrap_err();
+            assert!(
+                format!("{err}").contains("bootstrap"),
+                "leader must fail with the injected bootstrap panic: {err}"
+            );
+        } else {
+            let got = outcome.as_ref().expect("follower stranded by leader panic");
+            let seed = seeds[*id - 1]; // ids 1..=3 in submission order
+            let fresh = spec(d.clone(), dp_cfg(seed, None, 1)).run();
+            assert_eq!(got.output.weights, fresh.output.weights);
+            assert_eq!(got.output.eps_spent, fresh.output.eps_spent);
+        }
+    }
+    // the doomed leader led once; a follower re-led after the abort
+    assert_eq!(ing.hub().leads(), 2, "abort must hand leadership over");
+    assert!(
+        ing.hub().detaches() >= 1,
+        "at least one waiting follower must have detached from the dead lease"
+    );
+}

@@ -1,0 +1,305 @@
+//! §6.10 overload soak (serial; CI runs it with `--test-threads=1`):
+//! under fault-injected overload — panics, abrupt worker deaths, expired
+//! deadlines, watermark sheds, brownout, breaker quarantine — every
+//! *accepted* request still resolves to exactly one structured outcome,
+//! the admission counters match the `Admit` decisions handed back, and
+//! the queue gauge returns to zero after every wave.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use dpfw::coordinator::{
+    Admit, Algo, ClassPolicy, Ingress, IngressConfig, JobError, JobSpec, PredictJob,
+    Request,
+};
+use dpfw::dp::accounting::PrivacyParams;
+use dpfw::fw::cancel::{CancelToken, StopReason};
+use dpfw::fw::config::{FwConfig, SelectorKind};
+use dpfw::sparse::synth::SynthConfig;
+use dpfw::sparse::Dataset;
+use dpfw::testkit::faults::{FaultKind, FaultPlan};
+
+fn dataset(seed: u64) -> Arc<Dataset> {
+    Arc::new(
+        SynthConfig {
+            name: format!("soak{seed}"),
+            n_rows: 120,
+            n_cols: 60,
+            avg_row_nnz: 7.0,
+            zipf_exponent: 1.2,
+            n_informative: 10,
+            n_dense: 0,
+            label_noise: 0.02,
+            bias_col: true,
+        }
+        .generate(seed),
+    )
+}
+
+fn dp_cfg(seed: u64) -> FwConfig {
+    FwConfig {
+        iters: 60,
+        lambda: 6.0,
+        privacy: Some(PrivacyParams::new(1.0, 1e-6)),
+        selector: SelectorKind::Bsls,
+        seed,
+        ..Default::default()
+    }
+}
+
+fn solve(data: Arc<Dataset>, cfg: FwConfig) -> Request {
+    Request::Solve(JobSpec {
+        id: 0,
+        label: "s".into(),
+        data,
+        algo: Algo::Fast,
+        cfg,
+        test_data: None,
+    })
+}
+
+fn predict(data: Arc<Dataset>) -> Request {
+    let w = Arc::new(vec![0.01; data.csr.n_cols()]);
+    Request::Predict(PredictJob {
+        id: 0,
+        label: "p".into(),
+        data,
+        weights: w,
+        threads: 0,
+        cancel: CancelToken::none(),
+        fault: FaultPlan::none(),
+    })
+}
+
+/// The acceptance property verbatim: a burst over the hard watermark,
+/// laced with every §6.9 fault shape, and each accepted id resolves —
+/// `Ok`, `Panicked`, `WorkerDied`, or `Expired` — while sheds enqueue
+/// nothing and the counters reconcile exactly.
+#[test]
+fn faulted_overload_burst_resolves_every_accepted_id() {
+    let d = dataset(1);
+    let mut ing = Ingress::new(IngressConfig {
+        workers: 3,
+        solve: ClassPolicy { queue_hard: 8, ..Default::default() },
+        ..Default::default()
+    });
+
+    let mut owed: Vec<usize> = Vec::new();
+    let mut sheds = 0u64;
+    let mut panicky: Vec<usize> = Vec::new();
+    let mut mortal: Vec<usize> = Vec::new();
+    let mut expired: Vec<usize> = Vec::new();
+    for k in 0..12u64 {
+        let mut cfg = dp_cfg(100 + k);
+        let kind = k % 4;
+        match kind {
+            1 => cfg.fault = FaultPlan::once(FaultKind::PanicAt { iter: 3 }),
+            2 => cfg.fault = FaultPlan::once(FaultKind::DieAbruptly),
+            3 => cfg.cancel = CancelToken::deadline_in(Duration::ZERO),
+            _ => {}
+        }
+        match ing.submit(solve(d.clone(), cfg)) {
+            Admit::Accepted { ids, .. } => {
+                let id = ids.start;
+                owed.extend(ids);
+                match kind {
+                    1 => panicky.push(id),
+                    2 => mortal.push(id),
+                    3 => expired.push(id),
+                    _ => {}
+                }
+            }
+            Admit::Shed(_) => sheds += 1,
+            Admit::Redirected { .. } => panic!("no rate limit configured"),
+        }
+    }
+    // predictions ride the same pool on their own (open) class
+    for _ in 0..3 {
+        match ing.submit(predict(d.clone())) {
+            Admit::Accepted { ids, .. } => owed.extend(ids),
+            other => panic!("predict class is open: {other:?}"),
+        }
+    }
+    assert!(sheds > 0, "12 solves past queue_hard=8 must shed some");
+
+    let out = ing.drain();
+    assert_eq!(out.len(), owed.len(), "every accepted id is owed an outcome");
+    assert_eq!(out.iter().map(|(id, _)| *id).collect::<Vec<_>>(), owed);
+    for (id, outcome) in &out {
+        match outcome {
+            Ok(r) => assert!(
+                !panicky.contains(id) && !expired.contains(id),
+                "id {id} should have failed, got Ok ({})",
+                r.label
+            ),
+            Err(JobError::Panicked(msg)) => {
+                assert!(panicky.contains(id), "unexpected panic on id {id}: {msg}");
+            }
+            Err(JobError::WorkerDied) => {
+                assert!(mortal.contains(id), "unexpected worker death on id {id}");
+            }
+            Err(JobError::Expired) => {
+                assert!(expired.contains(id), "unexpected shed of running id {id}");
+            }
+            Err(other) => panic!("unstructured outcome for id {id}: {other:?}"),
+        }
+    }
+
+    let m = ing.metrics();
+    assert_eq!(m.admits.load(Ordering::Relaxed), owed.len() as u64);
+    assert_eq!(m.admission_sheds.load(Ordering::Relaxed), sheds);
+    assert_eq!(m.queue_depth.load(Ordering::Relaxed), 0, "gauge must return to 0");
+    assert!(
+        m.workers_respawned.load(Ordering::Relaxed) >= mortal.len() as u64,
+        "each abrupt death is supervised back into rotation"
+    );
+    assert!(m.bytes_per_request() > 0);
+}
+
+/// Sustained overload arms the brownout; drained queues disarm it. The
+/// degraded runs stay honest end to end: `StopReason::Brownout`, the
+/// capped iteration count, and `eps_spent` at exactly the anytime rate.
+#[test]
+fn brownout_arms_under_pressure_and_recovers_after_drain() {
+    let d = dataset(2);
+    let iters = 60usize;
+    let pp = PrivacyParams::new(1.0, 1e-6);
+    let mut ing = Ingress::new(IngressConfig {
+        workers: 2,
+        solve: ClassPolicy { queue_soft: 2, ..Default::default() },
+        brownout_after: 2,
+        brownout_frac: 0.5,
+        brownout_min_iters: 8,
+        ..Default::default()
+    });
+    // depth 0,1 admit below the soft mark; depths 2 and 3 breach twice —
+    // the 4th and later admissions are browned out
+    let mut browned: Vec<usize> = Vec::new();
+    for k in 0..6 {
+        match ing.submit(solve(d.clone(), dp_cfg(200 + k))) {
+            Admit::Accepted { ids, browned_out } => {
+                assert_eq!(browned_out, k >= 3, "admission {k}");
+                if browned_out {
+                    browned.extend(ids);
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+    assert!(ing.brownout_active());
+
+    let cap = ((iters - 1) as f64 * 0.5).floor() as usize;
+    let out = ing.drain();
+    assert_eq!(out.len(), 6);
+    for (id, o) in &out {
+        let r = o.as_ref().expect("degraded, not dropped");
+        if browned.contains(id) {
+            assert_eq!(r.output.stopped, StopReason::Brownout);
+            assert_eq!(r.output.iters_run, cap);
+            assert_eq!(r.output.eps_spent, Some(pp.spent_epsilon(iters, cap)));
+        } else {
+            assert_eq!(r.output.stopped, StopReason::IterBudget);
+        }
+    }
+    assert_eq!(
+        ing.metrics().brownout_jobs.load(Ordering::Relaxed),
+        browned.len() as u64
+    );
+
+    // the drain reset the queues; the next admission sits below the soft
+    // watermark and deactivates the controller — full budgets again
+    match ing.submit(solve(d.clone(), dp_cfg(299))) {
+        Admit::Accepted { browned_out, .. } => assert!(!browned_out),
+        other => panic!("{other:?}"),
+    }
+    assert!(!ing.brownout_active(), "recovery must disarm the controller");
+    let out = ing.drain();
+    assert_eq!(out[0].1.as_ref().unwrap().output.stopped, StopReason::IterBudget);
+}
+
+/// A worker that keeps destroying jobs is quarantined out of rotation
+/// (breaker at K consecutive failures) and the shrunken pool keeps
+/// serving; every poisoned id still resolves structurally.
+#[test]
+fn circuit_breaker_quarantines_and_pool_keeps_serving() {
+    let d = dataset(3);
+    let mut ing = Ingress::new(IngressConfig {
+        workers: 2,
+        breaker_k: 2,
+        ..Default::default()
+    });
+    // λ ≤ 0 fails config validation inside the worker — a deterministic
+    // panic on whichever worker picks the job up
+    let poison = || {
+        solve(d.clone(), FwConfig { iters: 40, lambda: -1.0, ..Default::default() })
+    };
+    let mut owed = Vec::new();
+    for _ in 0..6 {
+        match ing.submit(poison()) {
+            Admit::Accepted { ids, .. } => owed.extend(ids),
+            other => panic!("{other:?}"),
+        }
+    }
+    let out = ing.drain();
+    assert_eq!(out.len(), owed.len());
+    for (id, o) in &out {
+        assert!(
+            matches!(o, Err(JobError::Panicked(_))),
+            "poison id {id} must fail structurally: {o:?}"
+        );
+    }
+    assert!(
+        ing.metrics().workers_quarantined.load(Ordering::Relaxed) >= 1,
+        "two strikes must quarantine at least one worker"
+    );
+    assert!(ing.live_workers() >= 1, "the pool never empties itself");
+
+    // the survivor still serves clean work
+    assert!(ing.submit(solve(d, dp_cfg(300))).is_accepted());
+    let out = ing.drain();
+    assert!(out[0].1.is_ok(), "{:?}", out[0].1);
+}
+
+/// Three consecutive waves through one long-lived ingress: admission
+/// accounting and the §6.9 resolution contract hold wave after wave
+/// (nothing leaks across drains).
+#[test]
+fn repeated_waves_keep_the_accounting_exact() {
+    let d = dataset(4);
+    let mut ing = Ingress::new(IngressConfig {
+        workers: 2,
+        solve: ClassPolicy { queue_hard: 4, ..Default::default() },
+        ..Default::default()
+    });
+    let mut total_admits = 0u64;
+    let mut total_sheds = 0u64;
+    for wave in 0..3u64 {
+        let mut owed = Vec::new();
+        for k in 0..6u64 {
+            let mut cfg = dp_cfg(wave * 10 + k);
+            if k == 1 {
+                cfg.fault = FaultPlan::once(FaultKind::PanicAt { iter: 2 });
+            }
+            match ing.submit(solve(d.clone(), cfg)) {
+                Admit::Accepted { ids, .. } => owed.extend(ids),
+                Admit::Shed(_) => total_sheds += 1,
+                Admit::Redirected { .. } => panic!("no rate limit configured"),
+            }
+        }
+        assert_eq!(owed.len(), 4, "wave {wave}: hard watermark admits exactly 4");
+        total_admits += owed.len() as u64;
+        let out = ing.drain();
+        assert_eq!(out.len(), owed.len(), "wave {wave}");
+        assert_eq!(out.iter().map(|(id, _)| *id).collect::<Vec<_>>(), owed);
+        assert_eq!(
+            ing.metrics().queue_depth.load(Ordering::Relaxed),
+            0,
+            "wave {wave}: gauge must return to zero"
+        );
+    }
+    let m = ing.metrics();
+    assert_eq!(m.admits.load(Ordering::Relaxed), total_admits);
+    assert_eq!(m.admission_sheds.load(Ordering::Relaxed), total_sheds);
+    assert_eq!(total_sheds, 6, "2 sheds per wave, watermark resets per drain");
+}
