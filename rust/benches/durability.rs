@@ -1,0 +1,235 @@
+//! Bench: **the §6.11 durability plane's overhead and recovery latency**.
+//!
+//! Three measurements carry the story:
+//!
+//! 1. **Ledger append throughput by fsync policy** — the write-ahead ε
+//!    ledger sits on the solver's release path, so the
+//!    `Always`/`EveryN`/`Never` sweep is the latency-vs-loss-window trade
+//!    (DESIGN.md §6.11) in numbers.
+//! 2. **Checkpoint write/read cost vs iterate size** — snapshots are O(t)
+//!    in the completed iteration count (the LASSO-ball sparsity bound),
+//!    so the cost should scale with t, not with the feature count D.
+//! 3. **Crash-recovery latency** — resume-from-checkpoint (replay the
+//!    recorded prefix, then finish) vs the uninterrupted run, on a real
+//!    DP solve. The gap between the two is what a crash actually costs.
+//!
+//! Like the other benches, the run doubles as an invariant check: the
+//! resumed output must be bit-identical to the uninterrupted run's, and
+//! every frame written must survive a reopen.
+
+mod bench_harness;
+
+use std::sync::Arc;
+
+use bench_harness::{section, smoke_mode, Bench, JsonReport};
+use dpfw::coordinator::{Algo, JobSpec};
+use dpfw::dp::accounting::PrivacyParams;
+use dpfw::dp::ledger::{EpsLedger, FsyncPolicy, LedgerRecord};
+use dpfw::fw::cancel::StopReason;
+use dpfw::fw::checkpoint::{FwCheckpoint, RunDurability};
+use dpfw::fw::config::{FwConfig, SelectorKind};
+use dpfw::fw::queue::SelectorStats;
+use dpfw::fw::trace::TraceRecord;
+use dpfw::sparse::synth::{DatasetPreset, SynthConfig};
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("dpfw-bench-durab-{}-{name}", std::process::id()))
+}
+
+/// A synthetic snapshot shaped like a run after `t` iterations: t history
+/// entries, ≤ t distinct weights, a full per-iteration trace.
+fn synthetic_ckpt(t: usize) -> FwCheckpoint {
+    let history: Vec<(u32, i8)> =
+        (0..t).map(|i| ((i % 997) as u32, if i % 2 == 0 { 1 } else { -1 })).collect();
+    let weights = FwCheckpoint::sparse_weights(&history, |j| j as f64 * 1e-3);
+    let trace: Vec<TraceRecord> = (1..=t)
+        .map(|i| TraceRecord {
+            iter: i,
+            gap: 1.0 / i as f64,
+            flops: (i * 100) as u64,
+            bytes: (i * 800) as u64,
+            pops: i as u64,
+            selected: i % 997,
+            wall_ns: i as u128 * 1_000,
+        })
+        .collect();
+    FwCheckpoint {
+        fingerprint: 0x5EED,
+        dataset_token: 1,
+        seed: 7,
+        t_planned: (t * 2) as u64,
+        iter: t as u64,
+        rng: [1, 2, 3, 4],
+        flops: [1, 2, 3, 4, 5, 6, 7],
+        stats: SelectorStats {
+            selects: t as u64,
+            pops: t as u64,
+            reinserts: 0,
+            big_steps: 0,
+            little_steps: 0,
+        },
+        gap: 0.5,
+        history,
+        weights,
+        trace,
+    }
+}
+
+fn main() {
+    let smoke = smoke_mode();
+    let runs = if smoke { 2 } else { 5 };
+    let mut report =
+        JsonReport::with_env("BENCH_durability.json", "DPFW_BENCH_DURABILITY_JSON");
+
+    // ---- 1. ledger append throughput by fsync policy -------------------
+    let appends = if smoke { 100usize } else { 500 };
+    section(&format!("ε-ledger appends ({appends} frames per run)"));
+    for (name, policy) in [
+        ("always", FsyncPolicy::Always),
+        ("every8", FsyncPolicy::EveryN(8)),
+        ("never", FsyncPolicy::Never),
+    ] {
+        let path = tmp(&format!("wal-{name}"));
+        let stats = Bench::new(format!("ledger-append-fsync-{name}"))
+            .warmup(1)
+            .runs(runs)
+            .run_stats(|| {
+                let _ = std::fs::remove_file(&path);
+                let l = EpsLedger::open(&path, policy).unwrap();
+                for k in 0..appends {
+                    l.append(LedgerRecord {
+                        request: k as u64,
+                        token: 1,
+                        planned: 4000,
+                        released: 100,
+                        eps: 0.01,
+                    })
+                    .unwrap();
+                }
+                l.frames()
+            });
+        // recovery scan: reopen the populated log (replay + torn-tail scan)
+        let l = EpsLedger::open(&path, policy).unwrap();
+        assert_eq!(l.frames(), appends as u64, "every frame must survive reopen");
+        drop(l);
+        let open_stats = Bench::new(format!("ledger-reopen-{name}"))
+            .warmup(1)
+            .runs(runs)
+            .run_stats(|| EpsLedger::open(&path, policy).unwrap().frames());
+        let per_append_us = stats.mean_s * 1e6 / appends as f64;
+        println!("  {name}: {per_append_us:.2} µs/append");
+        report.record(
+            &format!("ledger-append-{name}"),
+            stats,
+            &[
+                ("appends", appends.to_string()),
+                ("per_append_us", format!("{per_append_us:.3}")),
+                ("reopen_mean_s", format!("{:.6}", open_stats.mean_s)),
+            ],
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+
+    // ---- 2. checkpoint write/read cost vs iterate size ------------------
+    section("checkpoint write/read vs completed iterations t (O(t) frames)");
+    let sizes: &[usize] = if smoke { &[100, 1000] } else { &[100, 1000, 10000] };
+    for &t in sizes {
+        let ck = synthetic_ckpt(t);
+        let path = tmp(&format!("ckpt-{t}"));
+        let w = Bench::new(format!("ckpt-write-t{t}"))
+            .warmup(1)
+            .runs(runs)
+            .run_stats(|| ck.write_to(&path).unwrap());
+        let r = Bench::new(format!("ckpt-read-t{t}"))
+            .warmup(1)
+            .runs(runs)
+            .run_stats(|| FwCheckpoint::read_from(&path).unwrap().iter);
+        assert_eq!(FwCheckpoint::read_from(&path).unwrap(), ck, "lossless round trip");
+        let bytes = std::fs::metadata(&path).unwrap().len();
+        report.record(
+            &format!("ckpt-write-t{t}"),
+            w,
+            &[("t", t.to_string()), ("frame_bytes", bytes.to_string())],
+        );
+        report.record(&format!("ckpt-read-t{t}"), r, &[("t", t.to_string())]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    // ---- 3. crash-recovery latency on a real DP solve -------------------
+    let scale = if smoke { 0.01 } else { 0.05 };
+    let iters = if smoke { 60 } else { 300 };
+    let cut_at = iters / 2;
+    let ds = Arc::new(
+        SynthConfig::preset(DatasetPreset::News20).scale(scale).generate(42),
+    );
+    section(&format!(
+        "crash recovery: resume at t={cut_at} vs uninterrupted (T={iters}, N={}, D={})",
+        ds.n_rows(),
+        ds.n_cols()
+    ));
+    let cfg = FwConfig {
+        iters,
+        lambda: 8.0,
+        privacy: Some(PrivacyParams::new(1.0, 1e-6)),
+        selector: SelectorKind::Bsls,
+        seed: 7,
+        ..Default::default()
+    };
+    let job = |cfg: FwConfig| JobSpec {
+        id: 0,
+        label: "durab".into(),
+        data: ds.clone(),
+        algo: Algo::Fast,
+        cfg,
+        test_data: None,
+    };
+    // produce the mid-run snapshot once (brownout at the cut point)
+    let ck_path = tmp("resume-ckpt");
+    let mut capped = cfg.clone();
+    capped.iter_cap = Some(cut_at);
+    capped.durability = Some(Arc::new(RunDurability {
+        request_id: 1,
+        path: ck_path.clone(),
+        ledger: None,
+        every_k: 0,
+    }));
+    let cut = job(capped).run();
+    assert_eq!(cut.output.stopped, StopReason::Brownout);
+    let ck = Arc::new(FwCheckpoint::read_from(&ck_path).unwrap());
+
+    let full_stats = Bench::new("solve-uninterrupted")
+        .warmup(1)
+        .runs(runs)
+        .run_stats(|| job(cfg.clone()).run().output.flops);
+    let mut resume_cfg = cfg.clone();
+    resume_cfg.resume = Some(ck.clone());
+    let resume_stats = Bench::new(format!("solve-resume-from-t{cut_at}"))
+        .warmup(1)
+        .runs(runs)
+        .run_stats(|| job(resume_cfg.clone()).run().output.flops);
+    // the invariant the whole plane exists for: same bits either way
+    let full = job(cfg.clone()).run();
+    let resumed = job(resume_cfg.clone()).run();
+    assert_eq!(resumed.output.weights, full.output.weights, "resume diverged");
+    assert_eq!(resumed.output.eps_spent, full.output.eps_spent);
+    report.record(
+        "solve-uninterrupted",
+        full_stats,
+        &[("iters", iters.to_string())],
+    );
+    report.record(
+        "solve-resume",
+        resume_stats,
+        &[
+            ("iters", iters.to_string()),
+            ("resume_from", cut_at.to_string()),
+            (
+                "recovery_ratio",
+                format!("{:.3}", resume_stats.mean_s / full_stats.mean_s.max(1e-12)),
+            ),
+        ],
+    );
+    let _ = std::fs::remove_file(&ck_path);
+
+    report.write().expect("failed to write durability JSON");
+}

@@ -28,6 +28,12 @@
 //!   (`ε·√(cap/T)` — the §6.9 anytime contract).
 //! * **Circuit breaker.** [`IngressConfig::breaker_k`] forwards to the
 //!   pool's per-worker breaker ([`super::scheduler::PoolOptions`]).
+//! * **Budget gate (§6.11).** With a durable ε ledger configured
+//!   ([`IngressConfig::durability`]) and a per-dataset budget
+//!   ([`IngressConfig::dataset_budget`]), private requests against a
+//!   dataset whose cumulative write-ahead spend cannot absorb their ask
+//!   are refused at admission ([`ShedReason::BudgetExhausted`]) — before
+//!   any mechanism runs, and durably across restarts.
 //!
 //! Everything is observable on the shared [`Metrics`]: admit / shed /
 //! redirect / brownout counters, per-class queue-inclusive latency, and
@@ -40,7 +46,9 @@ use std::time::{Duration, Instant};
 
 use super::job::{JobSpec, PathJob, PredictJob};
 use super::metrics::Metrics;
-use super::scheduler::{Coordinator, JobOutcome, PoolOptions, RetryPolicy};
+use super::scheduler::{
+    Coordinator, DurabilityOptions, JobOutcome, PoolOptions, RegrowPolicy, RetryPolicy,
+};
 use crate::fw::config::FwConfig;
 use crate::fw::workspace::BootHub;
 use crate::sparse::Dataset;
@@ -76,18 +84,24 @@ impl JobClass {
 }
 
 /// Why a request was refused outright.
-#[derive(Clone, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum ShedReason {
     /// The class's queue depth reached its hard watermark.
     QueueFull { class: JobClass, depth: usize, watermark: usize },
     /// The ingress was shut down; nothing is dispatched anymore.
     PoolDown,
+    /// §6.11 budget gate: the write-ahead ε ledger already records
+    /// `spent` against this dataset, and admitting this request's `ask`
+    /// would exceed [`IngressConfig::dataset_budget`]. Refused *before*
+    /// any mechanism runs — the ledger is the durable source of truth, so
+    /// the refusal survives restarts.
+    BudgetExhausted { token: u64, spent: f64, ask: f64, budget: f64 },
 }
 
 /// The admission decision for one request — every call to
 /// [`Ingress::submit`] resolves to exactly one of these, so callers
 /// always learn what happened (no silent drops).
-#[derive(Clone, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum Admit {
     /// Enqueued; the ids will each resolve to `Ok`/`Err` in
     /// [`Ingress::drain`] (the §6.9 contract). `browned_out` reports
@@ -229,6 +243,18 @@ pub struct IngressConfig {
     pub workers: usize,
     /// Seed-pinned retry policy for panicked jobs.
     pub retry: RetryPolicy,
+    /// §6.11 durability plane, forwarded to
+    /// [`PoolOptions::durability`]: cadence checkpoints, the write-ahead
+    /// ε ledger, and crash resume for cell solves.
+    pub durability: Option<DurabilityOptions>,
+    /// §6.11 load-driven regrowth of quarantined worker slots, forwarded
+    /// to [`PoolOptions::regrow`].
+    pub regrow: Option<RegrowPolicy>,
+    /// Per-dataset cumulative ε budget. With a ledger configured, a
+    /// private request whose ask would push the dataset's durable spend
+    /// past this is refused at admission
+    /// ([`ShedReason::BudgetExhausted`]). `None` = unmetered.
+    pub dataset_budget: Option<f64>,
 }
 
 impl Default for IngressConfig {
@@ -243,6 +269,9 @@ impl Default for IngressConfig {
             breaker_k: 0,
             workers: 2,
             retry: RetryPolicy::default(),
+            durability: None,
+            regrow: None,
+            dataset_budget: None,
         }
     }
 }
@@ -276,6 +305,8 @@ impl Ingress {
                 retry: cfg.retry,
                 breaker_k: cfg.breaker_k,
                 boot_hub: Some(Arc::clone(&hub)),
+                durability: cfg.durability.clone(),
+                regrow: cfg.regrow,
             },
         );
         let mk = |p: &ClassPolicy| p.rate_per_sec.map(|r| TokenBucket::new(r, p.burst));
@@ -319,6 +350,39 @@ impl Ingress {
                 depth,
                 watermark: pol.queue_hard,
             });
+        }
+        // ---- §6.11 budget gate ----------------------------------------
+        // Refuse private work against a dataset whose durable ε spend —
+        // the write-ahead ledger's figure, which includes everything
+        // charged before any crash or restart — cannot absorb this
+        // request's ask. Checked before the token bucket so a doomed
+        // request never consumes rate budget.
+        if let (Some(budget), Some(ledger)) = (
+            self.cfg.dataset_budget,
+            self.cfg.durability.as_ref().and_then(|d| d.ledger.as_ref()),
+        ) {
+            let ask = match &req {
+                Request::Solve(s) => s.cfg.privacy.map(|pp| pp.epsilon),
+                // every λ cell runs its own mechanism stream: a path asks
+                // for the full per-run ε once per λ
+                Request::Path(p) => {
+                    p.cfg.privacy.map(|pp| pp.epsilon * p.lambdas.len() as f64)
+                }
+                Request::Predict(_) => None, // post-processing: spends nothing
+            };
+            if let Some(ask) = ask {
+                let token = req.dataset().token();
+                let spent = ledger.spent_for_dataset(token);
+                if spent + ask > budget {
+                    m.admission_sheds.fetch_add(1, Ordering::Relaxed);
+                    return Admit::Shed(ShedReason::BudgetExhausted {
+                        token,
+                        spent,
+                        ask,
+                        budget,
+                    });
+                }
+            }
         }
         if let Some(bucket) = &mut self.buckets[class.idx()] {
             if let Err(retry_after) = bucket.try_take() {
@@ -449,7 +513,9 @@ mod tests {
     use super::*;
     use crate::coordinator::job::Algo;
     use crate::dp::accounting::PrivacyParams;
+    use crate::dp::ledger::{EpsLedger, FsyncPolicy};
     use crate::fw::cancel::{CancelToken, StopReason};
+    use crate::fw::config::SelectorKind;
     use crate::sparse::synth::SynthConfig;
     use crate::testkit::faults::FaultPlan;
 
@@ -610,6 +676,7 @@ mod tests {
                     iters,
                     lambda: 4.0,
                     privacy: Some(pp),
+                    selector: SelectorKind::Bsls,
                     ..Default::default()
                 },
                 test_data: None,
@@ -671,6 +738,78 @@ mod tests {
         let mut tiny = FwConfig { iters: 9, ..Default::default() };
         assert!(!apply_brownout(&mut tiny, &icfg));
         assert_eq!(tiny.iter_cap, None);
+    }
+
+    #[test]
+    fn budget_gate_refuses_private_work_on_an_exhausted_dataset() {
+        let dir = std::env::temp_dir()
+            .join(format!("dpfw-ing-budget-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let ledger = Arc::new(
+            EpsLedger::open(dir.join("eps.wal"), FsyncPolicy::Never).unwrap(),
+        );
+        let mut ing = Ingress::new(IngressConfig {
+            workers: 1,
+            durability: Some(DurabilityOptions {
+                ledger: Some(Arc::clone(&ledger)),
+                dir: dir.clone(),
+                every_k: 0,
+            }),
+            dataset_budget: Some(1.5),
+            ..Default::default()
+        });
+        let d = ds(6);
+        let pp = PrivacyParams::new(1.0, 1e-6);
+        let req = || {
+            Request::Solve(JobSpec {
+                id: 0,
+                label: "q".into(),
+                data: d.clone(),
+                algo: Algo::Fast,
+                cfg: FwConfig {
+                    iters: 40,
+                    lambda: 4.0,
+                    privacy: Some(pp),
+                    selector: SelectorKind::Bsls,
+                    ..Default::default()
+                },
+                test_data: None,
+            })
+        };
+        // first request fits (nothing spent yet) and runs to completion,
+        // charging ε·√((T−1)/T) ≈ 0.987 against the dataset in the ledger
+        assert!(ing.submit(req()).is_accepted());
+        let out = ing.drain();
+        assert!(out[0].1.is_ok(), "{:?}", out[0].1);
+        let spent = ledger.spent_for_dataset(d.token());
+        assert!(spent > 0.9 && spent < 1.0, "spent {spent}");
+        // second request asks for another 1.0: 0.987 + 1.0 > 1.5 → shed
+        match ing.submit(req()) {
+            Admit::Shed(ShedReason::BudgetExhausted { token, spent: s, ask, budget }) => {
+                assert_eq!(token, d.token());
+                assert_eq!(s, spent);
+                assert_eq!(ask, 1.0);
+                assert_eq!(budget, 1.5);
+            }
+            other => panic!("expected budget shed, got {other:?}"),
+        }
+        assert_eq!(ing.metrics().admission_sheds.load(Ordering::Relaxed), 1);
+        // non-private work on the same dataset stays unmetered
+        let w = Arc::new(vec![0.0; d.csr.n_cols()]);
+        assert!(ing
+            .submit(Request::Predict(PredictJob {
+                id: 0,
+                label: "p".into(),
+                data: d.clone(),
+                weights: w,
+                threads: 0,
+                cancel: CancelToken::none(),
+                fault: FaultPlan::none(),
+            }))
+            .is_accepted());
+        let out = ing.drain();
+        assert!(out.iter().all(|(_, o)| o.is_ok()));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -4,6 +4,7 @@ use std::sync::Arc;
 
 use crate::eval;
 use crate::fw::cancel::CancelToken;
+use crate::fw::checkpoint::{FwCheckpoint, RunDurability};
 use crate::fw::config::FwConfig;
 use crate::fw::fast::FastFrankWolfe;
 use crate::fw::flops::{BYTES_F32_READ, BYTES_F64_READ, FLOPS_SIGMOID};
@@ -307,6 +308,54 @@ impl Job {
             Job::Cell(c) => &c.cfg.fault,
             Job::Path(p) => &p.cfg.fault,
             Job::Predict(p) => &p.fault,
+        }
+    }
+
+    /// The job's dataset token — the ε ledger's per-dataset spend key
+    /// (DESIGN.md §6.11). Predictions spend no budget but still report
+    /// which dataset they touch.
+    pub(crate) fn dataset_token(&self) -> u64 {
+        match self {
+            Job::Cell(c) => c.data.token(),
+            Job::Path(p) => p.data.token(),
+            Job::Predict(p) => p.data.token(),
+        }
+    }
+
+    /// The job's privacy parameters, when it is a private solve (predict
+    /// jobs spend nothing; the ingress budget gate keys off this).
+    pub(crate) fn privacy(&self) -> Option<&crate::dp::accounting::PrivacyParams> {
+        match self {
+            Job::Cell(c) => c.cfg.privacy.as_ref(),
+            Job::Path(p) => p.cfg.privacy.as_ref(),
+            Job::Predict(_) => None,
+        }
+    }
+
+    /// Arm §6.11 durability on a single-cell solve: cadence checkpoints +
+    /// write-ahead ε-ledger records. Path jobs run many solves through
+    /// one workspace and predictions are stateless, so both decline
+    /// (`false`) — the pool then treats them as non-resumable, exactly as
+    /// before this subsystem existed.
+    pub(crate) fn arm_durability(&mut self, dur: Arc<RunDurability>) -> bool {
+        match self {
+            Job::Cell(c) => {
+                c.cfg.durability = Some(dur);
+                true
+            }
+            Job::Path(_) | Job::Predict(_) => false,
+        }
+    }
+
+    /// Attach a resume checkpoint to a single-cell solve (the supervisor's
+    /// crash-recovery path). Returns `false` for non-cell jobs.
+    pub(crate) fn set_resume(&mut self, ck: Arc<FwCheckpoint>) -> bool {
+        match self {
+            Job::Cell(c) => {
+                c.cfg.resume = Some(ck);
+                true
+            }
+            Job::Path(_) | Job::Predict(_) => false,
         }
     }
 

@@ -108,6 +108,14 @@ pub struct Metrics {
     /// Workers taken out of rotation by the circuit breaker after K
     /// consecutive panicking/dying jobs (DESIGN.md §6.10) — not respawned.
     pub workers_quarantined: AtomicU64,
+    /// Quarantined slots re-spawned by the load-driven regrowth policy
+    /// (DESIGN.md §6.11): queue backlog over the soft threshold, cooldown
+    /// elapsed, pool below strength.
+    pub workers_regrown: AtomicU64,
+    /// Crashed jobs the supervisor resubmitted from their durable
+    /// checkpoint (or from scratch when the crash predated the first
+    /// cadence snapshot) instead of failing them (§6.11).
+    pub jobs_resumed: AtomicU64,
     /// Requests the ingress accepted (every one resolves to a structured
     /// outcome; `Admit::Accepted`).
     pub admits: AtomicU64,
@@ -150,6 +158,8 @@ impl Default for Metrics {
             timeouts: AtomicU64::new(0),
             workers_respawned: AtomicU64::new(0),
             workers_quarantined: AtomicU64::new(0),
+            workers_regrown: AtomicU64::new(0),
+            jobs_resumed: AtomicU64::new(0),
             admits: AtomicU64::new(0),
             admission_sheds: AtomicU64::new(0),
             redirects: AtomicU64::new(0),
@@ -196,7 +206,7 @@ impl Metrics {
         format!(
             "jobs {}/{} ({} failed), {:.2e} iters, {:.2e} flops, {:.1} iters/s, \
              pool busy {:.2}s, {} B/req | depth {} retries {} sheds {} timeouts {} \
-             respawns {} quarantined {} | \
+             respawns {} quarantined {} regrown {} resumed {} | \
              admit {} shed {} redirect {} brownout {} (entries {}) | \
              cell p50/p99 {}/{} µs, path p50/p99 {}/{} µs, predict p50/p99 {}/{} µs",
             self.jobs_completed.load(Ordering::Relaxed),
@@ -213,6 +223,8 @@ impl Metrics {
             self.timeouts.load(Ordering::Relaxed),
             self.workers_respawned.load(Ordering::Relaxed),
             self.workers_quarantined.load(Ordering::Relaxed),
+            self.workers_regrown.load(Ordering::Relaxed),
+            self.jobs_resumed.load(Ordering::Relaxed),
             self.admits.load(Ordering::Relaxed),
             self.admission_sheds.load(Ordering::Relaxed),
             self.redirects.load(Ordering::Relaxed),

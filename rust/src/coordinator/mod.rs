@@ -29,6 +29,16 @@
 //! [`crate::fw::workspace::BootHub`], a brownout controller that degrades
 //! iteration budgets honestly under sustained overload, and a per-worker
 //! circuit breaker.
+//!
+//! The durability plane (DESIGN.md §6.11) adds crash consistency on top:
+//! [`scheduler::DurabilityOptions`] arms cadence checkpoints
+//! ([`crate::fw::checkpoint`]) and the write-ahead ε ledger
+//! ([`crate::dp::ledger`]) on every cell solve, the supervisor resumes a
+//! crashed worker's job from its latest checkpoint (bitwise identical to
+//! the uninterrupted run, exactly-once accounting), ingress refuses
+//! private work on budget-exhausted datasets, and
+//! [`scheduler::RegrowPolicy`] regrows quarantined worker slots under
+//! queue backlog.
 
 pub mod ingress;
 pub mod job;
@@ -42,4 +52,6 @@ pub use ingress::{
 pub use job::{Algo, Job, JobError, JobResult, JobSpec, PathJob, PredictJob};
 pub use metrics::{LatencyHisto, Metrics};
 pub use registry::Registry;
-pub use scheduler::{Coordinator, JobOutcome, PoolOptions, RetryPolicy};
+pub use scheduler::{
+    Coordinator, DurabilityOptions, JobOutcome, PoolOptions, RegrowPolicy, RetryPolicy,
+};

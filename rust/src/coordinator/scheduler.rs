@@ -54,7 +54,9 @@
 //!   `Ok(JobResult)` or `Err(JobError)` from `drain`, whatever combination
 //!   of panics, deadlines, sheds, quarantines, or worker deaths occurred.
 
+use std::collections::HashMap;
 use std::panic::AssertUnwindSafe;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -63,8 +65,11 @@ use std::time::{Duration, Instant};
 
 use super::job::{Job, JobError, JobResult, JobSpec, PathJob, PredictJob};
 use super::metrics::Metrics;
+use crate::dp::ledger::EpsLedger;
 use crate::fw::cancel::StopReason;
+use crate::fw::checkpoint::{FwCheckpoint, RunDurability};
 use crate::fw::workspace::{BootHub, FwWorkspace};
+use crate::testkit::faults::CrashPayload;
 
 /// Outcome of one job id: the result, or a structured [`JobError`].
 pub type JobOutcome = Result<JobResult, JobError>;
@@ -110,6 +115,45 @@ impl RetryPolicy {
     }
 }
 
+/// §6.11 durability plane: arm cadence checkpoints and write-ahead
+/// ε-ledger records on every single-cell solve the pool runs, and let the
+/// supervisor resume a crashed worker's job from its latest checkpoint
+/// instead of failing it.
+#[derive(Clone, Debug)]
+pub struct DurabilityOptions {
+    /// Write-ahead ε ledger, shared with ingress admission (which refuses
+    /// new work once a dataset's budget is exhausted). `None` = checkpoint
+    /// without accounting.
+    pub ledger: Option<Arc<EpsLedger>>,
+    /// Directory for per-job checkpoint files (`ckpt-<id>.bin`); must
+    /// exist.
+    pub dir: PathBuf,
+    /// Checkpoint cadence in solver iterations (0 = only at interruption
+    /// stop points).
+    pub every_k: usize,
+}
+
+/// Load-driven regrowth of quarantined worker slots (§6.11). Quarantine
+/// (the §6.9 circuit breaker) permanently shrinks the pool; with a regrow
+/// policy set, the supervisor re-spawns one fresh worker — clean strike
+/// record — whenever the pool is below strength, the queue is deeper than
+/// `queue_soft`, and `cooldown` has elapsed since the last regrowth. One
+/// slot per cooldown window, so a genuinely poisoned environment
+/// re-quarantines at a bounded rate instead of flapping.
+#[derive(Clone, Copy, Debug)]
+pub struct RegrowPolicy {
+    /// Minimum time between regrow events.
+    pub cooldown: Duration,
+    /// Regrow only while `queue_depth` exceeds this backlog.
+    pub queue_soft: usize,
+}
+
+impl Default for RegrowPolicy {
+    fn default() -> Self {
+        Self { cooldown: Duration::from_secs(5), queue_soft: 0 }
+    }
+}
+
 /// Pool construction knobs beyond the worker count (§6.10).
 #[derive(Clone, Default)]
 pub struct PoolOptions {
@@ -123,6 +167,10 @@ pub struct PoolOptions {
     /// worker's workspace so concurrent same-dataset solves share one
     /// leader bootstrap.
     pub boot_hub: Option<Arc<BootHub>>,
+    /// §6.11 durability plane (checkpoints + ε ledger + crash resume).
+    pub durability: Option<DurabilityOptions>,
+    /// §6.11 load-driven regrowth of quarantined slots.
+    pub regrow: Option<RegrowPolicy>,
 }
 
 /// What travels down the job channel: the job plus its enqueue time, so
@@ -223,6 +271,16 @@ pub struct Coordinator {
     /// Outcomes produced without a worker (e.g. submissions after
     /// shutdown → [`JobError::PoolDied`]), merged into the next `drain`.
     local: Vec<(usize, JobOutcome)>,
+    /// §6.11 crash-recovery ledger: durability-armed cell jobs, keyed by
+    /// their result id, kept until the id resolves. A crashed worker's
+    /// owed entry is resubmitted once from its latest checkpoint; removal
+    /// on resubmission is what bounds recovery to one resume attempt.
+    pending: HashMap<usize, Job>,
+    /// When the last regrow event fired (rate limit).
+    last_regrow: Option<Instant>,
+    /// Monotone id source for regrown workers (original ids stay taken by
+    /// their quarantined threads' late events).
+    next_worker_id: usize,
 }
 
 impl Coordinator {
@@ -257,6 +315,9 @@ impl Coordinator {
             epochs: 0,
             submitted: 0,
             local: Vec::new(),
+            pending: HashMap::new(),
+            last_regrow: None,
+            next_worker_id: n_workers,
         };
         for worker_id in 0..n_workers {
             let slot = this.spawn_worker(worker_id, Arc::new(AtomicU32::new(0)));
@@ -318,10 +379,25 @@ impl Coordinator {
         self.submit_job(Job::Predict(job));
     }
 
-    pub(crate) fn submit_job(&mut self, job: Job) {
+    pub(crate) fn submit_job(&mut self, mut job: Job) {
         let n = job.n_results();
         self.metrics.jobs_submitted.fetch_add(n as u64, Ordering::Relaxed);
         self.submitted += n;
+        // ---- §6.11 durability arming (single-cell solves only) ---------
+        // The armed clone is parked in `pending` so a crashed worker's
+        // owed id can be resubmitted from its checkpoint.
+        if let Some(dur) = &self.opts.durability {
+            let id = job.result_ids().start;
+            let run = Arc::new(RunDurability {
+                request_id: id as u64,
+                path: dur.dir.join(format!("ckpt-{id}.bin")),
+                ledger: dur.ledger.clone(),
+                every_k: dur.every_k,
+            });
+            if job.arm_durability(run) {
+                self.pending.insert(id, job.clone());
+            }
+        }
         // Gauge up BEFORE the send: the instant the job hits the channel a
         // worker may pick it up and gauge down, and a decrement racing
         // ahead of its increment would wrap the unsigned gauge upward.
@@ -336,6 +412,7 @@ impl Coordinator {
             // outcomes instead of panicking the caller
             self.metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
             for id in d.job.result_ids() {
+                self.pending.remove(&id);
                 self.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
                 self.local.push((id, Err(JobError::PoolDied)));
             }
@@ -366,8 +443,12 @@ impl Coordinator {
     pub fn drain_with_ids(&mut self) -> Vec<(usize, JobOutcome)> {
         let mut out: Vec<(usize, JobOutcome)> = std::mem::take(&mut self.local);
         while out.len() < self.submitted {
+            self.maybe_regrow();
             match self.result_rx.recv_timeout(FALLBACK_TICK) {
-                Ok(WorkerEvent::Result(id, outcome)) => out.push((id, outcome)),
+                Ok(WorkerEvent::Result(id, outcome)) => {
+                    self.pending.remove(&id);
+                    out.push((id, outcome));
+                }
                 Ok(WorkerEvent::Exited { worker_id, epoch, cause }) => {
                     self.on_worker_exit(worker_id, epoch, cause, &mut out);
                 }
@@ -407,6 +488,12 @@ impl Coordinator {
                     slot.inflight.lock().unwrap_or_else(|e| e.into_inner()).take();
                 if let Some(ids) = owed {
                     for id in ids {
+                        // §6.11: a durability-armed cell gets one resume
+                        // attempt from its latest checkpoint before the id
+                        // is failed the pre-durability way.
+                        if self.try_resume(id) {
+                            continue;
+                        }
                         self.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
                         out.push((id, Err(JobError::WorkerDied)));
                     }
@@ -457,6 +544,66 @@ impl Coordinator {
         for (worker_id, epoch) in finished {
             self.on_worker_exit(worker_id, epoch, ExitCause::Died, out);
         }
+    }
+
+    /// §6.11 crash recovery: if `id` is a durability-armed cell still in
+    /// `pending`, resubmit it — resuming from its latest on-disk
+    /// checkpoint when one exists, from scratch otherwise (a crash before
+    /// the first cadence boundary leaves no file; a seed-pinned fresh run
+    /// is the correct recovery and the ledger's max-merge keeps the
+    /// ε accounting exactly-once either way). Removing the entry from
+    /// `pending` here is what bounds recovery to a single attempt: a
+    /// second crash finds nothing and fails as [`JobError::WorkerDied`].
+    fn try_resume(&mut self, id: usize) -> bool {
+        let Some(mut job) = self.pending.remove(&id) else { return false };
+        let Some(tx) = self.job_tx.clone() else { return false };
+        let dur = self.opts.durability.as_ref().expect("pending implies durability");
+        let path = dur.dir.join(format!("ckpt-{id}.bin"));
+        if path.exists() {
+            match FwCheckpoint::read_from(&path) {
+                Ok(ck) => {
+                    job.set_resume(Arc::new(ck));
+                }
+                Err(e) => {
+                    // torn/corrupt snapshot: recover from scratch rather
+                    // than refuse recovery (the CRC already dropped it)
+                    eprintln!("[dpfw] checkpoint {path:?} unreadable ({e}); resuming from scratch");
+                }
+            }
+        }
+        self.metrics.jobs_resumed.fetch_add(1, Ordering::Relaxed);
+        self.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
+        if tx.send(Dispatch { job, enqueued_at: Instant::now() }).is_err() {
+            self.metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+            return false;
+        }
+        true
+    }
+
+    /// §6.11 load-driven regrowth: re-spawn one fresh worker slot when the
+    /// pool is below strength (quarantine shrank it), the queue backlog
+    /// exceeds the policy's soft threshold, and the cooldown has elapsed.
+    fn maybe_regrow(&mut self) {
+        let Some(policy) = self.opts.regrow else { return };
+        if self.workers.len() >= self.n_workers {
+            return;
+        }
+        if self.metrics.queue_depth.load(Ordering::Relaxed) <= policy.queue_soft as u64 {
+            return;
+        }
+        if let Some(last) = self.last_regrow {
+            if last.elapsed() < policy.cooldown {
+                return;
+            }
+        }
+        self.last_regrow = Some(Instant::now());
+        let worker_id = self.next_worker_id;
+        self.next_worker_id += 1;
+        self.metrics.workers_regrown.fetch_add(1, Ordering::Relaxed);
+        // fresh strike record: the slot earns its own way back to the
+        // breaker instead of inheriting the quarantined thread's record
+        let slot = self.spawn_worker(worker_id, Arc::new(AtomicU32::new(0)));
+        self.workers.push(slot);
     }
 
     /// Convenience: submit everything, drain, unwrap failures into `Err`.
@@ -570,6 +717,14 @@ fn worker_loop(ctx: WorkerCtx) -> ExitCause {
                     // a leader that panicked mid-bootstrap still holds the
                     // hub lease; release it so followers detach and re-lead
                     ws.boot_lease_abort();
+                    // §6.11 simulated crash: the typed marker means "this
+                    // worker is dead", not "this job panicked" — leave the
+                    // in-flight slot set and exit without reporting, so
+                    // the supervisor recovers the owed job from its
+                    // durable checkpoint instead of retrying in place.
+                    if p.downcast_ref::<CrashPayload>().is_some() {
+                        return ExitCause::Died;
+                    }
                     let msg = panic_message(p);
                     if attempt >= retry.retry_limit {
                         break Err(if retry.retry_limit == 0 {
@@ -903,6 +1058,83 @@ mod tests {
         assert_eq!(c.metrics.workers_quarantined.load(Ordering::Relaxed), 0);
         let after = c.run_all(vec![job(1, d)]);
         assert!(after[0].is_ok());
+    }
+
+    #[test]
+    fn crash_mid_solve_resumes_from_checkpoint_bitwise() {
+        let dir = std::env::temp_dir()
+            .join(format!("dpfw-sched-crash-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let d = ds(11);
+        // clean in-process reference run: what the pool must reproduce
+        let clean = job(0, d.clone()).run();
+        let mut c = Coordinator::with_options(
+            1,
+            PoolOptions {
+                durability: Some(DurabilityOptions {
+                    ledger: None,
+                    dir: dir.clone(),
+                    every_k: 10,
+                }),
+                ..Default::default()
+            },
+        );
+        let mut doomed = job(0, d);
+        doomed.cfg.fault = FaultPlan::once(FaultKind::CrashAt { iter: 37 });
+        c.submit(doomed);
+        let results = c.drain();
+        let r = results[0].as_ref().expect("crashed job must resume to Ok");
+        // the crash killed the worker (not a retry-in-place panic) and the
+        // supervisor resumed the owed id from its checkpoint
+        assert_eq!(c.metrics.jobs_resumed.load(Ordering::Relaxed), 1);
+        assert_eq!(c.metrics.workers_respawned.load(Ordering::Relaxed), 1);
+        assert_eq!(c.metrics.jobs_failed.load(Ordering::Relaxed), 0);
+        assert_eq!(c.metrics.retries.load(Ordering::Relaxed), 0);
+        // bitwise identical to the uninterrupted run
+        assert_eq!(r.output.weights, clean.output.weights);
+        assert_eq!(r.output.final_gap.to_bits(), clean.output.final_gap.to_bits());
+        assert_eq!(r.output.flops, clean.output.flops);
+        assert_eq!(r.output.iters_run, clean.output.iters_run);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn regrow_policy_refills_quarantined_slots_under_backlog() {
+        let mut c = Coordinator::with_options(
+            2,
+            PoolOptions {
+                breaker_k: 1,
+                regrow: Some(RegrowPolicy {
+                    cooldown: Duration::ZERO,
+                    queue_soft: 0,
+                }),
+                ..Default::default()
+            },
+        );
+        let d = ds(12);
+        // two poison jobs: with K = 1 at least one worker quarantines
+        // (the last live worker respawns instead — the pool never empties)
+        for i in 0..2 {
+            let mut bad = job(i, d.clone());
+            bad.cfg.lambda = -1.0;
+            c.submit(bad);
+        }
+        let first = c.drain();
+        assert!(first.iter().all(|r| r.is_err()));
+        assert!(c.metrics.workers_quarantined.load(Ordering::Relaxed) >= 1);
+        // a backlog of clean work: the drain loop's regrow check sees
+        // pool-below-strength + queue over the soft mark + cooldown clear
+        for i in 2..8 {
+            c.submit(job(i, d.clone()));
+        }
+        let after = c.drain();
+        assert!(after.iter().all(|r| r.is_ok()), "regrown pool must serve");
+        assert!(
+            c.metrics.workers_regrown.load(Ordering::Relaxed) >= 1,
+            "regrown {}",
+            c.metrics.workers_regrown.load(Ordering::Relaxed)
+        );
+        assert!(c.live_workers() >= 1);
     }
 
     #[test]

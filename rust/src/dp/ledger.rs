@@ -1,0 +1,413 @@
+//! Write-ahead ε ledger — the durable half of the privacy accountant
+//! (DESIGN.md §6.11).
+//!
+//! Everything the serving tier knew about spent budget before this module
+//! lived in process memory: a crash mid-solve lost the record of which
+//! exponential-mechanism selections were already *released*, and a
+//! restarted service could not prove it wasn't double-spending ε — the one
+//! unreplenishable resource a DP service manages. [`EpsLedger`] is an
+//! append-only log of CRC-framed spend records, written **ahead of** the
+//! release it accounts for (the solver appends at every checkpoint
+//! boundary and immediately before its results leave the worker), so at
+//! any crash point the log covers at least every selection an observer
+//! could have seen.
+//!
+//! Three properties carry the crash-safety argument:
+//!
+//! * **Idempotency by request id (max-merge).** One logical request may be
+//!   recorded many times — at each checkpoint cadence, again at
+//!   completion, and yet again when a crash-resumed run replays the
+//!   cadence. Records for the same request id merge by *maximum released
+//!   count*: cumulative dataset spend is the sum over request-id maxima,
+//!   so replay after a crash never double-counts. (The re-released
+//!   selections themselves are covered by the seed-pinned replay argument
+//!   of §6.9: a resumed run reproduces bit-identical mechanism outputs,
+//!   which is post-processing of the already-charged releases — zero
+//!   additional ε.)
+//! * **Torn-tail recovery.** A crash mid-append can leave a partial or
+//!   corrupt final frame. [`EpsLedger::open`] scans frames until the first
+//!   CRC/length failure and truncates the file there — everything before
+//!   the torn frame is intact by construction (frames are fixed-size and
+//!   self-checksummed), and the torn record is at most the one append that
+//!   had not yet been acknowledged.
+//! * **Configurable durability.** [`FsyncPolicy`] trades append latency
+//!   against the window of records an OS crash can lose: `Always` fsyncs
+//!   every frame, `EveryN(n)` amortizes, `Never` leaves flushing to the
+//!   OS (process-crash-safe only). `benches/durability.rs` measures the
+//!   sweep.
+
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// One frame: req(8) + token(8) + planned(4) + released(4) + eps(8) +
+/// crc32(4). Fixed-size so the torn-tail scan is a simple stride.
+pub const LEDGER_FRAME_LEN: usize = 36;
+
+/// CRC-32 (IEEE, reflected 0xEDB88320) — self-contained so the ledger has
+/// no dependencies; shared with the checkpoint frame via `pub(crate)`.
+pub(crate) fn crc32(data: &[u8]) -> u32 {
+    let mut crc = !0u32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+/// When appends reach the disk (DESIGN.md §6.11).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FsyncPolicy {
+    /// `fsync` after every frame: a record acknowledged is a record
+    /// durable, even through an OS crash.
+    Always,
+    /// `fsync` every N frames: bounds the loss window to N−1 records.
+    EveryN(u32),
+    /// Never fsync explicitly: durable against process death (the write
+    /// reached the page cache) but not OS/power failure.
+    Never,
+}
+
+/// One spend record as read back from the log.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LedgerRecord {
+    /// Request id — the idempotency key.
+    pub request: u64,
+    /// Dataset identity token the spend charges against.
+    pub token: u64,
+    /// Planned iteration budget T (the noise scale's calibration).
+    pub planned: u32,
+    /// Mechanism selections released so far (monotone per request).
+    pub released: u32,
+    /// Cumulative ε spent by this request at `released` releases.
+    pub eps: f64,
+}
+
+impl LedgerRecord {
+    fn encode(&self) -> [u8; LEDGER_FRAME_LEN] {
+        let mut buf = [0u8; LEDGER_FRAME_LEN];
+        buf[0..8].copy_from_slice(&self.request.to_le_bytes());
+        buf[8..16].copy_from_slice(&self.token.to_le_bytes());
+        buf[16..20].copy_from_slice(&self.planned.to_le_bytes());
+        buf[20..24].copy_from_slice(&self.released.to_le_bytes());
+        buf[24..32].copy_from_slice(&self.eps.to_bits().to_le_bytes());
+        let crc = crc32(&buf[0..32]);
+        buf[32..36].copy_from_slice(&crc.to_le_bytes());
+        buf
+    }
+
+    fn decode(buf: &[u8]) -> Option<Self> {
+        if buf.len() < LEDGER_FRAME_LEN {
+            return None;
+        }
+        let crc = u32::from_le_bytes(buf[32..36].try_into().unwrap());
+        if crc != crc32(&buf[0..32]) {
+            return None;
+        }
+        Some(Self {
+            request: u64::from_le_bytes(buf[0..8].try_into().unwrap()),
+            token: u64::from_le_bytes(buf[8..16].try_into().unwrap()),
+            planned: u32::from_le_bytes(buf[16..20].try_into().unwrap()),
+            released: u32::from_le_bytes(buf[20..24].try_into().unwrap()),
+            eps: f64::from_bits(u64::from_le_bytes(buf[24..32].try_into().unwrap())),
+        })
+    }
+}
+
+/// Per-request merged state: the maximum-released record seen.
+#[derive(Clone, Copy, Debug)]
+struct ReqState {
+    token: u64,
+    released: u32,
+    eps: f64,
+}
+
+#[derive(Debug)]
+struct LedgerInner {
+    file: File,
+    policy: FsyncPolicy,
+    unsynced: u32,
+    /// request id → max-merged state.
+    requests: HashMap<u64, ReqState>,
+    /// dataset token → Σ over request maxima of eps.
+    spend: HashMap<u64, f64>,
+    /// valid frames currently on disk (after any tail truncation).
+    frames: u64,
+    /// frames dropped by torn-tail truncation at the last `open`.
+    truncated: u64,
+}
+
+impl LedgerInner {
+    /// Merge a record into the in-memory view. Max-merge: only a strictly
+    /// larger released count for a known request moves the dataset spend
+    /// (by the eps delta); duplicates and stale replays are no-ops.
+    fn merge(&mut self, r: &LedgerRecord) -> bool {
+        match self.requests.get_mut(&r.request) {
+            Some(st) => {
+                if r.released <= st.released {
+                    return false;
+                }
+                let delta = r.eps - st.eps;
+                st.released = r.released;
+                st.eps = r.eps;
+                *self.spend.entry(r.token).or_insert(0.0) += delta;
+                true
+            }
+            None => {
+                self.requests
+                    .insert(r.request, ReqState { token: r.token, released: r.released, eps: r.eps });
+                *self.spend.entry(r.token).or_insert(0.0) += r.eps;
+                true
+            }
+        }
+    }
+}
+
+/// The append-only write-ahead ε ledger. All methods take `&self` — one
+/// ledger is shared across the worker pool and the ingress via `Arc`.
+#[derive(Debug)]
+pub struct EpsLedger {
+    path: PathBuf,
+    inner: Mutex<LedgerInner>,
+}
+
+impl EpsLedger {
+    /// Open (or create) the ledger at `path`, replaying every valid frame
+    /// into the in-memory spend view and truncating a torn tail: the scan
+    /// stops at the first frame whose CRC fails or whose length is short,
+    /// and the file is cut back to the last valid frame boundary.
+    pub fn open(path: impl AsRef<Path>, policy: FsyncPolicy) -> std::io::Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        let mut file =
+            OpenOptions::new().read(true).write(true).create(true).open(&path)?;
+        let mut bytes = Vec::new();
+        file.read_to_end(&mut bytes)?;
+        let mut inner = LedgerInner {
+            file,
+            policy,
+            unsynced: 0,
+            requests: HashMap::new(),
+            spend: HashMap::new(),
+            frames: 0,
+            truncated: 0,
+        };
+        let mut off = 0usize;
+        while off + LEDGER_FRAME_LEN <= bytes.len() {
+            match LedgerRecord::decode(&bytes[off..off + LEDGER_FRAME_LEN]) {
+                Some(r) => {
+                    inner.merge(&r);
+                    inner.frames += 1;
+                    off += LEDGER_FRAME_LEN;
+                }
+                None => break,
+            }
+        }
+        if off < bytes.len() {
+            // torn or corrupt tail: cut back to the last valid boundary
+            inner.truncated =
+                (bytes.len() - off).div_ceil(LEDGER_FRAME_LEN) as u64;
+            inner.file.set_len(off as u64)?;
+        }
+        inner.file.seek(SeekFrom::End(0))?;
+        Ok(Self { path, inner: Mutex::new(inner) })
+    }
+
+    /// Append one spend record, durable per the fsync policy, and merge it
+    /// into the live view. Write-ahead contract: callers append **before**
+    /// releasing the selections the record accounts for. Returns `true`
+    /// when the record advanced the merged state (i.e. it was not a
+    /// replayed duplicate).
+    pub fn append(&self, r: LedgerRecord) -> std::io::Result<bool> {
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        g.file.write_all(&r.encode())?;
+        g.frames += 1;
+        match g.policy {
+            FsyncPolicy::Always => g.file.sync_data()?,
+            FsyncPolicy::EveryN(n) => {
+                g.unsynced += 1;
+                if g.unsynced >= n.max(1) {
+                    g.file.sync_data()?;
+                    g.unsynced = 0;
+                }
+            }
+            FsyncPolicy::Never => {}
+        }
+        Ok(g.merge(&r))
+    }
+
+    /// Force everything appended so far to disk regardless of policy.
+    pub fn sync(&self) -> std::io::Result<()> {
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        g.file.sync_data()?;
+        g.unsynced = 0;
+        Ok(())
+    }
+
+    /// Cumulative ε charged against a dataset token: the sum over request
+    /// ids of each request's maximum recorded spend.
+    pub fn spent_for_dataset(&self, token: u64) -> f64 {
+        let g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        g.spend.get(&token).copied().unwrap_or(0.0)
+    }
+
+    /// The merged (released, eps) state for one request id, if recorded.
+    pub fn spent_for_request(&self, request: u64) -> Option<(u32, f64)> {
+        let g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        g.requests.get(&request).map(|st| (st.released, st.eps))
+    }
+
+    /// Valid frames currently in the log (appends since open included).
+    pub fn frames(&self) -> u64 {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).frames
+    }
+
+    /// Frames discarded by torn-tail truncation at the last `open`.
+    pub fn truncated_frames(&self) -> u64 {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).truncated
+    }
+
+    /// Distinct request ids recorded.
+    pub fn n_requests(&self) -> usize {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).requests.len()
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let p = std::env::temp_dir()
+            .join(format!("dpfw-ledger-{}-{}", std::process::id(), name));
+        let _ = std::fs::remove_file(&p);
+        p
+    }
+
+    fn rec(request: u64, token: u64, released: u32, eps: f64) -> LedgerRecord {
+        LedgerRecord { request, token, planned: 100, released, eps }
+    }
+
+    #[test]
+    fn crc32_reference_vector() {
+        // the canonical IEEE check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn append_and_reopen_round_trip() {
+        let p = tmp("round-trip");
+        {
+            let l = EpsLedger::open(&p, FsyncPolicy::Always).unwrap();
+            assert!(l.append(rec(1, 7, 10, 0.1)).unwrap());
+            assert!(l.append(rec(2, 7, 20, 0.3)).unwrap());
+            assert!(l.append(rec(3, 8, 5, 0.05)).unwrap());
+            assert!((l.spent_for_dataset(7) - 0.4).abs() < 1e-12);
+        }
+        let l = EpsLedger::open(&p, FsyncPolicy::Always).unwrap();
+        assert_eq!(l.frames(), 3);
+        assert_eq!(l.truncated_frames(), 0);
+        assert!((l.spent_for_dataset(7) - 0.4).abs() < 1e-12);
+        assert!((l.spent_for_dataset(8) - 0.05).abs() < 1e-12);
+        assert_eq!(l.spent_for_request(2), Some((20, 0.3)));
+        assert_eq!(l.spent_for_dataset(999), 0.0);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn max_merge_is_idempotent_per_request() {
+        let p = tmp("max-merge");
+        let l = EpsLedger::open(&p, FsyncPolicy::Never).unwrap();
+        assert!(l.append(rec(1, 7, 10, 0.1)).unwrap());
+        // progress record: only the delta moves the dataset spend
+        assert!(l.append(rec(1, 7, 30, 0.25)).unwrap());
+        assert!((l.spent_for_dataset(7) - 0.25).abs() < 1e-12);
+        // exact replay and stale replay are both no-ops
+        assert!(!l.append(rec(1, 7, 30, 0.25)).unwrap());
+        assert!(!l.append(rec(1, 7, 10, 0.1)).unwrap());
+        assert!((l.spent_for_dataset(7) - 0.25).abs() < 1e-12);
+        assert_eq!(l.spent_for_request(1), Some((30, 0.25)));
+        assert_eq!(l.n_requests(), 1);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn torn_tail_truncates_to_last_valid_frame() {
+        let p = tmp("torn-tail");
+        {
+            let l = EpsLedger::open(&p, FsyncPolicy::Always).unwrap();
+            l.append(rec(1, 7, 10, 0.1)).unwrap();
+            l.append(rec(2, 7, 20, 0.2)).unwrap();
+        }
+        // simulate a crash mid-append: half a frame dangling
+        {
+            let mut f = OpenOptions::new().append(true).open(&p).unwrap();
+            f.write_all(&[0xAB; LEDGER_FRAME_LEN / 2]).unwrap();
+        }
+        let l = EpsLedger::open(&p, FsyncPolicy::Always).unwrap();
+        assert_eq!(l.frames(), 2);
+        assert_eq!(l.truncated_frames(), 1);
+        assert!((l.spent_for_dataset(7) - 0.3).abs() < 1e-12);
+        // the truncation is physical: a fresh reopen sees a clean log
+        let l2 = EpsLedger::open(&p, FsyncPolicy::Always).unwrap();
+        assert_eq!(l2.truncated_frames(), 0);
+        assert_eq!(l2.frames(), 2);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn corrupt_tail_byte_drops_only_the_last_frame() {
+        let p = tmp("corrupt-tail");
+        {
+            let l = EpsLedger::open(&p, FsyncPolicy::Always).unwrap();
+            l.append(rec(1, 7, 10, 0.1)).unwrap();
+            l.append(rec(2, 7, 20, 0.2)).unwrap();
+        }
+        // flip one byte inside the last frame's payload
+        {
+            let mut bytes = std::fs::read(&p).unwrap();
+            let off = LEDGER_FRAME_LEN + 5;
+            bytes[off] ^= 0xFF;
+            std::fs::write(&p, &bytes).unwrap();
+        }
+        let l = EpsLedger::open(&p, FsyncPolicy::Always).unwrap();
+        assert_eq!(l.frames(), 1);
+        assert_eq!(l.truncated_frames(), 1);
+        assert!((l.spent_for_dataset(7) - 0.1).abs() < 1e-12);
+        // replaying the lost record after recovery charges it exactly once
+        assert!(l.append(rec(2, 7, 20, 0.2)).unwrap());
+        assert!(!l.append(rec(2, 7, 20, 0.2)).unwrap());
+        assert!((l.spent_for_dataset(7) - 0.3).abs() < 1e-12);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn fsync_policies_all_reach_disk_on_sync() {
+        for (name, policy) in [
+            ("always", FsyncPolicy::Always),
+            ("every4", FsyncPolicy::EveryN(4)),
+            ("never", FsyncPolicy::Never),
+        ] {
+            let p = tmp(&format!("policy-{name}"));
+            let l = EpsLedger::open(&p, policy).unwrap();
+            for k in 0..10u64 {
+                l.append(rec(k, 7, 10, 0.01)).unwrap();
+            }
+            l.sync().unwrap();
+            drop(l);
+            let l = EpsLedger::open(&p, policy).unwrap();
+            assert_eq!(l.frames(), 10);
+            assert!((l.spent_for_dataset(7) - 0.1).abs() < 1e-9);
+            let _ = std::fs::remove_file(&p);
+        }
+    }
+}

@@ -8,4 +8,5 @@
 //!   scaled-up implementations).
 
 pub mod accounting;
+pub mod ledger;
 pub mod mechanisms;

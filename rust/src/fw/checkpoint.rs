@@ -1,0 +1,597 @@
+//! Crash-consistent solver checkpoints (DESIGN.md §6.11).
+//!
+//! After `t` Frank-Wolfe iterations the iterate has at most `t` nonzero
+//! coordinates — the sparsity property the paper's LASSO-ball constraint
+//! buys — so a snapshot is O(t), not O(D): the selection history, the
+//! sparse weights it induces, the RNG stream position, and the telemetry
+//! counters. A [`FwCheckpoint`] is written atomically (temp file +
+//! `sync_all` + rename) in a dependency-free framed binary format, and
+//! [`FwConfig::resume`] feeds one back into either solver such that
+//! *checkpoint-at-t-then-resume is bitwise identical to the uninterrupted
+//! run* — weights, trace, flops, selector stats, and ε spend — at any
+//! (shards, threads) combination.
+//!
+//! ## How resume restores solver state
+//!
+//! The fast solver's incremental state (`hat_v`, `q`, `alpha`, `g_base`,
+//! heap bounds) is large and substrate-shaped, so the checkpoint does not
+//! persist it. Instead resume **replays** iterations `1..=t` against the
+//! same dataset: update scans and notify drains run normally (rebuilding
+//! axis state and heap/sampler structures exactly), while the recorded
+//! selection history supplies each iteration's coordinate for selectors
+//! whose `select` either consumes randomness or is pure (DP mechanisms,
+//! argmax) — heap selectors re-run `select` live, which is deterministic
+//! and keeps their pop/reinsert structure honest. At the replay→live
+//! boundary [`FwCheckpoint::restore_into`] overwrites the RNG, the flop
+//! counter, the selector telemetry, the gap, and the trace prefix with the
+//! recorded values, so the continuation reports the logical uninterrupted
+//! trajectory (replay work is deliberately *not* double-counted — it is
+//! post-processing of already-released selections and spends zero ε, see
+//! `dp/ledger.rs`).
+//!
+//! The standard solver recomputes its dense state from `w` every
+//! iteration, so its resume is direct: restore the sparse weights, seed
+//! the selector from the recorded history/stats, and continue at `t + 1`.
+//!
+//! ## What the fingerprint covers
+//!
+//! [`config_fingerprint`] hashes exactly the trajectory-defining fields:
+//! `iters` (the noise calibration T), `lambda`, the privacy parameters,
+//! the selector kind, `seed`, `lipschitz`, and `trace_every`. It
+//! deliberately **excludes** `threads`, `shards`, and `direct_max_nnz`
+//! (bit-identical performance knobs — resuming on a different topology is
+//! the point) and the stop criteria (`iter_cap`, `gap_tol`, `cancel`): a
+//! browned-out run's prefix is bit-identical to the uncapped run's, so
+//! finishing it later under a different cap is a legitimate — indeed the
+//! motivating — use of resume.
+
+use std::fs::{File, OpenOptions};
+use std::io::{self, Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::dp::ledger::{crc32, EpsLedger, LedgerRecord};
+use crate::fw::config::FwConfig;
+use crate::fw::flops::FlopCounter;
+use crate::fw::queue::{CoordinateSelector, SelectorStats};
+use crate::fw::trace::TraceRecord;
+use crate::rng::Xoshiro256pp;
+
+/// On-disk magic for a checkpoint frame.
+pub const CKPT_MAGIC: [u8; 8] = *b"DPFWCKPT";
+/// Format version; bump on any layout change.
+pub const CKPT_VERSION: u32 = 1;
+
+/// Decode guard: no length field may claim more than this many elements
+/// (a torn/corrupt frame must fail cleanly, not allocate gigabytes).
+const MAX_LEN: u32 = 1 << 27;
+
+/// FNV-1a over the trajectory-defining [`FwConfig`] fields (see the
+/// module docs for the include/exclude rationale). Stable across runs and
+/// processes — it is part of the on-disk format.
+pub fn config_fingerprint(cfg: &FwConfig) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    };
+    eat(&(cfg.iters as u64).to_le_bytes());
+    eat(&cfg.lambda.to_bits().to_le_bytes());
+    match &cfg.privacy {
+        Some(p) => {
+            eat(&[1]);
+            eat(&p.epsilon.to_bits().to_le_bytes());
+            eat(&p.delta.to_bits().to_le_bytes());
+        }
+        None => eat(&[0]),
+    }
+    eat(cfg.selector.name().as_bytes());
+    eat(&cfg.seed.to_le_bytes());
+    match cfg.lipschitz {
+        Some(l) => {
+            eat(&[1]);
+            eat(&l.to_bits().to_le_bytes());
+        }
+        None => eat(&[0]),
+    }
+    eat(&(cfg.trace_every as u64).to_le_bytes());
+    h
+}
+
+/// One crash-consistent solver snapshot at an iteration boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FwCheckpoint {
+    /// [`config_fingerprint`] of the run that wrote this snapshot.
+    pub fingerprint: u64,
+    /// [`crate::sparse::Dataset`] identity token (process-unique).
+    pub dataset_token: u64,
+    /// RNG seed of the run (redundant with the fingerprint; kept explicit
+    /// for diagnostics).
+    pub seed: u64,
+    /// Planned iteration budget T (the noise scale's calibration).
+    pub t_planned: u64,
+    /// Last completed iteration `t` — `history.len() == iter`.
+    pub iter: u64,
+    /// Xoshiro256++ state *after* iteration `iter`.
+    pub rng: [u64; 4],
+    /// [`FlopCounter::to_words`] snapshot after iteration `iter`.
+    pub flops: [u64; 7],
+    /// Selector telemetry after iteration `iter`.
+    pub stats: SelectorStats,
+    /// Gap recorded at the last completed iteration.
+    pub gap: f64,
+    /// Selection history: `(coordinate, step sign)` per iteration, in
+    /// order. The sign disambiguates the vertex `s = ∓λ·e_j` so replay can
+    /// assert it reproduces the recorded step.
+    pub history: Vec<(u32, i8)>,
+    /// Sparse iterate: `(coordinate, weight)` for every coordinate the
+    /// history ever touched (≤ `iter` entries, sorted by coordinate;
+    /// zeros from cancelling steps are kept — the set matters, not just
+    /// the support).
+    pub weights: Vec<(u32, f64)>,
+    /// Trace prefix recorded up to and including iteration `iter`.
+    pub trace: Vec<TraceRecord>,
+}
+
+impl FwCheckpoint {
+    /// Iterations a resuming run must replay (the last completed `t`).
+    pub fn replay_to(&self) -> usize {
+        self.iter as usize
+    }
+
+    /// Panic unless this snapshot belongs to (`cfg`, `token`) — resuming
+    /// against the wrong config or dataset would silently produce garbage
+    /// with a bogus privacy claim, so fail loudly (the `FwConfig::validate`
+    /// idiom).
+    pub fn validate_for(&self, cfg: &FwConfig, token: u64) {
+        assert_eq!(
+            self.fingerprint,
+            config_fingerprint(cfg),
+            "checkpoint fingerprint mismatch: snapshot is from a run with \
+             different trajectory-defining config"
+        );
+        assert_eq!(
+            self.dataset_token, token,
+            "checkpoint dataset token mismatch: snapshot is for a different \
+             dataset"
+        );
+        assert_eq!(self.history.len() as u64, self.iter, "corrupt history length");
+        assert!(
+            (self.iter as usize) < cfg.iters,
+            "checkpoint at iteration {} but the plan only has {} iterations",
+            self.iter,
+            cfg.iters
+        );
+    }
+
+    /// Overwrite the live solver's carry-state at the replay→live
+    /// boundary: RNG stream position, flop counter, selector telemetry,
+    /// gap, and the trace prefix. After this call the continuation is
+    /// indistinguishable from the uninterrupted run (replayed trace
+    /// entries keep their original `wall_ns` — wall clock is the one field
+    /// outside the bitwise contract).
+    pub fn restore_into(
+        &self,
+        rng: &mut Xoshiro256pp,
+        flops: &mut FlopCounter,
+        selector: &mut dyn CoordinateSelector,
+        gap: &mut f64,
+        trace: &mut Vec<TraceRecord>,
+    ) {
+        *rng = Xoshiro256pp::from_state(self.rng);
+        *flops = FlopCounter::from_words(self.flops);
+        selector.restore_stats(self.stats);
+        *gap = self.gap;
+        trace.clear();
+        trace.extend_from_slice(&self.trace);
+    }
+
+    /// Collect the sparse iterate from a selection history: the distinct
+    /// coordinates ever selected, sorted, each with its current weight
+    /// (`value_at(j)` — the caller supplies `w[j]`, or `w_m · ŵ[j]` for
+    /// the fast solver's scaled representation).
+    pub fn sparse_weights(
+        history: &[(u32, i8)],
+        value_at: impl Fn(usize) -> f64,
+    ) -> Vec<(u32, f64)> {
+        let mut coords: Vec<u32> = history.iter().map(|&(j, _)| j).collect();
+        coords.sort_unstable();
+        coords.dedup();
+        coords.into_iter().map(|j| (j, value_at(j as usize))).collect()
+    }
+
+    // ---- framed binary encoding (no serde in-tree) ----
+
+    fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(
+            128 + self.history.len() * 5
+                + self.weights.len() * 12
+                + self.trace.len() * 64,
+        );
+        buf.extend_from_slice(&CKPT_MAGIC);
+        buf.extend_from_slice(&CKPT_VERSION.to_le_bytes());
+        for v in [self.fingerprint, self.dataset_token, self.seed, self.t_planned, self.iter] {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in self.rng {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in self.flops {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in [
+            self.stats.selects,
+            self.stats.pops,
+            self.stats.reinserts,
+            self.stats.big_steps,
+            self.stats.little_steps,
+        ] {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        buf.extend_from_slice(&self.gap.to_bits().to_le_bytes());
+        buf.extend_from_slice(&(self.history.len() as u32).to_le_bytes());
+        for &(j, sign) in &self.history {
+            buf.extend_from_slice(&j.to_le_bytes());
+            buf.push(if sign >= 0 { 1 } else { 0 });
+        }
+        buf.extend_from_slice(&(self.weights.len() as u32).to_le_bytes());
+        for &(j, w) in &self.weights {
+            buf.extend_from_slice(&j.to_le_bytes());
+            buf.extend_from_slice(&w.to_bits().to_le_bytes());
+        }
+        buf.extend_from_slice(&(self.trace.len() as u32).to_le_bytes());
+        for r in &self.trace {
+            for v in [r.iter as u64, r.gap.to_bits(), r.flops, r.bytes, r.pops, r.selected as u64]
+            {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+            buf.extend_from_slice(&(r.wall_ns as u64).to_le_bytes());
+            buf.extend_from_slice(&((r.wall_ns >> 64) as u64).to_le_bytes());
+        }
+        let crc = crc32(&buf);
+        buf.extend_from_slice(&crc.to_le_bytes());
+        buf
+    }
+
+    fn decode(bytes: &[u8]) -> io::Result<Self> {
+        let bad = |msg: &str| io::Error::new(io::ErrorKind::InvalidData, msg.to_string());
+        if bytes.len() < CKPT_MAGIC.len() + 4 + 4 {
+            return Err(bad("checkpoint frame too short"));
+        }
+        let (body, crc_bytes) = bytes.split_at(bytes.len() - 4);
+        let crc = u32::from_le_bytes(crc_bytes.try_into().unwrap());
+        if crc != crc32(body) {
+            return Err(bad("checkpoint CRC mismatch (torn or corrupt frame)"));
+        }
+        let mut off = 0usize;
+        let mut take = |n: usize| -> io::Result<&[u8]> {
+            if off + n > body.len() {
+                return Err(bad("checkpoint frame truncated"));
+            }
+            let s = &body[off..off + n];
+            off += n;
+            Ok(s)
+        };
+        if take(8)? != CKPT_MAGIC {
+            return Err(bad("not a checkpoint file (bad magic)"));
+        }
+        let version = u32::from_le_bytes(take(4)?.try_into().unwrap());
+        if version != CKPT_VERSION {
+            return Err(bad("unsupported checkpoint version"));
+        }
+        macro_rules! read_u64 {
+            () => {
+                u64::from_le_bytes(take(8)?.try_into().unwrap())
+            };
+        }
+        macro_rules! read_u32 {
+            () => {
+                u32::from_le_bytes(take(4)?.try_into().unwrap())
+            };
+        }
+        let fingerprint = read_u64!();
+        let dataset_token = read_u64!();
+        let seed = read_u64!();
+        let t_planned = read_u64!();
+        let iter = read_u64!();
+        let mut rng = [0u64; 4];
+        for r in &mut rng {
+            *r = read_u64!();
+        }
+        let mut flops = [0u64; 7];
+        for f in &mut flops {
+            *f = read_u64!();
+        }
+        let stats = SelectorStats {
+            selects: read_u64!(),
+            pops: read_u64!(),
+            reinserts: read_u64!(),
+            big_steps: read_u64!(),
+            little_steps: read_u64!(),
+        };
+        let gap = f64::from_bits(read_u64!());
+        let n_hist = read_u32!();
+        if n_hist > MAX_LEN {
+            return Err(bad("implausible history length"));
+        }
+        let mut history = Vec::with_capacity(n_hist as usize);
+        for _ in 0..n_hist {
+            let j = read_u32!();
+            let sign = if take(1)?[0] != 0 { 1i8 } else { -1i8 };
+            history.push((j, sign));
+        }
+        let n_w = read_u32!();
+        if n_w > MAX_LEN {
+            return Err(bad("implausible weight count"));
+        }
+        let mut weights = Vec::with_capacity(n_w as usize);
+        for _ in 0..n_w {
+            let j = read_u32!();
+            let w = f64::from_bits(read_u64!());
+            weights.push((j, w));
+        }
+        let n_tr = read_u32!();
+        if n_tr > MAX_LEN {
+            return Err(bad("implausible trace length"));
+        }
+        let mut trace = Vec::with_capacity(n_tr as usize);
+        for _ in 0..n_tr {
+            let iter_t = read_u64!() as usize;
+            let gap_t = f64::from_bits(read_u64!());
+            let flops_t = read_u64!();
+            let bytes_t = read_u64!();
+            let pops_t = read_u64!();
+            let selected = read_u64!() as usize;
+            let lo = read_u64!() as u128;
+            let hi = read_u64!() as u128;
+            trace.push(TraceRecord {
+                iter: iter_t,
+                gap: gap_t,
+                flops: flops_t,
+                bytes: bytes_t,
+                pops: pops_t,
+                selected,
+                wall_ns: (hi << 64) | lo,
+            });
+        }
+        if off != body.len() {
+            return Err(bad("trailing bytes after checkpoint frame"));
+        }
+        Ok(Self {
+            fingerprint,
+            dataset_token,
+            seed,
+            t_planned,
+            iter,
+            rng,
+            flops,
+            stats,
+            gap,
+            history,
+            weights,
+            trace,
+        })
+    }
+
+    /// Atomically persist to `path`: write the frame to a sibling temp
+    /// file, `sync_all`, then rename over the target — a crash at any
+    /// point leaves either the old snapshot or the new one, never a torn
+    /// mix. Best-effort directory sync after the rename.
+    pub fn write_to(&self, path: impl AsRef<Path>) -> io::Result<()> {
+        let path = path.as_ref();
+        let tmp = path.with_extension("ckpt-tmp");
+        {
+            let mut f =
+                OpenOptions::new().write(true).create(true).truncate(true).open(&tmp)?;
+            f.write_all(&self.encode())?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, path)?;
+        if let Some(dir) = path.parent() {
+            if let Ok(d) = File::open(dir) {
+                let _ = d.sync_all();
+            }
+        }
+        Ok(())
+    }
+
+    /// Read and verify a snapshot written by [`FwCheckpoint::write_to`].
+    pub fn read_from(path: impl AsRef<Path>) -> io::Result<Self> {
+        let mut bytes = Vec::new();
+        File::open(path)?.read_to_end(&mut bytes)?;
+        Self::decode(&bytes)
+    }
+}
+
+/// Per-run durability plumbing, armed through
+/// [`FwConfig::durability`]: where to checkpoint, at
+/// what cadence, and which ε ledger to charge. Shared by reference so the
+/// coordinator can hand one to a worker per job.
+#[derive(Debug)]
+pub struct RunDurability {
+    /// Ledger idempotency key for this logical request — replays after a
+    /// crash reuse it, which is what makes the ledger's max-merge
+    /// exactly-once.
+    pub request_id: u64,
+    /// Snapshot target path (one file, atomically replaced each time).
+    pub path: PathBuf,
+    /// Write-ahead ε ledger to charge at each release point; `None` for
+    /// non-private or accounting-free runs.
+    pub ledger: Option<Arc<EpsLedger>>,
+    /// Checkpoint every `every_k` completed iterations (0 = only at stop
+    /// points).
+    pub every_k: usize,
+}
+
+impl RunDurability {
+    /// Is `t` a checkpoint boundary?
+    #[inline]
+    pub fn should_checkpoint(&self, t: usize) -> bool {
+        self.every_k > 0 && t % self.every_k == 0
+    }
+
+    /// Persist a snapshot. Loud on failure: a durability-armed run that
+    /// cannot checkpoint is misconfigured, and silently continuing would
+    /// void the resume contract the caller thinks it has.
+    pub fn persist(&self, ck: &FwCheckpoint) {
+        ck.write_to(&self.path)
+            .unwrap_or_else(|e| panic!("checkpoint write to {:?} failed: {e}", self.path));
+    }
+
+    /// Charge `released` selections (cumulative ε `eps`) against the
+    /// ledger, write-ahead of the release. No-op without a ledger. Loud on
+    /// I/O failure — releasing without a durable record would break the
+    /// write-ahead contract.
+    pub fn charge(&self, token: u64, planned: usize, released: usize, eps: f64) {
+        if let Some(ledger) = &self.ledger {
+            ledger
+                .append(LedgerRecord {
+                    request: self.request_id,
+                    token,
+                    planned: planned as u32,
+                    released: released as u32,
+                    eps,
+                })
+                .unwrap_or_else(|e| panic!("eps ledger append failed: {e}"));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fw::config::SelectorKind;
+
+    fn sample() -> FwCheckpoint {
+        FwCheckpoint {
+            fingerprint: 0xDEAD_BEEF_1234_5678,
+            dataset_token: 42,
+            seed: 7,
+            t_planned: 4000,
+            iter: 3,
+            rng: [1, 2, 3, 4],
+            flops: [10, 20, 30, 40, 50, 60, 70],
+            stats: SelectorStats {
+                selects: 3,
+                pops: 5,
+                reinserts: 4,
+                big_steps: 0,
+                little_steps: 0,
+            },
+            gap: 0.125,
+            history: vec![(17, 1), (3, -1), (17, 1)],
+            weights: vec![(3, -0.5), (17, 1.25)],
+            trace: vec![TraceRecord {
+                iter: 2,
+                gap: 0.5,
+                flops: 15,
+                bytes: 99,
+                pops: 2,
+                selected: 3,
+                wall_ns: (7u128 << 64) | 11,
+            }],
+        }
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        let p = std::env::temp_dir()
+            .join(format!("dpfw-ckpt-{}-{}.bin", std::process::id(), name));
+        let _ = std::fs::remove_file(&p);
+        p
+    }
+
+    #[test]
+    fn frame_round_trip_is_lossless() {
+        let ck = sample();
+        let p = tmp("round-trip");
+        ck.write_to(&p).unwrap();
+        let back = FwCheckpoint::read_from(&p).unwrap();
+        assert_eq!(ck, back);
+        // the temp file never survives a successful write
+        assert!(!p.with_extension("ckpt-tmp").exists());
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn corrupt_frame_is_rejected() {
+        let ck = sample();
+        let p = tmp("corrupt");
+        ck.write_to(&p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(FwCheckpoint::read_from(&p).is_err());
+        // truncation (a torn write) is also rejected, never mis-decoded
+        let ok = ck.encode();
+        std::fs::write(&p, &ok[..ok.len() - 9]).unwrap();
+        assert!(FwCheckpoint::read_from(&p).is_err());
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn fingerprint_tracks_trajectory_fields_only() {
+        let base = FwConfig::default();
+        let f = config_fingerprint(&base);
+        // trajectory-defining fields move the fingerprint
+        assert_ne!(f, config_fingerprint(&FwConfig { seed: 1, ..base.clone() }));
+        assert_ne!(f, config_fingerprint(&FwConfig { lambda: 51.0, ..base.clone() }));
+        assert_ne!(f, config_fingerprint(&FwConfig { iters: 4001, ..base.clone() }));
+        assert_ne!(
+            f,
+            config_fingerprint(&FwConfig {
+                selector: SelectorKind::FibHeap,
+                ..base.clone()
+            })
+        );
+        // topology and stop criteria do not: resuming a browned-out run
+        // under a different cap / shard count is the motivating use case
+        assert_eq!(f, config_fingerprint(&FwConfig { threads: 8, ..base.clone() }));
+        assert_eq!(f, config_fingerprint(&FwConfig { shards: Some(3), ..base.clone() }));
+        assert_eq!(f, config_fingerprint(&FwConfig { iter_cap: Some(5), ..base.clone() }));
+        assert_eq!(f, config_fingerprint(&FwConfig { gap_tol: Some(1e-9), ..base }));
+    }
+
+    #[test]
+    fn validate_for_rejects_mismatches() {
+        let cfg = FwConfig::default();
+        let mut ck = sample();
+        ck.fingerprint = config_fingerprint(&cfg);
+        ck.dataset_token = 42;
+        ck.validate_for(&cfg, 42);
+        let wrong_ds = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            ck.validate_for(&cfg, 43)
+        }));
+        assert!(wrong_ds.is_err());
+        let other = FwConfig { seed: 99, ..cfg.clone() };
+        let wrong_cfg = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            ck.validate_for(&other, 42)
+        }));
+        assert!(wrong_cfg.is_err());
+    }
+
+    #[test]
+    fn sparse_weights_dedupes_and_sorts() {
+        let hist = vec![(9u32, 1i8), (2, -1), (9, -1), (5, 1)];
+        let w = FwCheckpoint::sparse_weights(&hist, |j| j as f64 * 10.0);
+        assert_eq!(w, vec![(2, 20.0), (5, 50.0), (9, 90.0)]);
+    }
+
+    #[test]
+    fn should_checkpoint_cadence() {
+        let d = RunDurability {
+            request_id: 1,
+            path: PathBuf::from("/tmp/x"),
+            ledger: None,
+            every_k: 4,
+        };
+        assert!(!d.should_checkpoint(1));
+        assert!(d.should_checkpoint(4));
+        assert!(!d.should_checkpoint(5));
+        assert!(d.should_checkpoint(8));
+        let never = RunDurability { every_k: 0, ..d };
+        assert!(!never.should_checkpoint(4));
+    }
+}

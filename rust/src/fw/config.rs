@@ -1,7 +1,10 @@
 //! Run configuration shared by both solvers.
 
+use std::sync::Arc;
+
 use crate::dp::accounting::PrivacyParams;
 use crate::fw::cancel::{CancelToken, StopReason};
+use crate::fw::checkpoint::{FwCheckpoint, RunDurability};
 use crate::fw::scan::ScanKernel;
 use crate::testkit::faults::FaultPlan;
 
@@ -134,6 +137,20 @@ pub struct FwConfig {
     /// accounting of `dp/accounting.rs`). A cap of `iters − 1` or more
     /// never fires (the paper's loop runs T−1 update steps).
     pub iter_cap: Option<usize>,
+    /// Durability plumbing (DESIGN.md §6.11): when armed, the solver
+    /// writes a crash-consistent [`FwCheckpoint`] every
+    /// `durability.every_k` completed iterations and at every early-stop
+    /// point (`Deadline`/`Cancelled`/`Brownout`), and charges the
+    /// write-ahead ε ledger ahead of each release point. `None` (the
+    /// default) adds zero work to the loop.
+    pub durability: Option<Arc<RunDurability>>,
+    /// Resume from a snapshot (DESIGN.md §6.11): the solver validates the
+    /// checkpoint against this config + dataset (panicking on mismatch),
+    /// replays iterations `1..=checkpoint.iter` to rebuild incremental
+    /// state, restores the recorded RNG/counters at the boundary, and
+    /// continues — bitwise identical to the uninterrupted run. `None`
+    /// (the default) runs from scratch.
+    pub resume: Option<Arc<FwCheckpoint>>,
 }
 
 /// Process-wide `DPFW_SHARDS` resolution (read once; same pattern as
@@ -166,6 +183,8 @@ impl Default for FwConfig {
             gap_tol: None,
             fault: FaultPlan::none(),
             iter_cap: None,
+            durability: None,
+            resume: None,
         }
     }
 }

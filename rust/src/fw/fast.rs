@@ -54,12 +54,14 @@
 use std::time::Instant;
 
 use crate::fw::cancel::StopReason;
+use crate::fw::checkpoint::{config_fingerprint, FwCheckpoint};
 use crate::fw::config::FwConfig;
 use crate::fw::flops::{
     FlopCounter, ShardCosts, BYTES_F32_READ, BYTES_F64_READ, BYTES_F64_RMW,
     BYTES_U32_RMW, FLOPS_SIGMOID,
 };
 use crate::fw::loss::{Logistic, Loss};
+use crate::fw::queue::SelectorStats;
 use crate::fw::scan;
 use crate::fw::sign;
 use crate::fw::trace::{FwOutput, PhaseTiming, TraceRecord, WeightVector};
@@ -253,6 +255,37 @@ impl<'a> FastFrankWolfe<'a> {
         self.run_core(ws, self.cfg.lambda, Bootstrap::PerRun, observe)
     }
 
+    /// Package the current solver state as a crash-consistent snapshot
+    /// (DESIGN.md §6.11). O(t): the sparse iterate is collected from the
+    /// selection history, never from the dense `ŵ`.
+    #[allow(clippy::too_many_arguments)]
+    fn snapshot(
+        &self,
+        t: usize,
+        st: &FastState,
+        gap: f64,
+        rng: &Xoshiro256pp,
+        flops: &FlopCounter,
+        stats: SelectorStats,
+        history: &[(u32, i8)],
+        trace: &[TraceRecord],
+    ) -> FwCheckpoint {
+        FwCheckpoint {
+            fingerprint: config_fingerprint(&self.cfg),
+            dataset_token: self.data.token(),
+            seed: self.cfg.seed,
+            t_planned: self.cfg.iters as u64,
+            iter: t as u64,
+            rng: rng.state(),
+            flops: flops.to_words(),
+            stats,
+            gap,
+            history: history.to_vec(),
+            weights: FwCheckpoint::sparse_weights(history, |j| st.hat_w[j] * st.w_m),
+            trace: trace.to_vec(),
+        }
+    }
+
     fn run_core(
         &self,
         ws: &mut FwWorkspace,
@@ -335,6 +368,27 @@ impl<'a> FastFrankWolfe<'a> {
         }
         selector.init(&st.alpha, &mut flops);
 
+        // §6.11 durability/resume plumbing. A resume replays the recorded
+        // selections (t ≤ replay_to) to rebuild the incremental state,
+        // then restores the recorded RNG/counters at the replay→live
+        // boundary — see fw/checkpoint.rs for the contract.
+        let resume = self.cfg.resume.as_deref();
+        if let Some(ck) = resume {
+            ck.validate_for(&self.cfg, self.data.token());
+        }
+        let replay_to = resume.map_or(0, |ck| ck.replay_to());
+        let durability = self.cfg.durability.as_deref();
+        let mut history: Vec<(u32, i8)> =
+            resume.map(|ck| ck.history.clone()).unwrap_or_default();
+        // DP mechanisms and the pure argmax skip `select` during replay
+        // (the recorded coordinate stands in; the RNG position comes back
+        // at the boundary); heap selectors re-run `select` live — it is
+        // deterministic, uses no randomness, and pops/reinserts are how
+        // their internal structure gets rebuilt.
+        let replay_skip_select =
+            self.cfg.selector.is_private() || selector.supports_precomputed();
+        let mut restored = false;
+
         let mut trace = Vec::new();
         let mut gap = f64::NAN;
         // §Perf: first-touch dedup for the fused update+notify scan — rows
@@ -370,14 +424,40 @@ impl<'a> FastFrankWolfe<'a> {
         let mut stopped = StopReason::IterBudget;
         let mut iters_done = t_total.saturating_sub(1);
         for t in 1..t_total {
-            if let Some(reason) = self.cfg.stop_check(t) {
-                stopped = reason;
-                iters_done = t - 1;
-                break;
+            let replaying = t <= replay_to;
+            if !replaying {
+                if !restored {
+                    if let Some(ck) = resume {
+                        ck.restore_into(
+                            &mut rng,
+                            &mut flops,
+                            &mut *selector,
+                            &mut gap,
+                            &mut trace,
+                        );
+                    }
+                    restored = true;
+                }
+                if let Some(reason) = self.cfg.stop_check(t) {
+                    stopped = reason;
+                    iters_done = t - 1;
+                    break;
+                }
             }
             // ---- line 15: selection -------------------------------------
             let p0 = timing.then(Instant::now);
-            let j = selector.select(&st.alpha, &mut rng, &mut flops);
+            let j = if replaying {
+                let jr = history[t - 1].0 as usize;
+                if replay_skip_select {
+                    jr
+                } else {
+                    let jl = selector.select(&st.alpha, &mut rng, &mut flops);
+                    debug_assert_eq!(jl, jr, "replay diverged at t={t}");
+                    jl
+                }
+            } else {
+                selector.select(&st.alpha, &mut rng, &mut flops)
+            };
             if let Some(p) = p0 {
                 ns_select += p.elapsed().as_nanos();
             }
@@ -387,6 +467,9 @@ impl<'a> FastFrankWolfe<'a> {
             gap = st.g_base - s * st.alpha[j]; // g_t = ⟨α,w⟩ + λ|α_j|
             let eta = 2.0 / (t as f64 + 2.0);
             flops.add(6);
+            if !replaying && durability.is_some() {
+                history.push((j as u32, if s >= 0.0 { 1 } else { -1 }));
+            }
 
             // ---- lines 19-21: O(1) weight & gap updates -----------------
             let step = eta * s;
@@ -514,7 +597,7 @@ impl<'a> FastFrankWolfe<'a> {
                 st.w_m = 1.0;
             }
 
-            if self.cfg.trace_every > 0 && t % self.cfg.trace_every == 0 {
+            if !replaying && self.cfg.trace_every > 0 && t % self.cfg.trace_every == 0 {
                 trace.push(TraceRecord {
                     iter: t,
                     gap,
@@ -525,11 +608,77 @@ impl<'a> FastFrankWolfe<'a> {
                     wall_ns: start.elapsed().as_nanos(),
                 });
             }
+            // §6.11 cadence: charge the ledger ahead of the releases it
+            // covers, then persist the snapshot (either order is
+            // crash-safe — see dp/ledger.rs on max-merge + seed-pinned
+            // replay — but ledger-first keeps the write-ahead reading).
+            if !replaying {
+                if let Some(dur) = durability {
+                    if dur.should_checkpoint(t) {
+                        if let Some(pp) = &self.cfg.privacy {
+                            dur.charge(
+                                self.data.token(),
+                                t_total,
+                                t,
+                                pp.spent_epsilon(t_total, t),
+                            );
+                        }
+                        dur.persist(&self.snapshot(
+                            t,
+                            &st,
+                            gap,
+                            &rng,
+                            &flops,
+                            selector.stats(),
+                            &history,
+                            &trace,
+                        ));
+                    }
+                }
+            }
             observe(t, &st);
-            if self.cfg.gap_converged(gap) {
+            if !replaying && self.cfg.gap_converged(gap) {
                 stopped = StopReason::Converged;
                 iters_done = t;
                 break;
+            }
+        }
+
+        // §6.11: a resume whose every iteration was replay (checkpoint at
+        // the final update step) never crossed the boundary in-loop —
+        // restore before output assembly so the reported counters are the
+        // logical uninterrupted trajectory's.
+        if let Some(ck) = resume.filter(|_| !restored) {
+            ck.restore_into(&mut rng, &mut flops, &mut *selector, &mut gap, &mut trace);
+        }
+        // §6.11: final ledger record, written ahead of this run's results
+        // being released to the caller; then a resume point at
+        // interruption stops (a natural finish needs none).
+        if let Some(dur) = durability {
+            if let Some(pp) = &self.cfg.privacy {
+                dur.charge(
+                    self.data.token(),
+                    t_total,
+                    iters_done,
+                    pp.spent_epsilon(t_total, iters_done),
+                );
+            }
+            if iters_done > 0
+                && matches!(
+                    stopped,
+                    StopReason::Deadline | StopReason::Cancelled | StopReason::Brownout
+                )
+            {
+                dur.persist(&self.snapshot(
+                    iters_done,
+                    &st,
+                    gap,
+                    &rng,
+                    &flops,
+                    selector.stats(),
+                    &history,
+                    &trace,
+                ));
             }
         }
 
@@ -730,6 +879,21 @@ impl<'a> FastFrankWolfe<'a> {
         }
         selector.init(&st.alpha, &mut flops);
 
+        // §6.11 durability/resume plumbing — same contract as the legacy
+        // body (the two engines are bit-identical, so a checkpoint written
+        // by either resumes under either, at any shard count).
+        let resume = self.cfg.resume.as_deref();
+        if let Some(ck) = resume {
+            ck.validate_for(&self.cfg, self.data.token());
+        }
+        let replay_to = resume.map_or(0, |ck| ck.replay_to());
+        let durability = self.cfg.durability.as_deref();
+        let mut history: Vec<(u32, i8)> =
+            resume.map(|ck| ck.history.clone()).unwrap_or_default();
+        let replay_skip_select =
+            self.cfg.selector.is_private() || selector.supports_precomputed();
+        let mut restored = false;
+
         let mut trace = Vec::new();
         let mut gap = f64::NAN;
         let mut stamp = ws.take_u32(d, 0);
@@ -746,14 +910,38 @@ impl<'a> FastFrankWolfe<'a> {
         let mut stopped = StopReason::IterBudget;
         let mut iters_done = t_total.saturating_sub(1);
         for t in 1..t_total {
-            if let Some(reason) = self.cfg.stop_check(t) {
-                stopped = reason;
-                iters_done = t - 1;
-                break;
+            let replaying = t <= replay_to;
+            if !replaying {
+                if !restored {
+                    if let Some(ck) = resume {
+                        ck.restore_into(
+                            &mut rng,
+                            &mut flops,
+                            &mut *selector,
+                            &mut gap,
+                            &mut trace,
+                        );
+                    }
+                    restored = true;
+                }
+                if let Some(reason) = self.cfg.stop_check(t) {
+                    stopped = reason;
+                    iters_done = t - 1;
+                    break;
+                }
             }
             // ---- line 15: selection -------------------------------------
             let p0 = timing.then(Instant::now);
-            let j = if use_tree_select && eff_threads > 1 && d >= SELECT_PAR_MIN_D {
+            let j = if replaying {
+                let jr = history[t - 1].0 as usize;
+                if replay_skip_select {
+                    jr
+                } else {
+                    let jl = selector.select(&st.alpha, &mut rng, &mut flops);
+                    debug_assert_eq!(jl, jr, "replay diverged at t={t}");
+                    jl
+                }
+            } else if use_tree_select && eff_threads > 1 && d >= SELECT_PAR_MIN_D {
                 // block partials + fixed-shape tree reduction: exactly
                 // associative, so bit-identical to the serial scan
                 let j = par_abs_argmax(&st.alpha, eff_threads, eff_threads);
@@ -771,6 +959,9 @@ impl<'a> FastFrankWolfe<'a> {
             gap = st.g_base - s * st.alpha[j];
             let eta = 2.0 / (t as f64 + 2.0);
             flops.add(6);
+            if !replaying && durability.is_some() {
+                history.push((j as u32, if s >= 0.0 { 1 } else { -1 }));
+            }
 
             // ---- lines 19-21: O(1) weight & gap updates -----------------
             let step = eta * s;
@@ -905,7 +1096,7 @@ impl<'a> FastFrankWolfe<'a> {
                 st.w_m = 1.0;
             }
 
-            if self.cfg.trace_every > 0 && t % self.cfg.trace_every == 0 {
+            if !replaying && self.cfg.trace_every > 0 && t % self.cfg.trace_every == 0 {
                 trace.push(TraceRecord {
                     iter: t,
                     gap,
@@ -916,11 +1107,73 @@ impl<'a> FastFrankWolfe<'a> {
                     wall_ns: start.elapsed().as_nanos(),
                 });
             }
+            // §6.11 cadence: charge the ledger ahead of the releases it
+            // covers, then persist the snapshot (either order is
+            // crash-safe — see dp/ledger.rs on max-merge + seed-pinned
+            // replay — but ledger-first keeps the write-ahead reading).
+            if !replaying {
+                if let Some(dur) = durability {
+                    if dur.should_checkpoint(t) {
+                        if let Some(pp) = &self.cfg.privacy {
+                            dur.charge(
+                                self.data.token(),
+                                t_total,
+                                t,
+                                pp.spent_epsilon(t_total, t),
+                            );
+                        }
+                        dur.persist(&self.snapshot(
+                            t,
+                            &st,
+                            gap,
+                            &rng,
+                            &flops,
+                            selector.stats(),
+                            &history,
+                            &trace,
+                        ));
+                    }
+                }
+            }
             observe(t, &st);
-            if self.cfg.gap_converged(gap) {
+            if !replaying && self.cfg.gap_converged(gap) {
                 stopped = StopReason::Converged;
                 iters_done = t;
                 break;
+            }
+        }
+
+        // §6.11: boundary restore for an all-replay resume, then the final
+        // write-ahead ledger record and interruption-stop resume point —
+        // identical contract to the legacy body.
+        if let Some(ck) = resume.filter(|_| !restored) {
+            ck.restore_into(&mut rng, &mut flops, &mut *selector, &mut gap, &mut trace);
+        }
+        if let Some(dur) = durability {
+            if let Some(pp) = &self.cfg.privacy {
+                dur.charge(
+                    self.data.token(),
+                    t_total,
+                    iters_done,
+                    pp.spent_epsilon(t_total, iters_done),
+                );
+            }
+            if iters_done > 0
+                && matches!(
+                    stopped,
+                    StopReason::Deadline | StopReason::Cancelled | StopReason::Brownout
+                )
+            {
+                dur.persist(&self.snapshot(
+                    iters_done,
+                    &st,
+                    gap,
+                    &rng,
+                    &flops,
+                    selector.stats(),
+                    &history,
+                    &trace,
+                ));
             }
         }
 

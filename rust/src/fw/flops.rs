@@ -167,6 +167,39 @@ impl FlopCounter {
     pub fn reset(&mut self) {
         *self = Self::default();
     }
+
+    /// Serialize the counter into a fixed word array for the checkpoint
+    /// frame (`fw::checkpoint`, DESIGN.md §6.11). The order is part of
+    /// the on-disk format — append new categories, never reorder.
+    #[inline]
+    pub fn to_words(&self) -> [u64; 7] {
+        [
+            self.total,
+            self.boot,
+            self.bytes,
+            self.boot_bytes,
+            self.scratch,
+            self.direct_segs,
+            self.scratch_segs,
+        ]
+    }
+
+    /// Rebuild a counter from a [`FlopCounter::to_words`] snapshot. A
+    /// resumed run restores this at the replay boundary so its reported
+    /// flop/byte trajectory is the uninterrupted run's, whatever the
+    /// replay itself happened to charge.
+    #[inline]
+    pub fn from_words(w: [u64; 7]) -> Self {
+        Self {
+            total: w[0],
+            boot: w[1],
+            bytes: w[2],
+            boot_bytes: w[3],
+            scratch: w[4],
+            direct_segs: w[5],
+            scratch_segs: w[6],
+        }
+    }
 }
 
 /// Per-shard attribution ledger for the sharded solve path (DESIGN.md
@@ -250,6 +283,18 @@ mod tests {
         f.reset();
         assert_eq!(f.bytes(), 0);
         assert_eq!(f.bootstrap_bytes(), 0);
+    }
+
+    #[test]
+    fn word_round_trip_is_lossless() {
+        let mut f = FlopCounter::new();
+        f.add(11);
+        f.add_boot(7);
+        f.add_bytes(100);
+        f.add_boot_bytes(40);
+        f.add_segs(3, 2, 9);
+        let g = FlopCounter::from_words(f.to_words());
+        assert_eq!(f, g);
     }
 
     #[test]

@@ -34,8 +34,15 @@
 //!   because Frank-Wolfe is anytime, a fired token degrades the run to a
 //!   best-so-far result tagged with a [`cancel::StopReason`] instead of
 //!   failing it; the ε ledger charges only the iterations actually run.
+//! * [`checkpoint`] — crash-consistent O(t) solver snapshots and resume
+//!   (DESIGN.md §6.11): sparse iterate + selection history + RNG stream
+//!   position in an atomic framed binary file, such that
+//!   checkpoint-then-resume is bitwise identical to the uninterrupted run
+//!   at any (shards, threads); pairs with the write-ahead ε ledger in
+//!   [`crate::dp::ledger`].
 
 pub mod cancel;
+pub mod checkpoint;
 pub mod config;
 pub mod fast;
 pub mod flops;

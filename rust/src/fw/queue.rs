@@ -58,6 +58,14 @@ pub trait CoordinateSelector {
     /// depends on this.
     fn reset(&mut self);
     fn stats(&self) -> SelectorStats;
+    /// Overwrite the telemetry counters with a checkpoint snapshot
+    /// (`fw::checkpoint`, DESIGN.md §6.11). A resumed run replays
+    /// iterations without charging selection telemetry for skipped
+    /// mechanism draws; restoring the recorded stats at the replay
+    /// boundary makes the resumed run's reported counters identical to
+    /// the uninterrupted run's. Telemetry only — never touches queue or
+    /// sampler state.
+    fn restore_stats(&mut self, stats: SelectorStats);
     fn kind(&self) -> SelectorKind;
     /// Can the solver compute this selector's choice externally (e.g. the
     /// shard-parallel tree-reduced argmax, DESIGN.md §6.8) and hand it in
@@ -111,6 +119,10 @@ impl CoordinateSelector for ArgmaxSelector {
 
     fn stats(&self) -> SelectorStats {
         self.stats
+    }
+
+    fn restore_stats(&mut self, stats: SelectorStats) {
+        self.stats = stats;
     }
 
     fn kind(&self) -> SelectorKind {
@@ -235,6 +247,10 @@ impl<H: DecreaseKeyHeap> CoordinateSelector for HeapSelector<H> {
         self.stats
     }
 
+    fn restore_stats(&mut self, stats: SelectorStats) {
+        self.stats = stats;
+    }
+
     fn kind(&self) -> SelectorKind {
         self.kind
     }
@@ -318,6 +334,10 @@ impl<S: WeightedSampler> CoordinateSelector for ExpMechSelector<S> {
         s
     }
 
+    fn restore_stats(&mut self, stats: SelectorStats) {
+        self.stats = stats;
+    }
+
     fn kind(&self) -> SelectorKind {
         self.kind
     }
@@ -385,6 +405,10 @@ impl CoordinateSelector for NoisyMaxSelector {
 
     fn stats(&self) -> SelectorStats {
         self.stats
+    }
+
+    fn restore_stats(&mut self, stats: SelectorStats) {
+        self.stats = stats;
     }
 
     fn kind(&self) -> SelectorKind {

@@ -14,12 +14,14 @@
 use std::time::Instant;
 
 use crate::fw::cancel::StopReason;
+use crate::fw::checkpoint::{config_fingerprint, FwCheckpoint};
 use crate::fw::config::{FwConfig, SelectorKind};
 use crate::fw::flops::{
     FlopCounter, ShardCosts, BYTES_F32_READ, BYTES_F64_READ, BYTES_F64_RMW,
     FLOPS_SIGMOID,
 };
 use crate::fw::loss::{Logistic, Loss};
+use crate::fw::queue::SelectorStats;
 use crate::fw::sign;
 use crate::fw::trace::{FwOutput, TraceRecord, WeightVector};
 use crate::fw::workspace::{BootKey, Bootstrap, FwWorkspace};
@@ -91,6 +93,38 @@ impl<'a> StandardFrankWolfe<'a> {
             .collect()
     }
 
+    /// Package the current solver state as a crash-consistent snapshot
+    /// (DESIGN.md §6.11). Algorithm 1 carries no incremental state beyond
+    /// `w`, so unlike the fast solver its resume restores the sparse
+    /// iterate directly instead of replaying.
+    #[allow(clippy::too_many_arguments)]
+    fn snapshot(
+        &self,
+        t: usize,
+        w: &[f64],
+        gap: f64,
+        rng: &Xoshiro256pp,
+        flops: &FlopCounter,
+        stats: SelectorStats,
+        history: &[(u32, i8)],
+        trace: &[TraceRecord],
+    ) -> FwCheckpoint {
+        FwCheckpoint {
+            fingerprint: config_fingerprint(&self.cfg),
+            dataset_token: self.data.token(),
+            seed: self.cfg.seed,
+            t_planned: self.cfg.iters as u64,
+            iter: t as u64,
+            rng: rng.state(),
+            flops: flops.to_words(),
+            stats,
+            gap,
+            history: history.to_vec(),
+            weights: FwCheckpoint::sparse_weights(history, |j| w[j]),
+            trace: trace.to_vec(),
+        }
+    }
+
     fn run_core(&self, ws: &mut FwWorkspace, lam: f64, boot: Bootstrap) -> FwOutput {
         // Sharded engine in a separate body (same structure as the fast
         // solver, DESIGN.md §6.8): the legacy path below is untouched for
@@ -133,11 +167,52 @@ impl<'a> StandardFrankWolfe<'a> {
         let mut gap = f64::NAN;
         let mut initialized = false;
 
+        // §6.11 durability/resume plumbing. Alg 1 recomputes its dense
+        // state from `w` every iteration, so resume restores the sparse
+        // iterate directly and continues at `replay_to + 1` — no replay.
+        // The one cross-iteration structure is the selector: its `init`
+        // saw the t = 1 alpha (the w = 0 bootstrap — the exponential-
+        // mechanism kinds freeze their sampler on it), so resume rebuilds
+        // exactly that alpha first.
+        let resume = self.cfg.resume.as_deref();
+        if let Some(ck) = resume {
+            ck.validate_for(&self.cfg, self.data.token());
+        }
+        let replay_to = resume.map_or(0, |ck| ck.replay_to());
+        let durability = self.cfg.durability.as_deref();
+        let mut history: Vec<(u32, i8)> =
+            resume.map(|ck| ck.history.clone()).unwrap_or_default();
+        if let Some(ck) = resume {
+            let cached = boot == Bootstrap::Shared
+                && ws.bootstrap_attach(&boot_key, &mut q, &mut alpha, &self.cfg.cancel);
+            if !cached {
+                // w is still all-zero here: this is the t = 1 recompute
+                csr.matvec_scan(&w, &mut v, &mut scratch, kern);
+                for i in 0..n {
+                    q[i] = self.loss.grad(v[i], y[i] as f64);
+                }
+                alpha.iter_mut().for_each(|a| *a = 0.0);
+                csr.matvec_t_add_scan(&q, &mut alpha, &mut scratch, kern);
+                if boot == Bootstrap::Shared {
+                    ws.bootstrap_put(boot_key, &q, &alpha);
+                }
+            }
+            selector.init(&alpha, &mut flops);
+            initialized = true;
+            for &(jj, wv) in &ck.weights {
+                w[jj as usize] = wv;
+            }
+            // boundary restore: the rebuild work above is discarded from
+            // the counters — the resumed run reports the logical
+            // uninterrupted trajectory (see fw/checkpoint.rs)
+            ck.restore_into(&mut rng, &mut flops, &mut *selector, &mut gap, &mut trace);
+        }
+
         // §6.9 anytime contract: poll before the t-th iteration's work, so
         // a stop at t means exactly t−1 selections were released.
         let mut stopped = StopReason::IterBudget;
         let mut iters_done = t_total.saturating_sub(1);
-        for t in 1..t_total {
+        for t in (replay_to + 1)..t_total {
             if let Some(reason) = self.cfg.stop_check(t) {
                 stopped = reason;
                 iters_done = t - 1;
@@ -220,6 +295,9 @@ impl<'a> StandardFrankWolfe<'a> {
             // ⟨α,w⟩ streams both dense vectors; the shrink is a w rmw
             flops.add_bytes((2 * BYTES_F64_READ + BYTES_F64_RMW) * d as u64);
 
+            if durability.is_some() {
+                history.push((j as u32, if s >= 0.0 { 1 } else { -1 }));
+            }
             if self.cfg.trace_every > 0 && t % self.cfg.trace_every == 0 {
                 trace.push(TraceRecord {
                     iter: t,
@@ -231,10 +309,64 @@ impl<'a> StandardFrankWolfe<'a> {
                     wall_ns: start.elapsed().as_nanos(),
                 });
             }
+            // §6.11 cadence: ledger first (write-ahead), then the snapshot
+            if let Some(dur) = durability {
+                if dur.should_checkpoint(t) {
+                    if let Some(pp) = &self.cfg.privacy {
+                        dur.charge(
+                            self.data.token(),
+                            t_total,
+                            t,
+                            pp.spent_epsilon(t_total, t),
+                        );
+                    }
+                    dur.persist(&self.snapshot(
+                        t,
+                        &w,
+                        gap,
+                        &rng,
+                        &flops,
+                        selector.stats(),
+                        &history,
+                        &trace,
+                    ));
+                }
+            }
             if self.cfg.gap_converged(gap) {
                 stopped = StopReason::Converged;
                 iters_done = t;
                 break;
+            }
+        }
+
+        // §6.11: final ledger record ahead of releasing the results, then
+        // a resume point at interruption stops (natural finishes need
+        // none).
+        if let Some(dur) = durability {
+            if let Some(pp) = &self.cfg.privacy {
+                dur.charge(
+                    self.data.token(),
+                    t_total,
+                    iters_done,
+                    pp.spent_epsilon(t_total, iters_done),
+                );
+            }
+            if iters_done > 0
+                && matches!(
+                    stopped,
+                    StopReason::Deadline | StopReason::Cancelled | StopReason::Brownout
+                )
+            {
+                dur.persist(&self.snapshot(
+                    iters_done,
+                    &w,
+                    gap,
+                    &rng,
+                    &flops,
+                    selector.stats(),
+                    &history,
+                    &trace,
+                ));
             }
         }
 
@@ -359,10 +491,47 @@ impl<'a> StandardFrankWolfe<'a> {
         let mut initialized = false;
         let use_tree_select = selector.supports_precomputed();
 
+        // §6.11 durability/resume plumbing (see the legacy body): rebuild
+        // the t = 1 bootstrap alpha for `selector.init`, restore the
+        // sparse iterate directly, and continue at `replay_to + 1`.
+        let resume = self.cfg.resume.as_deref();
+        if let Some(ck) = resume {
+            ck.validate_for(&self.cfg, self.data.token());
+        }
+        let replay_to = resume.map_or(0, |ck| ck.replay_to());
+        let durability = self.cfg.durability.as_deref();
+        let mut history: Vec<(u32, i8)> =
+            resume.map(|ck| ck.history.clone()).unwrap_or_default();
+        if let Some(ck) = resume {
+            let cached = boot == Bootstrap::Shared
+                && ws.bootstrap_attach(&boot_key, &mut q, &mut alpha, &self.cfg.cancel);
+            if !cached {
+                // w = 0 ⇒ v̄ = 0 exactly (the pass-1 dots would write +0.0
+                // into every slot v was taken with), so only the gradient
+                // sweep and pass 2 are needed to rebuild the bootstrap α
+                for i in 0..n {
+                    q[i] = self.loss.grad(v[i], self.data.labels[i] as f64);
+                }
+                csc.matvec_t_par_scan(&q, &mut alpha, pass2_threads, kern);
+                if boot == Bootstrap::Shared {
+                    ws.bootstrap_put(boot_key, &q, &alpha);
+                }
+            }
+            selector.init(&alpha, &mut flops);
+            initialized = true;
+            for &(jj, wv) in &ck.weights {
+                w[jj as usize] = wv;
+            }
+            // boundary restore: the rebuild work above is discarded from
+            // the counters — the resumed run reports the logical
+            // uninterrupted trajectory (see fw/checkpoint.rs)
+            ck.restore_into(&mut rng, &mut flops, &mut *selector, &mut gap, &mut trace);
+        }
+
         // §6.9: same stop-poll placement as the legacy body.
         let mut stopped = StopReason::IterBudget;
         let mut iters_done = t_total.saturating_sub(1);
-        for t in 1..t_total {
+        for t in (replay_to + 1)..t_total {
             if let Some(reason) = self.cfg.stop_check(t) {
                 stopped = reason;
                 iters_done = t - 1;
@@ -491,6 +660,9 @@ impl<'a> StandardFrankWolfe<'a> {
             flops.add(d as u64 + 2);
             flops.add_bytes((2 * BYTES_F64_READ + BYTES_F64_RMW) * d as u64);
 
+            if durability.is_some() {
+                history.push((j as u32, if s >= 0.0 { 1 } else { -1 }));
+            }
             if self.cfg.trace_every > 0 && t % self.cfg.trace_every == 0 {
                 trace.push(TraceRecord {
                     iter: t,
@@ -502,10 +674,64 @@ impl<'a> StandardFrankWolfe<'a> {
                     wall_ns: start.elapsed().as_nanos(),
                 });
             }
+            // §6.11 cadence: ledger first (write-ahead), then the snapshot
+            if let Some(dur) = durability {
+                if dur.should_checkpoint(t) {
+                    if let Some(pp) = &self.cfg.privacy {
+                        dur.charge(
+                            self.data.token(),
+                            t_total,
+                            t,
+                            pp.spent_epsilon(t_total, t),
+                        );
+                    }
+                    dur.persist(&self.snapshot(
+                        t,
+                        &w,
+                        gap,
+                        &rng,
+                        &flops,
+                        selector.stats(),
+                        &history,
+                        &trace,
+                    ));
+                }
+            }
             if self.cfg.gap_converged(gap) {
                 stopped = StopReason::Converged;
                 iters_done = t;
                 break;
+            }
+        }
+
+        // §6.11: final ledger record ahead of releasing the results, then
+        // a resume point at interruption stops (natural finishes need
+        // none).
+        if let Some(dur) = durability {
+            if let Some(pp) = &self.cfg.privacy {
+                dur.charge(
+                    self.data.token(),
+                    t_total,
+                    iters_done,
+                    pp.spent_epsilon(t_total, iters_done),
+                );
+            }
+            if iters_done > 0
+                && matches!(
+                    stopped,
+                    StopReason::Deadline | StopReason::Cancelled | StopReason::Brownout
+                )
+            {
+                dur.persist(&self.snapshot(
+                    iters_done,
+                    &w,
+                    gap,
+                    &rng,
+                    &flops,
+                    selector.stats(),
+                    &history,
+                    &trace,
+                ));
             }
         }
 

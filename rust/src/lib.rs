@@ -68,8 +68,10 @@ pub mod textio;
 /// Convenience re-exports for examples and downstream users.
 pub mod prelude {
     pub use crate::dp::accounting::PrivacyParams;
+    pub use crate::dp::ledger::{EpsLedger, FsyncPolicy};
     pub use crate::eval::{accuracy, auc, sparsity_pct};
     pub use crate::fw::cancel::{CancelToken, StopReason};
+    pub use crate::fw::checkpoint::{FwCheckpoint, RunDurability};
     pub use crate::fw::config::{FwConfig, SelectorKind};
     pub use crate::fw::fast::FastFrankWolfe;
     pub use crate::fw::standard::StandardFrankWolfe;
@@ -77,5 +79,5 @@ pub mod prelude {
     pub use crate::fw::workspace::FwWorkspace;
     pub use crate::sparse::csr::CsrMatrix;
     pub use crate::sparse::synth::{DatasetPreset, SynthConfig};
-    pub use crate::sparse::Dataset;
+    pub use crate::sparse::{Dataset, DatasetError};
 }

@@ -43,6 +43,9 @@ pub fn read<R: BufRead>(reader: R, name: &str) -> Result<Dataset> {
         let label: f64 = label_tok
             .parse()
             .with_context(|| format!("bad label {label_tok:?} at line {}", lineno + 1))?;
+        if !label.is_finite() {
+            bail!("non-finite label {label} at line {}", lineno + 1);
+        }
         let row = coo.add_row();
         labels.push(if label > 0.0 { 1.0 } else { 0.0 });
         let mut prev_idx: i64 = -1;
@@ -66,6 +69,11 @@ pub fn read<R: BufRead>(reader: R, name: &str) -> Result<Dataset> {
             let val: f32 = val_s
                 .parse()
                 .with_context(|| format!("bad value {val_s:?} at line {}", lineno + 1))?;
+            if !val.is_finite() {
+                // a NaN/Inf would silently poison every downstream dot
+                // product and DP score; refuse the file with a location
+                bail!("non-finite value {val_s:?} at line {}", lineno + 1);
+            }
             coo.push(row, idx - 1, val);
         }
     }
@@ -79,7 +87,8 @@ pub fn read<R: BufRead>(reader: R, name: &str) -> Result<Dataset> {
             coo.set_shape(coo.n_rows(), d);
         }
     }
-    Ok(Dataset::new(coo.to_csr(), labels, name))
+    Dataset::try_new(coo.to_csr(), labels, name)
+        .map_err(|e| anyhow::anyhow!("invalid dataset: {e}"))
 }
 
 /// Read a LIBSVM file from disk.
@@ -149,6 +158,17 @@ mod tests {
         assert!(read(Cursor::new("abc 1:1.0\n"), "t").is_err());
         assert!(read(Cursor::new("1 1-1.0\n"), "t").is_err());
         assert!(read(Cursor::new(""), "t").is_err());
+    }
+
+    #[test]
+    fn rejects_non_finite() {
+        // Rust's f32/f64 parsers happily accept "nan"/"inf" — the explicit
+        // finiteness checks are what turns these into typed refusals.
+        assert!(read(Cursor::new("1 1:nan\n"), "t").is_err());
+        assert!(read(Cursor::new("1 1:inf\n"), "t").is_err());
+        assert!(read(Cursor::new("1 1:-inf\n"), "t").is_err());
+        assert!(read(Cursor::new("nan 1:1.0\n"), "t").is_err());
+        assert!(read(Cursor::new("inf 1:1.0\n"), "t").is_err());
     }
 
     #[test]

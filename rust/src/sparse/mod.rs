@@ -86,9 +86,81 @@ pub struct Dataset {
     scatter_workers: usize,
 }
 
+/// Why a [`Dataset`] refused to construct (§6.11 input hardening). Typed
+/// so ingestion layers — the LIBSVM reader, services accepting uploaded
+/// data — can refuse one bad dataset without panicking the process.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DatasetError {
+    /// No rows or no columns: nothing to train on.
+    Empty { rows: usize, cols: usize },
+    /// `labels.len()` disagrees with the matrix's row count.
+    LabelCountMismatch { rows: usize, labels: usize },
+    /// A NaN/±Inf feature value at (row, col) — it would silently poison
+    /// every dot product, gradient, and DP score downstream.
+    NonFiniteValue { row: usize, col: usize },
+    /// A label outside {0.0, 1.0} at `row` (the losses and the evaluators
+    /// assume binary labels).
+    BadLabel { row: usize, value: f32 },
+}
+
+impl std::fmt::Display for DatasetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DatasetError::Empty { rows, cols } => {
+                write!(f, "empty dataset ({rows} rows x {cols} cols)")
+            }
+            DatasetError::LabelCountMismatch { rows, labels } => {
+                write!(f, "label count {labels} != row count {rows}")
+            }
+            DatasetError::NonFiniteValue { row, col } => {
+                write!(f, "non-finite feature value at ({row}, {col})")
+            }
+            DatasetError::BadLabel { row, value } => {
+                write!(f, "label {value} at row {row} is not 0/1")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DatasetError {}
+
 impl Dataset {
-    pub fn new(mut csr: CsrMatrix, labels: Vec<f32>, name: impl Into<String>) -> Self {
-        assert_eq!(csr.n_rows(), labels.len(), "label count != row count");
+    /// [`Dataset::try_new`], panicking on invalid input — the right call
+    /// for trusted in-process sources (the synthetic generators, `split`).
+    /// Ingestion paths handling untrusted bytes should use `try_new` and
+    /// refuse the one bad dataset instead.
+    pub fn new(csr: CsrMatrix, labels: Vec<f32>, name: impl Into<String>) -> Self {
+        Self::try_new(csr, labels, name).unwrap_or_else(|e| panic!("invalid dataset: {e}"))
+    }
+
+    /// Validate and construct: rejects empty matrices, label/row count
+    /// mismatches, NaN/±Inf feature values, and non-binary labels with a
+    /// typed [`DatasetError`] (§6.11). The `O(nnz)` finiteness sweep rides
+    /// on construction, which is already `O(nnz)` for the transpose.
+    pub fn try_new(
+        mut csr: CsrMatrix,
+        labels: Vec<f32>,
+        name: impl Into<String>,
+    ) -> Result<Self, DatasetError> {
+        if csr.n_rows() == 0 || csr.n_cols() == 0 {
+            return Err(DatasetError::Empty { rows: csr.n_rows(), cols: csr.n_cols() });
+        }
+        if csr.n_rows() != labels.len() {
+            return Err(DatasetError::LabelCountMismatch {
+                rows: csr.n_rows(),
+                labels: labels.len(),
+            });
+        }
+        for i in 0..csr.n_rows() {
+            for (j, v) in csr.row(i) {
+                if !v.is_finite() {
+                    return Err(DatasetError::NonFiniteValue { row: i, col: j });
+                }
+            }
+        }
+        if let Some(row) = labels.iter().position(|&y| y != 0.0 && y != 1.0) {
+            return Err(DatasetError::BadLabel { row, value: labels[row] });
+        }
         // Block-parallel transpose for paper-scale matrices; the output is
         // bit-identical to the serial counting sort at any thread count
         // (the PAR_MIN_NNZ gate inside the entry point serializes tiny
@@ -103,7 +175,7 @@ impl Dataset {
         csc.build_compact();
         static NEXT_TOKEN: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
         let token = NEXT_TOKEN.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        Self { csr, csc, labels, name: name.into(), token, scatter_workers }
+        Ok(Self { csr, csc, labels, name: name.into(), token, scatter_workers })
     }
 
     /// Worker count the parallel CSC scatter actually used when this
@@ -250,6 +322,49 @@ mod tests {
         let b = tiny();
         assert_ne!(a.token(), b.token(), "distinct constructions must differ");
         assert_eq!(a.token(), a.clone().token(), "clones alias the same data");
+    }
+
+    #[test]
+    fn try_new_rejects_bad_input_with_typed_errors() {
+        // empty: no rows at all
+        let empty = coo::CooBuilder::new(0, 3).to_csr();
+        assert_eq!(
+            Dataset::try_new(empty, vec![], "t").unwrap_err(),
+            DatasetError::Empty { rows: 0, cols: 3 }
+        );
+        // label count disagrees with row count
+        let mut b = coo::CooBuilder::new(0, 2);
+        let r = b.add_row();
+        b.push(r, 0, 1.0);
+        assert_eq!(
+            Dataset::try_new(b.to_csr(), vec![1.0, 0.0], "t").unwrap_err(),
+            DatasetError::LabelCountMismatch { rows: 1, labels: 2 }
+        );
+        // NaN feature value, located by (row, col)
+        let mut b = coo::CooBuilder::new(0, 2);
+        let r = b.add_row();
+        b.push(r, 1, f32::NAN);
+        assert_eq!(
+            Dataset::try_new(b.to_csr(), vec![1.0], "t").unwrap_err(),
+            DatasetError::NonFiniteValue { row: 0, col: 1 }
+        );
+        // non-binary label
+        let mut b = coo::CooBuilder::new(0, 2);
+        let r = b.add_row();
+        b.push(r, 0, 1.0);
+        assert_eq!(
+            Dataset::try_new(b.to_csr(), vec![2.0], "t").unwrap_err(),
+            DatasetError::BadLabel { row: 0, value: 2.0 }
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid dataset")]
+    fn new_panics_on_invalid_input() {
+        let mut b = coo::CooBuilder::new(0, 1);
+        let r = b.add_row();
+        b.push(r, 0, f32::INFINITY);
+        Dataset::new(b.to_csr(), vec![1.0], "t");
     }
 
     #[test]

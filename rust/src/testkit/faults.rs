@@ -28,6 +28,12 @@
 //!   ingress-scoped bootstrap-hub leadership lease (DESIGN.md §6.10).
 //!   The stall holds the lease long enough for followers to attach
 //!   deterministically; the panic exercises follower detach-and-re-lead.
+//! * [`FaultKind::CrashAt`] — simulated process crash mid-solve: unwinds
+//!   with the typed [`CrashPayload`] marker so the worker loop can tell
+//!   "this worker is dead, recover from the durable checkpoint" apart
+//!   from an ordinary caught panic (DESIGN.md §6.11). The module also
+//!   exposes [`truncate_file`]/[`corrupt_byte`] for torn-write injection
+//!   against the ε ledger and checkpoint files.
 
 use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::Arc;
@@ -56,6 +62,24 @@ pub enum FaultKind {
     /// holds hub leadership long enough for followers to observe the
     /// pending slot and take the wait path.
     StallInBootstrap { ms: u64 },
+    /// Simulated crash at the start of solver iteration `iter` (1-based):
+    /// unwinds with the typed [`CrashPayload`] marker instead of a plain
+    /// message. The pool's worker loop recognizes the marker and treats
+    /// the worker as *dead* — no results, no retry — so the supervisor's
+    /// respawn path must recover the job from its durable checkpoint
+    /// (DESIGN.md §6.11). Budget-gated like every other kind, so the
+    /// resumed attempt (a config clone sharing this plan) runs clean.
+    CrashAt { iter: usize },
+}
+
+/// The panic payload [`FaultKind::CrashAt`] unwinds with. Catchers
+/// downcast to this type to distinguish a simulated crash (worker died;
+/// recover from the checkpoint) from an ordinary solver panic (worker
+/// survives; seed-pinned retry).
+#[derive(Clone, Copy, Debug)]
+pub struct CrashPayload {
+    /// The 1-based iteration the crash fired at.
+    pub iter: usize,
 }
 
 #[derive(Debug)]
@@ -130,6 +154,11 @@ impl FaultPlan {
                     std::thread::sleep(Duration::from_millis(ms));
                 }
             }
+            FaultKind::CrashAt { iter } if iter == t => {
+                if inner.fire() {
+                    std::panic::panic_any(CrashPayload { iter: t });
+                }
+            }
             _ => {}
         }
     }
@@ -176,6 +205,27 @@ impl FaultPlan {
             _ => false,
         }
     }
+}
+
+/// Torn-write injection: truncate `path` to `len` bytes, simulating a
+/// crash mid-append (the tail of the last record never reached disk).
+/// Recovery tests point the ε ledger / checkpoint readers at the result.
+pub fn truncate_file(path: &std::path::Path, len: u64) -> std::io::Result<()> {
+    let f = std::fs::OpenOptions::new().write(true).open(path)?;
+    f.set_len(len)
+}
+
+/// Bit-rot injection: XOR the byte at `offset` in `path` with `0xFF`,
+/// simulating in-place corruption that framing CRCs must catch.
+pub fn corrupt_byte(path: &std::path::Path, offset: u64) -> std::io::Result<()> {
+    use std::io::{Read, Seek, SeekFrom, Write};
+    let mut f = std::fs::OpenOptions::new().read(true).write(true).open(path)?;
+    let mut b = [0u8; 1];
+    f.seek(SeekFrom::Start(offset))?;
+    f.read_exact(&mut b)?;
+    b[0] ^= 0xFF;
+    f.seek(SeekFrom::Start(offset))?;
+    f.write_all(&b)
 }
 
 #[cfg(test)]
@@ -252,6 +302,33 @@ mod tests {
         let q = FaultPlan::once(FaultKind::PanicAt { iter: 1 });
         q.on_bootstrap();
         assert_eq!(q.firings(), 0);
+    }
+
+    #[test]
+    fn crash_at_unwinds_with_the_typed_marker() {
+        let p = FaultPlan::once(FaultKind::CrashAt { iter: 2 });
+        p.on_iteration(1); // wrong iteration: no firing
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            p.on_iteration(2);
+        }))
+        .expect_err("must crash at iter 2");
+        let payload = err.downcast_ref::<CrashPayload>().expect("typed marker");
+        assert_eq!(payload.iter, 2);
+        assert_eq!(p.firings(), 1);
+        p.on_iteration(2); // budget spent: the resumed attempt runs clean
+        assert_eq!(p.firings(), 1);
+    }
+
+    #[test]
+    fn torn_write_helpers_mutate_the_file() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("fw-faults-helpers-{}.bin", std::process::id()));
+        std::fs::write(&path, [1u8, 2, 3, 4, 5, 6]).unwrap();
+        super::corrupt_byte(&path, 2).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), vec![1, 2, !3u8, 4, 5, 6]);
+        super::truncate_file(&path, 4).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), vec![1, 2, !3u8, 4]);
+        std::fs::remove_file(&path).unwrap();
     }
 
     #[test]

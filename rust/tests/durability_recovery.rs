@@ -1,0 +1,268 @@
+//! §6.11 durability suite: checkpoint-then-resume is bitwise identical to
+//! the uninterrupted run across solvers, selectors, shard counts, and
+//! thread counts; a crash-killed worker's job resumes through the pool
+//! with exactly-once ε accounting; and a torn ledger tail recovers to the
+//! last valid frame without ever double-charging a replayed request.
+//!
+//! Run serially (`--test-threads=1` in CI): the tests create and tear
+//! down on-disk ledgers/checkpoints and measure pool-level recovery.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use dpfw::coordinator::{Algo, Coordinator, DurabilityOptions, JobSpec, PoolOptions};
+use dpfw::dp::accounting::PrivacyParams;
+use dpfw::dp::ledger::{EpsLedger, FsyncPolicy};
+use dpfw::fw::cancel::StopReason;
+use dpfw::fw::checkpoint::{FwCheckpoint, RunDurability};
+use dpfw::fw::config::{FwConfig, SelectorKind};
+use dpfw::fw::trace::TraceRecord;
+use dpfw::sparse::synth::SynthConfig;
+use dpfw::sparse::Dataset;
+use dpfw::testkit::faults::{self, FaultKind, FaultPlan};
+
+fn dataset(seed: u64) -> Arc<Dataset> {
+    Arc::new(
+        SynthConfig {
+            name: format!("durab{seed}"),
+            n_rows: 120,
+            n_cols: 60,
+            avg_row_nnz: 7.0,
+            zipf_exponent: 1.2,
+            n_informative: 10,
+            n_dense: 0,
+            label_noise: 0.02,
+            bias_col: true,
+        }
+        .generate(seed),
+    )
+}
+
+/// 60-iteration config; privacy params ride along iff the selector is a
+/// DP mechanism (`FwConfig::validate` enforces the pairing).
+fn cfg(selector: SelectorKind, seed: u64) -> FwConfig {
+    FwConfig {
+        iters: 60,
+        lambda: 6.0,
+        privacy: selector.is_private().then(|| PrivacyParams::new(1.0, 1e-6)),
+        selector,
+        seed,
+        trace_every: 1,
+        ..Default::default()
+    }
+}
+
+fn job(id: usize, data: Arc<Dataset>, algo: Algo, cfg: FwConfig) -> JobSpec {
+    JobSpec { id, label: format!("d{id}"), data, algo, cfg, test_data: None }
+}
+
+/// Deterministic trace fields — everything but the wall clock, the one
+/// field outside the bitwise resume contract.
+fn trace_key(r: &TraceRecord) -> (usize, f64, u64, u64, u64, usize) {
+    (r.iter, r.gap, r.flops, r.bytes, r.pops, r.selected)
+}
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let p = std::env::temp_dir()
+        .join(format!("dpfw-durab-{}-{}", std::process::id(), name));
+    let _ = std::fs::remove_dir_all(&p);
+    std::fs::create_dir_all(&p).unwrap();
+    p
+}
+
+// ---------------------------------------------------------------------------
+// The resume matrix: checkpoint at the monolithic 1-thread topology, then
+// finish the run at every (shards, threads) combination — each must be
+// bitwise identical to the uninterrupted run at that same topology.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn checkpoint_resume_is_bitwise_identical_across_topologies() {
+    let dir = tmpdir("resume-matrix");
+    let d = dataset(21);
+    // heap selectors exist only on the fast solver (Alg 3 rides Alg 2)
+    let combos = [
+        (Algo::Fast, SelectorKind::Argmax),
+        (Algo::Fast, SelectorKind::FibHeap),
+        (Algo::Fast, SelectorKind::Bsls),
+        (Algo::Standard, SelectorKind::Argmax),
+        (Algo::Standard, SelectorKind::Bsls),
+    ];
+    for (algo, selector) in combos {
+        let base = cfg(selector, 31);
+        // producer run: brownout at t = 23 persists the stop-point
+        // snapshot (cadence snapshots at 7, 14, 21 are overwritten)
+        let ck_path = dir.join(format!("ckpt-{algo:?}-{}.bin", selector.name()));
+        let mut capped = base.clone();
+        capped.threads = 1;
+        capped.iter_cap = Some(23);
+        capped.durability = Some(Arc::new(RunDurability {
+            request_id: 1,
+            path: ck_path.clone(),
+            ledger: None,
+            every_k: 7,
+        }));
+        let cut = job(0, d.clone(), algo, capped).run();
+        assert_eq!(cut.output.stopped, StopReason::Brownout);
+        assert_eq!(cut.output.iters_run, 23);
+        let ck = Arc::new(FwCheckpoint::read_from(&ck_path).unwrap());
+        assert_eq!(ck.replay_to(), 23);
+        assert_eq!(ck.dataset_token, d.token());
+
+        for shards in [None, Some(3)] {
+            for threads in [1usize, 4] {
+                let ctx = format!(
+                    "algo={algo:?} sel={} P={shards:?} threads={threads}",
+                    selector.name()
+                );
+                let mut full_cfg = base.clone();
+                full_cfg.shards = shards;
+                full_cfg.threads = threads;
+                let full = job(0, d.clone(), algo, full_cfg.clone()).run();
+
+                let mut resume_cfg = full_cfg;
+                resume_cfg.resume = Some(ck.clone());
+                let resumed = job(0, d.clone(), algo, resume_cfg).run();
+
+                assert_eq!(
+                    resumed.output.weights, full.output.weights,
+                    "{ctx}: weights diverged"
+                );
+                assert_eq!(
+                    resumed.output.final_gap.to_bits(),
+                    full.output.final_gap.to_bits(),
+                    "{ctx}: gap diverged"
+                );
+                assert_eq!(resumed.output.flops, full.output.flops, "{ctx}: flops");
+                assert_eq!(
+                    resumed.output.bytes_moved, full.output.bytes_moved,
+                    "{ctx}: bytes"
+                );
+                assert_eq!(
+                    resumed.output.eps_spent, full.output.eps_spent,
+                    "{ctx}: ε spend"
+                );
+                assert_eq!(
+                    resumed.output.iters_run, full.output.iters_run,
+                    "{ctx}: iterations"
+                );
+                assert_eq!(
+                    resumed.output.trace.len(),
+                    full.output.trace.len(),
+                    "{ctx}: trace length"
+                );
+                for (a, b) in resumed.output.trace.iter().zip(&full.output.trace) {
+                    assert_eq!(trace_key(a), trace_key(b), "{ctx}: trace diverged");
+                }
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end crash recovery through the pool: a CrashAt-killed worker's
+// job resumes from its cadence checkpoint, lands the same bits as a run
+// that never crashed, and the ε ledger charges the dataset exactly once.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn crash_killed_solve_resumes_through_pool_with_exactly_once_accounting() {
+    let dir = tmpdir("pool-crash");
+    let wal = dir.join("eps.wal");
+    let ledger = Arc::new(EpsLedger::open(&wal, FsyncPolicy::Always).unwrap());
+    let d = dataset(22);
+    let base = cfg(SelectorKind::Bsls, 33);
+    let clean = job(0, d.clone(), Algo::Fast, base.clone()).run();
+    let full_eps = clean.output.eps_spent.expect("DP run reports spend");
+
+    let mut c = Coordinator::with_options(
+        1,
+        PoolOptions {
+            durability: Some(DurabilityOptions {
+                ledger: Some(ledger.clone()),
+                dir: dir.clone(),
+                every_k: 10,
+            }),
+            ..Default::default()
+        },
+    );
+    let mut doomed = base.clone();
+    doomed.fault = FaultPlan::once(FaultKind::CrashAt { iter: 45 });
+    c.submit(job(0, d.clone(), Algo::Fast, doomed));
+    let results = c.drain();
+    let r = results[0].as_ref().expect("crash-killed job must resume to Ok");
+    assert_eq!(c.metrics.jobs_resumed.load(Ordering::Relaxed), 1);
+    assert_eq!(c.metrics.jobs_failed.load(Ordering::Relaxed), 0);
+    assert_eq!(r.output.weights, clean.output.weights, "resume diverged");
+    assert_eq!(r.output.eps_spent, clean.output.eps_spent);
+    assert_eq!(r.output.flops, clean.output.flops);
+
+    // exactly-once: crash + resume replayed the cadence charges, but the
+    // max-merge pins the request at one full run's spend
+    let (released, eps) = ledger.spent_for_request(0).expect("request recorded");
+    assert_eq!(released as usize, base.iters - 1);
+    assert!((eps - full_eps).abs() < 1e-12, "{eps} vs {full_eps}");
+    assert!((ledger.spent_for_dataset(d.token()) - full_eps).abs() < 1e-12);
+
+    // the record survives a reopen intact (no torn tail: fsync-always)
+    drop(c);
+    let reopened = EpsLedger::open(&wal, FsyncPolicy::Always).unwrap();
+    assert_eq!(reopened.truncated_frames(), 0);
+    assert!((reopened.spent_for_dataset(d.token()) - full_eps).abs() < 1e-12);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Torn ledger tail: recovery truncates to the last valid frame, and the
+// seed-pinned re-run of the same logical request tops the spend back to
+// exactly one full run — never a double charge.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn torn_ledger_tail_recovers_and_rerun_never_double_charges() {
+    let dir = tmpdir("torn-ledger");
+    let wal = dir.join("eps.wal");
+    let d = dataset(23);
+    let base = cfg(SelectorKind::Bsls, 44);
+    let run_with = |ledger: Arc<EpsLedger>| {
+        let mut c = base.clone();
+        c.durability = Some(Arc::new(RunDurability {
+            request_id: 9,
+            path: dir.join("ckpt-9.bin"),
+            ledger: Some(ledger),
+            every_k: 10,
+        }));
+        job(0, d.clone(), Algo::Fast, c).run()
+    };
+
+    let ledger = Arc::new(EpsLedger::open(&wal, FsyncPolicy::EveryN(4)).unwrap());
+    let first = run_with(ledger.clone());
+    let full_eps = first.output.eps_spent.unwrap();
+    let (released, eps) = ledger.spent_for_request(9).unwrap();
+    assert_eq!(released as usize, base.iters - 1);
+    assert_eq!(eps.to_bits(), full_eps.to_bits());
+    let frames_before = ledger.frames();
+    drop(ledger);
+
+    // crash mid-append: shear the final (completion) frame
+    let len = std::fs::metadata(&wal).unwrap().len();
+    faults::truncate_file(&wal, len - 10).unwrap();
+    let ledger = Arc::new(EpsLedger::open(&wal, FsyncPolicy::EveryN(4)).unwrap());
+    assert_eq!(ledger.truncated_frames(), 1);
+    assert_eq!(ledger.frames(), frames_before - 1);
+    let (released, eps) = ledger.spent_for_request(9).unwrap();
+    assert_eq!(released, 50, "last surviving cadence record");
+    assert!(eps < full_eps);
+
+    // the same logical request re-runs after recovery (seed-pinned, same
+    // request id): bit-identical output, and the merged spend lands at
+    // exactly one full run — not cadence + rerun summed
+    let second = run_with(ledger.clone());
+    assert_eq!(second.output.weights, first.output.weights);
+    let (released, eps) = ledger.spent_for_request(9).unwrap();
+    assert_eq!(released as usize, base.iters - 1);
+    assert_eq!(eps.to_bits(), full_eps.to_bits());
+    assert!((ledger.spent_for_dataset(d.token()) - full_eps).abs() < 1e-12);
+    std::fs::remove_dir_all(&dir).ok();
+}
