@@ -55,7 +55,7 @@ fn synthetic_ckpt(t: usize) -> FwCheckpoint {
         .collect();
     FwCheckpoint {
         fingerprint: 0x5EED,
-        dataset_token: 1,
+        dataset_fp: 1,
         seed: 7,
         t_planned: (t * 2) as u64,
         iter: t as u64,

@@ -31,14 +31,22 @@
 //! * **Budget gate (§6.11).** With a durable ε ledger configured
 //!   ([`IngressConfig::durability`]) and a per-dataset budget
 //!   ([`IngressConfig::dataset_budget`]), private requests against a
-//!   dataset whose cumulative write-ahead spend cannot absorb their ask
-//!   are refused at admission ([`ShedReason::BudgetExhausted`]) — before
-//!   any mechanism runs, and durably across restarts.
+//!   dataset whose cumulative spend cannot absorb their ask are refused
+//!   at admission ([`ShedReason::BudgetExhausted`]) — before any
+//!   mechanism runs. The gate is planned-spend-inclusive: it checks the
+//!   ledger's durable figure (keyed by the dataset's stable content
+//!   fingerprint, so refusals survive restarts) *plus* the asks of
+//!   requests already admitted this drain cycle but not yet charged, so
+//!   a burst of concurrent admissions cannot collectively overshoot the
+//!   budget. Private λ-paths are refused outright under a budget
+//!   ([`ShedReason::UnmeteredPath`]): their per-cell spend runs outside
+//!   the durable ledger, and unaccounted spend must not bypass the gate.
 //!
 //! Everything is observable on the shared [`Metrics`]: admit / shed /
 //! redirect / brownout counters, per-class queue-inclusive latency, and
 //! bytes-per-request.
 
+use std::collections::HashMap;
 use std::ops::Range;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
@@ -91,11 +99,21 @@ pub enum ShedReason {
     /// The ingress was shut down; nothing is dispatched anymore.
     PoolDown,
     /// §6.11 budget gate: the write-ahead ε ledger already records
-    /// `spent` against this dataset, and admitting this request's `ask`
-    /// would exceed [`IngressConfig::dataset_budget`]. Refused *before*
-    /// any mechanism runs — the ledger is the durable source of truth, so
-    /// the refusal survives restarts.
-    BudgetExhausted { token: u64, spent: f64, ask: f64, budget: f64 },
+    /// `spent` against this dataset (keyed by its stable content
+    /// fingerprint), another `pending` is reserved by requests admitted
+    /// this drain cycle whose charges have not landed yet, and admitting
+    /// this request's `ask` on top would exceed
+    /// [`IngressConfig::dataset_budget`]. Refused *before* any mechanism
+    /// runs — the ledger is the durable source of truth, so the refusal
+    /// survives restarts.
+    BudgetExhausted { fingerprint: u64, spent: f64, pending: f64, ask: f64, budget: f64 },
+    /// §6.11 budget gate: a *private* λ-path asked for `ask` against a
+    /// budgeted dataset, but path cells run outside the durable ledger
+    /// (`arm_durability` declines paths), so their spend would never be
+    /// recorded against the budget. Refused outright — unaccounted spend
+    /// must not bypass the gate. Paths on unmetered datasets (no
+    /// `dataset_budget`) are unaffected.
+    UnmeteredPath { fingerprint: u64, ask: f64 },
 }
 
 /// The admission decision for one request — every call to
@@ -288,6 +306,15 @@ pub struct Ingress {
     /// Requests admitted this drain cycle, per class (the queue-depth
     /// figure the watermarks compare against; reset by [`Self::drain`]).
     pending: [usize; 3],
+    /// §6.11 planned-spend reservations: dataset fingerprint → Σ of the ε
+    /// asks of private requests admitted this drain cycle. The ledger only
+    /// records spend as runs release selections (with `every_k = 0`, only
+    /// at completion), so without this the gate would let a burst of
+    /// concurrent admissions each see the same `spent` figure and
+    /// collectively overshoot the budget. Cleared by [`Self::drain`]: once
+    /// every admitted id has resolved, the real charges are in the ledger
+    /// and the reservation hands off to the durable figure.
+    inflight_eps: HashMap<u64, f64>,
     next_id: usize,
     /// Consecutive soft-watermark breaches (brownout arms at
     /// `cfg.brownout_after`).
@@ -317,6 +344,7 @@ impl Ingress {
             hub,
             buckets,
             pending: [0; 3],
+            inflight_eps: HashMap::new(),
             next_id: 0,
             breaches: 0,
             brownout_active: false,
@@ -352,11 +380,15 @@ impl Ingress {
             });
         }
         // ---- §6.11 budget gate ----------------------------------------
-        // Refuse private work against a dataset whose durable ε spend —
-        // the write-ahead ledger's figure, which includes everything
-        // charged before any crash or restart — cannot absorb this
-        // request's ask. Checked before the token bucket so a doomed
-        // request never consumes rate budget.
+        // Refuse private work against a dataset whose ε spend — the
+        // write-ahead ledger's durable figure (keyed by content
+        // fingerprint, so it includes everything charged before any crash
+        // or restart) plus the planned asks of requests admitted this
+        // cycle but not yet charged — cannot absorb this request's ask.
+        // Checked before the token bucket so a doomed request never
+        // consumes rate budget. On acceptance the ask is reserved in
+        // `inflight_eps` so the next admission sees it.
+        let mut reserve: Option<(u64, f64)> = None;
         if let (Some(budget), Some(ledger)) = (
             self.cfg.dataset_budget,
             self.cfg.durability.as_ref().and_then(|d| d.ledger.as_ref()),
@@ -371,17 +403,29 @@ impl Ingress {
                 Request::Predict(_) => None, // post-processing: spends nothing
             };
             if let Some(ask) = ask {
-                let token = req.dataset().token();
-                let spent = ledger.spent_for_dataset(token);
-                if spent + ask > budget {
+                let fingerprint = req.dataset().fingerprint();
+                // Path cells run outside the durable ledger
+                // (`arm_durability` declines paths), so a private path's
+                // spend would never be recorded against this budget:
+                // refuse it rather than let unaccounted spend through.
+                if matches!(req, Request::Path(_)) {
+                    m.admission_sheds.fetch_add(1, Ordering::Relaxed);
+                    return Admit::Shed(ShedReason::UnmeteredPath { fingerprint, ask });
+                }
+                let spent = ledger.spent_for_dataset(fingerprint);
+                let pending =
+                    self.inflight_eps.get(&fingerprint).copied().unwrap_or(0.0);
+                if spent + pending + ask > budget {
                     m.admission_sheds.fetch_add(1, Ordering::Relaxed);
                     return Admit::Shed(ShedReason::BudgetExhausted {
-                        token,
+                        fingerprint,
                         spent,
+                        pending,
                         ask,
                         budget,
                     });
                 }
+                reserve = Some((fingerprint, ask));
             }
         }
         if let Some(bucket) = &mut self.buckets[class.idx()] {
@@ -431,6 +475,9 @@ impl Ingress {
         if browned {
             m.brownout_jobs.fetch_add(1, Ordering::Relaxed);
         }
+        if let Some((fingerprint, ask)) = reserve {
+            *self.inflight_eps.entry(fingerprint).or_insert(0.0) += ask;
+        }
         self.pending[class.idx()] += 1;
         m.admits.fetch_add(1, Ordering::Relaxed);
         Admit::Accepted { ids, browned_out: browned }
@@ -442,6 +489,11 @@ impl Ingress {
     pub fn drain(&mut self) -> Vec<(usize, JobOutcome)> {
         let out = self.coord.drain_with_ids();
         self.pending = [0; 3];
+        // every admitted id has resolved: completed private runs have
+        // their charges in the ledger now (the solver appends its
+        // completion record before the result leaves the worker), so the
+        // planned-spend reservations hand off to the durable figure
+        self.inflight_eps.clear();
         out
     }
 
@@ -781,13 +833,20 @@ mod tests {
         assert!(ing.submit(req()).is_accepted());
         let out = ing.drain();
         assert!(out[0].1.is_ok(), "{:?}", out[0].1);
-        let spent = ledger.spent_for_dataset(d.token());
+        let spent = ledger.spent_for_dataset(d.fingerprint());
         assert!(spent > 0.9 && spent < 1.0, "spent {spent}");
         // second request asks for another 1.0: 0.987 + 1.0 > 1.5 → shed
         match ing.submit(req()) {
-            Admit::Shed(ShedReason::BudgetExhausted { token, spent: s, ask, budget }) => {
-                assert_eq!(token, d.token());
+            Admit::Shed(ShedReason::BudgetExhausted {
+                fingerprint,
+                spent: s,
+                pending,
+                ask,
+                budget,
+            }) => {
+                assert_eq!(fingerprint, d.fingerprint());
                 assert_eq!(s, spent);
+                assert_eq!(pending, 0.0, "drained ingress holds no reservations");
                 assert_eq!(ask, 1.0);
                 assert_eq!(budget, 1.5);
             }
@@ -809,6 +868,134 @@ mod tests {
             .is_accepted());
         let out = ing.drain();
         assert!(out.iter().all(|(_, o)| o.is_ok()));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn budget_gate_counts_admitted_but_uncharged_asks() {
+        let dir = std::env::temp_dir()
+            .join(format!("dpfw-ing-inflight-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let ledger = Arc::new(
+            EpsLedger::open(dir.join("eps.wal"), FsyncPolicy::Never).unwrap(),
+        );
+        // every_k = 0: nothing reaches the ledger until a run completes,
+        // so only the in-flight reservations can stop a same-cycle burst
+        let mut ing = Ingress::new(IngressConfig {
+            workers: 1,
+            durability: Some(DurabilityOptions {
+                ledger: Some(Arc::clone(&ledger)),
+                dir: dir.clone(),
+                every_k: 0,
+            }),
+            dataset_budget: Some(1.5),
+            ..Default::default()
+        });
+        let d = ds(7);
+        let pp = PrivacyParams::new(1.0, 1e-6);
+        let req = || {
+            Request::Solve(JobSpec {
+                id: 0,
+                label: "q".into(),
+                data: d.clone(),
+                algo: Algo::Fast,
+                cfg: FwConfig {
+                    iters: 40,
+                    lambda: 4.0,
+                    privacy: Some(pp),
+                    selector: SelectorKind::Bsls,
+                    ..Default::default()
+                },
+                test_data: None,
+            })
+        };
+        // the first admission reserves its full ask of 1.0 ...
+        assert!(ing.submit(req()).is_accepted());
+        assert_eq!(ledger.spent_for_dataset(d.fingerprint()), 0.0, "nothing charged yet");
+        // ... so the second — same cycle, ledger still empty — must see
+        // 0.0 spent + 1.0 pending + 1.0 ask > 1.5 and shed
+        match ing.submit(req()) {
+            Admit::Shed(ShedReason::BudgetExhausted { spent, pending, ask, .. }) => {
+                assert_eq!(spent, 0.0);
+                assert_eq!(pending, 1.0);
+                assert_eq!(ask, 1.0);
+            }
+            other => panic!("expected planned-spend shed, got {other:?}"),
+        }
+        let out = ing.drain();
+        assert_eq!(out.len(), 1);
+        assert!(out[0].1.is_ok());
+        // after the drain the real charge (≈0.987) is durable and the
+        // reservation is released; the gate now works off the ledger alone
+        let spent = ledger.spent_for_dataset(d.fingerprint());
+        assert!(spent > 0.9 && spent < 1.0, "spent {spent}");
+        match ing.submit(req()) {
+            Admit::Shed(ShedReason::BudgetExhausted { spent: s, pending, .. }) => {
+                assert_eq!(s, spent);
+                assert_eq!(pending, 0.0);
+            }
+            other => panic!("expected ledger-backed shed, got {other:?}"),
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn budget_gate_refuses_unmetered_private_paths() {
+        let dir = std::env::temp_dir()
+            .join(format!("dpfw-ing-unmetered-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let ledger = Arc::new(
+            EpsLedger::open(dir.join("eps.wal"), FsyncPolicy::Never).unwrap(),
+        );
+        let mut ing = Ingress::new(IngressConfig {
+            workers: 1,
+            durability: Some(DurabilityOptions {
+                ledger: Some(Arc::clone(&ledger)),
+                dir: dir.clone(),
+                every_k: 0,
+            }),
+            dataset_budget: Some(100.0),
+            ..Default::default()
+        });
+        let d = ds(8);
+        let pp = PrivacyParams::new(1.0, 1e-6);
+        let path = |privacy: Option<PrivacyParams>| {
+            Request::Path(PathJob {
+                base_id: 0,
+                label: "p".into(),
+                data: d.clone(),
+                algo: Algo::Fast,
+                cfg: FwConfig {
+                    iters: 40,
+                    lambda: 1.0,
+                    privacy,
+                    selector: if privacy.is_some() {
+                        SelectorKind::Bsls
+                    } else {
+                        SelectorKind::Argmax
+                    },
+                    ..Default::default()
+                },
+                lambdas: vec![2.0, 4.0, 8.0],
+                test_data: None,
+            })
+        };
+        // a private path's cells run outside the ledger: even with ample
+        // budget it must be refused, not admitted unmetered
+        match ing.submit(path(Some(pp))) {
+            Admit::Shed(ShedReason::UnmeteredPath { fingerprint, ask }) => {
+                assert_eq!(fingerprint, d.fingerprint());
+                assert_eq!(ask, 3.0, "ε per λ, three λs");
+            }
+            other => panic!("expected unmetered-path shed, got {other:?}"),
+        }
+        assert_eq!(ing.metrics().admission_sheds.load(Ordering::Relaxed), 1);
+        // non-private paths spend nothing and stay admissible
+        assert!(ing.submit(path(None)).is_accepted());
+        let out = ing.drain();
+        assert_eq!(out.len(), 3);
+        assert!(out.iter().all(|(_, o)| o.is_ok()));
+        assert_eq!(ledger.spent_for_dataset(d.fingerprint()), 0.0);
         std::fs::remove_dir_all(&dir).ok();
     }
 

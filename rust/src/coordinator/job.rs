@@ -311,17 +311,6 @@ impl Job {
         }
     }
 
-    /// The job's dataset token — the ε ledger's per-dataset spend key
-    /// (DESIGN.md §6.11). Predictions spend no budget but still report
-    /// which dataset they touch.
-    pub(crate) fn dataset_token(&self) -> u64 {
-        match self {
-            Job::Cell(c) => c.data.token(),
-            Job::Path(p) => p.data.token(),
-            Job::Predict(p) => p.data.token(),
-        }
-    }
-
     /// The job's privacy parameters, when it is a private solve (predict
     /// jobs spend nothing; the ingress budget gate keys off this).
     pub(crate) fn privacy(&self) -> Option<&crate::dp::accounting::PrivacyParams> {
@@ -336,7 +325,11 @@ impl Job {
     /// write-ahead ε-ledger records. Path jobs run many solves through
     /// one workspace and predictions are stateless, so both decline
     /// (`false`) — the pool then treats them as non-resumable, exactly as
-    /// before this subsystem existed.
+    /// before this subsystem existed. Because a declined private path
+    /// spends ε the ledger never records, the ingress refuses private
+    /// paths outright when a dataset budget is configured
+    /// ([`crate::coordinator::ingress::ShedReason::UnmeteredPath`]) —
+    /// unaccounted spend must not bypass the budget gate.
     pub(crate) fn arm_durability(&mut self, dur: Arc<RunDurability>) -> bool {
         match self {
             Job::Cell(c) => {

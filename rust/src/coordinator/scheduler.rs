@@ -388,8 +388,18 @@ impl Coordinator {
         // owed id can be resubmitted from its checkpoint.
         if let Some(dur) = &self.opts.durability {
             let id = job.result_ids().start;
+            // The ledger file outlives this process, so its idempotency
+            // key cannot be the per-process result id — a restarted
+            // service would reuse a dead process's id and the max-merge
+            // would swallow the new request's charge as a stale replay.
+            // The ledger allocates above its durable high-water mark; with
+            // no ledger nothing is charged and the result id suffices.
+            let request_id = match &dur.ledger {
+                Some(ledger) => ledger.allocate_request_id(),
+                None => id as u64,
+            };
             let run = Arc::new(RunDurability {
-                request_id: id as u64,
+                request_id,
                 path: dur.dir.join(format!("ckpt-{id}.bin")),
                 ledger: dur.ledger.clone(),
                 every_k: dur.every_k,

@@ -76,9 +76,15 @@ pub enum FsyncPolicy {
 /// One spend record as read back from the log.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct LedgerRecord {
-    /// Request id — the idempotency key.
+    /// Request id — the idempotency key. Allocated via
+    /// [`EpsLedger::allocate_request_id`] so ids are unique across process
+    /// lifetimes (the log is durable; a reused id would be max-merged as a
+    /// stale replay).
     pub request: u64,
-    /// Dataset identity token the spend charges against.
+    /// Dataset identity the spend charges against: the *stable content
+    /// fingerprint* ([`crate::sparse::Dataset::fingerprint`]), not the
+    /// process-local token — recorded spend must follow the data across
+    /// restarts, not one process's handle to it.
     pub token: u64,
     /// Planned iteration budget T (the noise scale's calibration).
     pub planned: u32,
@@ -140,15 +146,47 @@ struct LedgerInner {
     frames: u64,
     /// frames dropped by torn-tail truncation at the last `open`.
     truncated: u64,
+    /// records refused because their dataset token disagreed with the one
+    /// their request id is already charged against (a malformed or
+    /// cross-wired record — merging it would corrupt both datasets'
+    /// totals, so it is dropped instead).
+    rejected: u64,
+    /// Next request id this ledger will hand out
+    /// ([`EpsLedger::allocate_request_id`]): one past the highest id ever
+    /// seen on disk, so ids stay unique across process lifetimes — a
+    /// restarted service can never reuse a dead process's id and have its
+    /// charge swallowed as a stale replay by the max-merge.
+    next_request: u64,
 }
 
 impl LedgerInner {
+    /// Does `r` claim a dataset other than the one its request id is
+    /// already recorded against? A request charges exactly one dataset for
+    /// its whole lifetime; anything else is a corrupt or cross-wired
+    /// record.
+    fn token_conflict(&self, r: &LedgerRecord) -> bool {
+        self.requests.get(&r.request).is_some_and(|st| st.token != r.token)
+    }
+
     /// Merge a record into the in-memory view. Max-merge: only a strictly
     /// larger released count for a known request moves the dataset spend
-    /// (by the eps delta); duplicates and stale replays are no-ops.
+    /// (by the eps delta); duplicates and stale replays are no-ops, and a
+    /// record whose token disagrees with the request's recorded dataset
+    /// is rejected outright (applying its delta to a *different* token
+    /// would corrupt both datasets' totals).
     fn merge(&mut self, r: &LedgerRecord) -> bool {
+        self.next_request = self.next_request.max(r.request.saturating_add(1));
         match self.requests.get_mut(&r.request) {
             Some(st) => {
+                if st.token != r.token {
+                    self.rejected += 1;
+                    eprintln!(
+                        "[dpfw] eps ledger: record for request {} charges dataset \
+                         {:#x} but the request is recorded against {:#x}; dropped",
+                        r.request, r.token, st.token
+                    );
+                    return false;
+                }
                 if r.released <= st.released {
                     return false;
                 }
@@ -195,6 +233,8 @@ impl EpsLedger {
             spend: HashMap::new(),
             frames: 0,
             truncated: 0,
+            rejected: 0,
+            next_request: 0,
         };
         let mut off = 0usize;
         while off + LEDGER_FRAME_LEN <= bytes.len() {
@@ -224,6 +264,18 @@ impl EpsLedger {
     /// replayed duplicate).
     pub fn append(&self, r: LedgerRecord) -> std::io::Result<bool> {
         let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        if g.token_conflict(&r) {
+            // refuse before the write: a cross-wired record must corrupt
+            // neither the durable log nor the in-memory totals
+            g.rejected += 1;
+            let recorded = g.requests[&r.request].token;
+            eprintln!(
+                "[dpfw] eps ledger: refusing append for request {}: dataset \
+                 {:#x} conflicts with recorded {:#x}",
+                r.request, r.token, recorded
+            );
+            return Ok(false);
+        }
         g.file.write_all(&r.encode())?;
         g.frames += 1;
         match g.policy {
@@ -269,6 +321,26 @@ impl EpsLedger {
     /// Frames discarded by torn-tail truncation at the last `open`.
     pub fn truncated_frames(&self) -> u64 {
         self.inner.lock().unwrap_or_else(|e| e.into_inner()).truncated
+    }
+
+    /// Records refused because their dataset token conflicted with the
+    /// one their request id is already recorded against (replay + appends
+    /// since open).
+    pub fn rejected_records(&self) -> u64 {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).rejected
+    }
+
+    /// Allocate a request id that is unique across process lifetimes:
+    /// strictly above every id this ledger has ever seen on disk (replayed
+    /// at `open`) or handed out in this process. The coordinator uses this
+    /// — not its per-process result counter — as the ledger idempotency
+    /// key, so a restarted service can never collide with a dead process's
+    /// recorded request and have a fresh charge silently max-merged away.
+    pub fn allocate_request_id(&self) -> u64 {
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let id = g.next_request;
+        g.next_request += 1;
+        id
     }
 
     /// Distinct request ids recorded.
@@ -387,6 +459,60 @@ mod tests {
         assert!(l.append(rec(2, 7, 20, 0.2)).unwrap());
         assert!(!l.append(rec(2, 7, 20, 0.2)).unwrap());
         assert!((l.spent_for_dataset(7) - 0.3).abs() < 1e-12);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn request_ids_allocate_above_the_durable_high_water_mark() {
+        let p = tmp("req-ids");
+        {
+            let l = EpsLedger::open(&p, FsyncPolicy::Always).unwrap();
+            // fresh log: ids start at 0 and never repeat in-process
+            assert_eq!(l.allocate_request_id(), 0);
+            assert_eq!(l.allocate_request_id(), 1);
+            l.append(rec(1, 7, 10, 0.1)).unwrap();
+            // an externally chosen id raises the mark past itself
+            l.append(rec(40, 7, 5, 0.05)).unwrap();
+            assert_eq!(l.allocate_request_id(), 41);
+        }
+        // "process restart": only recorded ids survive (the unrecorded
+        // allocation 0 is free again — no record means no replay hazard),
+        // and new ids land strictly above every recorded one
+        let l = EpsLedger::open(&p, FsyncPolicy::Always).unwrap();
+        assert_eq!(l.allocate_request_id(), 41);
+        assert_eq!(l.allocate_request_id(), 42);
+        // a fresh charge under the new id is a real charge, not a replay
+        assert!(l.append(rec(41, 7, 10, 0.1)).unwrap());
+        assert!((l.spent_for_dataset(7) - 0.25).abs() < 1e-12);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn token_conflict_records_are_rejected_not_merged() {
+        let p = tmp("token-conflict");
+        {
+            let l = EpsLedger::open(&p, FsyncPolicy::Always).unwrap();
+            assert!(l.append(rec(1, 7, 10, 0.1)).unwrap());
+            // same request, different dataset: refused before the write,
+            // neither dataset's total moves
+            assert!(!l.append(rec(1, 8, 20, 0.2)).unwrap());
+            assert_eq!(l.rejected_records(), 1);
+            assert!((l.spent_for_dataset(7) - 0.1).abs() < 1e-12);
+            assert_eq!(l.spent_for_dataset(8), 0.0);
+            assert_eq!(l.spent_for_request(1), Some((10, 0.1)));
+            // the refused record was never persisted
+            assert_eq!(l.frames(), 1);
+        }
+        // replay-side guard: hand-craft a log whose second frame
+        // cross-wires the request onto another dataset
+        {
+            let mut f = OpenOptions::new().append(true).open(&p).unwrap();
+            f.write_all(&rec(1, 9, 30, 0.3).encode()).unwrap();
+        }
+        let l = EpsLedger::open(&p, FsyncPolicy::Always).unwrap();
+        assert_eq!(l.rejected_records(), 1);
+        assert!((l.spent_for_dataset(7) - 0.1).abs() < 1e-12);
+        assert_eq!(l.spent_for_dataset(9), 0.0);
         let _ = std::fs::remove_file(&p);
     }
 

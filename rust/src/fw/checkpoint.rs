@@ -105,8 +105,11 @@ pub fn config_fingerprint(cfg: &FwConfig) -> u64 {
 pub struct FwCheckpoint {
     /// [`config_fingerprint`] of the run that wrote this snapshot.
     pub fingerprint: u64,
-    /// [`crate::sparse::Dataset`] identity token (process-unique).
-    pub dataset_token: u64,
+    /// [`crate::sparse::Dataset::fingerprint`] — the *stable content*
+    /// identity, not the process-local token: a checkpoint is a durable
+    /// artifact, and a restarted process must still be able to prove the
+    /// snapshot belongs to the dataset it is resuming against.
+    pub dataset_fp: u64,
     /// RNG seed of the run (redundant with the fingerprint; kept explicit
     /// for diagnostics).
     pub seed: u64,
@@ -141,11 +144,12 @@ impl FwCheckpoint {
         self.iter as usize
     }
 
-    /// Panic unless this snapshot belongs to (`cfg`, `token`) — resuming
-    /// against the wrong config or dataset would silently produce garbage
-    /// with a bogus privacy claim, so fail loudly (the `FwConfig::validate`
-    /// idiom).
-    pub fn validate_for(&self, cfg: &FwConfig, token: u64) {
+    /// Panic unless this snapshot belongs to (`cfg`, `dataset_fp`) —
+    /// resuming against the wrong config or dataset would silently produce
+    /// garbage with a bogus privacy claim, so fail loudly (the
+    /// `FwConfig::validate` idiom). `dataset_fp` is the dataset's stable
+    /// content fingerprint ([`crate::sparse::Dataset::fingerprint`]).
+    pub fn validate_for(&self, cfg: &FwConfig, dataset_fp: u64) {
         assert_eq!(
             self.fingerprint,
             config_fingerprint(cfg),
@@ -153,9 +157,9 @@ impl FwCheckpoint {
              different trajectory-defining config"
         );
         assert_eq!(
-            self.dataset_token, token,
-            "checkpoint dataset token mismatch: snapshot is for a different \
-             dataset"
+            self.dataset_fp, dataset_fp,
+            "checkpoint dataset fingerprint mismatch: snapshot is for a \
+             different dataset"
         );
         assert_eq!(self.history.len() as u64, self.iter, "corrupt history length");
         assert!(
@@ -212,7 +216,7 @@ impl FwCheckpoint {
         );
         buf.extend_from_slice(&CKPT_MAGIC);
         buf.extend_from_slice(&CKPT_VERSION.to_le_bytes());
-        for v in [self.fingerprint, self.dataset_token, self.seed, self.t_planned, self.iter] {
+        for v in [self.fingerprint, self.dataset_fp, self.seed, self.t_planned, self.iter] {
             buf.extend_from_slice(&v.to_le_bytes());
         }
         for v in self.rng {
@@ -292,7 +296,7 @@ impl FwCheckpoint {
             };
         }
         let fingerprint = read_u64!();
-        let dataset_token = read_u64!();
+        let dataset_fp = read_u64!();
         let seed = read_u64!();
         let t_planned = read_u64!();
         let iter = read_u64!();
@@ -361,7 +365,7 @@ impl FwCheckpoint {
         }
         Ok(Self {
             fingerprint,
-            dataset_token,
+            dataset_fp,
             seed,
             t_planned,
             iter,
@@ -413,7 +417,10 @@ impl FwCheckpoint {
 pub struct RunDurability {
     /// Ledger idempotency key for this logical request — replays after a
     /// crash reuse it, which is what makes the ledger's max-merge
-    /// exactly-once.
+    /// exactly-once. When a ledger is charged, the id must come from
+    /// [`EpsLedger::allocate_request_id`] so it is unique across process
+    /// lifetimes — the ledger file outlives the process, and a reused id
+    /// would make a fresh request's charge look like a stale replay.
     pub request_id: u64,
     /// Snapshot target path (one file, atomically replaced each time).
     pub path: PathBuf,
@@ -441,15 +448,16 @@ impl RunDurability {
     }
 
     /// Charge `released` selections (cumulative ε `eps`) against the
-    /// ledger, write-ahead of the release. No-op without a ledger. Loud on
-    /// I/O failure — releasing without a durable record would break the
-    /// write-ahead contract.
-    pub fn charge(&self, token: u64, planned: usize, released: usize, eps: f64) {
+    /// ledger, write-ahead of the release. `dataset_fp` is the dataset's
+    /// stable content fingerprint — the durable spend key. No-op without a
+    /// ledger. Loud on I/O failure — releasing without a durable record
+    /// would break the write-ahead contract.
+    pub fn charge(&self, dataset_fp: u64, planned: usize, released: usize, eps: f64) {
         if let Some(ledger) = &self.ledger {
             ledger
                 .append(LedgerRecord {
                     request: self.request_id,
-                    token,
+                    token: dataset_fp,
                     planned: planned as u32,
                     released: released as u32,
                     eps,
@@ -467,7 +475,7 @@ mod tests {
     fn sample() -> FwCheckpoint {
         FwCheckpoint {
             fingerprint: 0xDEAD_BEEF_1234_5678,
-            dataset_token: 42,
+            dataset_fp: 42,
             seed: 7,
             t_planned: 4000,
             iter: 3,
@@ -559,7 +567,7 @@ mod tests {
         let cfg = FwConfig::default();
         let mut ck = sample();
         ck.fingerprint = config_fingerprint(&cfg);
-        ck.dataset_token = 42;
+        ck.dataset_fp = 42;
         ck.validate_for(&cfg, 42);
         let wrong_ds = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             ck.validate_for(&cfg, 43)

@@ -272,7 +272,7 @@ impl<'a> FastFrankWolfe<'a> {
     ) -> FwCheckpoint {
         FwCheckpoint {
             fingerprint: config_fingerprint(&self.cfg),
-            dataset_token: self.data.token(),
+            dataset_fp: self.data.fingerprint(),
             seed: self.cfg.seed,
             t_planned: self.cfg.iters as u64,
             iter: t as u64,
@@ -374,7 +374,7 @@ impl<'a> FastFrankWolfe<'a> {
         // boundary — see fw/checkpoint.rs for the contract.
         let resume = self.cfg.resume.as_deref();
         if let Some(ck) = resume {
-            ck.validate_for(&self.cfg, self.data.token());
+            ck.validate_for(&self.cfg, self.data.fingerprint());
         }
         let replay_to = resume.map_or(0, |ck| ck.replay_to());
         let durability = self.cfg.durability.as_deref();
@@ -617,7 +617,7 @@ impl<'a> FastFrankWolfe<'a> {
                     if dur.should_checkpoint(t) {
                         if let Some(pp) = &self.cfg.privacy {
                             dur.charge(
-                                self.data.token(),
+                                self.data.fingerprint(),
                                 t_total,
                                 t,
                                 pp.spent_epsilon(t_total, t),
@@ -657,7 +657,7 @@ impl<'a> FastFrankWolfe<'a> {
         if let Some(dur) = durability {
             if let Some(pp) = &self.cfg.privacy {
                 dur.charge(
-                    self.data.token(),
+                    self.data.fingerprint(),
                     t_total,
                     iters_done,
                     pp.spent_epsilon(t_total, iters_done),
@@ -884,7 +884,7 @@ impl<'a> FastFrankWolfe<'a> {
         // by either resumes under either, at any shard count).
         let resume = self.cfg.resume.as_deref();
         if let Some(ck) = resume {
-            ck.validate_for(&self.cfg, self.data.token());
+            ck.validate_for(&self.cfg, self.data.fingerprint());
         }
         let replay_to = resume.map_or(0, |ck| ck.replay_to());
         let durability = self.cfg.durability.as_deref();
@@ -1116,7 +1116,7 @@ impl<'a> FastFrankWolfe<'a> {
                     if dur.should_checkpoint(t) {
                         if let Some(pp) = &self.cfg.privacy {
                             dur.charge(
-                                self.data.token(),
+                                self.data.fingerprint(),
                                 t_total,
                                 t,
                                 pp.spent_epsilon(t_total, t),
@@ -1152,7 +1152,7 @@ impl<'a> FastFrankWolfe<'a> {
         if let Some(dur) = durability {
             if let Some(pp) = &self.cfg.privacy {
                 dur.charge(
-                    self.data.token(),
+                    self.data.fingerprint(),
                     t_total,
                     iters_done,
                     pp.spent_epsilon(t_total, iters_done),

@@ -111,7 +111,7 @@ impl<'a> StandardFrankWolfe<'a> {
     ) -> FwCheckpoint {
         FwCheckpoint {
             fingerprint: config_fingerprint(&self.cfg),
-            dataset_token: self.data.token(),
+            dataset_fp: self.data.fingerprint(),
             seed: self.cfg.seed,
             t_planned: self.cfg.iters as u64,
             iter: t as u64,
@@ -176,7 +176,7 @@ impl<'a> StandardFrankWolfe<'a> {
         // exactly that alpha first.
         let resume = self.cfg.resume.as_deref();
         if let Some(ck) = resume {
-            ck.validate_for(&self.cfg, self.data.token());
+            ck.validate_for(&self.cfg, self.data.fingerprint());
         }
         let replay_to = resume.map_or(0, |ck| ck.replay_to());
         let durability = self.cfg.durability.as_deref();
@@ -314,7 +314,7 @@ impl<'a> StandardFrankWolfe<'a> {
                 if dur.should_checkpoint(t) {
                     if let Some(pp) = &self.cfg.privacy {
                         dur.charge(
-                            self.data.token(),
+                            self.data.fingerprint(),
                             t_total,
                             t,
                             pp.spent_epsilon(t_total, t),
@@ -345,7 +345,7 @@ impl<'a> StandardFrankWolfe<'a> {
         if let Some(dur) = durability {
             if let Some(pp) = &self.cfg.privacy {
                 dur.charge(
-                    self.data.token(),
+                    self.data.fingerprint(),
                     t_total,
                     iters_done,
                     pp.spent_epsilon(t_total, iters_done),
@@ -496,7 +496,7 @@ impl<'a> StandardFrankWolfe<'a> {
         // sparse iterate directly, and continue at `replay_to + 1`.
         let resume = self.cfg.resume.as_deref();
         if let Some(ck) = resume {
-            ck.validate_for(&self.cfg, self.data.token());
+            ck.validate_for(&self.cfg, self.data.fingerprint());
         }
         let replay_to = resume.map_or(0, |ck| ck.replay_to());
         let durability = self.cfg.durability.as_deref();
@@ -679,7 +679,7 @@ impl<'a> StandardFrankWolfe<'a> {
                 if dur.should_checkpoint(t) {
                     if let Some(pp) = &self.cfg.privacy {
                         dur.charge(
-                            self.data.token(),
+                            self.data.fingerprint(),
                             t_total,
                             t,
                             pp.spent_epsilon(t_total, t),
@@ -710,7 +710,7 @@ impl<'a> StandardFrankWolfe<'a> {
         if let Some(dur) = durability {
             if let Some(pp) = &self.cfg.privacy {
                 dur.charge(
-                    self.data.token(),
+                    self.data.fingerprint(),
                     t_total,
                     iters_done,
                     pp.spent_epsilon(t_total, iters_done),

@@ -62,6 +62,19 @@ pub(crate) fn balanced_ranges(indptr: &[usize], blocks: usize) -> Vec<std::ops::
     ranges
 }
 
+const FNV_OFFSET: u64 = 0xCBF2_9CE4_8422_2325;
+
+/// FNV-1a fold step over `bytes`, continuing from `h`. Stable across
+/// processes — it feeds [`Dataset::fingerprint`], which is part of the
+/// on-disk durability formats (DESIGN.md §6.11).
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
 /// A binary-classification dataset: both sparse views of `X` plus labels.
 #[derive(Clone, Debug)]
 pub struct Dataset {
@@ -79,6 +92,14 @@ pub struct Dataset {
     /// `Dataset`'s fields in place after construction is outside that
     /// cache's contract.
     token: u64,
+    /// Stable content fingerprint (FNV-1a over dims, nonzeros, labels):
+    /// the same bytes hash to the same value in every process, so this —
+    /// not the process-local `token` — is what the durable ε ledger and
+    /// checkpoint files key on (DESIGN.md §6.11). Two independently
+    /// constructed datasets with identical content share a fingerprint,
+    /// which is exactly right for privacy accounting: ε spends against
+    /// the data, not against one process's handle to it.
+    fingerprint: u64,
     /// Worker count the parallel CSC scatter actually used at
     /// construction (after [`csc::scatter_workers`]' gates and memory
     /// cap) — recorded so downstream reporting can attribute layout cost
@@ -151,15 +172,30 @@ impl Dataset {
                 labels: labels.len(),
             });
         }
+        // One O(nnz) sweep does double duty: the finiteness check and the
+        // stable content fingerprint the durable ε ledger keys on. FNV-1a
+        // over dims, then per row every (col, value bits) pair and the
+        // row's nnz (so row boundaries are part of the stream), then the
+        // label bits.
+        let mut fp = fnv1a(FNV_OFFSET, &(csr.n_rows() as u64).to_le_bytes());
+        fp = fnv1a(fp, &(csr.n_cols() as u64).to_le_bytes());
         for i in 0..csr.n_rows() {
+            let mut row_nnz = 0u32;
             for (j, v) in csr.row(i) {
                 if !v.is_finite() {
                     return Err(DatasetError::NonFiniteValue { row: i, col: j });
                 }
+                fp = fnv1a(fp, &(j as u32).to_le_bytes());
+                fp = fnv1a(fp, &v.to_bits().to_le_bytes());
+                row_nnz += 1;
             }
+            fp = fnv1a(fp, &row_nnz.to_le_bytes());
         }
         if let Some(row) = labels.iter().position(|&y| y != 0.0 && y != 1.0) {
             return Err(DatasetError::BadLabel { row, value: labels[row] });
+        }
+        for &y in &labels {
+            fp = fnv1a(fp, &y.to_bits().to_le_bytes());
         }
         // Block-parallel transpose for paper-scale matrices; the output is
         // bit-identical to the serial counting sort at any thread count
@@ -175,7 +211,7 @@ impl Dataset {
         csc.build_compact();
         static NEXT_TOKEN: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
         let token = NEXT_TOKEN.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        Ok(Self { csr, csc, labels, name: name.into(), token, scatter_workers })
+        Ok(Self { csr, csc, labels, name: name.into(), token, fingerprint: fp, scatter_workers })
     }
 
     /// Worker count the parallel CSC scatter actually used when this
@@ -202,9 +238,18 @@ impl Dataset {
         self.csr.index_kind()
     }
 
-    /// The dataset's identity token (see the field docs).
+    /// The dataset's process-local identity token (see the field docs).
+    /// For anything that outlives the process — ledger records,
+    /// checkpoint files — use [`Dataset::fingerprint`] instead.
     pub fn token(&self) -> u64 {
         self.token
+    }
+
+    /// The dataset's stable content fingerprint (see the field docs):
+    /// identical content yields the same value across processes and
+    /// restarts, so this is the durable spend/checkpoint key.
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
     }
 
     pub fn n_rows(&self) -> usize {
@@ -322,6 +367,50 @@ mod tests {
         let b = tiny();
         assert_ne!(a.token(), b.token(), "distinct constructions must differ");
         assert_eq!(a.token(), a.clone().token(), "clones alias the same data");
+    }
+
+    #[test]
+    fn fingerprint_is_content_stable_and_content_sensitive() {
+        // identical content → identical fingerprint, even across separate
+        // constructions (the durable ledger key must not depend on which
+        // process handle touched the data)
+        let a = tiny();
+        let b = tiny();
+        assert_eq!(a.fingerprint(), b.fingerprint(), "same bytes, same key");
+        assert_eq!(a.fingerprint(), a.clone().fingerprint());
+        // any content change moves it: a value...
+        let mut vb = coo::CooBuilder::new(0, 3);
+        let r0 = vb.add_row();
+        vb.push(r0, 0, 1.5); // tiny() has 1.0 here
+        vb.push(r0, 2, 2.0);
+        let r1 = vb.add_row();
+        vb.push(r1, 1, 3.0);
+        let r2 = vb.add_row();
+        vb.push(r2, 2, 4.0);
+        let r3 = vb.add_row();
+        vb.push(r3, 0, 5.0);
+        let changed_value =
+            Dataset::new(vb.to_csr(), vec![1.0, 0.0, 1.0, 0.0], "tiny");
+        assert_ne!(a.fingerprint(), changed_value.fingerprint());
+        // ...and a label
+        let mut lb = coo::CooBuilder::new(0, 3);
+        let s0 = lb.add_row();
+        lb.push(s0, 0, 1.0);
+        lb.push(s0, 2, 2.0);
+        let s1 = lb.add_row();
+        lb.push(s1, 1, 3.0);
+        let s2 = lb.add_row();
+        lb.push(s2, 2, 4.0);
+        let s3 = lb.add_row();
+        lb.push(s3, 0, 5.0);
+        let changed_label =
+            Dataset::new(lb.to_csr(), vec![1.0, 1.0, 1.0, 0.0], "tiny");
+        assert_ne!(a.fingerprint(), changed_label.fingerprint());
+        // deterministic derived datasets agree too
+        let (tr1, _) = a.split(0.25);
+        let (tr2, _) = b.split(0.25);
+        assert_eq!(tr1.fingerprint(), tr2.fingerprint());
+        assert_ne!(tr1.fingerprint(), a.fingerprint());
     }
 
     #[test]

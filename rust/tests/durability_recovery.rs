@@ -107,7 +107,7 @@ fn checkpoint_resume_is_bitwise_identical_across_topologies() {
         assert_eq!(cut.output.iters_run, 23);
         let ck = Arc::new(FwCheckpoint::read_from(&ck_path).unwrap());
         assert_eq!(ck.replay_to(), 23);
-        assert_eq!(ck.dataset_token, d.token());
+        assert_eq!(ck.dataset_fp, d.fingerprint());
 
         for shards in [None, Some(3)] {
             for threads in [1usize, 4] {
@@ -203,13 +203,13 @@ fn crash_killed_solve_resumes_through_pool_with_exactly_once_accounting() {
     let (released, eps) = ledger.spent_for_request(0).expect("request recorded");
     assert_eq!(released as usize, base.iters - 1);
     assert!((eps - full_eps).abs() < 1e-12, "{eps} vs {full_eps}");
-    assert!((ledger.spent_for_dataset(d.token()) - full_eps).abs() < 1e-12);
+    assert!((ledger.spent_for_dataset(d.fingerprint()) - full_eps).abs() < 1e-12);
 
     // the record survives a reopen intact (no torn tail: fsync-always)
     drop(c);
     let reopened = EpsLedger::open(&wal, FsyncPolicy::Always).unwrap();
     assert_eq!(reopened.truncated_frames(), 0);
-    assert!((reopened.spent_for_dataset(d.token()) - full_eps).abs() < 1e-12);
+    assert!((reopened.spent_for_dataset(d.fingerprint()) - full_eps).abs() < 1e-12);
     std::fs::remove_dir_all(&dir).ok();
 }
 
@@ -263,6 +263,6 @@ fn torn_ledger_tail_recovers_and_rerun_never_double_charges() {
     let (released, eps) = ledger.spent_for_request(9).unwrap();
     assert_eq!(released as usize, base.iters - 1);
     assert_eq!(eps.to_bits(), full_eps.to_bits());
-    assert!((ledger.spent_for_dataset(d.token()) - full_eps).abs() < 1e-12);
+    assert!((ledger.spent_for_dataset(d.fingerprint()) - full_eps).abs() < 1e-12);
     std::fs::remove_dir_all(&dir).ok();
 }
