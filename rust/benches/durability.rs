@@ -1,6 +1,7 @@
-//! Bench: **the §6.11 durability plane's overhead and recovery latency**.
+//! Bench: **the §6.11/§6.12 durability plane's overhead and recovery
+//! latency**.
 //!
-//! Three measurements carry the story:
+//! Five measurements carry the story:
 //!
 //! 1. **Ledger append throughput by fsync policy** — the write-ahead ε
 //!    ledger sits on the solver's release path, so the
@@ -12,6 +13,13 @@
 //! 3. **Crash-recovery latency** — resume-from-checkpoint (replay the
 //!    recorded prefix, then finish) vs the uninterrupted run, on a real
 //!    DP solve. The gap between the two is what a crash actually costs.
+//! 4. **Compaction latency vs log size** — the §6.12 periodic rewrite
+//!    (one max-merged frame per request id) must stay cheap enough to run
+//!    on a live pool; the series pins its cost per frame.
+//! 5. **Recovery-scan time vs orphan count** — the restart-time
+//!    `RecoveryManager::scan` walks, decodes, and WAL-cross-checks every
+//!    orphan a dead process left; its cost sets how fast a service comes
+//!    back.
 //!
 //! Like the other benches, the run doubles as an invariant check: the
 //! resumed output must be bit-identical to the uninterrupted run's, and
@@ -22,7 +30,7 @@ mod bench_harness;
 use std::sync::Arc;
 
 use bench_harness::{section, smoke_mode, Bench, JsonReport};
-use dpfw::coordinator::{Algo, JobSpec};
+use dpfw::coordinator::{Algo, JobSpec, RecoveryManager};
 use dpfw::dp::accounting::PrivacyParams;
 use dpfw::dp::ledger::{EpsLedger, FsyncPolicy, LedgerRecord};
 use dpfw::fw::cancel::StopReason;
@@ -31,6 +39,7 @@ use dpfw::fw::config::{FwConfig, SelectorKind};
 use dpfw::fw::queue::SelectorStats;
 use dpfw::fw::trace::TraceRecord;
 use dpfw::sparse::synth::{DatasetPreset, SynthConfig};
+use dpfw::testkit::io_faults::IoFaultPlane;
 
 fn tmp(name: &str) -> std::path::PathBuf {
     std::env::temp_dir().join(format!("dpfw-bench-durab-{}-{name}", std::process::id()))
@@ -192,6 +201,7 @@ fn main() {
         path: ck_path.clone(),
         ledger: None,
         every_k: 0,
+        io: IoFaultPlane::none(),
     }));
     let cut = job(capped).run();
     assert_eq!(cut.output.stopped, StopReason::Brownout);
@@ -230,6 +240,120 @@ fn main() {
         ],
     );
     let _ = std::fs::remove_file(&ck_path);
+
+    // ---- 4. compaction latency vs log size ------------------------------
+    // Cadence replays inflate the log to `cadence` frames per request;
+    // compaction rewrites it as one frame per request. Each timed run
+    // restores the inflated log (byte copy + reopen) and compacts it, so
+    // the `restore_mean_s` note (the same restore without the compact) is
+    // the baseline to subtract for the net rewrite cost.
+    let cadence = 20usize;
+    let req_counts: &[usize] = if smoke { &[50] } else { &[50, 500] };
+    section(&format!("ledger compaction ({cadence} cadence frames per request)"));
+    for &reqs in req_counts {
+        let path = tmp(&format!("compact-{reqs}"));
+        {
+            let _ = std::fs::remove_file(&path);
+            let l = EpsLedger::open(&path, FsyncPolicy::Never).unwrap();
+            for r in 0..reqs {
+                for step in 1..=cadence {
+                    l.append(LedgerRecord {
+                        request: r as u64,
+                        token: 1,
+                        planned: 4000,
+                        released: (step * 10) as u32,
+                        eps: step as f64 * 1e-3,
+                    })
+                    .unwrap();
+                }
+            }
+            l.sync().unwrap();
+        }
+        let inflated = std::fs::read(&path).unwrap();
+        let restore = Bench::new(format!("ledger-restore-r{reqs}"))
+            .warmup(1)
+            .runs(runs)
+            .run_stats(|| {
+                std::fs::write(&path, &inflated).unwrap();
+                EpsLedger::open(&path, FsyncPolicy::Never).unwrap().frames()
+            });
+        let stats = Bench::new(format!("ledger-compact-r{reqs}"))
+            .warmup(1)
+            .runs(runs)
+            .run_stats(|| {
+                std::fs::write(&path, &inflated).unwrap();
+                let l = EpsLedger::open(&path, FsyncPolicy::Never).unwrap();
+                let s = l.compact().unwrap();
+                assert_eq!(s.frames_after, reqs as u64, "one frame per request");
+                s.bytes_reclaimed
+            });
+        let frames = reqs * cadence;
+        let net_s = (stats.mean_s - restore.mean_s).max(0.0);
+        println!(
+            "  {reqs} requests ({frames} frames): {:.2} ms net compact",
+            net_s * 1e3
+        );
+        report.record(
+            &format!("ledger-compact-r{reqs}"),
+            stats,
+            &[
+                ("requests", reqs.to_string()),
+                ("frames_before", frames.to_string()),
+                ("restore_mean_s", format!("{:.6}", restore.mean_s)),
+                ("net_compact_s", format!("{net_s:.6}")),
+            ],
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+
+    // ---- 5. recovery-scan time vs orphan count --------------------------
+    // A dead process's durability dir: K resumable orphans (decodable
+    // snapshots whose dataset fingerprint matches the WAL) plus the WAL
+    // itself. scan() decodes and cross-checks every one; with nothing to
+    // quarantine the pass is idempotent, so one dir serves all runs.
+    let orphan_counts: &[usize] = if smoke { &[10, 50] } else { &[10, 100, 1000] };
+    section("recovery scan vs orphan count (resumable snapshots, t=100 each)");
+    for &orphans in orphan_counts {
+        let dir = tmp(&format!("scan-{orphans}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let ledger =
+            Arc::new(EpsLedger::open(dir.join("eps.wal"), FsyncPolicy::Never).unwrap());
+        let ck = synthetic_ckpt(100);
+        for r in 0..orphans {
+            ck.write_to(dir.join(format!("ckpt-{r}.bin"))).unwrap();
+            ledger
+                .append(LedgerRecord {
+                    request: r as u64,
+                    token: ck.dataset_fp,
+                    planned: 200,
+                    released: 100,
+                    eps: 0.01,
+                })
+                .unwrap();
+        }
+        let mgr = RecoveryManager::new(&dir, Some(ledger));
+        let stats = Bench::new(format!("recovery-scan-o{orphans}"))
+            .warmup(1)
+            .runs(runs)
+            .run_stats(|| {
+                let m = mgr.scan().unwrap();
+                assert_eq!(m.resumable().count(), orphans, "all orphans resumable");
+                assert_eq!(m.quarantined, 0, "nothing to quarantine: scan idempotent");
+                m.orphans.len()
+            });
+        let per_orphan_us = stats.mean_s * 1e6 / orphans as f64;
+        println!("  {orphans} orphans: {per_orphan_us:.1} µs/orphan");
+        report.record(
+            &format!("recovery-scan-o{orphans}"),
+            stats,
+            &[
+                ("orphans", orphans.to_string()),
+                ("per_orphan_us", format!("{per_orphan_us:.3}")),
+            ],
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
 
     report.write().expect("failed to write durability JSON");
 }

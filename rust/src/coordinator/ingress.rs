@@ -38,9 +38,13 @@
 //!   fingerprint, so refusals survive restarts) *plus* the asks of
 //!   requests already admitted this drain cycle but not yet charged, so
 //!   a burst of concurrent admissions cannot collectively overshoot the
-//!   budget. Private λ-paths are refused outright under a budget
-//!   ([`ShedReason::UnmeteredPath`]): their per-cell spend runs outside
-//!   the durable ledger, and unaccounted spend must not bypass the gate.
+//!   budget. Private λ-paths are metered like everything else (§6.12):
+//!   each grid point runs under its own durable request id, so a path's
+//!   ask — the per-run ε once per λ — flows through the same gate and
+//!   reservation. And the gate *fails closed*: once the ledger has
+//!   refused a write ([`crate::dp::ledger::EpsLedger::failed`]), private
+//!   requests are shed ([`ShedReason::LedgerFailed`]) rather than run
+//!   with spend the WAL can no longer record.
 //!
 //! Everything is observable on the shared [`Metrics`]: admit / shed /
 //! redirect / brownout counters, per-class queue-inclusive latency, and
@@ -107,13 +111,13 @@ pub enum ShedReason {
     /// runs — the ledger is the durable source of truth, so the refusal
     /// survives restarts.
     BudgetExhausted { fingerprint: u64, spent: f64, pending: f64, ask: f64, budget: f64 },
-    /// §6.11 budget gate: a *private* λ-path asked for `ask` against a
-    /// budgeted dataset, but path cells run outside the durable ledger
-    /// (`arm_durability` declines paths), so their spend would never be
-    /// recorded against the budget. Refused outright — unaccounted spend
-    /// must not bypass the gate. Paths on unmetered datasets (no
-    /// `dataset_budget`) are unaffected.
-    UnmeteredPath { fingerprint: u64, ask: f64 },
+    /// §6.12 degradation contract: the write-ahead ε ledger refused a
+    /// write earlier and marked itself failed, so new private spend can
+    /// no longer be durably recorded. The gate fails *closed* — the
+    /// request is shed rather than run unmetered — until an operator
+    /// repairs the storage and reopens the ledger. Non-private work
+    /// (predictions, non-DP solves) is unaffected.
+    LedgerFailed { fingerprint: u64, ask: f64 },
 }
 
 /// The admission decision for one request — every call to
@@ -261,9 +265,9 @@ pub struct IngressConfig {
     pub workers: usize,
     /// Seed-pinned retry policy for panicked jobs.
     pub retry: RetryPolicy,
-    /// §6.11 durability plane, forwarded to
+    /// §6.11/§6.12 durability plane, forwarded to
     /// [`PoolOptions::durability`]: cadence checkpoints, the write-ahead
-    /// ε ledger, and crash resume for cell solves.
+    /// ε ledger, and crash resume for cell solves and λ-path grid points.
     pub durability: Option<DurabilityOptions>,
     /// §6.11 load-driven regrowth of quarantined worker slots, forwarded
     /// to [`PoolOptions::regrow`].
@@ -379,7 +383,7 @@ impl Ingress {
                 watermark: pol.queue_hard,
             });
         }
-        // ---- §6.11 budget gate ----------------------------------------
+        // ---- §6.11/§6.12 budget gate ----------------------------------
         // Refuse private work against a dataset whose ε spend — the
         // write-ahead ledger's durable figure (keyed by content
         // fingerprint, so it includes everything charged before any crash
@@ -389,14 +393,14 @@ impl Ingress {
         // consumes rate budget. On acceptance the ask is reserved in
         // `inflight_eps` so the next admission sees it.
         let mut reserve: Option<(u64, f64)> = None;
-        if let (Some(budget), Some(ledger)) = (
-            self.cfg.dataset_budget,
-            self.cfg.durability.as_ref().and_then(|d| d.ledger.as_ref()),
-        ) {
+        if let Some(ledger) =
+            self.cfg.durability.as_ref().and_then(|d| d.ledger.as_ref())
+        {
             let ask = match &req {
                 Request::Solve(s) => s.cfg.privacy.map(|pp| pp.epsilon),
-                // every λ cell runs its own mechanism stream: a path asks
-                // for the full per-run ε once per λ
+                // every λ cell runs its own mechanism stream under its own
+                // durable request id (§6.12): a path asks for the full
+                // per-run ε once per λ
                 Request::Path(p) => {
                     p.cfg.privacy.map(|pp| pp.epsilon * p.lambdas.len() as f64)
                 }
@@ -404,28 +408,29 @@ impl Ingress {
             };
             if let Some(ask) = ask {
                 let fingerprint = req.dataset().fingerprint();
-                // Path cells run outside the durable ledger
-                // (`arm_durability` declines paths), so a private path's
-                // spend would never be recorded against this budget:
-                // refuse it rather than let unaccounted spend through.
-                if matches!(req, Request::Path(_)) {
+                // §6.12 degradation contract, independent of any budget:
+                // a failed ledger can no longer record spend, so private
+                // work is shed, never run unmetered (fail closed).
+                if ledger.failed() {
                     m.admission_sheds.fetch_add(1, Ordering::Relaxed);
-                    return Admit::Shed(ShedReason::UnmeteredPath { fingerprint, ask });
+                    return Admit::Shed(ShedReason::LedgerFailed { fingerprint, ask });
                 }
-                let spent = ledger.spent_for_dataset(fingerprint);
-                let pending =
-                    self.inflight_eps.get(&fingerprint).copied().unwrap_or(0.0);
-                if spent + pending + ask > budget {
-                    m.admission_sheds.fetch_add(1, Ordering::Relaxed);
-                    return Admit::Shed(ShedReason::BudgetExhausted {
-                        fingerprint,
-                        spent,
-                        pending,
-                        ask,
-                        budget,
-                    });
+                if let Some(budget) = self.cfg.dataset_budget {
+                    let spent = ledger.spent_for_dataset(fingerprint);
+                    let pending =
+                        self.inflight_eps.get(&fingerprint).copied().unwrap_or(0.0);
+                    if spent + pending + ask > budget {
+                        m.admission_sheds.fetch_add(1, Ordering::Relaxed);
+                        return Admit::Shed(ShedReason::BudgetExhausted {
+                            fingerprint,
+                            spent,
+                            pending,
+                            ask,
+                            budget,
+                        });
+                    }
+                    reserve = Some((fingerprint, ask));
                 }
-                reserve = Some((fingerprint, ask));
             }
         }
         if let Some(bucket) = &mut self.buckets[class.idx()] {
@@ -806,6 +811,7 @@ mod tests {
                 ledger: Some(Arc::clone(&ledger)),
                 dir: dir.clone(),
                 every_k: 0,
+                resume_in_process: true,
             }),
             dataset_budget: Some(1.5),
             ..Default::default()
@@ -887,6 +893,7 @@ mod tests {
                 ledger: Some(Arc::clone(&ledger)),
                 dir: dir.clone(),
                 every_k: 0,
+                resume_in_process: true,
             }),
             dataset_budget: Some(1.5),
             ..Default::default()
@@ -940,9 +947,9 @@ mod tests {
     }
 
     #[test]
-    fn budget_gate_refuses_unmetered_private_paths() {
+    fn budget_gate_meters_private_paths_per_lambda() {
         let dir = std::env::temp_dir()
-            .join(format!("dpfw-ing-unmetered-{}", std::process::id()));
+            .join(format!("dpfw-ing-pathmeter-{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
         let ledger = Arc::new(
             EpsLedger::open(dir.join("eps.wal"), FsyncPolicy::Never).unwrap(),
@@ -953,11 +960,13 @@ mod tests {
                 ledger: Some(Arc::clone(&ledger)),
                 dir: dir.clone(),
                 every_k: 0,
+                resume_in_process: true,
             }),
             dataset_budget: Some(100.0),
             ..Default::default()
         });
         let d = ds(8);
+        let iters = 40;
         let pp = PrivacyParams::new(1.0, 1e-6);
         let path = |privacy: Option<PrivacyParams>| {
             Request::Path(PathJob {
@@ -966,7 +975,7 @@ mod tests {
                 data: d.clone(),
                 algo: Algo::Fast,
                 cfg: FwConfig {
-                    iters: 40,
+                    iters,
                     lambda: 1.0,
                     privacy,
                     selector: if privacy.is_some() {
@@ -980,22 +989,118 @@ mod tests {
                 test_data: None,
             })
         };
-        // a private path's cells run outside the ledger: even with ample
-        // budget it must be refused, not admitted unmetered
-        match ing.submit(path(Some(pp))) {
-            Admit::Shed(ShedReason::UnmeteredPath { fingerprint, ask }) => {
-                assert_eq!(fingerprint, d.fingerprint());
-                assert_eq!(ask, 3.0, "ε per λ, three λs");
-            }
-            other => panic!("expected unmetered-path shed, got {other:?}"),
-        }
-        assert_eq!(ing.metrics().admission_sheds.load(Ordering::Relaxed), 1);
-        // non-private paths spend nothing and stay admissible
-        assert!(ing.submit(path(None)).is_accepted());
+        // §6.12: every grid point runs under its own durable request id,
+        // so a private path is admitted and metered — the ask (ε per λ,
+        // three λs) reserved up front, the real charges durable by drain
+        let admit = ing.submit(path(Some(pp)));
+        assert!(admit.is_accepted(), "{admit:?}");
         let out = ing.drain();
         assert_eq!(out.len(), 3);
         assert!(out.iter().all(|(_, o)| o.is_ok()));
-        assert_eq!(ledger.spent_for_dataset(d.fingerprint()), 0.0);
+        let per_run = pp.spent_epsilon(iters, iters - 1);
+        let spent = ledger.spent_for_dataset(d.fingerprint());
+        assert!(
+            (spent - 3.0 * per_run).abs() < 1e-12,
+            "three λ charges, one per request id: {spent} vs {}",
+            3.0 * per_run
+        );
+        assert_eq!(ledger.n_requests(), 3, "one WAL request per grid point");
+        // a path whose full ask no longer fits is refused up front
+        let mut tight = ing;
+        tight.cfg.dataset_budget = Some(spent + 2.0 * per_run);
+        match tight.submit(path(Some(pp))) {
+            Admit::Shed(ShedReason::BudgetExhausted { ask, .. }) => {
+                assert_eq!(ask, 3.0, "the gate sees the whole grid's ask");
+            }
+            other => panic!("expected budget shed, got {other:?}"),
+        }
+        // non-private paths spend nothing and stay admissible
+        assert!(tight.submit(path(None)).is_accepted());
+        let out = tight.drain();
+        assert_eq!(out.len(), 3);
+        assert!(out.iter().all(|(_, o)| o.is_ok()));
+        assert!((ledger.spent_for_dataset(d.fingerprint()) - spent).abs() < 1e-12);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn failed_ledger_fails_closed_at_admission() {
+        use crate::testkit::io_faults::{IoFaultKind, IoFaultPlane};
+
+        let dir = std::env::temp_dir()
+            .join(format!("dpfw-ing-failclosed-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let ledger = Arc::new(
+            EpsLedger::open(dir.join("eps.wal"), FsyncPolicy::Always).unwrap(),
+        );
+        let mut ing = Ingress::new(IngressConfig {
+            workers: 1,
+            durability: Some(DurabilityOptions {
+                ledger: Some(Arc::clone(&ledger)),
+                dir: dir.clone(),
+                every_k: 0,
+                resume_in_process: true,
+            }),
+            dataset_budget: Some(100.0),
+            ..Default::default()
+        });
+        let d = ds(9);
+        let pp = PrivacyParams::new(1.0, 1e-6);
+        let private = || {
+            Request::Solve(JobSpec {
+                id: 0,
+                label: "q".into(),
+                data: d.clone(),
+                algo: Algo::Fast,
+                cfg: FwConfig {
+                    iters: 40,
+                    lambda: 4.0,
+                    privacy: Some(pp),
+                    selector: SelectorKind::Bsls,
+                    ..Default::default()
+                },
+                test_data: None,
+            })
+        };
+        // break the disk under the WAL: the next write latches `failed`
+        ledger.arm_io_faults(IoFaultPlane::once(IoFaultKind::Enospc));
+        use crate::dp::ledger::LedgerRecord;
+        assert!(ledger
+            .append(LedgerRecord {
+                request: ledger.allocate_request_id(),
+                token: d.fingerprint(),
+                planned: 39,
+                released: 1,
+                eps: 0.1,
+            })
+            .is_err());
+        assert!(ledger.failed());
+        // §6.12 degradation contract: private work is shed, never run
+        // unmetered against a WAL that can no longer record it
+        match ing.submit(private()) {
+            Admit::Shed(ShedReason::LedgerFailed { fingerprint, ask }) => {
+                assert_eq!(fingerprint, d.fingerprint());
+                assert_eq!(ask, 1.0);
+            }
+            other => panic!("expected fail-closed shed, got {other:?}"),
+        }
+        assert_eq!(ing.metrics().admission_sheds.load(Ordering::Relaxed), 1);
+        // non-private work spends nothing and still flows
+        let w = Arc::new(vec![0.0; d.csr.n_cols()]);
+        assert!(ing
+            .submit(Request::Predict(PredictJob {
+                id: 0,
+                label: "p".into(),
+                data: d.clone(),
+                weights: w,
+                threads: 0,
+                cancel: CancelToken::none(),
+                fault: FaultPlan::none(),
+            }))
+            .is_accepted());
+        let out = ing.drain();
+        assert_eq!(out.len(), 1);
+        assert!(out[0].1.is_ok());
         std::fs::remove_dir_all(&dir).ok();
     }
 

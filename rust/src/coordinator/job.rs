@@ -4,7 +4,7 @@ use std::sync::Arc;
 
 use crate::eval;
 use crate::fw::cancel::CancelToken;
-use crate::fw::checkpoint::{FwCheckpoint, RunDurability};
+use crate::fw::checkpoint::{FwCheckpoint, PathDurability, RunDurability};
 use crate::fw::config::FwConfig;
 use crate::fw::fast::FastFrankWolfe;
 use crate::fw::flops::{BYTES_F32_READ, BYTES_F64_READ, FLOPS_SIGMOID};
@@ -165,7 +165,18 @@ impl PathJob {
     /// Execute inside a reusable workspace. Every output is bit-identical
     /// to the corresponding independent [`JobSpec`] at that λ (modulo the
     /// skipped bootstrap FLOPs — see `FwOutput::bootstrap_flops`).
+    ///
+    /// When the config carries a [`PathDurability`] plan (§6.12, armed by
+    /// the scheduler), each grid point runs as its own durable solve —
+    /// cadence checkpoints under that point's `ckpt-<req>-<k>.bin`,
+    /// write-ahead ε records under that point's request id, and an
+    /// optional per-point resume snapshot. Both branches route every λ
+    /// through `run_core(ws, λ, Bootstrap::Shared)`, so the armed loop is
+    /// bit-identical to the plain `run_path` sweep.
     pub fn run_in(&self, ws: &mut FwWorkspace) -> Vec<JobResult> {
+        if let Some(plan) = self.cfg.path_durability.clone() {
+            return self.run_in_durable(ws, &plan);
+        }
         let outs = match self.algo {
             Algo::Standard => StandardFrankWolfe::new(&self.data, self.cfg.clone())
                 .run_path(&self.lambdas, ws),
@@ -185,6 +196,44 @@ impl PathJob {
                     format!("{}|lam{}", self.label, lam),
                     self.algo,
                     &self.cfg,
+                    self.test_data.as_deref(),
+                    out,
+                )
+            })
+            .collect()
+    }
+
+    /// The durable λ-grid sweep: per-point configs (λ pinned, that point's
+    /// [`RunDurability`] cell and resume snapshot attached, the path plan
+    /// itself stripped so the inner solve can't recurse), all sharing one
+    /// workspace so the dense bootstrap is still computed at most once.
+    fn run_in_durable(&self, ws: &mut FwWorkspace, plan: &PathDurability) -> Vec<JobResult> {
+        self.lambdas
+            .iter()
+            .enumerate()
+            .map(|(k, &lam)| {
+                assert!(lam > 0.0, "path lambda must be positive");
+                let mut cfg_k = self.cfg.clone();
+                cfg_k.lambda = lam;
+                cfg_k.durability = plan.cell(k).cloned();
+                cfg_k.resume = plan.resume(k);
+                cfg_k.path_durability = None;
+                let out = match self.algo {
+                    Algo::Standard => {
+                        StandardFrankWolfe::new(&self.data, cfg_k.clone()).run_in_shared(ws)
+                    }
+                    Algo::Fast => {
+                        FastFrankWolfe::new(&self.data, cfg_k.clone()).run_in_shared(ws)
+                    }
+                    Algo::Predict => {
+                        panic!("Algo::Predict is not a solver; submit a PredictJob")
+                    }
+                };
+                finish_result(
+                    self.base_id + k,
+                    format!("{}|lam{}", self.label, lam),
+                    self.algo,
+                    &cfg_k,
                     self.test_data.as_deref(),
                     out,
                 )
@@ -322,14 +371,9 @@ impl Job {
     }
 
     /// Arm §6.11 durability on a single-cell solve: cadence checkpoints +
-    /// write-ahead ε-ledger records. Path jobs run many solves through
-    /// one workspace and predictions are stateless, so both decline
-    /// (`false`) — the pool then treats them as non-resumable, exactly as
-    /// before this subsystem existed. Because a declined private path
-    /// spends ε the ledger never records, the ingress refuses private
-    /// paths outright when a dataset budget is configured
-    /// ([`crate::coordinator::ingress::ShedReason::UnmeteredPath`]) —
-    /// unaccounted spend must not bypass the budget gate.
+    /// write-ahead ε-ledger records. Predictions are stateless and path
+    /// jobs are armed per grid point through [`Job::arm_path_durability`]
+    /// (§6.12) instead, so both decline (`false`) here.
     pub(crate) fn arm_durability(&mut self, dur: Arc<RunDurability>) -> bool {
         match self {
             Job::Cell(c) => {
@@ -340,8 +384,24 @@ impl Job {
         }
     }
 
+    /// Arm §6.12 durability on a λ-path job: one [`RunDurability`] cell
+    /// (own ledger request id, own `ckpt-<req>-<k>.bin` file) plus an
+    /// optional resume snapshot per grid point, carried on the job's
+    /// config so the exhaustive pub [`PathJob`] literal stays stable.
+    /// Returns `false` for non-path jobs.
+    pub(crate) fn arm_path_durability(&mut self, plan: Arc<PathDurability>) -> bool {
+        match self {
+            Job::Path(p) => {
+                p.cfg.path_durability = Some(plan);
+                true
+            }
+            Job::Cell(_) | Job::Predict(_) => false,
+        }
+    }
+
     /// Attach a resume checkpoint to a single-cell solve (the supervisor's
-    /// crash-recovery path). Returns `false` for non-cell jobs.
+    /// crash-recovery path). Returns `false` for non-cell jobs — a path's
+    /// per-point resumes ride in its [`PathDurability`] plan.
     pub(crate) fn set_resume(&mut self, ck: Arc<FwCheckpoint>) -> bool {
         match self {
             Job::Cell(c) => {

@@ -116,6 +116,11 @@ pub struct Metrics {
     /// checkpoint (or from scratch when the crash predated the first
     /// cadence snapshot) instead of failing them (§6.11).
     pub jobs_resumed: AtomicU64,
+    /// Explicit ε-ledger fsyncs the pool issued outside the ledger's own
+    /// policy — today the graceful-shutdown flush that keeps a clean exit
+    /// under `FsyncPolicy::Never`/`EveryN` from looking like a crash at
+    /// the next start (§6.12).
+    pub flushes: AtomicU64,
     /// Requests the ingress accepted (every one resolves to a structured
     /// outcome; `Admit::Accepted`).
     pub admits: AtomicU64,
@@ -160,6 +165,7 @@ impl Default for Metrics {
             workers_quarantined: AtomicU64::new(0),
             workers_regrown: AtomicU64::new(0),
             jobs_resumed: AtomicU64::new(0),
+            flushes: AtomicU64::new(0),
             admits: AtomicU64::new(0),
             admission_sheds: AtomicU64::new(0),
             redirects: AtomicU64::new(0),
@@ -206,7 +212,7 @@ impl Metrics {
         format!(
             "jobs {}/{} ({} failed), {:.2e} iters, {:.2e} flops, {:.1} iters/s, \
              pool busy {:.2}s, {} B/req | depth {} retries {} sheds {} timeouts {} \
-             respawns {} quarantined {} regrown {} resumed {} | \
+             respawns {} quarantined {} regrown {} resumed {} flushes {} | \
              admit {} shed {} redirect {} brownout {} (entries {}) | \
              cell p50/p99 {}/{} µs, path p50/p99 {}/{} µs, predict p50/p99 {}/{} µs",
             self.jobs_completed.load(Ordering::Relaxed),
@@ -225,6 +231,7 @@ impl Metrics {
             self.workers_quarantined.load(Ordering::Relaxed),
             self.workers_regrown.load(Ordering::Relaxed),
             self.jobs_resumed.load(Ordering::Relaxed),
+            self.flushes.load(Ordering::Relaxed),
             self.admits.load(Ordering::Relaxed),
             self.admission_sheds.load(Ordering::Relaxed),
             self.redirects.load(Ordering::Relaxed),

@@ -30,19 +30,25 @@
 //! iteration budgets honestly under sustained overload, and a per-worker
 //! circuit breaker.
 //!
-//! The durability plane (DESIGN.md §6.11) adds crash consistency on top:
-//! [`scheduler::DurabilityOptions`] arms cadence checkpoints
+//! The durability plane (DESIGN.md §6.11, §6.12) adds crash consistency
+//! on top: [`scheduler::DurabilityOptions`] arms cadence checkpoints
 //! ([`crate::fw::checkpoint`]) and the write-ahead ε ledger
-//! ([`crate::dp::ledger`]) on every cell solve, the supervisor resumes a
-//! crashed worker's job from its latest checkpoint (bitwise identical to
-//! the uninterrupted run, exactly-once accounting), ingress refuses
-//! private work on budget-exhausted datasets, and
-//! [`scheduler::RegrowPolicy`] regrows quarantined worker slots under
-//! queue backlog.
+//! ([`crate::dp::ledger`]) on every cell solve and every λ-path grid
+//! point, the supervisor resumes a crashed worker's job from its latest
+//! checkpoints (bitwise identical to the uninterrupted run, exactly-once
+//! accounting), ingress refuses private work on budget-exhausted
+//! datasets and fails closed when the ledger can no longer record spend,
+//! and [`scheduler::RegrowPolicy`] regrows quarantined worker slots
+//! under queue backlog. Across process lifetimes,
+//! [`recovery::RecoveryManager`] scans the checkpoint dir a dead process
+//! left behind, cross-checks each orphan against the WAL, and hands back
+//! a [`recovery::RecoveryManifest`] of resumable jobs whose reruns reuse
+//! the original durable request ids — restart-survivable exactly-once ε.
 
 pub mod ingress;
 pub mod job;
 pub mod metrics;
+pub mod recovery;
 pub mod registry;
 pub mod scheduler;
 
@@ -51,6 +57,9 @@ pub use ingress::{
 };
 pub use job::{Algo, Job, JobError, JobResult, JobSpec, PathJob, PredictJob};
 pub use metrics::{LatencyHisto, Metrics};
+pub use recovery::{
+    Orphan, OrphanKind, OrphanState, RecoveredSlot, RecoveryManager, RecoveryManifest,
+};
 pub use registry::Registry;
 pub use scheduler::{
     Coordinator, DurabilityOptions, JobOutcome, PoolOptions, RegrowPolicy, RetryPolicy,

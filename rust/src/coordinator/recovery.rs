@@ -1,0 +1,460 @@
+//! Restart-time recovery of the §6.12 durability plane.
+//!
+//! The in-process half of crash recovery (the supervisor's
+//! [`super::scheduler::Coordinator`] resume path) dies with the process.
+//! What a dead process leaves behind is the durability directory: the
+//! write-ahead ε ledger plus whatever `ckpt-*.bin` snapshots its armed
+//! jobs had persisted — *orphans*, files no live supervisor owns. This
+//! module turns that debris back into work:
+//!
+//! 1. [`RecoveryManager::scan`] walks the directory, classifies every
+//!    orphan ([`OrphanState`]), and cross-checks each readable snapshot
+//!    against the WAL — the dataset token the ledger recorded for the
+//!    orphan's request id must equal the snapshot's `dataset_fp`, or the
+//!    file cannot belong to the spend it claims to continue.
+//! 2. The result is a [`RecoveryManifest`]: per durable request id, a
+//!    resumable snapshot or the reason there isn't one, plus the spend
+//!    the WAL already holds for it.
+//! 3. The caller rebuilds its jobs and hands them back to a fresh pool
+//!    via [`super::scheduler::Coordinator::submit_recovered`] with
+//!    [`RecoveryManifest::slots_for`] — **reusing the original request
+//!    ids**, so every re-charge max-merges into the record the dead
+//!    process already wrote and the total ε per request stays exactly
+//!    one run's worth, however many times it crashed.
+//!
+//! Nothing is ever deleted. A snapshot that cannot be trusted — torn
+//! writer tmp, CRC/decode failure, dataset-fingerprint mismatch — is
+//! *quarantined*: moved into `dir/quarantine/` where an operator can do
+//! forensics, while the job it belonged to degrades to a seed-pinned
+//! fresh rerun (bit-identical to the run that crashed, and exactly-once
+//! in ε for the same reuse-the-id reason).
+
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::dp::ledger::EpsLedger;
+use crate::fw::checkpoint::FwCheckpoint;
+
+/// Parse a durability-plane filename into (request id, grid index).
+/// Accepts the four shapes the plane writes — `ckpt-<req>.bin` (cell),
+/// `ckpt-<req>-<k>.bin` (λ-path grid point `k`), and their `.ckpt-tmp`
+/// torn-writer temporaries — and nothing else (`None` for the WAL file,
+/// the quarantine dir, or any foreign name).
+pub(crate) fn parse_checkpoint_name(name: &str) -> Option<(u64, Option<usize>)> {
+    let rest = name.strip_prefix("ckpt-")?;
+    let stem = rest
+        .strip_suffix(".bin")
+        .or_else(|| rest.strip_suffix(".ckpt-tmp"))?;
+    match stem.split_once('-') {
+        None => stem.parse().ok().map(|req| (req, None)),
+        Some((req, k)) => Some((req.parse().ok()?, Some(k.parse().ok()?))),
+    }
+}
+
+/// Which kind of solve an orphaned snapshot belonged to (recovered from
+/// its filename).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OrphanKind {
+    /// `ckpt-<req>.bin`: a single-cell solve.
+    Cell,
+    /// `ckpt-<req>-<k>.bin`: grid point `k` of a λ-path.
+    PathPoint { k: usize },
+}
+
+/// What the scan concluded about one orphan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OrphanState {
+    /// The snapshot decoded cleanly and agrees with the WAL: resubmit
+    /// with it and the rerun fast-forwards through the replay prefix.
+    Resumable,
+    /// CRC or decode failure — the file is quarantined and the job
+    /// degrades to a seed-pinned fresh rerun.
+    Corrupt,
+    /// The snapshot's dataset fingerprint disagrees with the token the
+    /// WAL recorded for this request id: the file cannot belong to the
+    /// spend it claims to continue. Quarantined; fresh rerun.
+    DatasetMismatch { wal_token: u64, ckpt_token: u64 },
+    /// A `.ckpt-tmp` writer temporary — a crash landed between tmp write
+    /// and rename, so the file is at best a torn prefix. Quarantined;
+    /// the adjacent `.bin` (the previous intact snapshot, if any) still
+    /// stands.
+    TornTmp,
+}
+
+/// One file a dead process left in the durability dir, classified.
+#[derive(Clone, Debug)]
+pub struct Orphan {
+    /// Durable ledger request id from the filename — the idempotency key
+    /// a rerun must reuse for exactly-once ε.
+    pub request_id: u64,
+    pub kind: OrphanKind,
+    pub state: OrphanState,
+    /// Where the file is *now*: in place for [`OrphanState::Resumable`],
+    /// its quarantine location otherwise.
+    pub path: PathBuf,
+    /// The decoded snapshot (`Some` iff resumable).
+    pub checkpoint: Option<Arc<FwCheckpoint>>,
+    /// The WAL's `(released, ε)` high-water record for this request id,
+    /// when a ledger was given and holds one — what the max-merge will
+    /// absorb the rerun's re-charges into.
+    pub spent: Option<(u32, f64)>,
+}
+
+/// Per-result-id recovery instruction for
+/// [`super::scheduler::Coordinator::submit_recovered`]: the original
+/// durable request id to re-arm under, and the snapshot to resume from
+/// (`None` = seed-pinned fresh rerun).
+#[derive(Clone, Debug)]
+pub struct RecoveredSlot {
+    pub request_id: u64,
+    pub resume: Option<Arc<FwCheckpoint>>,
+}
+
+/// Everything one [`RecoveryManager::scan`] found, sorted by request id
+/// (grid index breaking ties).
+#[derive(Clone, Debug, Default)]
+pub struct RecoveryManifest {
+    pub orphans: Vec<Orphan>,
+    /// How many files the scan moved into `dir/quarantine/`.
+    pub quarantined: usize,
+}
+
+impl RecoveryManifest {
+    /// The orphans whose snapshots can seed a resume.
+    pub fn resumable(&self) -> impl Iterator<Item = &Orphan> {
+        self.orphans.iter().filter(|o| o.state == OrphanState::Resumable)
+    }
+
+    /// The orphan for `request_id`, preferring the resumable record when
+    /// the id also has quarantined artifacts (e.g. a torn tmp next to an
+    /// intact `.bin`).
+    pub fn find(&self, request_id: u64) -> Option<&Orphan> {
+        self.resumable()
+            .find(|o| o.request_id == request_id)
+            .or_else(|| self.orphans.iter().find(|o| o.request_id == request_id))
+    }
+
+    /// Build the [`RecoveredSlot`]s for a job whose result ids map to
+    /// `reqs` (one durable request id per result, in result order — a
+    /// cell passes one, a λ-path its per-point ids). Ids the scan found
+    /// a resumable snapshot for resume; the rest run fresh.
+    pub fn slots_for(&self, reqs: &[u64]) -> Vec<RecoveredSlot> {
+        reqs.iter()
+            .map(|&request_id| RecoveredSlot {
+                request_id,
+                resume: self
+                    .resumable()
+                    .find(|o| o.request_id == request_id)
+                    .and_then(|o| o.checkpoint.clone()),
+            })
+            .collect()
+    }
+}
+
+/// Scans a dead process's durability directory and classifies what it
+/// left behind (module docs for the full lifecycle).
+pub struct RecoveryManager {
+    dir: PathBuf,
+    /// The reopened WAL, for the dataset-token cross-check and the spend
+    /// column of the manifest. `None` skips both (checkpoint-only
+    /// deployments): every readable snapshot is then trusted as
+    /// resumable.
+    ledger: Option<Arc<EpsLedger>>,
+}
+
+impl RecoveryManager {
+    pub fn new(dir: impl Into<PathBuf>, ledger: Option<Arc<EpsLedger>>) -> Self {
+        Self { dir: dir.into(), ledger }
+    }
+
+    /// Walk the durability dir once: classify every orphan, quarantine
+    /// everything untrustworthy, and return the manifest. Idempotent —
+    /// a second scan over the same dir finds only the survivors (the
+    /// resumable snapshots), since quarantined files moved out of it.
+    /// Errors only if the directory itself is unreadable; per-file
+    /// problems are what the orphan states are for.
+    pub fn scan(&self) -> io::Result<RecoveryManifest> {
+        // Deterministic processing order regardless of readdir order.
+        let mut names: Vec<String> = std::fs::read_dir(&self.dir)?
+            .flatten()
+            .filter(|e| e.file_type().is_ok_and(|t| t.is_file()))
+            .filter_map(|e| e.file_name().into_string().ok())
+            .collect();
+        names.sort();
+
+        let mut manifest = RecoveryManifest::default();
+        for name in names {
+            let Some((request_id, k)) = parse_checkpoint_name(&name) else {
+                continue; // the WAL, a lock file, anything foreign
+            };
+            let kind = match k {
+                None => OrphanKind::Cell,
+                Some(k) => OrphanKind::PathPoint { k },
+            };
+            let src = self.dir.join(&name);
+            let spent =
+                self.ledger.as_ref().and_then(|l| l.spent_for_request(request_id));
+
+            let (state, path, checkpoint) = if name.ends_with(".ckpt-tmp") {
+                (OrphanState::TornTmp, self.quarantine(&src, &name, &mut manifest), None)
+            } else {
+                match FwCheckpoint::read_from(&src) {
+                    Err(_) => (
+                        OrphanState::Corrupt,
+                        self.quarantine(&src, &name, &mut manifest),
+                        None,
+                    ),
+                    Ok(ck) => {
+                        let wal_token = self
+                            .ledger
+                            .as_ref()
+                            .and_then(|l| l.token_for_request(request_id));
+                        match wal_token {
+                            Some(tok) if tok != ck.dataset_fp => (
+                                OrphanState::DatasetMismatch {
+                                    wal_token: tok,
+                                    ckpt_token: ck.dataset_fp,
+                                },
+                                self.quarantine(&src, &name, &mut manifest),
+                                None,
+                            ),
+                            _ => (OrphanState::Resumable, src, Some(Arc::new(ck))),
+                        }
+                    }
+                }
+            };
+            manifest.orphans.push(Orphan {
+                request_id,
+                kind,
+                state,
+                path,
+                checkpoint,
+                spent,
+            });
+        }
+        manifest.orphans.sort_by_key(|o| {
+            (o.request_id, match o.kind {
+                OrphanKind::Cell => 0,
+                OrphanKind::PathPoint { k } => k,
+            })
+        });
+        Ok(manifest)
+    }
+
+    /// Move an untrustworthy file into `dir/quarantine/` (created on
+    /// demand; numeric suffix on name collision) and return where it
+    /// ended up. Never deletes: if even the rename fails the file stays
+    /// put, still counted as quarantined-in-intent by its orphan state —
+    /// the scan will just reclassify it next time.
+    fn quarantine(
+        &self,
+        src: &Path,
+        name: &str,
+        manifest: &mut RecoveryManifest,
+    ) -> PathBuf {
+        let qdir = self.dir.join("quarantine");
+        let _ = std::fs::create_dir_all(&qdir);
+        let mut dst = qdir.join(name);
+        let mut n = 1u32;
+        while dst.exists() {
+            dst = qdir.join(format!("{name}.{n}"));
+            n += 1;
+        }
+        match std::fs::rename(src, &dst) {
+            Ok(()) => {
+                manifest.quarantined += 1;
+                dst
+            }
+            Err(_) => src.to_path_buf(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dp::ledger::{FsyncPolicy, LedgerRecord};
+    use crate::fw::checkpoint::config_fingerprint;
+    use crate::fw::config::FwConfig;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let p = std::env::temp_dir()
+            .join(format!("dpfw-recov-{}-{}", std::process::id(), name));
+        let _ = std::fs::remove_dir_all(&p);
+        std::fs::create_dir_all(&p).unwrap();
+        p
+    }
+
+    /// A minimal decodable snapshot claiming dataset `dataset_fp`.
+    fn snapshot(dataset_fp: u64) -> FwCheckpoint {
+        let cfg = FwConfig { iters: 40, lambda: 4.0, ..Default::default() };
+        FwCheckpoint {
+            fingerprint: config_fingerprint(&cfg),
+            dataset_fp,
+            seed: cfg.seed,
+            t_planned: 40,
+            iter: 12,
+            rng: [1, 2, 3, 4],
+            flops: [0; 7],
+            stats: Default::default(),
+            gap: 0.5,
+            history: vec![(3, 1)],
+            weights: vec![(3, 4.0)],
+            trace: vec![],
+        }
+    }
+
+    fn charge(ledger: &EpsLedger, request: u64, token: u64) {
+        ledger
+            .append(LedgerRecord { request, token, planned: 39, released: 10, eps: 0.25 })
+            .unwrap();
+    }
+
+    #[test]
+    fn parses_every_name_shape_and_rejects_foreign_ones() {
+        assert_eq!(parse_checkpoint_name("ckpt-7.bin"), Some((7, None)));
+        assert_eq!(parse_checkpoint_name("ckpt-7-3.bin"), Some((7, Some(3))));
+        assert_eq!(parse_checkpoint_name("ckpt-7.ckpt-tmp"), Some((7, None)));
+        assert_eq!(parse_checkpoint_name("ckpt-7-3.ckpt-tmp"), Some((7, Some(3))));
+        assert_eq!(
+            parse_checkpoint_name("ckpt-184467440737095516.bin"),
+            Some((184467440737095516, None))
+        );
+        for foreign in
+            ["eps.wal", "ckpt-.bin", "ckpt-x.bin", "ckpt-7.bin.bak", "quarantine", "ckpt-7-x.bin"]
+        {
+            assert_eq!(parse_checkpoint_name(foreign), None, "{foreign}");
+        }
+    }
+
+    #[test]
+    fn empty_dir_scans_to_empty_manifest() {
+        let dir = tmpdir("empty");
+        let m = RecoveryManager::new(&dir, None).scan().unwrap();
+        assert!(m.orphans.is_empty());
+        assert_eq!(m.quarantined, 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn wal_matched_snapshot_is_resumable_with_spend() {
+        let dir = tmpdir("resumable");
+        let ledger =
+            Arc::new(EpsLedger::open(dir.join("eps.wal"), FsyncPolicy::Always).unwrap());
+        charge(&ledger, 5, 42);
+        snapshot(42).write_to(dir.join("ckpt-5.bin")).unwrap();
+
+        let m = RecoveryManager::new(&dir, Some(ledger)).scan().unwrap();
+        assert_eq!(m.orphans.len(), 1);
+        let o = m.find(5).unwrap();
+        assert_eq!(o.state, OrphanState::Resumable);
+        assert_eq!(o.kind, OrphanKind::Cell);
+        assert_eq!(o.spent, Some((10, 0.25)));
+        assert_eq!(o.checkpoint.as_ref().unwrap().dataset_fp, 42);
+        assert!(o.path.exists(), "resumable snapshot stays in place");
+        assert_eq!(m.quarantined, 0);
+        assert_eq!(m.resumable().count(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_snapshot_is_quarantined_never_deleted() {
+        let dir = tmpdir("corrupt");
+        snapshot(42).write_to(dir.join("ckpt-3.bin")).unwrap();
+        // flip one payload byte: CRC rejects the decode
+        let f = dir.join("ckpt-3.bin");
+        let mut bytes = std::fs::read(&f).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&f, &bytes).unwrap();
+
+        let m = RecoveryManager::new(&dir, None).scan().unwrap();
+        let o = m.find(3).unwrap();
+        assert_eq!(o.state, OrphanState::Corrupt);
+        assert!(o.checkpoint.is_none());
+        assert!(!f.exists(), "moved out of the scan path");
+        assert_eq!(o.path, dir.join("quarantine").join("ckpt-3.bin"));
+        assert_eq!(std::fs::read(&o.path).unwrap(), bytes, "preserved bit-for-bit");
+        assert_eq!(m.quarantined, 1);
+        assert_eq!(m.resumable().count(), 0);
+
+        // idempotent: the survivor-free dir rescans clean
+        let m2 = RecoveryManager::new(&dir, None).scan().unwrap();
+        assert!(m2.orphans.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn dataset_mismatch_against_wal_is_quarantined() {
+        let dir = tmpdir("mismatch");
+        let ledger =
+            Arc::new(EpsLedger::open(dir.join("eps.wal"), FsyncPolicy::Always).unwrap());
+        charge(&ledger, 8, 42);
+        snapshot(99).write_to(dir.join("ckpt-8-0.bin")).unwrap();
+
+        let m = RecoveryManager::new(&dir, Some(ledger)).scan().unwrap();
+        let o = m.find(8).unwrap();
+        assert_eq!(
+            o.state,
+            OrphanState::DatasetMismatch { wal_token: 42, ckpt_token: 99 }
+        );
+        assert_eq!(o.kind, OrphanKind::PathPoint { k: 0 });
+        assert!(o.checkpoint.is_none());
+        assert_eq!(o.spent, Some((10, 0.25)), "the WAL record itself still stands");
+        assert_eq!(m.quarantined, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_tmp_quarantined_while_adjacent_bin_still_resumes() {
+        let dir = tmpdir("torn-tmp");
+        snapshot(42).write_to(dir.join("ckpt-6.bin")).unwrap();
+        // a crash between tmp write and rename leaves a torn prefix
+        std::fs::write(dir.join("ckpt-6.ckpt-tmp"), b"DPFWCKPT\x01torn").unwrap();
+
+        let m = RecoveryManager::new(&dir, None).scan().unwrap();
+        assert_eq!(m.orphans.len(), 2);
+        assert_eq!(m.quarantined, 1);
+        let states: Vec<OrphanState> = m.orphans.iter().map(|o| o.state).collect();
+        assert!(states.contains(&OrphanState::TornTmp));
+        assert!(states.contains(&OrphanState::Resumable));
+        // find() prefers the resumable record for the shared id
+        assert_eq!(m.find(6).unwrap().state, OrphanState::Resumable);
+        let slots = m.slots_for(&[6]);
+        assert!(slots[0].resume.is_some(), "the intact .bin seeds the resume");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn quarantine_name_collisions_get_numeric_suffixes() {
+        let dir = tmpdir("collide");
+        let qdir = dir.join("quarantine");
+        std::fs::create_dir_all(&qdir).unwrap();
+        std::fs::write(qdir.join("ckpt-4.ckpt-tmp"), b"earlier incident").unwrap();
+        std::fs::write(dir.join("ckpt-4.ckpt-tmp"), b"new torn tmp").unwrap();
+
+        let m = RecoveryManager::new(&dir, None).scan().unwrap();
+        let o = m.find(4).unwrap();
+        assert_eq!(o.path, qdir.join("ckpt-4.ckpt-tmp.1"));
+        assert_eq!(std::fs::read(&o.path).unwrap(), b"new torn tmp");
+        assert_eq!(std::fs::read(qdir.join("ckpt-4.ckpt-tmp")).unwrap(), b"earlier incident");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn slots_for_maps_grid_points_to_their_resumes() {
+        let dir = tmpdir("slots");
+        // path of 3: point 0 finished+GC'd (no file), point 1 snapshotted,
+        // point 2 never started
+        snapshot(42).write_to(dir.join("ckpt-11-1.bin")).unwrap();
+        let m = RecoveryManager::new(&dir, None).scan().unwrap();
+        let slots = m.slots_for(&[10, 11, 12]);
+        assert_eq!(slots.len(), 3);
+        assert_eq!(slots[0].request_id, 10);
+        assert!(slots[0].resume.is_none());
+        assert!(slots[1].resume.is_some());
+        assert!(slots[2].resume.is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -67,9 +67,10 @@ use super::job::{Job, JobError, JobResult, JobSpec, PathJob, PredictJob};
 use super::metrics::Metrics;
 use crate::dp::ledger::EpsLedger;
 use crate::fw::cancel::StopReason;
-use crate::fw::checkpoint::{FwCheckpoint, RunDurability};
+use crate::fw::checkpoint::{FwCheckpoint, PathDurability, RunDurability};
 use crate::fw::workspace::{BootHub, FwWorkspace};
 use crate::testkit::faults::CrashPayload;
+use crate::testkit::io_faults::IoFaultPlane;
 
 /// Outcome of one job id: the result, or a structured [`JobError`].
 pub type JobOutcome = Result<JobResult, JobError>;
@@ -115,22 +116,30 @@ impl RetryPolicy {
     }
 }
 
-/// §6.11 durability plane: arm cadence checkpoints and write-ahead
-/// ε-ledger records on every single-cell solve the pool runs, and let the
-/// supervisor resume a crashed worker's job from its latest checkpoint
-/// instead of failing it.
+/// §6.11/§6.12 durability plane: arm cadence checkpoints and write-ahead
+/// ε-ledger records on every solve the pool runs — single cells and λ-path
+/// grid points alike — and let the supervisor resume a crashed worker's
+/// job from its latest checkpoints instead of failing it.
 #[derive(Clone, Debug)]
 pub struct DurabilityOptions {
     /// Write-ahead ε ledger, shared with ingress admission (which refuses
     /// new work once a dataset's budget is exhausted). `None` = checkpoint
     /// without accounting.
     pub ledger: Option<Arc<EpsLedger>>,
-    /// Directory for per-job checkpoint files (`ckpt-<id>.bin`); must
-    /// exist.
+    /// Directory for per-job checkpoint files, named by durable ledger
+    /// request id — `ckpt-<req>.bin` for cells, `ckpt-<req>-<k>.bin` for
+    /// grid point `k` of a λ-path — never by the per-process result id,
+    /// which a restarted service would reuse. Must exist.
     pub dir: PathBuf,
     /// Checkpoint cadence in solver iterations (0 = only at interruption
     /// stop points).
     pub every_k: usize,
+    /// When `true` (production default), a crashed worker's armed job is
+    /// resubmitted in-process from its latest checkpoints. Restart tests
+    /// set `false` so a kill leaves the on-disk state (checkpoints + WAL)
+    /// exactly as a dead process would, for
+    /// [`super::recovery::RecoveryManager`] to pick up.
+    pub resume_in_process: bool,
 }
 
 /// Load-driven regrowth of quarantined worker slots (§6.11). Quarantine
@@ -178,6 +187,22 @@ pub struct PoolOptions {
 struct Dispatch {
     job: Job,
     enqueued_at: Instant,
+}
+
+/// One durability-armed job parked by the supervisor until every one of
+/// its result ids resolves (§6.11/§6.12). Holds the armed clone for crash
+/// resubmission, plus the per-result checkpoint file and durable request
+/// id — parallel to the job's id range — for resume lookup and GC.
+struct PendingJob {
+    job: Job,
+    /// Checkpoint file per result id (`files[id - base]`).
+    files: Vec<PathBuf>,
+    /// Durable ledger request id per result id.
+    request_ids: Vec<u64>,
+    /// Result ids not yet resolved; the entry is dropped at zero.
+    unresolved: usize,
+    /// In-process recovery already used its one attempt.
+    resumed: bool,
 }
 
 /// What travels back up from the workers.
@@ -271,11 +296,18 @@ pub struct Coordinator {
     /// Outcomes produced without a worker (e.g. submissions after
     /// shutdown → [`JobError::PoolDied`]), merged into the next `drain`.
     local: Vec<(usize, JobOutcome)>,
-    /// §6.11 crash-recovery ledger: durability-armed cell jobs, keyed by
-    /// their result id, kept until the id resolves. A crashed worker's
-    /// owed entry is resubmitted once from its latest checkpoint; removal
-    /// on resubmission is what bounds recovery to one resume attempt.
-    pending: HashMap<usize, Job>,
+    /// §6.11/§6.12 crash-recovery ledger: durability-armed jobs keyed by
+    /// their base result id, kept until every id resolves (completed ids
+    /// GC their checkpoint files as they land). A crashed worker's owed
+    /// job is resubmitted once, whole, from its latest checkpoints; the
+    /// `resumed` flag is what bounds recovery to one in-process attempt.
+    pending: HashMap<usize, PendingJob>,
+    /// Result id → base id of its [`PendingJob`] (a path owes many ids).
+    pending_index: HashMap<usize, usize>,
+    /// Durable request-id source when no ledger is configured: seeded
+    /// lazily from the checkpoint dir's filename high-water mark so a
+    /// restarted process never reuses a dead process's checkpoint names.
+    next_fallback_req: Option<u64>,
     /// When the last regrow event fired (rate limit).
     last_regrow: Option<Instant>,
     /// Monotone id source for regrown workers (original ids stay taken by
@@ -316,6 +348,8 @@ impl Coordinator {
             submitted: 0,
             local: Vec::new(),
             pending: HashMap::new(),
+            pending_index: HashMap::new(),
+            next_fallback_req: None,
             last_regrow: None,
             next_worker_id: n_workers,
         };
@@ -383,29 +417,16 @@ impl Coordinator {
         let n = job.n_results();
         self.metrics.jobs_submitted.fetch_add(n as u64, Ordering::Relaxed);
         self.submitted += n;
-        // ---- §6.11 durability arming (single-cell solves only) ---------
+        // ---- §6.11/§6.12 durability arming ------------------------------
         // The armed clone is parked in `pending` so a crashed worker's
-        // owed id can be resubmitted from its checkpoint.
-        if let Some(dur) = &self.opts.durability {
-            let id = job.result_ids().start;
-            // The ledger file outlives this process, so its idempotency
-            // key cannot be the per-process result id — a restarted
-            // service would reuse a dead process's id and the max-merge
-            // would swallow the new request's charge as a stale replay.
-            // The ledger allocates above its durable high-water mark; with
-            // no ledger nothing is charged and the result id suffices.
-            let request_id = match &dur.ledger {
-                Some(ledger) => ledger.allocate_request_id(),
-                None => id as u64,
-            };
-            let run = Arc::new(RunDurability {
-                request_id,
-                path: dur.dir.join(format!("ckpt-{id}.bin")),
-                ledger: dur.ledger.clone(),
-                every_k: dur.every_k,
-            });
-            if job.arm_durability(run) {
-                self.pending.insert(id, job.clone());
+        // owed job can be resubmitted from its checkpoints.
+        if self.opts.durability.is_some() {
+            if let Some(entry) = self.arm_job(&mut job) {
+                let base = job.result_ids().start;
+                for id in job.result_ids() {
+                    self.pending_index.insert(id, base);
+                }
+                self.pending.insert(base, entry);
             }
         }
         // Gauge up BEFORE the send: the instant the job hits the channel a
@@ -422,10 +443,224 @@ impl Coordinator {
             // outcomes instead of panicking the caller
             self.metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
             for id in d.job.result_ids() {
-                self.pending.remove(&id);
+                self.resolve_pending(id, false);
                 self.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
                 self.local.push((id, Err(JobError::PoolDied)));
             }
+        }
+    }
+
+    /// §6.12 restart-time resubmission: enqueue `job` armed under the
+    /// durable request ids and resume snapshots a
+    /// [`super::recovery::RecoveryManifest`] recovered from a dead
+    /// process's durability dir ([`super::recovery::RecoveredSlot`], one
+    /// per result id in result order — [`RecoveryManifest::slots_for`]
+    /// builds them). Reusing the *original* request ids is what makes
+    /// the rerun exactly-once in ε: every re-charge max-merges into the
+    /// WAL record the dead process already wrote, so the request's total
+    /// stays one run's worth however many times it crashed. Slots with a
+    /// snapshot resume mid-solve (bitwise identical to the uninterrupted
+    /// run); slots without one — crash before the first cadence
+    /// boundary, or a quarantined orphan — rerun fresh, seed-pinned.
+    ///
+    /// Panics if the pool has no durability plane, the slot count
+    /// doesn't match the job's result count, or the job is a prediction
+    /// (stateless; nothing to recover).
+    ///
+    /// [`RecoveryManifest::slots_for`]: super::recovery::RecoveryManifest::slots_for
+    pub fn submit_recovered(
+        &mut self,
+        mut job: Job,
+        slots: &[super::recovery::RecoveredSlot],
+    ) {
+        let n = job.n_results();
+        assert_eq!(slots.len(), n, "one recovered slot per result id");
+        let dur = self
+            .opts
+            .durability
+            .as_ref()
+            .expect("submit_recovered requires a durability-armed pool");
+        let (ledger, dir, every_k) = (dur.ledger.clone(), dur.dir.clone(), dur.every_k);
+        let entry = match &job {
+            Job::Predict(_) => panic!("predictions are stateless; nothing to recover"),
+            Job::Cell(_) => {
+                let slot = &slots[0];
+                let path = dir.join(format!("ckpt-{}.bin", slot.request_id));
+                let run = Arc::new(RunDurability {
+                    request_id: slot.request_id,
+                    path: path.clone(),
+                    ledger,
+                    every_k,
+                    io: IoFaultPlane::none(),
+                });
+                job.arm_durability(run);
+                if let Some(ck) = &slot.resume {
+                    job.set_resume(ck.clone());
+                }
+                PendingJob {
+                    job: job.clone(),
+                    files: vec![path],
+                    request_ids: vec![slot.request_id],
+                    unresolved: 1,
+                    resumed: false,
+                }
+            }
+            Job::Path(_) => {
+                let files: Vec<PathBuf> = slots
+                    .iter()
+                    .enumerate()
+                    .map(|(k, s)| dir.join(format!("ckpt-{}-{k}.bin", s.request_id)))
+                    .collect();
+                let cells = slots
+                    .iter()
+                    .zip(&files)
+                    .map(|(s, f)| {
+                        Arc::new(RunDurability {
+                            request_id: s.request_id,
+                            path: f.clone(),
+                            ledger: ledger.clone(),
+                            every_k,
+                            io: IoFaultPlane::none(),
+                        })
+                    })
+                    .collect();
+                let resumes = slots.iter().map(|s| s.resume.clone()).collect();
+                job.arm_path_durability(Arc::new(PathDurability { cells, resumes }));
+                PendingJob {
+                    job: job.clone(),
+                    files,
+                    request_ids: slots.iter().map(|s| s.request_id).collect(),
+                    unresolved: n,
+                    resumed: false,
+                }
+            }
+        };
+        self.metrics.jobs_submitted.fetch_add(n as u64, Ordering::Relaxed);
+        self.submitted += n;
+        let base = job.result_ids().start;
+        for id in job.result_ids() {
+            self.pending_index.insert(id, base);
+        }
+        self.pending.insert(base, entry);
+        self.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
+        let dispatch = Dispatch { job, enqueued_at: Instant::now() };
+        let undelivered = match &self.job_tx {
+            Some(tx) => tx.send(dispatch).err().map(|e| e.0),
+            None => Some(dispatch),
+        };
+        if let Some(d) = undelivered {
+            self.metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+            for id in d.job.result_ids() {
+                self.resolve_pending(id, false);
+                self.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                self.local.push((id, Err(JobError::PoolDied)));
+            }
+        }
+    }
+
+    /// Arm durability on one job: a durable request id, a
+    /// request-id-named checkpoint file, and a cadence/ledger plan per
+    /// solve — one [`RunDurability`] for a cell, one per grid point
+    /// (via [`PathDurability`]) for a λ-path. Predictions are stateless
+    /// and spend nothing, so they stay unarmed (`None`).
+    fn arm_job(&mut self, job: &mut Job) -> Option<PendingJob> {
+        let n = job.n_results();
+        let dur = self.opts.durability.as_ref().expect("arming requires durability");
+        let (ledger, dir, every_k) = (dur.ledger.clone(), dur.dir.clone(), dur.every_k);
+        match job {
+            Job::Predict(_) => None,
+            Job::Cell(_) => {
+                let req = self.durable_request_id();
+                let path = dir.join(format!("ckpt-{req}.bin"));
+                let run = Arc::new(RunDurability {
+                    request_id: req,
+                    path: path.clone(),
+                    ledger,
+                    every_k,
+                    io: IoFaultPlane::none(),
+                });
+                job.arm_durability(run);
+                Some(PendingJob {
+                    job: job.clone(),
+                    files: vec![path],
+                    request_ids: vec![req],
+                    unresolved: 1,
+                    resumed: false,
+                })
+            }
+            Job::Path(_) => {
+                // One durable request id per grid point: each λ spends its
+                // own ε and checkpoints into its own file, so a crashed
+                // path resumes at its last completed point with the WAL
+                // holding exactly one charge per point.
+                let reqs: Vec<u64> = (0..n).map(|_| self.durable_request_id()).collect();
+                let files: Vec<PathBuf> = reqs
+                    .iter()
+                    .enumerate()
+                    .map(|(k, req)| dir.join(format!("ckpt-{req}-{k}.bin")))
+                    .collect();
+                let cells = reqs
+                    .iter()
+                    .zip(&files)
+                    .map(|(&req, f)| {
+                        Arc::new(RunDurability {
+                            request_id: req,
+                            path: f.clone(),
+                            ledger: ledger.clone(),
+                            every_k,
+                            io: IoFaultPlane::none(),
+                        })
+                    })
+                    .collect();
+                let plan = Arc::new(PathDurability { cells, resumes: vec![None; n] });
+                job.arm_path_durability(plan);
+                Some(PendingJob {
+                    job: job.clone(),
+                    files,
+                    request_ids: reqs,
+                    unresolved: n,
+                    resumed: false,
+                })
+            }
+        }
+    }
+
+    /// The ledger file outlives this process, so the idempotency key (and
+    /// the checkpoint filename) cannot be the per-process result id — a
+    /// restarted service would reuse a dead process's id and the
+    /// max-merge would swallow the new request's charge as a stale
+    /// replay. The ledger allocates above its durable high-water mark;
+    /// with no ledger the checkpoint dir's filename high-water mark
+    /// stands in.
+    fn durable_request_id(&mut self) -> u64 {
+        let dur = self.opts.durability.as_ref().expect("arming requires durability");
+        if let Some(ledger) = &dur.ledger {
+            return ledger.allocate_request_id();
+        }
+        let next = match self.next_fallback_req {
+            Some(n) => n,
+            None => checkpoint_dir_high_water(&dur.dir) + 1,
+        };
+        self.next_fallback_req = Some(next + 1);
+        next
+    }
+
+    /// Resolve one result id against the pending ledger: a completed id
+    /// GCs its checkpoint file (the snapshot exists to survive a crash,
+    /// not to outlive success); a failed id keeps the file on disk for
+    /// restart-time recovery. The entry is dropped once every id
+    /// resolved.
+    fn resolve_pending(&mut self, id: usize, completed: bool) {
+        let Some(base) = self.pending_index.remove(&id) else { return };
+        let Some(entry) = self.pending.get_mut(&base) else { return };
+        if completed {
+            if let Some(f) = entry.files.get(id - base) {
+                let _ = std::fs::remove_file(f);
+            }
+        }
+        entry.unresolved = entry.unresolved.saturating_sub(1);
+        if entry.unresolved == 0 {
+            self.pending.remove(&base);
         }
     }
 
@@ -433,10 +668,24 @@ impl Coordinator {
     /// to completion first; their results remain drainable). Later
     /// submissions resolve as [`JobError::PoolDied`]. Idempotent; `Drop`
     /// calls it.
+    ///
+    /// A graceful shutdown also flushes the ε ledger: under
+    /// [`crate::dp::ledger::FsyncPolicy::Never`]/`EveryN` the tail of the
+    /// WAL may still sit in the page cache, and losing completion records
+    /// on a *clean* exit would make every restart look like a crash.
     pub fn shutdown(&mut self) {
-        self.job_tx.take();
+        let first = self.job_tx.take().is_some();
         for w in self.workers.drain(..) {
             let _ = w.handle.join();
+        }
+        if first {
+            if let Some(ledger) =
+                self.opts.durability.as_ref().and_then(|d| d.ledger.as_ref())
+            {
+                if ledger.sync().is_ok() {
+                    self.metrics.flushes.fetch_add(1, Ordering::Relaxed);
+                }
+            }
         }
     }
 
@@ -456,7 +705,7 @@ impl Coordinator {
             self.maybe_regrow();
             match self.result_rx.recv_timeout(FALLBACK_TICK) {
                 Ok(WorkerEvent::Result(id, outcome)) => {
-                    self.pending.remove(&id);
+                    self.resolve_pending(id, outcome.is_ok());
                     out.push((id, outcome));
                 }
                 Ok(WorkerEvent::Exited { worker_id, epoch, cause }) => {
@@ -497,15 +746,18 @@ impl Coordinator {
                 let owed =
                     slot.inflight.lock().unwrap_or_else(|e| e.into_inner()).take();
                 if let Some(ids) = owed {
-                    for id in ids {
-                        // §6.11: a durability-armed cell gets one resume
-                        // attempt from its latest checkpoint before the id
-                        // is failed the pre-durability way.
-                        if self.try_resume(id) {
-                            continue;
+                    // The owed range is exactly one job's ids (the
+                    // in-flight slot is per-dispatch). §6.11/§6.12: a
+                    // durability-armed job gets one whole-job resume
+                    // attempt from its latest checkpoints — covering every
+                    // owed id at once — before the ids are failed the
+                    // pre-durability way.
+                    if !self.try_resume(ids.start) {
+                        for id in ids {
+                            self.resolve_pending(id, false);
+                            self.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                            out.push((id, Err(JobError::WorkerDied)));
                         }
-                        self.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
-                        out.push((id, Err(JobError::WorkerDied)));
                     }
                 }
                 let strikes = slot.strikes;
@@ -556,30 +808,71 @@ impl Coordinator {
         }
     }
 
-    /// §6.11 crash recovery: if `id` is a durability-armed cell still in
-    /// `pending`, resubmit it — resuming from its latest on-disk
-    /// checkpoint when one exists, from scratch otherwise (a crash before
-    /// the first cadence boundary leaves no file; a seed-pinned fresh run
-    /// is the correct recovery and the ledger's max-merge keeps the
-    /// ε accounting exactly-once either way). Removing the entry from
-    /// `pending` here is what bounds recovery to a single attempt: a
-    /// second crash finds nothing and fails as [`JobError::WorkerDied`].
+    /// §6.11/§6.12 crash recovery: if `id` belongs to a durability-armed
+    /// job still in `pending`, resubmit the whole job — each solve
+    /// resuming from its latest on-disk checkpoint when one exists, from
+    /// scratch otherwise (a crash before the first cadence boundary
+    /// leaves no file; a seed-pinned fresh run is the correct recovery
+    /// and the ledger's max-merge keeps the ε accounting exactly-once
+    /// either way). A λ-path resumes at its last completed grid point:
+    /// already-finished points replay their final snapshots (bitwise
+    /// no-ops), the interrupted point resumes mid-solve, and the
+    /// never-started points run fresh. Setting `resumed` here is what
+    /// bounds recovery to a single in-process attempt: a second crash
+    /// finds the flag set and fails as [`JobError::WorkerDied`]. With
+    /// [`DurabilityOptions::resume_in_process`] off, crashes are left for
+    /// restart-time recovery instead.
     fn try_resume(&mut self, id: usize) -> bool {
-        let Some(mut job) = self.pending.remove(&id) else { return false };
+        if !self.opts.durability.as_ref().is_some_and(|d| d.resume_in_process) {
+            return false;
+        }
         let Some(tx) = self.job_tx.clone() else { return false };
-        let dur = self.opts.durability.as_ref().expect("pending implies durability");
-        let path = dur.dir.join(format!("ckpt-{id}.bin"));
-        if path.exists() {
-            match FwCheckpoint::read_from(&path) {
-                Ok(ck) => {
-                    job.set_resume(Arc::new(ck));
+        let Some(&base) = self.pending_index.get(&id) else { return false };
+        let Some(entry) = self.pending.get_mut(&base) else { return false };
+        if entry.resumed {
+            return false;
+        }
+        entry.resumed = true;
+        let mut job = entry.job.clone();
+        let snapshots: Vec<Option<Arc<FwCheckpoint>>> = entry
+            .files
+            .iter()
+            .map(|path| {
+                if !path.exists() {
+                    return None;
                 }
-                Err(e) => {
-                    // torn/corrupt snapshot: recover from scratch rather
-                    // than refuse recovery (the CRC already dropped it)
-                    eprintln!("[dpfw] checkpoint {path:?} unreadable ({e}); resuming from scratch");
+                match FwCheckpoint::read_from(path) {
+                    Ok(ck) => Some(Arc::new(ck)),
+                    Err(e) => {
+                        // torn/corrupt snapshot: recover from scratch
+                        // rather than refuse recovery (the CRC already
+                        // dropped it)
+                        eprintln!(
+                            "[dpfw] checkpoint {path:?} unreadable ({e}); \
+                             resuming from scratch"
+                        );
+                        None
+                    }
+                }
+            })
+            .collect();
+        match &mut job {
+            Job::Cell(_) => {
+                if let Some(ck) = snapshots.into_iter().next().flatten() {
+                    job.set_resume(ck);
                 }
             }
+            Job::Path(p) => {
+                let cells = p
+                    .cfg
+                    .path_durability
+                    .as_ref()
+                    .map(|plan| plan.cells.clone())
+                    .unwrap_or_default();
+                let plan = Arc::new(PathDurability { cells, resumes: snapshots });
+                job.arm_path_durability(plan);
+            }
+            Job::Predict(_) => return false,
         }
         self.metrics.jobs_resumed.fetch_add(1, Ordering::Relaxed);
         self.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
@@ -629,6 +922,23 @@ impl Drop for Coordinator {
     fn drop(&mut self) {
         self.shutdown();
     }
+}
+
+/// Highest request id named by any `ckpt-<req>[-<k>].bin` file (or stale
+/// `.ckpt-tmp`) in the checkpoint dir; 0 when the dir is empty or
+/// unreadable. The no-ledger request-id fallback seeds from this so a
+/// restarted process allocates above every name a dead process left.
+fn checkpoint_dir_high_water(dir: &std::path::Path) -> u64 {
+    let Ok(entries) = std::fs::read_dir(dir) else { return 0 };
+    entries
+        .flatten()
+        .filter_map(|e| {
+            let name = e.file_name();
+            super::recovery::parse_checkpoint_name(&name.to_string_lossy())
+                .map(|(req, _)| req)
+        })
+        .max()
+        .unwrap_or(0)
 }
 
 fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
@@ -1085,6 +1395,7 @@ mod tests {
                     ledger: None,
                     dir: dir.clone(),
                     every_k: 10,
+                    resume_in_process: true,
                 }),
                 ..Default::default()
             },

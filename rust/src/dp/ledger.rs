@@ -1,5 +1,5 @@
 //! Write-ahead ε ledger — the durable half of the privacy accountant
-//! (DESIGN.md §6.11).
+//! (DESIGN.md §6.11, recovery lifecycle §6.12).
 //!
 //! Everything the serving tier knew about spent budget before this module
 //! lived in process memory: a crash mid-solve lost the record of which
@@ -12,7 +12,7 @@
 //! any crash point the log covers at least every selection an observer
 //! could have seen.
 //!
-//! Three properties carry the crash-safety argument:
+//! Five properties carry the crash-safety argument:
 //!
 //! * **Idempotency by request id (max-merge).** One logical request may be
 //!   recorded many times — at each checkpoint cadence, again at
@@ -25,22 +25,41 @@
 //!   which is post-processing of the already-charged releases — zero
 //!   additional ε.)
 //! * **Torn-tail recovery.** A crash mid-append can leave a partial or
-//!   corrupt final frame. [`EpsLedger::open`] scans frames until the first
-//!   CRC/length failure and truncates the file there — everything before
-//!   the torn frame is intact by construction (frames are fixed-size and
-//!   self-checksummed), and the torn record is at most the one append that
-//!   had not yet been acknowledged.
+//!   corrupt final frame. [`EpsLedger::open`] decodes every fixed-size
+//!   frame slot: the trailing invalid region (a torn or corrupt tail) is
+//!   counted in [`EpsLedger::truncated_frames`] and physically cut back
+//!   to the last valid frame boundary, while a corrupt frame *inside* the
+//!   log (bit rot with valid frames after it) is dropped from the replay
+//!   and counted in [`EpsLedger::rejected_records`] — it stays on disk as
+//!   evidence until the next [`EpsLedger::compact`] rewrites the log.
+//!   Either way a loss is *accounted*, never silent, and a dropped record
+//!   can only under-state spend, never inflate it.
+//! * **Fail-closed writes.** A failed append or fsync (disk full, torn
+//!   write, injected fault) marks the ledger [`EpsLedger::failed`]; from
+//!   then on every append is refused until a fresh `open`. The ingress
+//!   budget gate treats a failed ledger as "cannot meter" and sheds
+//!   private work rather than run it unmetered (DESIGN.md §6.12
+//!   degradation contract). Before failing, the append path restores the
+//!   frame alignment it can (truncating any torn bytes), so a later
+//!   reopen recovers every acknowledged record.
+//! * **Compaction.** The log grows by one frame per cadence checkpoint
+//!   forever; [`EpsLedger::compact`] atomically rewrites it as one
+//!   max-merged frame per request id (tmp + fsync + rename + dir-fsync),
+//!   crash-safe at every kill point, preserving `spent_for_dataset`
+//!   totals and the request-id high-water mark bit-for-bit.
 //! * **Configurable durability.** [`FsyncPolicy`] trades append latency
 //!   against the window of records an OS crash can lose: `Always` fsyncs
 //!   every frame, `EveryN(n)` amortizes, `Never` leaves flushing to the
-//!   OS (process-crash-safe only). `benches/durability.rs` measures the
-//!   sweep.
+//!   OS (process-crash-safe only; the pool fsyncs it on graceful
+//!   shutdown). `benches/durability.rs` measures the sweep.
 
 use std::collections::HashMap;
 use std::fs::{File, OpenOptions};
-use std::io::{Read, Seek, SeekFrom, Write};
+use std::io::{Read, Seek, SeekFrom};
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
+
+use crate::testkit::io_faults::IoFaultPlane;
 
 /// One frame: req(8) + token(8) + planned(4) + released(4) + eps(8) +
 /// crc32(4). Fixed-size so the torn-tail scan is a simple stride.
@@ -125,10 +144,32 @@ impl LedgerRecord {
     }
 }
 
+/// Statistics from one [`EpsLedger::compact`] pass.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CompactionStats {
+    /// Valid frames in the log before the rewrite.
+    pub frames_before: u64,
+    /// Frames after: exactly one max-merged frame per recorded request id.
+    pub frames_after: u64,
+    /// Bytes the rewrite reclaimed (old on-disk length − new length).
+    pub bytes_reclaimed: u64,
+}
+
+/// The sibling scratch file one compaction pass writes before its atomic
+/// rename; a stale one (crash before the rename) is swept at `open`.
+fn compact_tmp_path(path: &Path) -> PathBuf {
+    let name = path
+        .file_name()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "ledger".into());
+    path.with_file_name(format!("{name}.compact-tmp"))
+}
+
 /// Per-request merged state: the maximum-released record seen.
 #[derive(Clone, Copy, Debug)]
 struct ReqState {
     token: u64,
+    planned: u32,
     released: u32,
     eps: f64,
 }
@@ -140,16 +181,22 @@ struct LedgerInner {
     unsynced: u32,
     /// request id → max-merged state.
     requests: HashMap<u64, ReqState>,
-    /// dataset token → Σ over request maxima of eps.
+    /// dataset token → Σ over request maxima of eps. A cache rebuilt
+    /// lazily in *canonical order* (ascending request id): floating-point
+    /// addition is not associative, so summing in the same order the
+    /// compacted log replays in is what makes `spent_for_dataset`
+    /// bit-identical before a compaction, after it, and after any reopen.
     spend: HashMap<u64, f64>,
+    spend_dirty: bool,
     /// valid frames currently on disk (after any tail truncation).
     frames: u64,
-    /// frames dropped by torn-tail truncation at the last `open`.
+    /// frames lost to torn/corrupt-*tail* truncation at the last `open`.
     truncated: u64,
-    /// records refused because their dataset token disagreed with the one
-    /// their request id is already charged against (a malformed or
-    /// cross-wired record — merging it would corrupt both datasets'
-    /// totals, so it is dropped instead).
+    /// records dropped from the replay without truncation: a CRC-corrupt
+    /// frame *inside* the log (valid frames follow it), or a record whose
+    /// dataset token disagrees with the one its request id is already
+    /// charged against (a malformed or cross-wired record — merging it
+    /// would corrupt both datasets' totals).
     rejected: u64,
     /// Next request id this ledger will hand out
     /// ([`EpsLedger::allocate_request_id`]): one past the highest id ever
@@ -157,6 +204,16 @@ struct LedgerInner {
     /// restarted service can never reuse a dead process's id and have its
     /// charge swallowed as a stale replay by the max-merge.
     next_request: u64,
+    /// Current on-disk length in bytes (frame-aligned after open; kept in
+    /// step by appends so a failed write can cut back to the last good
+    /// frame boundary).
+    len: u64,
+    /// Set by any write/fsync failure; every later append is refused
+    /// until a fresh `open` (fail closed — the §6.12 degradation
+    /// contract: the budget gate sheds rather than run unmetered).
+    failed: bool,
+    /// Storage-fault injection hooks (disarmed in production).
+    io: IoFaultPlane,
 }
 
 impl LedgerInner {
@@ -169,11 +226,11 @@ impl LedgerInner {
     }
 
     /// Merge a record into the in-memory view. Max-merge: only a strictly
-    /// larger released count for a known request moves the dataset spend
-    /// (by the eps delta); duplicates and stale replays are no-ops, and a
-    /// record whose token disagrees with the request's recorded dataset
-    /// is rejected outright (applying its delta to a *different* token
-    /// would corrupt both datasets' totals).
+    /// larger released count for a known request moves that request's
+    /// state (and dirties the spend cache); duplicates and stale replays
+    /// are no-ops, and a record whose token disagrees with the request's
+    /// recorded dataset is rejected outright (applying it to a
+    /// *different* token would corrupt both datasets' totals).
     fn merge(&mut self, r: &LedgerRecord) -> bool {
         self.next_request = self.next_request.max(r.request.saturating_add(1));
         match self.requests.get_mut(&r.request) {
@@ -190,19 +247,44 @@ impl LedgerInner {
                 if r.released <= st.released {
                     return false;
                 }
-                let delta = r.eps - st.eps;
+                st.planned = r.planned;
                 st.released = r.released;
                 st.eps = r.eps;
-                *self.spend.entry(r.token).or_insert(0.0) += delta;
+                self.spend_dirty = true;
                 true
             }
             None => {
-                self.requests
-                    .insert(r.request, ReqState { token: r.token, released: r.released, eps: r.eps });
-                *self.spend.entry(r.token).or_insert(0.0) += r.eps;
+                self.requests.insert(
+                    r.request,
+                    ReqState {
+                        token: r.token,
+                        planned: r.planned,
+                        released: r.released,
+                        eps: r.eps,
+                    },
+                );
+                self.spend_dirty = true;
                 true
             }
         }
+    }
+
+    /// Rebuild the per-dataset spend cache in canonical order (ascending
+    /// request id). Deterministic given the merged request map, so every
+    /// path to the same set of maxima — live appends, crash replay,
+    /// compaction + reopen — reports bit-identical totals.
+    fn rebuild_spend(&mut self) {
+        if !self.spend_dirty {
+            return;
+        }
+        self.spend.clear();
+        let mut ids: Vec<u64> = self.requests.keys().copied().collect();
+        ids.sort_unstable();
+        for id in &ids {
+            let st = &self.requests[id];
+            *self.spend.entry(st.token).or_insert(0.0) += st.eps;
+        }
+        self.spend_dirty = false;
     }
 }
 
@@ -216,11 +298,23 @@ pub struct EpsLedger {
 
 impl EpsLedger {
     /// Open (or create) the ledger at `path`, replaying every valid frame
-    /// into the in-memory spend view and truncating a torn tail: the scan
-    /// stops at the first frame whose CRC fails or whose length is short,
-    /// and the file is cut back to the last valid frame boundary.
+    /// into the in-memory spend view. Every fixed-size frame slot is
+    /// decoded: the trailing invalid region (torn or corrupt tail) is
+    /// counted as [`Self::truncated_frames`] and physically cut back to
+    /// the last valid frame boundary; a corrupt frame *inside* the log is
+    /// dropped from the replay, counted as [`Self::rejected_records`],
+    /// and left on disk as evidence. A stale compaction temp file (crash
+    /// before its rename) is swept.
     pub fn open(path: impl AsRef<Path>, policy: FsyncPolicy) -> std::io::Result<Self> {
         let path = path.as_ref().to_path_buf();
+        let tmp = compact_tmp_path(&path);
+        if tmp.exists() {
+            eprintln!(
+                "[dpfw] eps ledger: sweeping stale compaction temp {}",
+                tmp.display()
+            );
+            let _ = std::fs::remove_file(&tmp);
+        }
         let mut file =
             OpenOptions::new().read(true).write(true).create(true).open(&path)?;
         let mut bytes = Vec::new();
@@ -231,28 +325,52 @@ impl EpsLedger {
             unsynced: 0,
             requests: HashMap::new(),
             spend: HashMap::new(),
+            spend_dirty: true,
             frames: 0,
             truncated: 0,
             rejected: 0,
             next_request: 0,
+            len: 0,
+            failed: false,
+            io: IoFaultPlane::none(),
         };
-        let mut off = 0usize;
-        while off + LEDGER_FRAME_LEN <= bytes.len() {
-            match LedgerRecord::decode(&bytes[off..off + LEDGER_FRAME_LEN]) {
+        let n_slots = bytes.len() / LEDGER_FRAME_LEN;
+        let decoded: Vec<Option<LedgerRecord>> = (0..n_slots)
+            .map(|k| {
+                LedgerRecord::decode(&bytes[k * LEDGER_FRAME_LEN..(k + 1) * LEDGER_FRAME_LEN])
+            })
+            .collect();
+        let last_valid_end = decoded
+            .iter()
+            .rposition(|d| d.is_some())
+            .map_or(0, |k| (k + 1) * LEDGER_FRAME_LEN);
+        for (k, d) in decoded.iter().take(last_valid_end / LEDGER_FRAME_LEN).enumerate()
+        {
+            match d {
                 Some(r) => {
-                    inner.merge(&r);
+                    inner.merge(r);
                     inner.frames += 1;
-                    off += LEDGER_FRAME_LEN;
                 }
-                None => break,
+                None => {
+                    // corrupt frame with valid frames after it: bit rot,
+                    // not a torn tail — drop it from the replay (spend can
+                    // only be under-stated, never inflated) and leave the
+                    // bytes in place for forensics / the next compaction
+                    inner.rejected += 1;
+                    eprintln!(
+                        "[dpfw] eps ledger: CRC-corrupt frame at slot {k} inside \
+                         {}; dropped from replay, left on disk",
+                        path.display()
+                    );
+                }
             }
         }
-        if off < bytes.len() {
+        if (last_valid_end) < bytes.len() {
             // torn or corrupt tail: cut back to the last valid boundary
-            inner.truncated =
-                (bytes.len() - off).div_ceil(LEDGER_FRAME_LEN) as u64;
-            inner.file.set_len(off as u64)?;
+            inner.truncated = (bytes.len() - last_valid_end).div_ceil(LEDGER_FRAME_LEN) as u64;
+            inner.file.set_len(last_valid_end as u64)?;
         }
+        inner.len = last_valid_end as u64;
         inner.file.seek(SeekFrom::End(0))?;
         Ok(Self { path, inner: Mutex::new(inner) })
     }
@@ -261,14 +379,22 @@ impl EpsLedger {
     /// into the live view. Write-ahead contract: callers append **before**
     /// releasing the selections the record accounts for. Returns `true`
     /// when the record advanced the merged state (i.e. it was not a
-    /// replayed duplicate).
+    /// replayed duplicate). A write or fsync failure marks the ledger
+    /// [`Self::failed`] — after restoring what frame alignment it can —
+    /// and every later append is refused (fail closed).
     pub fn append(&self, r: LedgerRecord) -> std::io::Result<bool> {
         let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
-        if g.token_conflict(&r) {
+        let inner = &mut *g;
+        if inner.failed {
+            return Err(std::io::Error::other(
+                "eps ledger failed on an earlier write; appends refused (fail closed)",
+            ));
+        }
+        if inner.token_conflict(&r) {
             // refuse before the write: a cross-wired record must corrupt
             // neither the durable log nor the in-memory totals
-            g.rejected += 1;
-            let recorded = g.requests[&r.request].token;
+            inner.rejected += 1;
+            let recorded = inner.requests[&r.request].token;
             eprintln!(
                 "[dpfw] eps ledger: refusing append for request {}: dataset \
                  {:#x} conflicts with recorded {:#x}",
@@ -276,34 +402,173 @@ impl EpsLedger {
             );
             return Ok(false);
         }
-        g.file.write_all(&r.encode())?;
-        g.frames += 1;
-        match g.policy {
-            FsyncPolicy::Always => g.file.sync_data()?,
-            FsyncPolicy::EveryN(n) => {
-                g.unsynced += 1;
-                if g.unsynced >= n.max(1) {
-                    g.file.sync_data()?;
-                    g.unsynced = 0;
-                }
-            }
-            FsyncPolicy::Never => {}
+        if let Err(e) = inner.io.write_all(&mut inner.file, &r.encode()) {
+            // a torn prefix of the frame may have landed: cut back to the
+            // last good boundary so an eventual reopen replays cleanly,
+            // then fail closed regardless of whether the cut succeeded
+            let _ = inner.file.set_len(inner.len);
+            let _ = inner.file.seek(SeekFrom::End(0));
+            inner.failed = true;
+            return Err(e);
         }
-        Ok(g.merge(&r))
+        inner.len += LEDGER_FRAME_LEN as u64;
+        inner.frames += 1;
+        let sync_due = match inner.policy {
+            FsyncPolicy::Always => true,
+            FsyncPolicy::EveryN(n) => {
+                inner.unsynced += 1;
+                inner.unsynced >= n.max(1)
+            }
+            FsyncPolicy::Never => false,
+        };
+        if sync_due {
+            if let Err(e) = inner.io.on_fsync().and_then(|()| inner.file.sync_data()) {
+                // the frame is written but its durability barrier failed;
+                // a dropped page cache could lose it, so no later success
+                // can be trusted — fail closed
+                inner.failed = true;
+                return Err(e);
+            }
+            inner.unsynced = 0;
+        }
+        Ok(inner.merge(&r))
     }
 
-    /// Force everything appended so far to disk regardless of policy.
+    /// Force everything appended so far to disk regardless of policy
+    /// (the graceful-shutdown flush for `Never`/`EveryN`).
     pub fn sync(&self) -> std::io::Result<()> {
         let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
-        g.file.sync_data()?;
-        g.unsynced = 0;
+        let inner = &mut *g;
+        if inner.failed {
+            return Err(std::io::Error::other(
+                "eps ledger failed on an earlier write; nothing further to sync",
+            ));
+        }
+        if let Err(e) = inner.io.on_fsync().and_then(|()| inner.file.sync_data()) {
+            inner.failed = true;
+            return Err(e);
+        }
+        inner.unsynced = 0;
         Ok(())
     }
 
+    /// Atomically rewrite the log as one max-merged frame per request id,
+    /// in ascending request-id order (the canonical spend order, so the
+    /// compacted log replays to bit-identical `spent_for_dataset` totals
+    /// and the same `allocate_request_id` high-water mark).
+    ///
+    /// Crash-safe at every kill point of the tmp + fsync + rename +
+    /// dir-fsync sequence: before the rename the live log is untouched
+    /// (a stale temp is swept at the next `open`); after the rename the
+    /// log *is* the compacted content. The pass drops from disk what the
+    /// replay already dropped from accounting — corrupt mid-log frames
+    /// and token-conflicted records.
+    pub fn compact(&self) -> std::io::Result<CompactionStats> {
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let inner = &mut *g;
+        if inner.failed {
+            return Err(std::io::Error::other(
+                "eps ledger failed on an earlier write; refusing to compact",
+            ));
+        }
+        let frames_before = inner.frames;
+        let bytes_before = inner.len;
+        let mut ids: Vec<u64> = inner.requests.keys().copied().collect();
+        ids.sort_unstable();
+        let mut buf = Vec::with_capacity(ids.len() * LEDGER_FRAME_LEN);
+        for id in &ids {
+            let st = &inner.requests[id];
+            buf.extend_from_slice(
+                &LedgerRecord {
+                    request: *id,
+                    token: st.token,
+                    planned: st.planned,
+                    released: st.released,
+                    eps: st.eps,
+                }
+                .encode(),
+            );
+        }
+        let tmp = compact_tmp_path(&self.path);
+        // phase 1: materialize + fsync the replacement beside the live log
+        let write_tmp = (|| -> std::io::Result<()> {
+            let mut f = OpenOptions::new()
+                .write(true)
+                .create(true)
+                .truncate(true)
+                .open(&tmp)?;
+            inner.io.write_all(&mut f, &buf)?;
+            inner.io.on_fsync()?;
+            f.sync_all()
+        })();
+        if let Err(e) = write_tmp {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e); // live log untouched: the ledger stays healthy
+        }
+        // phase 2: the commit point
+        if let Err(e) = inner.io.before_rename() {
+            // "died before the rename": the finished temp survives on
+            // disk for the next open() to sweep; the live log is intact
+            return Err(e);
+        }
+        if let Err(e) = std::fs::rename(&tmp, &self.path) {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e);
+        }
+        // the rename unlinked the inode our old handle points at: swap in
+        // a handle on the new file before anything else can append
+        let nf = OpenOptions::new().read(true).write(true).open(&self.path);
+        let mut nf = match nf {
+            Ok(f) => f,
+            Err(e) => {
+                // the on-disk log is the (correct) compacted one, but this
+                // process can no longer reach it: fail closed
+                inner.failed = true;
+                return Err(e);
+            }
+        };
+        if let Err(e) = nf.seek(SeekFrom::End(0)) {
+            inner.failed = true;
+            return Err(e);
+        }
+        inner.file = nf;
+        inner.frames = ids.len() as u64;
+        inner.len = buf.len() as u64;
+        inner.unsynced = 0;
+        // phase 3: post-commit. An injected crash-after-rename dies here,
+        // which is safe — the rename is the correctness boundary; the dir
+        // fsync below only makes the *name change* power-loss durable.
+        inner.io.after_rename()?;
+        if let Some(dir) = self.path.parent() {
+            if let Ok(d) = File::open(dir) {
+                let _ = d.sync_all();
+            }
+        }
+        Ok(CompactionStats {
+            frames_before,
+            frames_after: ids.len() as u64,
+            bytes_reclaimed: bytes_before.saturating_sub(buf.len() as u64),
+        })
+    }
+
+    /// Has a write/fsync failure put this ledger in the fail-closed state
+    /// (appends refused until a fresh `open`)?
+    pub fn failed(&self) -> bool {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).failed
+    }
+
+    /// Arm storage-fault injection on this ledger's write/fsync/rename
+    /// paths (tests and benches; production ledgers stay disarmed).
+    pub fn arm_io_faults(&self, plane: IoFaultPlane) {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).io = plane;
+    }
+
     /// Cumulative ε charged against a dataset token: the sum over request
-    /// ids of each request's maximum recorded spend.
+    /// ids (ascending — the canonical order) of each request's maximum
+    /// recorded spend.
     pub fn spent_for_dataset(&self, token: u64) -> f64 {
-        let g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        g.rebuild_spend();
         g.spend.get(&token).copied().unwrap_or(0.0)
     }
 
@@ -313,19 +578,30 @@ impl EpsLedger {
         g.requests.get(&request).map(|st| (st.released, st.eps))
     }
 
+    /// The dataset token a request id's spend is recorded against, if
+    /// any. Restart-time recovery cross-checks an orphaned checkpoint's
+    /// `dataset_fp` against this before trusting the snapshot: a
+    /// disagreement means the file cannot belong to the WAL's request.
+    pub fn token_for_request(&self, request: u64) -> Option<u64> {
+        let g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        g.requests.get(&request).map(|st| st.token)
+    }
+
     /// Valid frames currently in the log (appends since open included).
     pub fn frames(&self) -> u64 {
         self.inner.lock().unwrap_or_else(|e| e.into_inner()).frames
     }
 
-    /// Frames discarded by torn-tail truncation at the last `open`.
+    /// Frames discarded by torn/corrupt-tail truncation at the last
+    /// `open`.
     pub fn truncated_frames(&self) -> u64 {
         self.inner.lock().unwrap_or_else(|e| e.into_inner()).truncated
     }
 
-    /// Records refused because their dataset token conflicted with the
-    /// one their request id is already recorded against (replay + appends
-    /// since open).
+    /// Records dropped without truncation: CRC-corrupt frames inside the
+    /// log (at the last `open`) plus records whose dataset token
+    /// conflicted with the one their request id is already recorded
+    /// against (replay + appends since open).
     pub fn rejected_records(&self) -> u64 {
         self.inner.lock().unwrap_or_else(|e| e.into_inner()).rejected
     }
@@ -356,11 +632,14 @@ impl EpsLedger {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::testkit::io_faults::{IoFaultKind, IoFaultPlane};
+    use std::io::Write;
 
     fn tmp(name: &str) -> PathBuf {
         let p = std::env::temp_dir()
             .join(format!("dpfw-ledger-{}-{}", std::process::id(), name));
         let _ = std::fs::remove_file(&p);
+        let _ = std::fs::remove_file(compact_tmp_path(&p));
         p
     }
 
@@ -400,7 +679,7 @@ mod tests {
         let p = tmp("max-merge");
         let l = EpsLedger::open(&p, FsyncPolicy::Never).unwrap();
         assert!(l.append(rec(1, 7, 10, 0.1)).unwrap());
-        // progress record: only the delta moves the dataset spend
+        // progress record: the request's maximum moves the dataset spend
         assert!(l.append(rec(1, 7, 30, 0.25)).unwrap());
         assert!((l.spent_for_dataset(7) - 0.25).abs() < 1e-12);
         // exact replay and stale replay are both no-ops
@@ -459,6 +738,42 @@ mod tests {
         assert!(l.append(rec(2, 7, 20, 0.2)).unwrap());
         assert!(!l.append(rec(2, 7, 20, 0.2)).unwrap());
         assert!((l.spent_for_dataset(7) - 0.3).abs() < 1e-12);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn corrupt_frame_inside_the_log_is_rejected_not_truncated() {
+        let p = tmp("corrupt-mid");
+        {
+            let l = EpsLedger::open(&p, FsyncPolicy::Always).unwrap();
+            l.append(rec(1, 7, 10, 0.1)).unwrap();
+            l.append(rec(2, 7, 20, 0.2)).unwrap();
+            l.append(rec(3, 8, 5, 0.05)).unwrap();
+        }
+        // bit rot in the FIRST frame — valid frames follow it
+        {
+            let mut bytes = std::fs::read(&p).unwrap();
+            bytes[5] ^= 0xFF;
+            std::fs::write(&p, &bytes).unwrap();
+        }
+        let l = EpsLedger::open(&p, FsyncPolicy::Always).unwrap();
+        assert_eq!(l.frames(), 2, "the two valid frames replay");
+        assert_eq!(l.rejected_records(), 1, "the rotten frame is accounted");
+        assert_eq!(l.truncated_frames(), 0, "no tail was cut");
+        // the loss only ever under-states spend
+        assert!((l.spent_for_dataset(7) - 0.2).abs() < 1e-12);
+        assert_eq!(l.spent_for_request(1), None);
+        // the rotten bytes stay on disk as evidence until compaction
+        assert_eq!(
+            std::fs::metadata(&p).unwrap().len(),
+            3 * LEDGER_FRAME_LEN as u64
+        );
+        l.compact().unwrap();
+        drop(l);
+        let l = EpsLedger::open(&p, FsyncPolicy::Always).unwrap();
+        assert_eq!(l.rejected_records(), 0, "compaction rewrote the log clean");
+        assert_eq!(l.frames(), 2);
+        assert!((l.spent_for_dataset(7) - 0.2).abs() < 1e-12);
         let _ = std::fs::remove_file(&p);
     }
 
@@ -535,5 +850,256 @@ mod tests {
             assert!((l.spent_for_dataset(7) - 0.1).abs() < 1e-9);
             let _ = std::fs::remove_file(&p);
         }
+    }
+
+    // ---- §6.12: compaction --------------------------------------------
+
+    /// Fill a log with cadence-style replays (many frames per request)
+    /// plus one cross-dataset request, and return the ledger.
+    fn populated(p: &Path) -> EpsLedger {
+        let l = EpsLedger::open(p, FsyncPolicy::Always).unwrap();
+        for req in 0..6u64 {
+            for step in 1..=5u32 {
+                let released = step * 10;
+                l.append(rec(req, 7 + req % 2, released, released as f64 * 1e-3))
+                    .unwrap();
+            }
+        }
+        l
+    }
+
+    #[test]
+    fn compaction_preserves_totals_and_high_water_bit_exactly() {
+        let p = tmp("compact-exact");
+        let l = populated(&p);
+        let before7 = l.spent_for_dataset(7);
+        let before8 = l.spent_for_dataset(8);
+        let req3 = l.spent_for_request(3).unwrap();
+        let stats = l.compact().unwrap();
+        assert_eq!(stats.frames_before, 30);
+        assert_eq!(stats.frames_after, 6, "one frame per request id");
+        assert_eq!(stats.bytes_reclaimed, 24 * LEDGER_FRAME_LEN as u64);
+        // live view after the rewrite: identical bits
+        assert_eq!(l.spent_for_dataset(7).to_bits(), before7.to_bits());
+        assert_eq!(l.spent_for_dataset(8).to_bits(), before8.to_bits());
+        assert_eq!(l.frames(), 6);
+        // the compacted log replays to the same state
+        drop(l);
+        let l = EpsLedger::open(&p, FsyncPolicy::Always).unwrap();
+        assert_eq!(l.frames(), 6);
+        assert_eq!(l.truncated_frames(), 0);
+        assert_eq!(l.spent_for_dataset(7).to_bits(), before7.to_bits());
+        assert_eq!(l.spent_for_dataset(8).to_bits(), before8.to_bits());
+        let after3 = l.spent_for_request(3).unwrap();
+        assert_eq!(after3.0, req3.0);
+        assert_eq!(after3.1.to_bits(), req3.1.to_bits());
+        assert_eq!(l.allocate_request_id(), 6, "high-water mark preserved");
+        // appends keep flowing after a compaction (handle swap worked)
+        assert!(l.append(rec(6, 7, 10, 0.01)).unwrap());
+        drop(l);
+        let l = EpsLedger::open(&p, FsyncPolicy::Always).unwrap();
+        assert_eq!(l.frames(), 7);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn compaction_survives_every_injected_kill_point() {
+        use IoFaultKind::*;
+        for (name, kind) in [
+            ("short-write", ShortWrite),
+            ("fsync", FsyncFail),
+            ("enospc", Enospc),
+            ("pre-rename", CrashBeforeRename),
+            ("post-rename", CrashAfterRename),
+        ] {
+            let p = tmp(&format!("compact-kill-{name}"));
+            let l = populated(&p);
+            let want7 = l.spent_for_dataset(7);
+            let want8 = l.spent_for_dataset(8);
+            l.arm_io_faults(IoFaultPlane::once(kind));
+            let res = l.compact();
+            assert!(res.is_err(), "{name}: injected fault must surface");
+            // "the process died here": reopen the same path cold
+            drop(l);
+            let l = EpsLedger::open(&p, FsyncPolicy::Always).unwrap();
+            assert_eq!(
+                l.spent_for_dataset(7).to_bits(),
+                want7.to_bits(),
+                "{name}: dataset-7 total must survive the kill"
+            );
+            assert_eq!(l.spent_for_dataset(8).to_bits(), want8.to_bits(), "{name}");
+            assert_eq!(l.truncated_frames(), 0, "{name}: no torn tail");
+            assert_eq!(l.allocate_request_id(), 6, "{name}: high-water mark");
+            assert!(
+                !compact_tmp_path(&p).exists(),
+                "{name}: open() sweeps any stale compaction temp"
+            );
+            // post-rename kills committed the rewrite; the others left the
+            // original log — either way the retry compacts cleanly
+            let stats = l.compact().unwrap();
+            assert_eq!(stats.frames_after, 6, "{name}");
+            drop(l);
+            let l = EpsLedger::open(&p, FsyncPolicy::Always).unwrap();
+            assert_eq!(l.spent_for_dataset(7).to_bits(), want7.to_bits(), "{name}");
+            let _ = std::fs::remove_file(&p);
+        }
+    }
+
+    // ---- §6.12: fuzz-style torn/corrupt logs --------------------------
+    //
+    // The two structured recovery tests above pick one representative
+    // tear each; these sweep the whole space — every byte offset a crash
+    // could shear the file at, every bit a disk could flip — and hold the
+    // recovery invariants at each point: reopen never panics, spend is
+    // never inflated, and every lost record shows up in
+    // `truncated_frames` or `rejected_records`.
+
+    /// Five distinct requests on one dataset, eps (k+1)·0.01 each.
+    fn fuzz_base(p: &Path) -> Vec<u8> {
+        {
+            let l = EpsLedger::open(p, FsyncPolicy::Always).unwrap();
+            for k in 0..5u64 {
+                l.append(rec(k, 7, 10 * (k as u32 + 1), (k as f64 + 1.0) * 0.01))
+                    .unwrap();
+            }
+        }
+        std::fs::read(p).unwrap()
+    }
+
+    /// The ledger's canonical spend fold (ascending request id), over the
+    /// first `m` fuzz records with `skip` (if any) removed — the
+    /// bit-exact expectation for a partially surviving log.
+    fn fuzz_expected(m: usize, skip: Option<usize>) -> f64 {
+        (0..m)
+            .filter(|k| Some(*k) != skip)
+            .fold(0.0f64, |acc, k| acc + (k as f64 + 1.0) * 0.01)
+    }
+
+    #[test]
+    fn truncation_at_every_byte_offset_recovers_accounted_and_uninflated() {
+        let p = tmp("fuzz-truncate-base");
+        let bytes = fuzz_base(&p);
+        assert_eq!(bytes.len(), 5 * LEDGER_FRAME_LEN);
+        let scratch = tmp("fuzz-truncate");
+        for cut in 0..=bytes.len() {
+            std::fs::write(&scratch, &bytes[..cut]).unwrap();
+            let l = EpsLedger::open(&scratch, FsyncPolicy::Always).unwrap();
+            let whole = cut / LEDGER_FRAME_LEN;
+            let shorn = cut % LEDGER_FRAME_LEN;
+            assert_eq!(l.frames(), whole as u64, "cut={cut}");
+            assert_eq!(
+                l.truncated_frames(),
+                (shorn > 0) as u64,
+                "cut={cut}: every torn byte is accounted"
+            );
+            assert_eq!(l.rejected_records(), 0, "cut={cut}");
+            assert_eq!(
+                l.spent_for_dataset(7).to_bits(),
+                fuzz_expected(whole, None).to_bits(),
+                "cut={cut}: exactly the surviving prefix, nothing inflated"
+            );
+            assert_eq!(
+                l.allocate_request_id(),
+                whole as u64,
+                "cut={cut}: high-water mark follows the survivors"
+            );
+            // physical recovery: the same file reopens clean
+            drop(l);
+            let l = EpsLedger::open(&scratch, FsyncPolicy::Always).unwrap();
+            assert_eq!(l.truncated_frames(), 0, "cut={cut}: tail was cut back");
+            assert_eq!(l.frames(), whole as u64, "cut={cut}");
+        }
+        let _ = std::fs::remove_file(&p);
+        let _ = std::fs::remove_file(&scratch);
+    }
+
+    #[test]
+    fn single_bit_flips_anywhere_never_panic_and_never_inflate_spend() {
+        let p = tmp("fuzz-bitflip-base");
+        let bytes = fuzz_base(&p);
+        let full = fuzz_expected(5, None);
+        let scratch = tmp("fuzz-bitflip");
+        for byte in 0..bytes.len() {
+            for bit in 0..8 {
+                let mut mutated = bytes.clone();
+                mutated[byte] ^= 1u8 << bit;
+                std::fs::write(&scratch, &mutated).unwrap();
+                let l = EpsLedger::open(&scratch, FsyncPolicy::Always).unwrap();
+                let ctx = format!("byte={byte} bit={bit}");
+                // CRC-32 detects every single-bit error, so exactly the
+                // flipped frame drops: as a truncated tail when it is the
+                // last frame, as a rejected mid-log record otherwise.
+                let slot = byte / LEDGER_FRAME_LEN;
+                assert_eq!(l.frames(), 4, "{ctx}");
+                assert_eq!(
+                    l.truncated_frames() + l.rejected_records(),
+                    1,
+                    "{ctx}: the loss is accounted"
+                );
+                assert_eq!(l.truncated_frames(), (slot == 4) as u64, "{ctx}");
+                let spent = l.spent_for_dataset(7);
+                assert!(spent < full, "{ctx}: a loss may only under-state spend");
+                assert_eq!(
+                    spent.to_bits(),
+                    fuzz_expected(5, Some(slot)).to_bits(),
+                    "{ctx}: survivors replay bit-exactly"
+                );
+                assert_eq!(l.spent_for_request(slot as u64), None, "{ctx}");
+                // the ledger stays writable: re-charging the lost request
+                // lands exactly once
+                let lost = rec(slot as u64, 7, 10 * (slot as u32 + 1), (slot as f64 + 1.0) * 0.01);
+                assert!(l.append(lost).unwrap(), "{ctx}");
+                assert_eq!(l.spent_for_dataset(7).to_bits(), full.to_bits(), "{ctx}");
+            }
+        }
+        let _ = std::fs::remove_file(&p);
+        let _ = std::fs::remove_file(&scratch);
+    }
+
+    // ---- §6.12: fail-closed writes ------------------------------------
+
+    #[test]
+    fn write_failure_fails_closed_and_restores_alignment() {
+        for kind in [IoFaultKind::ShortWrite, IoFaultKind::Enospc] {
+            let p = tmp(&format!("fail-closed-{kind:?}"));
+            let l = EpsLedger::open(&p, FsyncPolicy::Always).unwrap();
+            l.append(rec(1, 7, 10, 0.1)).unwrap();
+            l.arm_io_faults(IoFaultPlane::once(kind));
+            assert!(!l.failed());
+            l.append(rec(2, 7, 20, 0.2)).unwrap_err();
+            assert!(l.failed(), "{kind:?}: failure latches");
+            // fail closed: even though the fault budget is spent, the
+            // ledger refuses to meter anything further
+            l.append(rec(3, 7, 30, 0.3)).unwrap_err();
+            l.sync().unwrap_err();
+            l.compact().unwrap_err();
+            // the failed append never reached the merged view
+            assert_eq!(l.spent_for_request(2), None);
+            assert!((l.spent_for_dataset(7) - 0.1).abs() < 1e-12);
+            drop(l);
+            // the torn prefix was cut: a reopen replays only whole,
+            // acknowledged frames
+            let l = EpsLedger::open(&p, FsyncPolicy::Always).unwrap();
+            assert!(!l.failed(), "a fresh open starts healthy");
+            assert_eq!(l.frames(), 1);
+            assert_eq!(l.truncated_frames(), 0, "{kind:?}: alignment restored");
+            assert!((l.spent_for_dataset(7) - 0.1).abs() < 1e-12);
+            assert!(l.append(rec(2, 7, 20, 0.2)).unwrap());
+            let _ = std::fs::remove_file(&p);
+        }
+    }
+
+    #[test]
+    fn fsync_failure_fails_closed() {
+        let p = tmp("fsync-fails-closed");
+        let l = EpsLedger::open(&p, FsyncPolicy::Always).unwrap();
+        l.arm_io_faults(IoFaultPlane::once(IoFaultKind::FsyncFail));
+        l.append(rec(1, 7, 10, 0.1)).unwrap_err();
+        assert!(l.failed());
+        l.append(rec(2, 7, 10, 0.1)).unwrap_err();
+        // the frame itself reached the file before the barrier failed, so
+        // a reopen may legitimately see it — what matters is that the
+        // failed ledger stopped accepting new spend
+        let _ = std::fs::remove_file(&p);
     }
 }

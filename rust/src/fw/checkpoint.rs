@@ -46,7 +46,7 @@
 //! motivating — use of resume.
 
 use std::fs::{File, OpenOptions};
-use std::io::{self, Read, Write};
+use std::io::{self, Read};
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
@@ -56,6 +56,7 @@ use crate::fw::flops::FlopCounter;
 use crate::fw::queue::{CoordinateSelector, SelectorStats};
 use crate::fw::trace::TraceRecord;
 use crate::rng::Xoshiro256pp;
+use crate::testkit::io_faults::IoFaultPlane;
 
 /// On-disk magic for a checkpoint frame.
 pub const CKPT_MAGIC: [u8; 8] = *b"DPFWCKPT";
@@ -384,15 +385,31 @@ impl FwCheckpoint {
     /// point leaves either the old snapshot or the new one, never a torn
     /// mix. Best-effort directory sync after the rename.
     pub fn write_to(&self, path: impl AsRef<Path>) -> io::Result<()> {
+        self.write_to_with(path, &IoFaultPlane::none())
+    }
+
+    /// [`Self::write_to`] with every write/fsync/rename threaded through a
+    /// storage-fault plane (DESIGN.md §6.12). On failure the sibling
+    /// `.ckpt-tmp` file is deliberately left on disk — that is exactly
+    /// what a process dying at that point leaves behind, and the
+    /// restart-time recovery scan quarantines it.
+    pub fn write_to_with(
+        &self,
+        path: impl AsRef<Path>,
+        io_faults: &IoFaultPlane,
+    ) -> io::Result<()> {
         let path = path.as_ref();
         let tmp = path.with_extension("ckpt-tmp");
         {
             let mut f =
                 OpenOptions::new().write(true).create(true).truncate(true).open(&tmp)?;
-            f.write_all(&self.encode())?;
+            io_faults.write_all(&mut f, &self.encode())?;
+            io_faults.on_fsync()?;
             f.sync_all()?;
         }
+        io_faults.before_rename()?;
         std::fs::rename(&tmp, path)?;
+        io_faults.after_rename()?;
         if let Some(dir) = path.parent() {
             if let Ok(d) = File::open(dir) {
                 let _ = d.sync_all();
@@ -430,6 +447,9 @@ pub struct RunDurability {
     /// Checkpoint every `every_k` completed iterations (0 = only at stop
     /// points).
     pub every_k: usize,
+    /// Storage-fault injection for this run's checkpoint writes
+    /// (disarmed in production; DESIGN.md §6.12).
+    pub io: IoFaultPlane,
 }
 
 impl RunDurability {
@@ -443,7 +463,7 @@ impl RunDurability {
     /// cannot checkpoint is misconfigured, and silently continuing would
     /// void the resume contract the caller thinks it has.
     pub fn persist(&self, ck: &FwCheckpoint) {
-        ck.write_to(&self.path)
+        ck.write_to_with(&self.path, &self.io)
             .unwrap_or_else(|e| panic!("checkpoint write to {:?} failed: {e}", self.path));
     }
 
@@ -464,6 +484,34 @@ impl RunDurability {
                 })
                 .unwrap_or_else(|e| panic!("eps ledger append failed: {e}"));
         }
+    }
+}
+
+/// Per-grid-point durability plan for one λ-path job (DESIGN.md §6.12),
+/// carried by [`FwConfig::path_durability`]. Built by the scheduler when
+/// a durability-armed pool admits a `PathJob`: each grid point gets its
+/// own [`RunDurability`] — a durable ledger request id of its own and a
+/// `ckpt-<req>-<k>.bin` snapshot file — plus an optional per-cell resume
+/// snapshot, so a crashed path restarts at its last completed λ instead
+/// of from λ₀, and every cell's ε spend is metered exactly once.
+#[derive(Clone, Debug, Default)]
+pub struct PathDurability {
+    /// One durability arm per λ, in `PathJob::lambdas` order.
+    pub cells: Vec<Arc<RunDurability>>,
+    /// Per-λ resume snapshots (`None` starts that cell fresh); same
+    /// length and order as `cells`.
+    pub resumes: Vec<Option<Arc<FwCheckpoint>>>,
+}
+
+impl PathDurability {
+    /// The durability arm for grid point `k`, if the plan covers it.
+    pub fn cell(&self, k: usize) -> Option<&Arc<RunDurability>> {
+        self.cells.get(k)
+    }
+
+    /// The resume snapshot for grid point `k`, if any.
+    pub fn resume(&self, k: usize) -> Option<Arc<FwCheckpoint>> {
+        self.resumes.get(k).and_then(|r| r.clone())
     }
 }
 
@@ -594,6 +642,7 @@ mod tests {
             path: PathBuf::from("/tmp/x"),
             ledger: None,
             every_k: 4,
+            io: IoFaultPlane::none(),
         };
         assert!(!d.should_checkpoint(1));
         assert!(d.should_checkpoint(4));

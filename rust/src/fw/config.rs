@@ -4,7 +4,7 @@ use std::sync::Arc;
 
 use crate::dp::accounting::PrivacyParams;
 use crate::fw::cancel::{CancelToken, StopReason};
-use crate::fw::checkpoint::{FwCheckpoint, RunDurability};
+use crate::fw::checkpoint::{FwCheckpoint, PathDurability, RunDurability};
 use crate::fw::scan::ScanKernel;
 use crate::testkit::faults::FaultPlan;
 
@@ -151,6 +151,13 @@ pub struct FwConfig {
     /// continues — bitwise identical to the uninterrupted run. `None`
     /// (the default) runs from scratch.
     pub resume: Option<Arc<FwCheckpoint>>,
+    /// λ-path durability plan (DESIGN.md §6.12): when armed on a path
+    /// job's config, `PathJob::run_in` gives each grid point its own
+    /// [`RunDurability`] (durable request id, `ckpt-<req>-<k>.bin`
+    /// snapshot) and per-cell resume, so a crashed path restarts at its
+    /// last completed λ with exactly-once ε accounting. Ignored by
+    /// single-cell solves; `None` (the default) runs the path unarmed.
+    pub path_durability: Option<Arc<PathDurability>>,
 }
 
 /// Process-wide `DPFW_SHARDS` resolution (read once; same pattern as
@@ -185,6 +192,7 @@ impl Default for FwConfig {
             iter_cap: None,
             durability: None,
             resume: None,
+            path_durability: None,
         }
     }
 }

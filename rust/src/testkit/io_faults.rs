@@ -1,0 +1,255 @@
+//! Disk-fault injection for the durability plane (DESIGN.md §6.12).
+//!
+//! [`FaultPlan`](super::faults::FaultPlan) kills *computation* at chosen
+//! iterations; [`IoFaultPlane`] kills *storage* at chosen syscalls. The
+//! ε ledger ([`crate::dp::ledger::EpsLedger`]) and the checkpoint writer
+//! ([`crate::fw::checkpoint`]) thread every write, fsync, and rename
+//! through an (optionally armed) plane, so tests can hold the durable
+//! plane's invariants under a hostile disk:
+//!
+//! * [`IoFaultKind::ShortWrite`] — only a prefix of the buffer reaches
+//!   the file before the write errors (a torn append: the bytes that
+//!   landed must be recovered or truncated, never trusted).
+//! * [`IoFaultKind::FsyncFail`] — the data may be in the page cache but
+//!   the durability barrier itself failed; after fsync fails once, no
+//!   later success may be trusted (the kernel may have dropped the dirty
+//!   pages), so the consumers here fail closed permanently.
+//! * [`IoFaultKind::Enospc`] — the disk is full before a single byte
+//!   lands (`ENOSPC`, raw OS error 28).
+//! * [`IoFaultKind::CrashBeforeRename`] / [`CrashAfterRename`] — the
+//!   process dies around the atomic-rename commit point of a
+//!   tmp+fsync+rename sequence; the survivor must see either the old
+//!   state (before) or the new state (after), never a blend.
+//!
+//! The plane mirrors `FaultPlan`'s shape: disarmed by default (one
+//! `Option` discriminant test per hook), a firing budget shared across
+//! clones so a retried operation deterministically succeeds, and
+//! kind-scoped hooks that never cross-trigger.
+//!
+//! **Degradation contract** (DESIGN.md §6.12): when a ledger write fails
+//! under this plane — or for real — the ledger marks itself failed and
+//! the ingress budget gate *fails closed*: private work against a
+//! budgeted dataset is shed, never run unmetered.
+
+use std::io::{self, Write};
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+
+/// Which storage syscall to break, and how.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IoFaultKind {
+    /// The next guarded write persists only the first half of its buffer,
+    /// then errors — a torn frame on disk.
+    ShortWrite,
+    /// The next guarded fsync reports failure (data possibly lost in the
+    /// page cache).
+    FsyncFail,
+    /// The next guarded write fails with `ENOSPC` before any byte lands.
+    Enospc,
+    /// Abort a tmp+fsync+rename commit just *before* the rename: the tmp
+    /// file is complete on disk but the target was never replaced.
+    CrashBeforeRename,
+    /// Abort just *after* the rename committed: the target is the new
+    /// content, but post-commit bookkeeping (dir fsync, in-memory swap)
+    /// never ran in the dying process.
+    CrashAfterRename,
+}
+
+#[derive(Debug)]
+struct IoFaultInner {
+    kind: IoFaultKind,
+    /// Firings before the plane disarms itself.
+    times: u32,
+    /// Shared across clones, so a reopened/retried consumer sees the
+    /// spent budget and runs clean.
+    fired: AtomicU32,
+}
+
+impl IoFaultInner {
+    fn fire(&self) -> bool {
+        self.fired
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| {
+                (n < self.times).then_some(n + 1)
+            })
+            .is_ok()
+    }
+}
+
+/// A deterministic storage-fault plane; the default plane is disarmed and
+/// passes every operation through untouched.
+#[derive(Clone, Debug, Default)]
+pub struct IoFaultPlane {
+    inner: Option<Arc<IoFaultInner>>,
+}
+
+impl IoFaultPlane {
+    /// The disarmed plane (what every production ledger/checkpoint runs
+    /// with).
+    pub fn none() -> Self {
+        Self { inner: None }
+    }
+
+    /// Arm `kind` to fire exactly once.
+    pub fn once(kind: IoFaultKind) -> Self {
+        Self::times(kind, 1)
+    }
+
+    /// Arm `kind` to fire on the first `times` opportunities, then disarm.
+    pub fn times(kind: IoFaultKind, times: u32) -> Self {
+        Self {
+            inner: Some(Arc::new(IoFaultInner {
+                kind,
+                times,
+                fired: AtomicU32::new(0),
+            })),
+        }
+    }
+
+    pub fn is_armed(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// How many times this plane has fired (across all clones).
+    pub fn firings(&self) -> u32 {
+        self.inner.as_deref().map_or(0, |i| i.fired.load(Ordering::SeqCst))
+    }
+
+    /// Guarded `write_all`: injects [`IoFaultKind::Enospc`] (no byte
+    /// lands) or [`IoFaultKind::ShortWrite`] (half the buffer lands, then
+    /// the error) when armed; otherwise a plain `write_all`.
+    pub fn write_all(&self, w: &mut impl Write, buf: &[u8]) -> io::Result<()> {
+        if let Some(inner) = self.inner.as_deref() {
+            match inner.kind {
+                IoFaultKind::Enospc if inner.fire() => {
+                    // ENOSPC before any byte reaches the file
+                    return Err(io::Error::from_raw_os_error(28));
+                }
+                IoFaultKind::ShortWrite if inner.fire() => {
+                    w.write_all(&buf[..buf.len() / 2])?;
+                    return Err(io::Error::new(
+                        io::ErrorKind::WriteZero,
+                        "injected short write (torn frame)",
+                    ));
+                }
+                _ => {}
+            }
+        }
+        w.write_all(buf)
+    }
+
+    /// Guarded fsync barrier: callers invoke this *before* the real
+    /// `sync_data`/`sync_all`; an injected [`IoFaultKind::FsyncFail`]
+    /// stands in for the kernel reporting the barrier failed.
+    pub fn on_fsync(&self) -> io::Result<()> {
+        match self.inner.as_deref() {
+            Some(inner) if inner.kind == IoFaultKind::FsyncFail && inner.fire() => {
+                Err(io::Error::other("injected fsync failure"))
+            }
+            _ => Ok(()),
+        }
+    }
+
+    /// Commit-point hook, called immediately before the `rename` of a
+    /// tmp+fsync+rename sequence. An error simulates the process dying
+    /// here: the caller must abandon the commit with the tmp file left on
+    /// disk (a restarted process cleans it up).
+    pub fn before_rename(&self) -> io::Result<()> {
+        match self.inner.as_deref() {
+            Some(inner)
+                if inner.kind == IoFaultKind::CrashBeforeRename && inner.fire() =>
+            {
+                Err(io::Error::other("injected crash before rename"))
+            }
+            _ => Ok(()),
+        }
+    }
+
+    /// Commit-point hook, called immediately after the `rename`
+    /// committed. An error simulates the process dying here: the rename
+    /// is durable (the target *is* the new content) but nothing after it
+    /// ran in the dying process.
+    pub fn after_rename(&self) -> io::Result<()> {
+        match self.inner.as_deref() {
+            Some(inner)
+                if inner.kind == IoFaultKind::CrashAfterRename && inner.fire() =>
+            {
+                Err(io::Error::other("injected crash after rename"))
+            }
+            _ => Ok(()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_plane_is_inert() {
+        let p = IoFaultPlane::none();
+        assert!(!p.is_armed());
+        let mut sink = Vec::new();
+        p.write_all(&mut sink, &[1, 2, 3, 4]).unwrap();
+        assert_eq!(sink, vec![1, 2, 3, 4]);
+        p.on_fsync().unwrap();
+        p.before_rename().unwrap();
+        p.after_rename().unwrap();
+        assert_eq!(p.firings(), 0);
+    }
+
+    #[test]
+    fn short_write_lands_half_then_errors_once() {
+        let p = IoFaultPlane::once(IoFaultKind::ShortWrite);
+        let mut sink = Vec::new();
+        let err = p.write_all(&mut sink, &[1, 2, 3, 4]).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::WriteZero);
+        assert_eq!(sink, vec![1, 2], "exactly the torn prefix landed");
+        // budget spent: the retry goes through whole
+        p.write_all(&mut sink, &[5, 6]).unwrap();
+        assert_eq!(sink, vec![1, 2, 5, 6]);
+        assert_eq!(p.firings(), 1);
+    }
+
+    #[test]
+    fn enospc_fails_before_any_byte() {
+        let p = IoFaultPlane::once(IoFaultKind::Enospc);
+        let mut sink = Vec::new();
+        let err = p.write_all(&mut sink, &[1, 2, 3]).unwrap_err();
+        assert_eq!(err.raw_os_error(), Some(28), "ENOSPC");
+        assert!(sink.is_empty(), "no byte reached the file");
+        p.write_all(&mut sink, &[1]).unwrap();
+        assert_eq!(sink, vec![1]);
+    }
+
+    #[test]
+    fn fsync_and_rename_hooks_are_kind_scoped() {
+        let f = IoFaultPlane::once(IoFaultKind::FsyncFail);
+        let mut sink = Vec::new();
+        f.write_all(&mut sink, &[9]).unwrap(); // writes unaffected
+        f.before_rename().unwrap();
+        assert!(f.on_fsync().is_err());
+        f.on_fsync().unwrap(); // disarmed after one firing
+
+        let b = IoFaultPlane::once(IoFaultKind::CrashBeforeRename);
+        b.on_fsync().unwrap();
+        b.after_rename().unwrap();
+        assert!(b.before_rename().is_err());
+        b.before_rename().unwrap();
+
+        let a = IoFaultPlane::once(IoFaultKind::CrashAfterRename);
+        a.before_rename().unwrap();
+        assert!(a.after_rename().is_err());
+        a.after_rename().unwrap();
+    }
+
+    #[test]
+    fn budget_is_shared_across_clones() {
+        let p = IoFaultPlane::times(IoFaultKind::Enospc, 2);
+        let clone = p.clone();
+        let mut sink = Vec::new();
+        assert!(p.write_all(&mut sink, &[1]).is_err());
+        assert!(clone.write_all(&mut sink, &[1]).is_err());
+        assert!(p.write_all(&mut sink, &[1]).is_ok(), "budget of 2 spent");
+        assert_eq!(clone.firings(), 2);
+    }
+}

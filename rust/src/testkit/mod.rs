@@ -15,6 +15,7 @@
 //! ```
 
 pub mod faults;
+pub mod io_faults;
 
 use crate::rng::Xoshiro256pp;
 

@@ -20,6 +20,7 @@ use dpfw::fw::trace::TraceRecord;
 use dpfw::sparse::synth::SynthConfig;
 use dpfw::sparse::Dataset;
 use dpfw::testkit::faults::{self, FaultKind, FaultPlan};
+use dpfw::testkit::io_faults::IoFaultPlane;
 
 fn dataset(seed: u64) -> Arc<Dataset> {
     Arc::new(
@@ -101,6 +102,7 @@ fn checkpoint_resume_is_bitwise_identical_across_topologies() {
             path: ck_path.clone(),
             ledger: None,
             every_k: 7,
+            io: IoFaultPlane::none(),
         }));
         let cut = job(0, d.clone(), algo, capped).run();
         assert_eq!(cut.output.stopped, StopReason::Brownout);
@@ -183,6 +185,7 @@ fn crash_killed_solve_resumes_through_pool_with_exactly_once_accounting() {
                 ledger: Some(ledger.clone()),
                 dir: dir.clone(),
                 every_k: 10,
+                resume_in_process: true,
             }),
             ..Default::default()
         },
@@ -232,6 +235,7 @@ fn torn_ledger_tail_recovers_and_rerun_never_double_charges() {
             path: dir.join("ckpt-9.bin"),
             ledger: Some(ledger),
             every_k: 10,
+            io: IoFaultPlane::none(),
         }));
         job(0, d.clone(), Algo::Fast, c).run()
     };

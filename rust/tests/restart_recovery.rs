@@ -1,0 +1,352 @@
+//! §6.12 restart-time recovery suite: a pool is crash-killed with
+//! in-process resume disabled — so the kill leaves the durability dir
+//! (WAL + orphaned checkpoints) exactly as a dead process would — then a
+//! *new* `RecoveryManager` over the same dir classifies the orphans and
+//! a fresh pool resubmits the work via `submit_recovered`, reusing the
+//! dead process's durable request ids. The recovered outputs must be
+//! bitwise identical to an uninterrupted run, and the WAL must hold
+//! exactly one run's spend per request — however the kill landed.
+//!
+//! Run serially (`--test-threads=1` in CI): every test owns an on-disk
+//! durability dir and asserts on supervisor timing.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use dpfw::coordinator::{
+    Algo, Coordinator, DurabilityOptions, Job, JobError, JobResult, JobSpec,
+    OrphanKind, OrphanState, PathJob, PoolOptions, RecoveryManager,
+};
+use dpfw::dp::accounting::PrivacyParams;
+use dpfw::dp::ledger::{EpsLedger, FsyncPolicy};
+use dpfw::fw::config::{FwConfig, SelectorKind};
+use dpfw::fw::trace::TraceRecord;
+use dpfw::sparse::synth::SynthConfig;
+use dpfw::sparse::Dataset;
+use dpfw::testkit::faults::{FaultKind, FaultPlan};
+
+fn dataset(seed: u64) -> Arc<Dataset> {
+    Arc::new(
+        SynthConfig {
+            name: format!("restart{seed}"),
+            n_rows: 120,
+            n_cols: 60,
+            avg_row_nnz: 7.0,
+            zipf_exponent: 1.2,
+            n_informative: 10,
+            n_dense: 0,
+            label_noise: 0.02,
+            bias_col: true,
+        }
+        .generate(seed),
+    )
+}
+
+fn cfg(selector: SelectorKind, seed: u64) -> FwConfig {
+    FwConfig {
+        iters: 60,
+        lambda: 6.0,
+        privacy: selector.is_private().then(|| PrivacyParams::new(1.0, 1e-6)),
+        selector,
+        seed,
+        trace_every: 1,
+        ..Default::default()
+    }
+}
+
+fn job(id: usize, data: Arc<Dataset>, algo: Algo, cfg: FwConfig) -> JobSpec {
+    JobSpec { id, label: format!("r{id}"), data, algo, cfg, test_data: None }
+}
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let p = std::env::temp_dir()
+        .join(format!("dpfw-restart-{}-{}", std::process::id(), name));
+    let _ = std::fs::remove_dir_all(&p);
+    std::fs::create_dir_all(&p).unwrap();
+    p
+}
+
+fn durable_pool(ledger: &Arc<EpsLedger>, dir: &std::path::Path) -> Coordinator {
+    Coordinator::with_options(
+        1,
+        PoolOptions {
+            durability: Some(DurabilityOptions {
+                ledger: Some(ledger.clone()),
+                dir: dir.to_path_buf(),
+                every_k: 10,
+                // the point of this suite: a kill must leave the on-disk
+                // state for restart-time recovery, not resume in-process
+                resume_in_process: false,
+            }),
+            ..Default::default()
+        },
+    )
+}
+
+/// Deterministic trace fields — everything but the wall clock, the one
+/// field outside the bitwise recovery contract.
+fn trace_key(r: &TraceRecord) -> (usize, f64, u64, u64, u64, usize) {
+    (r.iter, r.gap, r.flops, r.bytes, r.pops, r.selected)
+}
+
+fn assert_bitwise(ctx: &str, got: &JobResult, want: &JobResult) {
+    assert_eq!(got.output.weights, want.output.weights, "{ctx}: weights");
+    assert_eq!(
+        got.output.final_gap.to_bits(),
+        want.output.final_gap.to_bits(),
+        "{ctx}: gap"
+    );
+    assert_eq!(got.output.flops, want.output.flops, "{ctx}: flops");
+    assert_eq!(got.output.bytes_moved, want.output.bytes_moved, "{ctx}: bytes");
+    assert_eq!(got.output.eps_spent, want.output.eps_spent, "{ctx}: ε spend");
+    assert_eq!(got.output.iters_run, want.output.iters_run, "{ctx}: iterations");
+    assert_eq!(got.output.trace.len(), want.output.trace.len(), "{ctx}: trace len");
+    for (a, b) in got.output.trace.iter().zip(&want.output.trace) {
+        assert_eq!(trace_key(a), trace_key(b), "{ctx}: trace diverged");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The kill-restart matrix: (solver) × (shards) × (threads), alternating
+// the kill shape between a mid-solve crash (leaves a resumable cadence
+// snapshot) and an abrupt pre-work death (leaves nothing — recovery
+// degrades to a seed-pinned fresh rerun). Either way the recovered run
+// must land the uninterrupted run's bits with exactly-once ε.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn kill_restart_matrix_is_bitwise_identical_with_exactly_once_eps() {
+    let d = dataset(51);
+    let mut combo = 0usize;
+    for algo in [Algo::Fast, Algo::Standard] {
+        for shards in [None, Some(3)] {
+            for threads in [1usize, 4] {
+                combo += 1;
+                let crash_mid_solve = combo % 2 == 0;
+                let ctx = format!(
+                    "algo={algo:?} P={shards:?} threads={threads} \
+                     kill={}",
+                    if crash_mid_solve { "CrashAt(45)" } else { "DieAbruptly" }
+                );
+                let mut base = cfg(SelectorKind::Bsls, 61);
+                base.shards = shards;
+                base.threads = threads;
+                let clean = job(0, d.clone(), algo, base.clone()).run();
+                let full_eps = clean.output.eps_spent.expect("private run");
+
+                let dir = tmpdir(&format!("matrix-{combo}"));
+                let wal = dir.join("eps.wal");
+                // ---- process one: killed ------------------------------
+                {
+                    let ledger =
+                        Arc::new(EpsLedger::open(&wal, FsyncPolicy::Always).unwrap());
+                    let mut pool = durable_pool(&ledger, &dir);
+                    let mut doomed = base.clone();
+                    doomed.fault = FaultPlan::once(if crash_mid_solve {
+                        FaultKind::CrashAt { iter: 45 }
+                    } else {
+                        FaultKind::DieAbruptly
+                    });
+                    pool.submit(job(0, d.clone(), algo, doomed));
+                    let results = pool.drain();
+                    assert!(
+                        matches!(results[0], Err(JobError::WorkerDied)),
+                        "{ctx}: with in-process resume off the kill must fail the id"
+                    );
+                    assert_eq!(
+                        pool.metrics.jobs_resumed.load(Ordering::Relaxed),
+                        0,
+                        "{ctx}"
+                    );
+                }
+                // ---- "restart": fresh ledger handle, recovery scan ----
+                let ledger =
+                    Arc::new(EpsLedger::open(&wal, FsyncPolicy::Always).unwrap());
+                let manifest =
+                    RecoveryManager::new(&dir, Some(ledger.clone())).scan().unwrap();
+                assert_eq!(manifest.quarantined, 0, "{ctx}");
+                assert_eq!(
+                    manifest.resumable().count(),
+                    crash_mid_solve as usize,
+                    "{ctx}: a mid-solve crash orphans its cadence snapshot; \
+                     a pre-work death leaves nothing"
+                );
+                // the dead process's one cell was its first allocation on a
+                // fresh ledger: durable request id 0
+                let slots = manifest.slots_for(&[0]);
+                assert_eq!(slots[0].resume.is_some(), crash_mid_solve, "{ctx}");
+
+                let mut pool = durable_pool(&ledger, &dir);
+                pool.submit_recovered(
+                    Job::Cell(job(0, d.clone(), algo, base.clone())),
+                    &slots,
+                );
+                let results = pool.drain();
+                let r = results[0].as_ref().expect("recovered run must land");
+                assert_bitwise(&ctx, r, &clean);
+
+                // exactly-once WAL spend: cadence charges from the killed
+                // attempt and the recovered run's re-charges max-merge to
+                // one full run for the one request id
+                let (released, eps) =
+                    ledger.spent_for_request(0).expect("request recorded");
+                assert_eq!(released as usize, base.iters - 1, "{ctx}");
+                assert!((eps - full_eps).abs() < 1e-12, "{ctx}: {eps} vs {full_eps}");
+                assert!(
+                    (ledger.spent_for_dataset(d.fingerprint()) - full_eps).abs()
+                        < 1e-12,
+                    "{ctx}"
+                );
+                assert_eq!(ledger.n_requests(), 1, "{ctx}: one request, ever");
+                std::fs::remove_dir_all(&dir).ok();
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// λ-path restart: the crash hits grid point 0 mid-solve, so the dead
+// process leaves one orphaned `ckpt-0-0.bin` and nothing for points 1-2.
+// Recovery resumes point 0 at its snapshot and runs the rest fresh — all
+// three land the uninterrupted path's bits, each λ's ε charged once.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn killed_path_resumes_at_its_last_completed_lambda_across_restart() {
+    let d = dataset(52);
+    let base = cfg(SelectorKind::Bsls, 62);
+    let lambdas = vec![8.0, 6.0, 4.0];
+    let path = |cfg: FwConfig| PathJob {
+        base_id: 0,
+        label: "restart-path".into(),
+        data: d.clone(),
+        algo: Algo::Fast,
+        cfg,
+        lambdas: lambdas.clone(),
+        test_data: None,
+    };
+    // baseline: the uninterrupted path through a plain pool
+    let clean: Vec<JobResult> = {
+        let mut pool = Coordinator::new(1);
+        pool.submit_path(path(base.clone()));
+        pool.drain().into_iter().map(|r| r.unwrap()).collect()
+    };
+
+    let dir = tmpdir("path-restart");
+    let wal = dir.join("eps.wal");
+    {
+        let ledger = Arc::new(EpsLedger::open(&wal, FsyncPolicy::Always).unwrap());
+        let mut pool = durable_pool(&ledger, &dir);
+        let mut doomed = base.clone();
+        doomed.fault = FaultPlan::once(FaultKind::CrashAt { iter: 45 });
+        pool.submit_path(path(doomed));
+        for r in pool.drain() {
+            assert!(matches!(r, Err(JobError::WorkerDied)));
+        }
+    }
+    let ledger = Arc::new(EpsLedger::open(&wal, FsyncPolicy::Always).unwrap());
+    let manifest = RecoveryManager::new(&dir, Some(ledger.clone())).scan().unwrap();
+    assert_eq!(manifest.quarantined, 0);
+    assert_eq!(manifest.resumable().count(), 1, "only point 0 got far enough");
+    let o = manifest.find(0).unwrap();
+    assert_eq!(o.kind, OrphanKind::PathPoint { k: 0 });
+    assert_eq!(o.state, OrphanState::Resumable);
+    let ck = o.checkpoint.as_ref().unwrap();
+    assert_eq!(ck.replay_to(), 40, "last cadence boundary before the crash");
+    assert_eq!(ck.dataset_fp, d.fingerprint());
+    assert!(o.spent.is_some(), "the WAL already holds point 0's cadence spend");
+
+    // the dead process's path was its first submission on a fresh ledger:
+    // its three grid points hold consecutive durable request ids 0, 1, 2
+    let slots = manifest.slots_for(&[0, 1, 2]);
+    assert!(slots[0].resume.is_some());
+    assert!(slots[1].resume.is_none() && slots[2].resume.is_none());
+
+    let mut pool = durable_pool(&ledger, &dir);
+    pool.submit_recovered(Job::Path(path(base.clone())), &slots);
+    let results = pool.drain();
+    assert_eq!(results.len(), 3);
+    for (k, (r, want)) in results.iter().zip(&clean).enumerate() {
+        let r = r.as_ref().expect("recovered path point must land");
+        assert_bitwise(&format!("lambda[{k}]"), r, want);
+    }
+    // exactly-once per grid point, and completion GC'd the checkpoints
+    for k in 0..3u64 {
+        let want = clean[k as usize].output.eps_spent.unwrap();
+        let (released, eps) = ledger.spent_for_request(k).unwrap();
+        assert_eq!(released as usize, base.iters - 1, "lambda[{k}]");
+        assert!((eps - want).abs() < 1e-12, "lambda[{k}]");
+        assert!(!dir.join(format!("ckpt-{k}-{k}.bin")).exists());
+    }
+    assert!(!dir.join("ckpt-0-0.bin").exists(), "resumed point GC'd on success");
+    let total: f64 = clean.iter().map(|c| c.output.eps_spent.unwrap()).sum();
+    assert!((ledger.spent_for_dataset(d.fingerprint()) - total).abs() < 1e-12);
+    assert_eq!(ledger.n_requests(), 3);
+
+    // compaction after recovery preserves the restart-surviving totals
+    // and the request-id high-water mark bit-for-bit
+    let before = ledger.spent_for_dataset(d.fingerprint());
+    ledger.compact().unwrap();
+    drop(ledger);
+    let ledger = EpsLedger::open(&wal, FsyncPolicy::Always).unwrap();
+    assert_eq!(ledger.spent_for_dataset(d.fingerprint()).to_bits(), before.to_bits());
+    assert_eq!(ledger.allocate_request_id(), 3);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// An orphan that rotted on disk after the crash: the scan quarantines it
+// (never deletes), the job degrades to a seed-pinned fresh rerun, and
+// the ε accounting still lands at exactly one run.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn corrupt_orphan_quarantines_and_fresh_rerun_stays_exactly_once() {
+    let d = dataset(53);
+    let base = cfg(SelectorKind::Bsls, 63);
+    let clean = job(0, d.clone(), Algo::Fast, base.clone()).run();
+    let full_eps = clean.output.eps_spent.unwrap();
+
+    let dir = tmpdir("corrupt-orphan");
+    let wal = dir.join("eps.wal");
+    {
+        let ledger = Arc::new(EpsLedger::open(&wal, FsyncPolicy::Always).unwrap());
+        let mut pool = durable_pool(&ledger, &dir);
+        let mut doomed = base.clone();
+        doomed.fault = FaultPlan::once(FaultKind::CrashAt { iter: 45 });
+        pool.submit(job(0, d.clone(), Algo::Fast, doomed));
+        assert!(matches!(pool.drain()[0], Err(JobError::WorkerDied)));
+    }
+    // bit rot between death and restart
+    let orphan = dir.join("ckpt-0.bin");
+    let mut bytes = std::fs::read(&orphan).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x01;
+    std::fs::write(&orphan, &bytes).unwrap();
+
+    let ledger = Arc::new(EpsLedger::open(&wal, FsyncPolicy::Always).unwrap());
+    let manifest = RecoveryManager::new(&dir, Some(ledger.clone())).scan().unwrap();
+    assert_eq!(manifest.quarantined, 1);
+    let o = manifest.find(0).unwrap();
+    assert_eq!(o.state, OrphanState::Corrupt);
+    assert!(o.spent.is_some(), "the WAL record outlives the rotten snapshot");
+    let quarantined = dir.join("quarantine").join("ckpt-0.bin");
+    assert_eq!(o.path, quarantined);
+    assert_eq!(std::fs::read(&quarantined).unwrap(), bytes, "evidence preserved");
+
+    let slots = manifest.slots_for(&[0]);
+    assert!(slots[0].resume.is_none(), "a quarantined orphan seeds nothing");
+    let mut pool = durable_pool(&ledger, &dir);
+    pool.submit_recovered(Job::Cell(job(0, d.clone(), Algo::Fast, base.clone())), &slots);
+    let results = pool.drain();
+    let r = results[0].as_ref().expect("fresh rerun must land");
+    assert_bitwise("fresh-rerun", r, &clean);
+
+    let (released, eps) = ledger.spent_for_request(0).unwrap();
+    assert_eq!(released as usize, base.iters - 1);
+    assert!((eps - full_eps).abs() < 1e-12);
+    assert!((ledger.spent_for_dataset(d.fingerprint()) - full_eps).abs() < 1e-12);
+    assert_eq!(ledger.n_requests(), 1);
+    assert!(quarantined.exists(), "quarantine is forever, deletion never");
+    std::fs::remove_dir_all(&dir).ok();
+}
